@@ -1,0 +1,67 @@
+//! APSP benchmarks (§4.3 / §5.1): exact parallel Dijkstra vs the
+//! approximate hub-based algorithm, on TMFGs of the largest datasets.
+//! The paper reports a 2–3× speedup for approximate APSP.
+
+use tmfg::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
+use tmfg::coordinator::registry;
+use tmfg::data::corr::pearson_correlation;
+use tmfg::tmfg::heap_tmfg;
+use tmfg::util::bench::BenchSuite;
+
+fn main() {
+    let scale: f64 = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.1);
+    let mut suite = BenchSuite::new("bench_apsp");
+    for name in registry::largest3_names() {
+        let ds = registry::get_dataset(name, scale, registry::DEFAULT_SEED).unwrap();
+        let s = pearson_correlation(&ds.data);
+        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()), &s);
+        let n = g.n.to_string();
+
+        suite
+            .meta("dataset", name)
+            .meta("n", &n)
+            .meta("mode", "exact")
+            .run(&format!("{name}/exact"), |_| {
+                let m = apsp_exact(&g);
+                assert_eq!(m.rows, g.n);
+            });
+        suite
+            .meta("dataset", name)
+            .meta("n", &n)
+            .meta("mode", "approx")
+            .run(&format!("{name}/approx"), |_| {
+                let m = apsp_hub(&g, &HubConfig::default());
+                assert_eq!(m.rows, g.n);
+            });
+        // hub-count ablation
+        for hubs in [8usize, 16, 64] {
+            suite
+                .meta("dataset", name)
+                .meta("n", &n)
+                .meta("mode", &format!("approx-h{hubs}"))
+                .run(&format!("{name}/approx-h{hubs}"), |_| {
+                    let cfg = HubConfig { n_hubs: hubs, ..Default::default() };
+                    let m = apsp_hub(&g, &cfg);
+                    assert_eq!(m.rows, g.n);
+                });
+        }
+    }
+    suite.write_csv().unwrap();
+
+    let mean = |needle: &str| {
+        let xs: Vec<f64> = suite
+            .results
+            .iter()
+            .filter(|s| s.name.ends_with(needle))
+            .map(|s| s.mean)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    println!(
+        "\nexact/approx speedup: {:.2}x (paper reports 2-3x on most datasets)",
+        mean("/exact") / mean("/approx")
+    );
+}

@@ -1,0 +1,68 @@
+//! End-to-end pipeline benchmark (Fig. 2 in criterion-style form) plus a
+//! thread-scaling mini-sweep (Figs. 3/4 shape check).
+
+use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
+use tmfg::coordinator::registry;
+use tmfg::data::corr::pearson_correlation;
+use tmfg::parlay;
+use tmfg::util::bench::BenchSuite;
+
+fn main() {
+    let scale: f64 = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.1);
+    let mut suite = BenchSuite::new("bench_pipeline");
+    let algos = [
+        TmfgAlgo::Par(1),
+        TmfgAlgo::Par(10),
+        TmfgAlgo::Corr,
+        TmfgAlgo::Heap,
+        TmfgAlgo::Opt,
+    ];
+    // Fig-2-style: per-dataset end-to-end times (similarity precomputed,
+    // as in the paper).
+    for name in ["CBF", "ECG5000", "Crop", "StarLightCurves"] {
+        let ds = registry::get_dataset(name, scale, registry::DEFAULT_SEED).unwrap();
+        let s = pearson_correlation(&ds.data);
+        for algo in algos {
+            let p = Pipeline::new(PipelineConfig { algo, use_xla: false, ..Default::default() });
+            suite
+                .meta("dataset", name)
+                .meta("n", &ds.n().to_string())
+                .meta("algo", &algo.name())
+                .meta("threads", &parlay::num_threads().to_string())
+                .run(&format!("{name}/{}", algo.name()), |_| {
+                    let out = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
+                    assert!(out.ari.is_some());
+                });
+        }
+    }
+    // Scaling mini-sweep on the largest dataset: OPT vs PAR-10.
+    let ds = registry::get_dataset("Crop", scale, registry::DEFAULT_SEED).unwrap();
+    let s = pearson_correlation(&ds.data);
+    let max_t = parlay::num_threads();
+    let mut threads = vec![1usize];
+    let mut t = 2;
+    while t < max_t {
+        threads.push(t);
+        t *= 2;
+    }
+    threads.push(max_t);
+    for algo in [TmfgAlgo::Opt, TmfgAlgo::Par(10)] {
+        for &t in &threads {
+            let p = Pipeline::new(PipelineConfig { algo, use_xla: false, ..Default::default() });
+            suite
+                .meta("dataset", "Crop")
+                .meta("n", &ds.n().to_string())
+                .meta("algo", &algo.name())
+                .meta("threads", &t.to_string())
+                .run(&format!("scaling/{}@{t}", algo.name()), |_| {
+                    parlay::with_threads(t, || {
+                        let _ = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
+                    })
+                });
+        }
+    }
+    suite.write_csv().unwrap();
+}

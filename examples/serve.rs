@@ -1,0 +1,87 @@
+//! Serving scenario: start the batched clustering service, fire concurrent
+//! client requests at it, and report latency/throughput plus observed
+//! batch sizes.
+//!
+//!     cargo run --release --example serve -- [--requests 24] [--clients 6]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use tmfg::coordinator::service::{serve, Client, ServiceConfig};
+use tmfg::util::cli::Args;
+use tmfg::util::json::Json;
+use tmfg::util::timer::Timer;
+
+fn main() {
+    let args = Args::parse(&["requests", "clients", "scale"]).unwrap();
+    let n_requests = args.get_usize("requests", 24);
+    let n_clients = args.get_usize("clients", 6);
+    let scale = args.get_f64("scale", 0.03);
+
+    let handle = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(), // ephemeral port
+        ..Default::default()
+    })
+    .expect("start service");
+    let addr = handle.addr.clone();
+    println!("service on {addr}; {n_clients} clients × {} requests", n_requests / n_clients);
+
+    let datasets = ["CBF", "ECG5000", "SonyAIBORobotSurface2", "Mallat"];
+    let done = Arc::new(AtomicUsize::new(0));
+    let latencies = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let batches = Arc::new(std::sync::Mutex::new(Vec::<usize>::new()));
+
+    let wall = Timer::start();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let done = done.clone();
+        let latencies = latencies.clone();
+        let batches = batches.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let per = n_requests / n_clients;
+            for r in 0..per {
+                let ds = datasets[(c + r) % datasets.len()];
+                let req = Json::obj(vec![
+                    ("id", Json::Num((c * 1000 + r) as f64)),
+                    ("dataset", Json::str(ds)),
+                    ("scale", Json::Num(scale)),
+                    ("seed", Json::Num((r + 1) as f64)),
+                    ("algo", Json::str("opt")),
+                ]);
+                let t = Timer::start();
+                let resp = client.call(&req).expect("call");
+                let lat = t.elapsed();
+                assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+                latencies.lock().unwrap().push(lat);
+                batches
+                    .lock()
+                    .unwrap()
+                    .push(resp.get("batch").as_usize().unwrap_or(1));
+                done.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let total = wall.elapsed();
+
+    let mut lats = latencies.lock().unwrap().clone();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let n = lats.len();
+    let pct = |p: f64| lats[((n as f64 * p) as usize).min(n - 1)];
+    let bs = batches.lock().unwrap();
+    let mean_batch = bs.iter().sum::<usize>() as f64 / bs.len() as f64;
+    println!("\ncompleted {} requests in {total:.2}s", done.load(Ordering::Relaxed));
+    println!("throughput: {:.1} req/s", n as f64 / total);
+    println!(
+        "latency p50 {:.3}s  p90 {:.3}s  p99 {:.3}s  max {:.3}s",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        lats[n - 1]
+    );
+    println!("mean observed batch size: {mean_batch:.2}");
+    handle.stop();
+}

@@ -1,0 +1,102 @@
+//! End-to-end driver (the EXPERIMENTS.md headline run): the full paper
+//! pipeline — similarity via the AOT-compiled XLA artifact where a shape
+//! bucket fits, TMFG, APSP, DBHT — over the Table-1 mirror suite,
+//! comparing the paper's methods on runtime and ARI.
+//!
+//!     cargo run --release --example timeseries_clustering -- \
+//!         [--scale 0.1] [--seed N] [--datasets CBF,Crop] [--algos opt,par10]
+
+use std::io::Write;
+use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
+use tmfg::coordinator::registry;
+use tmfg::util::cli::Args;
+use tmfg::util::timer::Timer;
+
+fn main() {
+    let args = Args::parse(&["scale", "seed", "datasets", "algos", "no-xla"]).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", registry::DEFAULT_SEED);
+    let names: Vec<String> = args
+        .opt_str("datasets")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+        .unwrap_or_else(registry::table1_names);
+    let algos: Vec<TmfgAlgo> = args
+        .opt_str("algos")
+        .map(|s| {
+            s.split(',')
+                .filter_map(TmfgAlgo::parse)
+                .collect::<Vec<_>>()
+        })
+        .unwrap_or_else(|| vec![TmfgAlgo::Par(10), TmfgAlgo::Opt]);
+    let use_xla = !args.get_bool("no-xla", false);
+
+    println!("== timeseries clustering e2e (scale {scale}, {} datasets) ==", names.len());
+    std::fs::create_dir_all("results").ok();
+    let mut csv = std::fs::File::create("results/e2e_timeseries.csv").unwrap();
+    writeln!(csv, "dataset,n,L,k,algo,corr_path,total_s,similarity_s,tmfg_s,apsp_s,dbht_s,ari,edge_sum").unwrap();
+
+    let mut ari_sums = vec![0.0f64; algos.len()];
+    let mut time_sums = vec![0.0f64; algos.len()];
+    for name in &names {
+        let Some(ds) = registry::get_dataset(name, scale, seed) else {
+            eprintln!("skipping unknown dataset {name}");
+            continue;
+        };
+        for (ai, algo) in algos.iter().enumerate() {
+            let cfg = PipelineConfig { algo: *algo, use_xla, ..Default::default() };
+            let pipeline = Pipeline::new(cfg);
+            let t = Timer::start();
+            let out = pipeline.run_dataset(&ds);
+            let total = t.elapsed();
+            let g = |k: &str| out.breakdown.get(k).unwrap_or(0.0);
+            let tmfg_s = g("tmfg:init-faces") + g("tmfg:sort") + g("tmfg:add-vertices");
+            let ari = out.ari.unwrap();
+            ari_sums[ai] += ari;
+            time_sums[ai] += total;
+            println!(
+                "{:<28} n={:<6} {:<12} {:?}  total {:>8.3}s (sim {:>7.3} tmfg {:>7.3} apsp {:>7.3} dbht {:>7.3})  ARI {:+.3}",
+                ds.name,
+                ds.n(),
+                algo.name(),
+                out.corr_path.unwrap(),
+                total,
+                g("similarity"),
+                tmfg_s,
+                g("apsp"),
+                g("dbht"),
+                ari
+            );
+            writeln!(
+                csv,
+                "{},{},{},{},{},{:?},{:.6},{:.6},{:.6},{:.6},{:.6},{:.5},{:.4}",
+                ds.name,
+                ds.n(),
+                ds.len(),
+                ds.n_classes,
+                algo.name(),
+                out.corr_path.unwrap(),
+                total,
+                g("similarity"),
+                tmfg_s,
+                g("apsp"),
+                g("dbht"),
+                ari,
+                out.edge_sum
+            )
+            .unwrap();
+        }
+    }
+    println!("\n== summary over {} datasets ==", names.len());
+    for (ai, algo) in algos.iter().enumerate() {
+        println!(
+            "{:<12} mean ARI {:.3}   total wall time {:.2}s",
+            algo.name(),
+            ari_sums[ai] / names.len() as f64,
+            time_sums[ai]
+        );
+    }
+    println!("wrote results/e2e_timeseries.csv");
+}

@@ -1,0 +1,3 @@
+# Build-time-only package: authors and AOT-lowers the dense similarity
+# computation (Layer 1 Pallas kernels + Layer 2 JAX model) to HLO text
+# artifacts executed from Rust via PJRT. Never imported at runtime.

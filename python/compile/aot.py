@@ -1,0 +1,96 @@
+"""AOT-lower the Layer-2 model to HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+HLO is shape-static, so we emit one artifact per (n, L) *bucket*; the Rust
+runtime pads inputs up to the smallest covering bucket and slices results
+(engine.rs). Usage:
+
+    python -m compile.aot --out-dir ../artifacts [--buckets 256x128,...]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.corr import vmem_bytes_estimate
+from .model import similarity_graph_inputs
+
+DEFAULT_BUCKETS = "128x64,256x128,512x256,1024x512,2048x1024"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, l: int, block_rows: int = 128) -> str:
+    spec = jax.ShapeDtypeStruct((n, l), jnp.float32)
+    lowered = jax.jit(lambda x: similarity_graph_inputs(x, block_rows=block_rows)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def parse_buckets(text: str):
+    out = []
+    for tok in text.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        n, l = tok.lower().split("x")
+        out.append((int(n), int(l)))
+    return sorted(set(out))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default=DEFAULT_BUCKETS,
+                    help="comma-separated NxL shape buckets")
+    ap.add_argument("--block-rows", type=int, default=128)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = parse_buckets(args.buckets)
+    entries = []
+    for n, l in buckets:
+        fname = f"corr_{n}x{l}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        text = lower_bucket(n, l, args.block_rows)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append({
+            "n": n,
+            "l": l,
+            "file": fname,
+            "outputs": ["similarity", "rowsums"],
+            "block_rows": min(args.block_rows, n),
+            "vmem_bytes_per_step": vmem_bytes_estimate(min(args.block_rows, n), l),
+        })
+        print(f"lowered corr bucket {n}x{l} -> {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "model": "similarity_graph_inputs",
+        "dtype": "f32",
+        "interchange": "hlo-text",
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(entries)} buckets -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the dense similarity hot-spot + pure-jnp oracle.
+from . import corr, ref  # noqa: F401

@@ -1,0 +1,108 @@
+"""Layer 1: Pallas kernels for the Pearson-correlation hot-spot.
+
+The paper's pipeline consumes an n x n correlation matrix; computing it is
+the only dense Theta(n^2 L) stage (everything downstream is irregular graph
+work that lives in the Rust coordinator). Two kernels:
+
+* ``standardize_rows``: per-row zero-mean / unit-l2-norm, tiled over row
+  blocks.
+* ``corr_matmul``: S = Z @ Z^T as a blocked MXU matmul over (Bn, L) row
+  panels producing (Bn, Bn) output tiles.
+
+TPU mapping (DESIGN.md section 8): the BlockSpec schedule stages two
+(Bn, L) f32 panels plus one (Bn, Bn) accumulator tile in VMEM per grid
+step - for Bn=128, L<=4096 that is <= 4.3 MiB, comfortably inside VMEM
+with room for double buffering; the inner contraction feeds the 128x128
+MXU systolic array. ``interpret=True`` everywhere because the CPU PJRT
+plugin cannot execute Mosaic custom-calls; the interpret path lowers to
+plain HLO that both jax-CPU and the Rust PJRT client execute bit-for-bit.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _largest_divisor_block(n: int, cap: int) -> int:
+    """Largest power-of-two block size <= cap that divides n (>=1)."""
+    b = 1
+    while b * 2 <= cap and n % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+# ----------------------------------------------------------------------------
+# standardize kernel
+# ----------------------------------------------------------------------------
+def _standardize_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=1, keepdims=True)
+    c = x - mean
+    norm = jnp.sqrt(jnp.sum(c * c, axis=1, keepdims=True))
+    inv = jnp.where(norm > 1e-12, 1.0 / norm, 0.0)
+    o_ref[...] = c * inv
+
+
+def standardize_rows(x: jnp.ndarray, block_rows: int = 128) -> jnp.ndarray:
+    """Row standardization as a Pallas kernel, tiled over row blocks."""
+    n, l = x.shape
+    bn = _largest_divisor_block(n, block_rows)
+    return pl.pallas_call(
+        _standardize_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, l), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, l), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+# ----------------------------------------------------------------------------
+# blocked Gram-matrix (Z @ Z^T) kernel
+# ----------------------------------------------------------------------------
+def _gram_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    # (Bn, L) x (L, Bn) contraction on the MXU; accumulate in f32.
+    o_ref[...] = jax.lax.dot_general(
+        a,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gram_matrix(z: jnp.ndarray, block_rows: int = 128) -> jnp.ndarray:
+    """S = Z @ Z^T via a Pallas kernel with (Bn, Bn) output tiles."""
+    n, l = z.shape
+    bn = _largest_divisor_block(n, block_rows)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(n // bn, n // bn),
+        in_specs=[
+            pl.BlockSpec((bn, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, l), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(z, z)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def pearson_pallas(x: jnp.ndarray, block_rows: int = 128) -> jnp.ndarray:
+    """Full Pearson correlation matrix through the two Pallas kernels."""
+    z = standardize_rows(x, block_rows)
+    s = gram_matrix(z, block_rows)
+    s = jnp.clip(s, -1.0, 1.0)
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=s.dtype)
+    return s * (1.0 - eye) + eye
+
+
+def vmem_bytes_estimate(block_rows: int, l: int) -> int:
+    """VMEM footprint of one grid step of ``gram_matrix`` (DESIGN.md §8):
+    two (Bn, L) f32 input panels + one (Bn, Bn) f32 output tile."""
+    return 2 * block_rows * l * 4 + block_rows * block_rows * 4

@@ -1,0 +1,37 @@
+"""Pure-jnp reference oracle for the Pallas correlation kernels.
+
+This is the correctness ground truth: the Pallas kernels in ``corr.py``
+must match these functions to float tolerance (checked by pytest +
+hypothesis in ``python/tests``), and the Rust native path mirrors the same
+math (checked end-to-end in ``rust/tests/runtime_xla.rs``).
+"""
+
+import jax.numpy as jnp
+
+
+def standardize_rows_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Zero-mean, unit-l2-norm rows; ~constant rows become all-zero."""
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=1, keepdims=True)
+    centered = x - mean
+    norm = jnp.sqrt(jnp.sum(centered * centered, axis=1, keepdims=True))
+    inv = jnp.where(norm > 1e-12, 1.0 / norm, 0.0)
+    return centered * inv
+
+
+def pearson_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Pearson correlation matrix of the rows of x (n, L) -> (n, n).
+
+    Differs from jnp.corrcoef only in the constant-row convention (0
+    instead of NaN) and the unit diagonal being forced exactly.
+    """
+    z = standardize_rows_ref(x)
+    s = z @ z.T
+    s = jnp.clip(s, -1.0, 1.0)
+    n = x.shape[0]
+    return s * (1.0 - jnp.eye(n, dtype=s.dtype)) + jnp.eye(n, dtype=s.dtype)
+
+
+def row_sums_ref(s: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sums of the similarity matrix (seeds the initial 4-clique)."""
+    return jnp.sum(s, axis=1)

@@ -1,0 +1,21 @@
+"""Layer 2: the JAX model the Rust coordinator executes.
+
+``similarity_graph_inputs`` is the complete dense front-end of the
+TMFG-DBHT pipeline: time-series panel X (n, L) -> (S, rowsums) where S is
+the Pearson correlation matrix (via the Layer-1 Pallas kernels) and
+rowsums seeds the initial 4-clique selection. It is lowered once per
+shape bucket by ``aot.py``; Rust pads inputs up to the bucket and slices
+the result (padding soundness is tested in python/tests/test_model.py and
+rust/tests/runtime_xla.rs).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import corr
+
+
+def similarity_graph_inputs(x: jnp.ndarray, block_rows: int = 128):
+    """X (n, L) f32 -> (S (n, n) f32, rowsums (n,) f32)."""
+    s = corr.pearson_pallas(x, block_rows=block_rows)
+    rowsums = jnp.sum(s, axis=1)
+    return (s, rowsums)

@@ -1,0 +1,111 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import corr, ref
+
+
+def rand_panel(n, l, seed=0, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, l)) * scale, dtype=jnp.float32)
+
+
+class TestStandardize:
+    @pytest.mark.parametrize("n,l", [(8, 16), (16, 64), (128, 32), (96, 100)])
+    def test_matches_ref(self, n, l):
+        x = rand_panel(n, l, seed=n + l)
+        got = corr.standardize_rows(x)
+        want = ref.standardize_rows_ref(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_rows_unit_norm(self):
+        x = rand_panel(32, 50, seed=3)
+        z = np.asarray(corr.standardize_rows(x))
+        np.testing.assert_allclose((z**2).sum(axis=1), 1.0, atol=1e-4)
+        np.testing.assert_allclose(z.mean(axis=1), 0.0, atol=1e-5)
+
+    def test_constant_row_is_zero(self):
+        x = jnp.ones((8, 32), dtype=jnp.float32)
+        z = np.asarray(corr.standardize_rows(x))
+        assert np.all(z == 0.0)
+
+
+class TestGram:
+    @pytest.mark.parametrize("n,l", [(8, 8), (64, 32), (128, 64), (256, 16)])
+    def test_matches_dense(self, n, l):
+        x = rand_panel(n, l, seed=n)
+        z = ref.standardize_rows_ref(x)
+        got = corr.gram_matrix(z)
+        want = z @ z.T
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    def test_block_sizes_agree(self):
+        x = rand_panel(64, 48, seed=9)
+        z = ref.standardize_rows_ref(x)
+        outs = [np.asarray(corr.gram_matrix(z, block_rows=b)) for b in (8, 32, 64, 128)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+class TestPearson:
+    @pytest.mark.parametrize("n,l", [(8, 16), (32, 64), (128, 46), (96, 301)])
+    def test_matches_ref(self, n, l):
+        x = rand_panel(n, l, seed=n * 7 + l)
+        got = np.asarray(corr.pearson_pallas(x))
+        want = np.asarray(ref.pearson_ref(x))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_matches_numpy_corrcoef(self):
+        x = rand_panel(24, 80, seed=5)
+        got = np.asarray(corr.pearson_pallas(x))
+        want = np.corrcoef(np.asarray(x))
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+    def test_properties(self):
+        x = rand_panel(40, 32, seed=11)
+        s = np.asarray(corr.pearson_pallas(x))
+        np.testing.assert_allclose(s, s.T, atol=1e-6)         # symmetric
+        np.testing.assert_allclose(np.diag(s), 1.0, atol=0)   # exact unit diag
+        assert s.min() >= -1.0 and s.max() <= 1.0              # clamped
+
+    def test_perfect_and_anti_correlation(self):
+        base = np.sin(np.arange(64) / 3.0)
+        x = jnp.asarray(
+            np.stack([base, 2 * base + 1.0, -base]), dtype=jnp.float32
+        )
+        # n=3 → block size 1 still works
+        s = np.asarray(corr.pearson_pallas(x))
+        assert abs(s[0, 1] - 1.0) < 1e-5
+        assert abs(s[0, 2] + 1.0) < 1e-5
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(2, 48),
+        l=st.integers(4, 96),
+        seed=st.integers(0, 2**31),
+        scale=st.floats(0.1, 100.0),
+    )
+    def test_hypothesis_sweep(self, n, l, seed, scale):
+        x = rand_panel(n, l, seed=seed, scale=scale)
+        got = np.asarray(corr.pearson_pallas(x))
+        want = np.asarray(ref.pearson_ref(x))
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([8, 16, 32]), l=st.sampled_from([8, 32, 301]))
+    def test_hypothesis_f64_input_downcast(self, n, l):
+        rng = np.random.default_rng(n * l)
+        x64 = rng.normal(size=(n, l))
+        got = np.asarray(corr.pearson_pallas(jnp.asarray(x64, dtype=jnp.float32)))
+        want = np.corrcoef(x64)
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+class TestVmemEstimate:
+    def test_budget(self):
+        # DESIGN.md §8: Bn=128 panels fit VMEM for L <= 4096.
+        assert corr.vmem_bytes_estimate(128, 4096) <= 16 * 2**20 // 3
+        assert corr.vmem_bytes_estimate(128, 64) < corr.vmem_bytes_estimate(128, 1024)

@@ -1,0 +1,61 @@
+"""L2 correctness: model outputs + the padding-soundness property the Rust
+runtime's bucket scheme relies on."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import similarity_graph_inputs
+
+
+def rand_panel(n, l, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, l)), dtype=jnp.float32)
+
+
+class TestModel:
+    def test_outputs(self):
+        x = rand_panel(32, 64, seed=1)
+        s, rowsums = similarity_graph_inputs(x)
+        assert s.shape == (32, 32)
+        assert rowsums.shape == (32,)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(ref.pearson_ref(x)), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(rowsums), np.asarray(s).sum(axis=1), atol=1e-4
+        )
+
+    def test_padding_soundness(self):
+        # The Rust runtime pads a panel up to its shape bucket: junk rows
+        # (their correlations are sliced away) and, crucially, extra
+        # *columns* filled with each row's own mean — which leaves the row
+        # mean and centered norm unchanged, so the real correlations are
+        # preserved exactly (zero-padding columns would shift the means).
+        n, l = 24, 40
+        x = rand_panel(n, l, seed=2)
+        s_small, _ = similarity_graph_inputs(x)
+
+        big_n, big_l = 64, 64
+        rng = np.random.default_rng(3)
+        xpad = np.zeros((big_n, big_l), dtype=np.float32)
+        xnp = np.asarray(x)
+        xpad[:n, :l] = xnp
+        xpad[:n, l:] = xnp.mean(axis=1, keepdims=True)
+        xpad[n:, :] = rng.normal(size=(big_n - n, big_l))
+        s_big, _ = similarity_graph_inputs(jnp.asarray(xpad))
+        np.testing.assert_allclose(
+            np.asarray(s_big)[:n, :n], np.asarray(s_small), atol=2e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(4, 24), pad=st.integers(0, 40))
+    def test_padding_soundness_sweep(self, n, pad):
+        l = 32
+        x = rand_panel(n, l, seed=n)
+        s_small, _ = similarity_graph_inputs(x)
+        xpad = np.zeros((n + pad, l), dtype=np.float32)
+        xpad[:n] = np.asarray(x)
+        s_big, _ = similarity_graph_inputs(jnp.asarray(xpad))
+        np.testing.assert_allclose(
+            np.asarray(s_big)[:n, :n], np.asarray(s_small), atol=2e-5
+        )

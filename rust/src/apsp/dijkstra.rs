@@ -1,0 +1,236 @@
+//! Exact APSP: one binary-heap Dijkstra per source, sources in parallel
+//! (Yu & Shun's approach). Also provides the truncated single-source
+//! variant the hub-based approximation uses.
+
+use super::graph::CsrGraph;
+use crate::data::matrix::Matrix;
+use crate::parlay::{self, SendPtr};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(PartialEq)]
+struct QItem {
+    dist: f32,
+    v: u32,
+}
+
+impl Eq for QItem {}
+
+impl Ord for QItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap via reversed comparison
+        other.dist.total_cmp(&self.dist).then(other.v.cmp(&self.v))
+    }
+}
+
+impl PartialOrd for QItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Single-source shortest paths; unreachable vertices get `f32::INFINITY`.
+pub fn sssp(g: &CsrGraph, src: u32) -> Vec<f32> {
+    let mut dist = vec![f32::INFINITY; g.n];
+    sssp_into(g, src, f32::INFINITY, &mut dist);
+    dist
+}
+
+/// Truncated SSSP: stops once the frontier distance exceeds `radius`.
+/// `dist` must be pre-filled with INFINITY; entries settled within the
+/// radius are written. Returns the number of settled vertices.
+pub fn sssp_into(g: &CsrGraph, src: u32, radius: f32, dist: &mut [f32]) -> usize {
+    debug_assert_eq!(dist.len(), g.n);
+    let mut heap = BinaryHeap::with_capacity(64);
+    dist[src as usize] = 0.0;
+    heap.push(QItem { dist: 0.0, v: src });
+    let mut settled = 0usize;
+    while let Some(QItem { dist: d, v }) = heap.pop() {
+        if d > dist[v as usize] {
+            continue; // stale entry
+        }
+        if d > radius {
+            // everything beyond the radius stays INFINITY (to be restored
+            // by the caller); mark it back to avoid partial values
+            dist[v as usize] = f32::INFINITY;
+            continue;
+        }
+        settled += 1;
+        for (u, w) in g.neighbors(v) {
+            let nd = d + w;
+            if nd < dist[u as usize] {
+                dist[u as usize] = nd;
+                heap.push(QItem { dist: nd, v: u });
+            }
+        }
+    }
+    // Clean tentative (never settled, beyond radius) entries.
+    if radius.is_finite() {
+        for x in dist.iter_mut() {
+            if *x > radius {
+                *x = f32::INFINITY;
+            }
+        }
+    }
+    settled
+}
+
+/// Sparse truncated SSSP for small balls (§Perf L3 iter. 3): like
+/// [`sssp_into`] but records every touched vertex in `touched` and does
+/// NOT do an O(n) cleanup pass — the caller filters `touched` by radius
+/// and resets only those entries, making per-source cost proportional to
+/// the ball size rather than to n. `dist` must be all-INFINITY on entry;
+/// it is left dirty (reset it via `touched`).
+pub fn sssp_ball(
+    g: &CsrGraph,
+    src: u32,
+    radius: f32,
+    dist: &mut [f32],
+    touched: &mut Vec<u32>,
+) {
+    let mut heap = BinaryHeap::with_capacity(64);
+    dist[src as usize] = 0.0;
+    touched.push(src);
+    heap.push(QItem { dist: 0.0, v: src });
+    while let Some(QItem { dist: d, v }) = heap.pop() {
+        if d > dist[v as usize] || d > radius {
+            continue;
+        }
+        for (u, w) in g.neighbors(v) {
+            let nd = d + w;
+            if nd < dist[u as usize] {
+                if dist[u as usize].is_infinite() {
+                    touched.push(u);
+                }
+                dist[u as usize] = nd;
+                heap.push(QItem { dist: nd, v: u });
+            }
+        }
+    }
+}
+
+/// Exact APSP as a dense n×n matrix: parallel over sources, each source
+/// settling distances directly into its output row (no per-source
+/// scratch allocation — §Perf L3 iteration 1).
+pub fn apsp_exact(g: &CsrGraph) -> Matrix {
+    let n = g.n;
+    let mut out = Matrix::zeros(n, n);
+    let op = SendPtr(out.data.as_mut_ptr());
+    parlay::parallel_for(n, 1, |src| {
+        // SAFETY: row `src` written only by this iteration.
+        let row = unsafe { std::slice::from_raw_parts_mut(op.ptr().add(src * n), n) };
+        row.fill(f32::INFINITY);
+        sssp_into(g, src as u32, f32::INFINITY, row);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn line_graph(n: usize) -> CsrGraph {
+        let edges: Vec<(u32, u32, f32)> =
+            (0..n - 1).map(|i| (i as u32, i as u32 + 1, 1.0)).collect();
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn sssp_on_line() {
+        let g = line_graph(10);
+        let d = sssp(&g, 0);
+        for (i, &x) in d.iter().enumerate() {
+            assert!((x - i as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sssp_disconnected() {
+        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0)]);
+        let d = sssp(&g, 0);
+        assert_eq!(d[1], 1.0);
+        assert!(d[2].is_infinite() && d[3].is_infinite());
+    }
+
+    #[test]
+    fn truncated_respects_radius() {
+        let g = line_graph(20);
+        let mut dist = vec![f32::INFINITY; 20];
+        let settled = sssp_into(&g, 0, 5.0, &mut dist);
+        assert_eq!(settled, 6); // vertices 0..=5
+        for i in 0..20 {
+            if i <= 5 {
+                assert!((dist[i] - i as f32).abs() < 1e-6);
+            } else {
+                assert!(dist[i].is_infinite());
+            }
+        }
+    }
+
+    fn floyd_warshall(g: &CsrGraph) -> Vec<Vec<f32>> {
+        let n = g.n;
+        let mut d = vec![vec![f32::INFINITY; n]; n];
+        for v in 0..n {
+            d[v][v] = 0.0;
+            for (u, w) in g.neighbors(v as u32) {
+                if w < d[v][u as usize] {
+                    d[v][u as usize] = w;
+                }
+            }
+        }
+        for k in 0..n {
+            for i in 0..n {
+                for j in 0..n {
+                    let alt = d[i][k] + d[k][j];
+                    if alt < d[i][j] {
+                        d[i][j] = alt;
+                    }
+                }
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn apsp_matches_floyd_warshall_random() {
+        let mut r = Rng::new(31);
+        for trial in 0..10 {
+            let n = 5 + r.next_below(40);
+            // random connected-ish graph: spanning path + extra edges
+            let mut edges: Vec<(u32, u32, f32)> = (0..n - 1)
+                .map(|i| (i as u32, i as u32 + 1, r.next_f32() + 0.01))
+                .collect();
+            for _ in 0..n {
+                let u = r.next_below(n) as u32;
+                let v = r.next_below(n) as u32;
+                if u != v {
+                    edges.push((u, v, r.next_f32() + 0.01));
+                }
+            }
+            let g = CsrGraph::from_edges(n, &edges);
+            let exact = apsp_exact(&g);
+            let fw = floyd_warshall(&g);
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(
+                        (exact.at(i, j) - fw[i][j]).abs() < 1e-4,
+                        "trial {trial} ({i},{j}): {} vs {}",
+                        exact.at(i, j),
+                        fw[i][j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apsp_symmetric_zero_diag() {
+        let g = line_graph(30);
+        let m = apsp_exact(&g);
+        assert!(m.is_symmetric(1e-6));
+        for i in 0..30 {
+            assert_eq!(m.at(i, i), 0.0);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! CSR adjacency for the (sparse, planar) TMFG.
+
+use crate::data::corr::corr_to_distance;
+use crate::data::matrix::Matrix;
+use crate::tmfg::TmfgResult;
+
+/// Compressed sparse row graph with f32 edge lengths.
+#[derive(Debug, Clone)]
+pub struct CsrGraph {
+    pub n: usize,
+    pub offsets: Vec<u32>,
+    pub targets: Vec<u32>,
+    pub weights: Vec<f32>,
+}
+
+impl CsrGraph {
+    /// Build from an undirected edge list with explicit weights.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f32)]) -> CsrGraph {
+        let mut deg = vec![0u32; n];
+        for &(u, v, _) in edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let m = offsets[n] as usize;
+        let mut targets = vec![0u32; m];
+        let mut weights = vec![0f32; m];
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        for &(u, v, w) in edges {
+            let cu = cursor[u as usize] as usize;
+            targets[cu] = v;
+            weights[cu] = w;
+            cursor[u as usize] += 1;
+            let cv = cursor[v as usize] as usize;
+            targets[cv] = u;
+            weights[cv] = w;
+            cursor[v as usize] += 1;
+        }
+        CsrGraph { n, offsets, targets, weights }
+    }
+
+    /// Build from a TMFG result, with edge lengths d = √(2(1−S[u,v])).
+    pub fn from_tmfg(r: &TmfgResult, s: &Matrix) -> CsrGraph {
+        let edges: Vec<(u32, u32, f32)> = r
+            .edges
+            .iter()
+            .map(|&(u, v)| (u, v, corr_to_distance(s.at(u as usize, v as usize))))
+            .collect();
+        Self::from_edges(r.n, &edges)
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        self.targets[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.weights[lo..hi].iter().copied())
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.targets.len() / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_csr() {
+        // path 0-1-2 plus edge 0-2
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0), (0, 2, 5.0)]);
+        assert_eq!(g.n_edges(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 2);
+        let n0: Vec<(u32, f32)> = g.neighbors(0).collect();
+        assert!(n0.contains(&(1, 1.0)) && n0.contains(&(2, 5.0)));
+    }
+
+    #[test]
+    fn from_tmfg_planar_counts() {
+        use crate::data::synth::SynthSpec;
+        let ds = SynthSpec::new("t", 50, 48, 3).generate(2);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let g = CsrGraph::from_tmfg(&r, &s);
+        assert_eq!(g.n, 50);
+        assert_eq!(g.n_edges(), 3 * 50 - 6);
+        // all weights in [0, 2] (valid correlation distances)
+        assert!(g.weights.iter().all(|&w| (0.0..=2.0 + 1e-6).contains(&w)));
+    }
+
+    #[test]
+    fn isolated_vertices_ok() {
+        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0)]);
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.degree(3), 0);
+    }
+}

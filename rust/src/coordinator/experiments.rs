@@ -1,0 +1,489 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (§5) on the synthetic Table-1 mirror datasets.
+//! Each experiment prints the same rows/series the paper reports and
+//! writes a CSV under `results/`.
+
+use super::pipeline::{ApspMode, Pipeline, PipelineConfig, TmfgAlgo};
+use super::registry;
+use crate::data::corr::pearson_correlation;
+use crate::data::matrix::Matrix;
+use crate::data::synth::Dataset;
+use crate::dbht::Linkage;
+use crate::parlay;
+use crate::util::timer::Timer;
+use std::io::Write;
+
+/// Shared experiment options.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// n-scale applied to the Table-1 sizes (1.0 = paper sizes; the
+    /// default keeps the full suite tractable on a laptop-class box).
+    pub scale: f64,
+    pub seed: u64,
+    /// Thread counts for the scaling sweeps (empty = 1,2,4,...,max).
+    pub threads: Vec<usize>,
+    /// Restrict to these dataset names (empty = experiment default).
+    pub datasets: Vec<String>,
+    pub out_dir: String,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            scale: 0.1,
+            seed: registry::DEFAULT_SEED,
+            threads: Vec::new(),
+            datasets: Vec::new(),
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExpOpts {
+    fn thread_sweep(&self) -> Vec<usize> {
+        if !self.threads.is_empty() {
+            return self.threads.clone();
+        }
+        let max = parlay::num_threads();
+        let mut t = 1;
+        let mut out = vec![];
+        while t < max {
+            out.push(t);
+            t *= 2;
+        }
+        out.push(max);
+        out
+    }
+
+    fn dataset_names(&self, default: Vec<String>) -> Vec<String> {
+        if self.datasets.is_empty() {
+            default
+        } else {
+            self.datasets.clone()
+        }
+    }
+}
+
+fn write_csv(opts: &ExpOpts, name: &str, header: &str, rows: &[Vec<String>]) {
+    std::fs::create_dir_all(&opts.out_dir).ok();
+    let path = format!("{}/{}.csv", opts.out_dir, name);
+    let mut f = std::fs::File::create(&path).expect("create csv");
+    writeln!(f, "{header}").unwrap();
+    for r in rows {
+        writeln!(f, "{}", r.join(",")).unwrap();
+    }
+    println!("wrote {path}");
+}
+
+fn pipeline_for(algo: TmfgAlgo) -> Pipeline {
+    Pipeline::new(PipelineConfig { algo, use_xla: false, ..Default::default() })
+}
+
+/// The methods compared in the runtime/quality figures.
+fn fig2_algos() -> Vec<TmfgAlgo> {
+    vec![
+        TmfgAlgo::Par(1),
+        TmfgAlgo::Par(10),
+        TmfgAlgo::Corr,
+        TmfgAlgo::Heap,
+        TmfgAlgo::Opt,
+    ]
+}
+
+fn load(opts: &ExpOpts, name: &str) -> Dataset {
+    registry::get_dataset(name, opts.scale, opts.seed)
+        .unwrap_or_else(|| panic!("unknown dataset {name}"))
+}
+
+/// Similarity matrices are the paper's *input*; compute once per dataset.
+fn similarity(ds: &Dataset) -> Matrix {
+    pearson_correlation(&ds.data)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1
+// ---------------------------------------------------------------------------
+pub fn table1(opts: &ExpOpts) {
+    println!("\n== Table 1: datasets (scale {}) ==", opts.scale);
+    println!("{:<4} {:<28} {:>7} {:>6} {:>8}", "ID", "Name", "n", "L", "classes");
+    let mut rows = Vec::new();
+    for (i, name) in registry::table1_names().iter().enumerate() {
+        let ds = load(opts, name);
+        println!(
+            "{:<4} {:<28} {:>7} {:>6} {:>8}",
+            i + 1,
+            ds.name,
+            ds.n(),
+            ds.len(),
+            ds.n_classes
+        );
+        rows.push(vec![
+            (i + 1).to_string(),
+            ds.name.clone(),
+            ds.n().to_string(),
+            ds.len().to_string(),
+            ds.n_classes.to_string(),
+        ]);
+    }
+    write_csv(opts, "table1", "id,name,n,L,classes", &rows);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 2: parallel runtime of all methods per dataset
+// ---------------------------------------------------------------------------
+pub fn fig2(opts: &ExpOpts) {
+    println!("\n== Fig 2: parallel runtime (s) of TMFG-DBHT methods ==");
+    let names = opts.dataset_names(registry::table1_names());
+    let algos = fig2_algos();
+    print!("{:<28}", "dataset");
+    for a in &algos {
+        print!(" {:>14}", a.name());
+    }
+    println!();
+    let mut rows = Vec::new();
+    for name in &names {
+        let ds = load(opts, name);
+        let s = similarity(&ds);
+        print!("{:<28}", format!("{}(n={})", ds.name, ds.n()));
+        let mut row = vec![ds.name.clone(), ds.n().to_string()];
+        for algo in &algos {
+            let p = pipeline_for(*algo);
+            let t = Timer::start();
+            let out = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
+            let secs = t.elapsed();
+            let _ = out;
+            print!(" {:>14.4}", secs);
+            use std::io::Write as _;
+            std::io::stdout().flush().ok();
+            row.push(format!("{secs:.6}"));
+        }
+        println!();
+        rows.push(row);
+    }
+    let header = format!(
+        "dataset,n,{}",
+        algos.iter().map(|a| a.name()).collect::<Vec<_>>().join(",")
+    );
+    write_csv(opts, "fig2_runtime", &header, &rows);
+}
+
+// ---------------------------------------------------------------------------
+// Figs 3 & 4: self-relative speedup on the three largest datasets
+// ---------------------------------------------------------------------------
+fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) {
+    println!(
+        "\n== Self-relative speedup of {} on the 3 largest datasets ==",
+        algo.name()
+    );
+    let names = opts.dataset_names(
+        registry::largest3_names().iter().map(|s| s.to_string()).collect(),
+    );
+    let sweep = opts.thread_sweep();
+    println!("{:<28} {:>8} {:>10} {:>9}", "dataset", "threads", "secs", "speedup");
+    let mut rows = Vec::new();
+    for name in &names {
+        let ds = load(opts, name);
+        let s = similarity(&ds);
+        let mut base = None;
+        for &t in &sweep {
+            let secs = parlay::with_threads(t, || {
+                let p = pipeline_for(algo);
+                let timer = Timer::start();
+                let _ = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
+                timer.elapsed()
+            });
+            let b = *base.get_or_insert(secs);
+            println!("{:<28} {:>8} {:>10.4} {:>9.2}", ds.name, t, secs, b / secs);
+            rows.push(vec![
+                ds.name.clone(),
+                t.to_string(),
+                format!("{secs:.6}"),
+                format!("{:.3}", b / secs),
+            ]);
+        }
+    }
+    write_csv(opts, csv, "dataset,threads,secs,speedup", &rows);
+}
+
+pub fn fig3(opts: &ExpOpts) {
+    scaling(opts, TmfgAlgo::Opt, "fig3_scaling_opt");
+}
+
+pub fn fig4(opts: &ExpOpts) {
+    scaling(opts, TmfgAlgo::Par(10), "fig4_scaling_par10");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5: stage breakdown on Crop (max threads and 1 thread)
+// ---------------------------------------------------------------------------
+pub fn fig5(opts: &ExpOpts) {
+    let names = opts.dataset_names(vec!["Crop".to_string()]);
+    let name = &names[0];
+    let ds = load(opts, name);
+    let s = similarity(&ds);
+    let algos = fig2_algos();
+    let mut rows = Vec::new();
+    for threads in [parlay::num_threads(), 1] {
+        println!(
+            "\n== Fig 5: stage breakdown on {} (n={}) with {} thread(s) ==",
+            ds.name,
+            ds.n(),
+            threads
+        );
+        println!(
+            "{:<16} {:>12} {:>12} {:>12} {:>10} {:>10} {:>10}",
+            "method", "init-faces", "sort", "add-verts", "apsp", "dbht", "total"
+        );
+        for algo in &algos {
+            let out = parlay::with_threads(threads, || {
+                pipeline_for(*algo).run_similarity(&s, Some(&ds.labels), ds.n_classes)
+            });
+            let g = |k: &str| out.breakdown.get(k).unwrap_or(0.0);
+            println!(
+                "{:<16} {:>12.4} {:>12.4} {:>12.4} {:>10.4} {:>10.4} {:>10.4}",
+                algo.name(),
+                g("tmfg:init-faces"),
+                g("tmfg:sort"),
+                g("tmfg:add-vertices"),
+                g("apsp"),
+                g("dbht"),
+                out.breakdown.total()
+            );
+            rows.push(vec![
+                algo.name(),
+                threads.to_string(),
+                format!("{:.6}", g("tmfg:init-faces")),
+                format!("{:.6}", g("tmfg:sort")),
+                format!("{:.6}", g("tmfg:add-vertices")),
+                format!("{:.6}", g("apsp")),
+                format!("{:.6}", g("dbht")),
+                format!("{:.6}", out.breakdown.total()),
+            ]);
+        }
+    }
+    write_csv(
+        opts,
+        "fig5_breakdown",
+        "method,threads,init_faces,sort,add_vertices,apsp,dbht,total",
+        &rows,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6: ARI of every method per dataset
+// ---------------------------------------------------------------------------
+pub fn fig6(opts: &ExpOpts) {
+    println!("\n== Fig 6: ARI scores ==");
+    let names = opts.dataset_names(registry::table1_names());
+    let mut algos = fig2_algos();
+    algos.insert(2, TmfgAlgo::Par(200));
+    print!("{:<28}", "dataset");
+    for a in &algos {
+        print!(" {:>14}", a.name());
+    }
+    println!();
+    let mut rows = Vec::new();
+    let mut sums = vec![0.0f64; algos.len()];
+    for name in &names {
+        let ds = load(opts, name);
+        let s = similarity(&ds);
+        print!("{:<28}", ds.name);
+        let mut row = vec![ds.name.clone()];
+        for (i, algo) in algos.iter().enumerate() {
+            let out = pipeline_for(*algo).run_similarity(&s, Some(&ds.labels), ds.n_classes);
+            let ari = out.ari.unwrap();
+            sums[i] += ari;
+            print!(" {:>14.3}", ari);
+            use std::io::Write as _;
+            std::io::stdout().flush().ok();
+            row.push(format!("{ari:.4}"));
+        }
+        println!();
+        rows.push(row);
+    }
+    print!("{:<28}", "AVERAGE");
+    let mut avg_row = vec!["AVERAGE".to_string()];
+    for s in &sums {
+        let avg = s / names.len() as f64;
+        print!(" {:>14.3}", avg);
+        avg_row.push(format!("{avg:.4}"));
+    }
+    println!();
+    rows.push(avg_row);
+    let header = format!(
+        "dataset,{}",
+        algos.iter().map(|a| a.name()).collect::<Vec<_>>().join(",")
+    );
+    write_csv(opts, "fig6_ari", &header, &rows);
+}
+
+// ---------------------------------------------------------------------------
+// Fig 7: percent edge-sum reduction vs PAR-TDBHT-1
+// ---------------------------------------------------------------------------
+pub fn fig7(opts: &ExpOpts) {
+    println!("\n== Fig 7: % edge-sum reduction vs par-tdbht-1 (lower = better) ==");
+    let names = opts.dataset_names(registry::table1_names());
+    let algos = vec![TmfgAlgo::Par(10), TmfgAlgo::Par(200), TmfgAlgo::Corr, TmfgAlgo::Heap];
+    print!("{:<28}", "dataset");
+    for a in &algos {
+        print!(" {:>14}", a.name());
+    }
+    println!();
+    let mut rows = Vec::new();
+    for name in &names {
+        let ds = load(opts, name);
+        let s = similarity(&ds);
+        let base = pipeline_for(TmfgAlgo::Par(1))
+            .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+            .edge_sum;
+        print!("{:<28}", ds.name);
+        let mut row = vec![ds.name.clone()];
+        for algo in &algos {
+            let es = pipeline_for(*algo)
+                .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+                .edge_sum;
+            let pct = crate::metrics::edge_sum_reduction_pct(base, es);
+            print!(" {:>14.3}", pct);
+            row.push(format!("{pct:.5}"));
+        }
+        println!();
+        rows.push(row);
+    }
+    let header = format!(
+        "dataset,{}",
+        algos.iter().map(|a| a.name()).collect::<Vec<_>>().join(",")
+    );
+    write_csv(opts, "fig7_edgesum", &header, &rows);
+}
+
+// ---------------------------------------------------------------------------
+// §5.1 extra: exact vs approximate APSP
+// ---------------------------------------------------------------------------
+pub fn apsp_speedup(opts: &ExpOpts) {
+    println!("\n== §5.1: exact vs approximate APSP (OPT pipeline) ==");
+    let names = opts.dataset_names(registry::table1_names());
+    println!("{:<28} {:>10} {:>10} {:>9} {:>9} {:>9}", "dataset", "exact_s", "approx_s", "speedup", "ari_ex", "ari_ap");
+    let mut rows = Vec::new();
+    for name in &names {
+        let ds = load(opts, name);
+        let s = similarity(&ds);
+        let run = |mode: ApspMode| {
+            let mut c = PipelineConfig {
+                algo: TmfgAlgo::Opt,
+                use_xla: false,
+                ..Default::default()
+            };
+            c.apsp = Some(mode);
+            let out = Pipeline::new(c).run_similarity(&s, Some(&ds.labels), ds.n_classes);
+            (out.breakdown.get("apsp").unwrap_or(0.0), out.ari.unwrap())
+        };
+        let (te, ae) = run(ApspMode::Exact);
+        let (ta, aa) = run(ApspMode::Approx);
+        println!(
+            "{:<28} {:>10.4} {:>10.4} {:>9.2} {:>9.3} {:>9.3}",
+            ds.name,
+            te,
+            ta,
+            te / ta.max(1e-12),
+            ae,
+            aa
+        );
+        rows.push(vec![
+            ds.name.clone(),
+            format!("{te:.6}"),
+            format!("{ta:.6}"),
+            format!("{:.3}", te / ta.max(1e-12)),
+            format!("{ae:.4}"),
+            format!("{aa:.4}"),
+        ]);
+    }
+    write_csv(opts, "apsp_speedup", "dataset,exact_s,approx_s,speedup,ari_exact,ari_approx", &rows);
+}
+
+/// Linkage ablation (DESIGN.md calls this out as a design choice).
+pub fn ablation_linkage(opts: &ExpOpts) {
+    println!("\n== Ablation: linkage function in DBHT (OPT pipeline) ==");
+    let names = opts.dataset_names(vec!["CBF".into(), "ECG5000".into(), "ShapesAll".into()]);
+    println!("{:<28} {:>10} {:>10} {:>10}", "dataset", "complete", "average", "single");
+    let mut rows = Vec::new();
+    for name in &names {
+        let ds = load(opts, name);
+        let s = similarity(&ds);
+        let mut aris = Vec::new();
+        for linkage in [Linkage::Complete, Linkage::Average, Linkage::Single] {
+            let c = PipelineConfig {
+                algo: TmfgAlgo::Opt,
+                linkage,
+                use_xla: false,
+                ..Default::default()
+            };
+            let out = Pipeline::new(c).run_similarity(&s, Some(&ds.labels), ds.n_classes);
+            aris.push(out.ari.unwrap());
+        }
+        println!(
+            "{:<28} {:>10.3} {:>10.3} {:>10.3}",
+            ds.name, aris[0], aris[1], aris[2]
+        );
+        rows.push(vec![
+            ds.name.clone(),
+            format!("{:.4}", aris[0]),
+            format!("{:.4}", aris[1]),
+            format!("{:.4}", aris[2]),
+        ]);
+    }
+    write_csv(opts, "ablation_linkage", "dataset,complete,average,single", &rows);
+}
+
+/// Run every experiment (the full evaluation section).
+pub fn all(opts: &ExpOpts) {
+    table1(opts);
+    fig2(opts);
+    fig3(opts);
+    fig4(opts);
+    fig5(opts);
+    fig6(opts);
+    fig7(opts);
+    apsp_speedup(opts);
+    ablation_linkage(opts);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ExpOpts {
+        ExpOpts {
+            scale: 0.02,
+            threads: vec![1, 2],
+            datasets: vec!["CBF".into()],
+            out_dir: format!("{}/tmfg_exp_test", std::env::temp_dir().display()),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig2_smoke() {
+        let o = tiny_opts();
+        fig2(&o);
+        assert!(std::path::Path::new(&format!("{}/fig2_runtime.csv", o.out_dir)).exists());
+    }
+
+    #[test]
+    fn fig3_smoke() {
+        let o = tiny_opts();
+        fig3(&o);
+        let text = std::fs::read_to_string(format!("{}/fig3_scaling_opt.csv", o.out_dir)).unwrap();
+        assert!(text.lines().count() >= 3, "{text}");
+    }
+
+    #[test]
+    fn fig6_and_7_smoke() {
+        let o = tiny_opts();
+        fig6(&o);
+        fig7(&o);
+        let t6 = std::fs::read_to_string(format!("{}/fig6_ari.csv", o.out_dir)).unwrap();
+        assert!(t6.contains("AVERAGE"));
+        let t7 = std::fs::read_to_string(format!("{}/fig7_edgesum.csv", o.out_dir)).unwrap();
+        assert!(t7.contains("CBF"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordinator: the TDBHT pipeline (dataset → similarity via the
+//! XLA engine → TMFG → APSP → DBHT → dendrogram → metrics) with per-stage
+//! timing, the dataset registry, the experiment harness regenerating every
+//! table/figure of the paper, and a batched TCP clustering service.
+
+pub mod experiments;
+pub mod pipeline;
+pub mod registry;
+pub mod service;
+
+pub use pipeline::{ApspMode, Pipeline, PipelineConfig, PipelineOutput, TmfgAlgo};

@@ -1,0 +1,103 @@
+//! Named dataset registry: the 18 Table-1 UCR-mirror synthetic datasets
+//! (plus small demo sets), generated deterministically on demand.
+
+use crate::data::loader::load_ucr_csv;
+use crate::data::synth::{table1_specs, Dataset, SynthSpec};
+use std::path::Path;
+
+pub const DEFAULT_SEED: u64 = 20240711;
+
+/// Names of the Table-1 datasets in paper order.
+pub fn table1_names() -> Vec<String> {
+    table1_specs(1.0).into_iter().map(|s| s.name).collect()
+}
+
+/// The three largest datasets (used by the paper's Figs. 3/4 scaling study).
+pub fn largest3_names() -> [&'static str; 3] {
+    ["Crop", "ElectricDevices", "StarLightCurves"]
+}
+
+/// Resolve a dataset: a Table-1 name (at the given n-scale), `demo[-N]`,
+/// or a path to a UCR-style CSV file.
+pub fn get_dataset(name: &str, scale: f64, seed: u64) -> Option<Dataset> {
+    if let Some(rest) = name.strip_prefix("demo") {
+        let n = rest
+            .strip_prefix('-')
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200);
+        return Some(SynthSpec::new(name, n, 64, 4).generate(seed));
+    }
+    if name.ends_with(".csv") || name.contains('/') {
+        return load_ucr_csv(Path::new(name)).ok();
+    }
+    let spec = table1_specs(scale)
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))?;
+    // Per-dataset deterministic seed so different datasets differ.
+    let ds_seed = seed ^ fxhash(name);
+    Some(spec.generate(ds_seed))
+}
+
+/// Generate all Table-1 datasets at a scale.
+pub fn all_table1(scale: f64, seed: u64) -> Vec<Dataset> {
+    table1_specs(scale)
+        .into_iter()
+        .map(|spec| {
+            let ds_seed = seed ^ fxhash(&spec.name);
+            spec.generate(ds_seed)
+        })
+        .collect()
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_names_complete() {
+        let names = table1_names();
+        assert_eq!(names.len(), 18);
+        assert!(names.contains(&"Crop".to_string()));
+        for l in largest3_names() {
+            assert!(names.contains(&l.to_string()));
+        }
+    }
+
+    #[test]
+    fn get_by_name_scaled() {
+        let ds = get_dataset("CBF", 0.1, DEFAULT_SEED).unwrap();
+        assert_eq!(ds.n(), 93);
+        assert_eq!(ds.n_classes, 3);
+        assert!(get_dataset("NoSuchDataset", 1.0, 0).is_none());
+    }
+
+    #[test]
+    fn demo_sizes() {
+        assert_eq!(get_dataset("demo", 1.0, 1).unwrap().n(), 200);
+        assert_eq!(get_dataset("demo-50", 1.0, 1).unwrap().n(), 50);
+    }
+
+    #[test]
+    fn different_datasets_differ() {
+        let a = get_dataset("CBF", 0.05, DEFAULT_SEED).unwrap();
+        let b = get_dataset("ECG5000", 0.05, DEFAULT_SEED).unwrap();
+        assert_ne!(a.data.data.len(), 0);
+        assert_ne!(a.labels, b.labels[..a.n().min(b.n())].to_vec());
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = get_dataset("Mallat", 0.05, 7).unwrap();
+        let b = get_dataset("Mallat", 0.05, 7).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+}

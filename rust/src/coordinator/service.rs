@@ -1,0 +1,289 @@
+//! A batched TCP clustering service — the "deployment" face of the
+//! coordinator. Wire protocol: one JSON object per line per request;
+//! one JSON object per line back.
+//!
+//! Request fields:
+//!   {"id": 7, "dataset": "CBF", "scale": 0.05, "seed": 1,
+//!    "algo": "opt", "k": 3}
+//! or inline data:
+//!   {"id": 7, "n": 16, "l": 8, "data": [ ... n*l floats ... ], "k": 2}
+//! Special: {"cmd": "ping"} → {"ok": true}, {"cmd": "shutdown"}.
+//!
+//! Response: {"id": 7, "ok": true, "labels": [...], "ari": 0.4,
+//!            "secs": 0.01, "algo": "opt-tdbht", "batch": 3}
+//!
+//! Architecture: acceptor threads parse requests into a shared queue; a
+//! single dispatcher drains the queue in small batches (batching window),
+//! runs each batch's similarity computations through one shared engine
+//! (amortizing executable-cache hits), then the graph stages per request
+//! on the parallel pool, and replies. The batch size a request rode in on
+//! is reported so clients/tests can observe batching.
+
+use super::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
+use super::registry;
+use crate::data::matrix::Matrix;
+use crate::data::synth::Dataset;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct ServiceConfig {
+    pub addr: String,
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Batching window: wait this long for more requests after the first.
+    pub batch_window: Duration,
+    pub default_algo: TmfgAlgo,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:7401".into(),
+            max_batch: 8,
+            batch_window: Duration::from_millis(5),
+            default_algo: TmfgAlgo::Opt,
+        }
+    }
+}
+
+struct Job {
+    request: Json,
+    reply: Sender<String>,
+}
+
+/// Handle to a running service (for tests and the `serve` example).
+pub struct ServiceHandle {
+    pub addr: String,
+    shutdown: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        // poke the acceptor so it notices
+        let _ = TcpStream::connect(&self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn parse_dataset(req: &Json) -> Result<(Dataset, usize), String> {
+    let k = req.get("k").as_usize().unwrap_or(0);
+    if let Some(name) = req.get("dataset").as_str() {
+        let scale = req.get("scale").as_f64().unwrap_or(0.05);
+        let seed = req.get("seed").as_f64().unwrap_or(1.0) as u64;
+        let ds = registry::get_dataset(name, scale, seed)
+            .ok_or_else(|| format!("unknown dataset {name}"))?;
+        let k = if k == 0 { ds.n_classes } else { k };
+        return Ok((ds, k));
+    }
+    let n = req.get("n").as_usize().ok_or("missing n")?;
+    let l = req.get("l").as_usize().ok_or("missing l")?;
+    let arr = req.get("data").as_arr().ok_or("missing data")?;
+    if arr.len() != n * l {
+        return Err(format!("data length {} != n*l = {}", arr.len(), n * l));
+    }
+    let data: Vec<f32> = arr
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+        .collect();
+    if k == 0 {
+        return Err("inline data requires k".into());
+    }
+    Ok((
+        Dataset {
+            name: "inline".into(),
+            data: Matrix::from_vec(n, l, data),
+            labels: vec![0; n],
+            n_classes: k,
+        },
+        k,
+    ))
+}
+
+fn process(req: &Json, pipeline: &Pipeline, batch_size: usize) -> Json {
+    let id = req.get("id").clone();
+    let t = crate::util::timer::Timer::start();
+    match parse_dataset(req) {
+        Ok((ds, k)) => {
+            // run_dataset routes the similarity computation through the
+            // shared engine (XLA artifact path when a bucket fits).
+            let out = pipeline.run_dataset(&ds);
+            let labels = out.dbht.dendrogram.cut(k);
+            // Report ARI only for named datasets (which carry ground truth).
+            let ari = if req.get("dataset").as_str().is_some() {
+                Some(crate::metrics::adjusted_rand_index(&ds.labels, &labels))
+            } else {
+                None
+            };
+            Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(true)),
+                ("labels", Json::arr_usize(&labels)),
+                (
+                    "ari",
+                    ari.map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("secs", Json::Num(t.elapsed())),
+                ("algo", Json::str(&pipeline.config.algo.name())),
+                ("batch", Json::Num(batch_size as f64)),
+            ])
+        }
+        Err(e) => Json::obj(vec![
+            ("id", id),
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(&e)),
+        ]),
+    }
+}
+
+fn dispatcher(rx: Receiver<Job>, cfg: &ServiceConfig, shutdown: Arc<AtomicBool>) {
+    // One pipeline per algo, built lazily; engines (and their compiled
+    // XLA executables) are shared across the whole service lifetime.
+    let mut pipelines: std::collections::HashMap<String, Pipeline> = Default::default();
+    loop {
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => {
+                if shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        // batching window: gather more requests
+        let mut batch = vec![first];
+        let deadline = std::time::Instant::now() + cfg.batch_window;
+        while batch.len() < cfg.max_batch {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(j) => batch.push(j),
+                Err(_) => break,
+            }
+        }
+        let bsize = batch.len();
+        for job in batch {
+            let algo = job
+                .request
+                .get("algo")
+                .as_str()
+                .and_then(TmfgAlgo::parse)
+                .unwrap_or(cfg.default_algo);
+            let pipeline = pipelines.entry(algo.name()).or_insert_with(|| {
+                Pipeline::new(PipelineConfig { algo, ..Default::default() })
+            });
+            let resp = process(&job.request, pipeline, bsize);
+            let _ = job.reply.send(resp.to_string());
+        }
+    }
+}
+
+/// Start the service; returns once the listener is bound.
+pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?.to_string();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = channel::<Job>();
+    let sd = shutdown.clone();
+    let cfg2 = ServiceConfig { addr: addr.clone(), ..cfg };
+    let join = std::thread::spawn(move || {
+        let sd_dispatch = sd.clone();
+        let dispatch = std::thread::spawn(move || dispatcher(rx, &cfg2, sd_dispatch));
+        for stream in listener.incoming() {
+            if sd.load(Ordering::Acquire) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let tx = tx.clone();
+            let sd_conn = sd.clone();
+            std::thread::spawn(move || handle_conn(stream, tx, sd_conn));
+        }
+        drop(tx);
+        let _ = dispatch.join();
+    });
+    Ok(ServiceHandle { addr, shutdown, join: Some(join) })
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
+    let peer = stream.try_clone();
+    let reader = BufReader::new(stream);
+    let Ok(mut writer) = peer else { return };
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str(&format!("bad json: {e}")))
+                    ])
+                    .to_string()
+                );
+                continue;
+            }
+        };
+        match req.get("cmd").as_str() {
+            Some("ping") => {
+                let _ = writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string());
+                continue;
+            }
+            Some("shutdown") => {
+                shutdown.store(true, Ordering::Release);
+                let _ = writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string());
+                return;
+            }
+            _ => {}
+        }
+        let (rtx, rrx) = channel();
+        if tx.send(Job { request: req, reply: rtx }).is_err() {
+            break;
+        }
+        match rrx.recv() {
+            Ok(resp) => {
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Minimal blocking client used by tests and the serve example.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
+        writeln!(self.stream, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+}

@@ -1,0 +1,207 @@
+//! Native parallel Pearson correlation and correlation→distance transforms.
+//!
+//! This is the Rust fallback/baseline for the AOT-compiled XLA path in
+//! `runtime::engine` (which runs the same computation as a Pallas kernel
+//! lowered to HLO). Both paths implement S[i,j] = pearson(X[i,:], X[j,:]).
+//! The paper assumes the n×n correlation matrix as the pipeline input; we
+//! treat its computation as the dense L1/L2 hot-spot (see DESIGN.md §2).
+
+use super::matrix::Matrix;
+use crate::parlay::{self, SendPtr};
+
+/// Standardize each row to zero mean and unit ℓ2 norm. Rows with ~zero
+/// variance become all-zero (their correlations are defined as 0).
+pub fn standardize_rows(x: &Matrix) -> Matrix {
+    let (n, l) = (x.rows, x.cols);
+    let mut z = Matrix::zeros(n, l);
+    let zp = SendPtr(z.data.as_mut_ptr());
+    parlay::parallel_for(n, 1, |i| {
+        let row = x.row(i);
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / l as f64;
+        let mut ss = 0.0f64;
+        for &v in row {
+            let d = v as f64 - mean;
+            ss += d * d;
+        }
+        let norm = ss.sqrt();
+        let inv = if norm > 1e-12 { 1.0 / norm } else { 0.0 };
+        for (j, &v) in row.iter().enumerate() {
+            // SAFETY: row i is written only by iteration i.
+            unsafe { zp.write(i * l + j, ((v as f64 - mean) * inv) as f32) };
+        }
+    });
+    z
+}
+
+/// Pearson correlation matrix: S = Ẑ Ẑᵀ with Ẑ = standardized rows.
+/// Exploits symmetry (computes the upper triangle, mirrors it) and
+/// parallelizes across rows. Inner kernel is a blocked dot product that
+/// LLVM auto-vectorizes.
+pub fn pearson_correlation(x: &Matrix) -> Matrix {
+    let n = x.rows;
+    let z = standardize_rows(x);
+    let l = z.cols;
+    let mut s = Matrix::zeros(n, n);
+    let sp = SendPtr(s.data.as_mut_ptr());
+    let zref = &z;
+    // Row-parallel upper triangle. Chunked so each task does similar work:
+    // pair row i with row n-1-i (triangle balancing).
+    parlay::parallel_for(n.div_ceil(2), 1, |half| {
+        for &i in &[half, n - 1 - half] {
+            if half == n - 1 - half && i != half {
+                continue;
+            }
+            let zi = zref.row(i);
+            for j in i..n {
+                let zj = zref.row(j);
+                let mut acc = 0.0f32;
+                // simple blocked dot; LLVM vectorizes this loop
+                let mut k = 0;
+                let mut acc4 = [0.0f32; 4];
+                while k + 4 <= l {
+                    acc4[0] += zi[k] * zj[k];
+                    acc4[1] += zi[k + 1] * zj[k + 1];
+                    acc4[2] += zi[k + 2] * zj[k + 2];
+                    acc4[3] += zi[k + 3] * zj[k + 3];
+                    k += 4;
+                }
+                while k < l {
+                    acc += zi[k] * zj[k];
+                    k += 1;
+                }
+                let v = (acc + acc4[0] + acc4[1] + acc4[2] + acc4[3]).clamp(-1.0, 1.0);
+                let v = if i == j { 1.0 } else { v };
+                // SAFETY: (i,j) and (j,i) are written only by index pair (i,j),
+                // which belongs to exactly one `half` iteration.
+                unsafe {
+                    sp.write(i * n + j, v);
+                    sp.write(j * n + i, v);
+                }
+            }
+        }
+    });
+    s
+}
+
+/// The standard correlation→metric transform used throughout the
+/// PMFG/TMFG/DBHT literature: d(i,j) = sqrt(2·(1 − ρ(i,j))) ∈ [0, 2].
+#[inline]
+pub fn corr_to_distance(rho: f32) -> f32 {
+    (2.0 * (1.0 - rho.clamp(-1.0, 1.0))).max(0.0).sqrt()
+}
+
+/// Elementwise distance matrix from a similarity (correlation) matrix.
+pub fn distance_matrix(s: &Matrix) -> Matrix {
+    let mut d = Matrix::zeros(s.rows, s.cols);
+    let dp = SendPtr(d.data.as_mut_ptr());
+    let n = s.rows * s.cols;
+    let sref = &s.data;
+    parlay::parallel_for_chunks(n, 4096, |a, b| {
+        for i in a..b {
+            unsafe { dp.write(i, corr_to_distance(sref[i])) };
+        }
+    });
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_pearson(x: &Matrix, i: usize, j: usize) -> f64 {
+        let (a, b) = (x.row(i), x.row(j));
+        let n = a.len() as f64;
+        let ma = a.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let mut num = 0.0;
+        let mut da = 0.0;
+        let mut db = 0.0;
+        for k in 0..a.len() {
+            let xa = a[k] as f64 - ma;
+            let xb = b[k] as f64 - mb;
+            num += xa * xb;
+            da += xa * xa;
+            db += xb * xb;
+        }
+        num / (da.sqrt() * db.sqrt()).max(1e-30)
+    }
+
+    #[test]
+    fn standardize_properties() {
+        let mut r = Rng::new(1);
+        let x = Matrix::from_vec(5, 50, (0..250).map(|_| r.next_f32() * 10.0 - 5.0).collect());
+        let z = standardize_rows(&x);
+        for i in 0..5 {
+            let row = z.row(i);
+            let mean: f64 = row.iter().map(|&v| v as f64).sum::<f64>() / 50.0;
+            let norm: f64 = row.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+            assert!(mean.abs() < 1e-6, "mean={mean}");
+            assert!((norm - 1.0).abs() < 1e-5, "norm={norm}");
+        }
+    }
+
+    #[test]
+    fn standardize_constant_row_is_zero() {
+        let x = Matrix::from_vec(1, 10, vec![3.0; 10]);
+        let z = standardize_rows(&x);
+        assert!(z.row(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn correlation_matches_naive() {
+        let mut r = Rng::new(2);
+        let n = 40;
+        let l = 64;
+        let x = Matrix::from_vec(n, l, (0..n * l).map(|_| r.next_gaussian() as f32).collect());
+        let s = pearson_correlation(&x);
+        assert!(s.is_symmetric(1e-6));
+        for i in 0..n {
+            assert!((s.at(i, i) - 1.0).abs() < 1e-6);
+            for j in (i + 1)..n {
+                let expect = naive_pearson(&x, i, j);
+                assert!(
+                    (s.at(i, j) as f64 - expect).abs() < 1e-4,
+                    "({i},{j}): {} vs {expect}",
+                    s.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn correlation_perfect_and_anti() {
+        // row1 = 2*row0 + 1 (ρ=1); row2 = -row0 (ρ=-1)
+        let base: Vec<f32> = (0..32).map(|i| (i as f32).sin()).collect();
+        let mut data = base.clone();
+        data.extend(base.iter().map(|&v| 2.0 * v + 1.0));
+        data.extend(base.iter().map(|&v| -v));
+        let x = Matrix::from_vec(3, 32, data);
+        let s = pearson_correlation(&x);
+        assert!((s.at(0, 1) - 1.0).abs() < 1e-5);
+        assert!((s.at(0, 2) + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn distance_transform_metricish() {
+        assert!((corr_to_distance(1.0) - 0.0).abs() < 1e-7);
+        assert!((corr_to_distance(-1.0) - 2.0).abs() < 1e-6);
+        assert!((corr_to_distance(0.0) - std::f32::consts::SQRT_2).abs() < 1e-6);
+        // monotone decreasing in rho
+        let mut prev = f32::INFINITY;
+        for k in 0..=20 {
+            let rho = -1.0 + 0.1 * k as f32;
+            let d = corr_to_distance(rho);
+            assert!(d <= prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn distance_matrix_elementwise() {
+        let s = Matrix::from_vec(2, 2, vec![1.0, 0.5, 0.5, 1.0]);
+        let d = distance_matrix(&s);
+        assert!((d.at(0, 0)).abs() < 1e-7);
+        assert!((d.at(0, 1) - 1.0).abs() < 1e-6);
+    }
+}

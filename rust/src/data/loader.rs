@@ -1,0 +1,181 @@
+//! Dataset IO: UCR-style CSV (label, v1, v2, …, vL per line) and a fast
+//! little-endian binary matrix format for caching similarity matrices.
+
+use super::matrix::Matrix;
+use super::synth::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Load a UCR-style CSV/TSV: each line `label,v1,...,vL` (comma or tab
+/// separated). Labels may be arbitrary integers; they are re-indexed to
+/// 0..k densely.
+pub fn load_ucr_csv(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut raw_labels: Vec<i64> = Vec::new();
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let sep = if t.contains('\t') { '\t' } else { ',' };
+        let mut it = t.split(sep);
+        let label: i64 = it
+            .next()
+            .context("empty line")?
+            .trim()
+            .parse::<f64>()
+            .map(|v| v as i64)
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let vals: Vec<f32> = it
+            .map(|s| s.trim().parse::<f32>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            if vals.len() != first.len() {
+                bail!(
+                    "line {}: length {} != {}",
+                    lineno + 1,
+                    vals.len(),
+                    first.len()
+                );
+            }
+        }
+        raw_labels.push(label);
+        rows.push(vals);
+    }
+    if rows.is_empty() {
+        bail!("no data rows in {}", path.display());
+    }
+    // dense re-indexing of labels
+    let mut uniq: Vec<i64> = raw_labels.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let labels: Vec<usize> = raw_labels
+        .iter()
+        .map(|l| uniq.binary_search(l).unwrap())
+        .collect();
+    let (n, l) = (rows.len(), rows[0].len());
+    let mut data = Vec::with_capacity(n * l);
+    for r in rows {
+        data.extend(r);
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    Ok(Dataset {
+        name,
+        data: Matrix::from_vec(n, l, data),
+        labels,
+        n_classes: uniq.len(),
+    })
+}
+
+/// Write a dataset back to UCR-style CSV.
+pub fn save_ucr_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.n() {
+        write!(w, "{}", ds.labels[i])?;
+        for &v in ds.data.row(i) {
+            write!(w, ",{v}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+const MAGIC: &[u8; 8] = b"TMFGMAT1";
+
+/// Save a matrix in a simple binary format (magic, rows, cols, f32 LE data).
+pub fn save_matrix_bin(m: &Matrix, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.rows as u64).to_le_bytes())?;
+    w.write_all(&(m.cols as u64).to_le_bytes())?;
+    for &v in &m.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a matrix written by [`save_matrix_bin`].
+pub fn load_matrix_bin(path: &Path) -> Result<Matrix> {
+    let mut f = std::fs::File::open(path)?;
+    let mut header = [0u8; 24];
+    f.read_exact(&mut header)?;
+    if &header[..8] != MAGIC {
+        bail!("bad magic in {}", path.display());
+    }
+    let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; rows * cols * 4];
+    f.read_exact(&mut buf)?;
+    let data: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("tmfg_test_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = SynthSpec::new("rt", 20, 16, 3).generate(5);
+        let p = tmpdir().join("rt.csv");
+        save_ucr_csv(&ds, &p).unwrap();
+        let back = load_ucr_csv(&p).unwrap();
+        assert_eq!(back.n(), 20);
+        assert_eq!(back.len(), 16);
+        assert_eq!(back.n_classes, 3);
+        assert_eq!(back.labels, ds.labels);
+        assert!(back.data.max_abs_diff(&ds.data) < 1e-5);
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmpdir().join("ragged.csv");
+        std::fs::write(&p, "0,1,2,3\n1,4,5\n").unwrap();
+        assert!(load_ucr_csv(&p).is_err());
+    }
+
+    #[test]
+    fn csv_reindexes_labels() {
+        let p = tmpdir().join("lbl.csv");
+        std::fs::write(&p, "5,1.0,2.0\n-3,3.0,4.0\n5,5.0,6.0\n").unwrap();
+        let ds = load_ucr_csv(&p).unwrap();
+        assert_eq!(ds.n_classes, 2);
+        assert_eq!(ds.labels, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn matrix_bin_roundtrip() {
+        let m = Matrix::from_vec(3, 2, vec![1.5, -2.0, 0.0, 3.25, f32::MIN, f32::MAX]);
+        let p = tmpdir().join("m.bin");
+        save_matrix_bin(&m, &p).unwrap();
+        let back = load_matrix_bin(&p).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn matrix_bin_bad_magic() {
+        let p = tmpdir().join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC________________").unwrap();
+        assert!(load_matrix_bin(&p).is_err());
+    }
+}

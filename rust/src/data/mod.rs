@@ -1,0 +1,11 @@
+//! Datasets and similarity matrices: dense matrix storage, native parallel
+//! Pearson correlation (the fallback / baseline for the XLA path),
+//! synthetic UCR-mirror time-series generators, and CSV/binary IO.
+
+pub mod corr;
+pub mod loader;
+pub mod matrix;
+pub mod synth;
+
+pub use matrix::Matrix;
+pub use synth::Dataset;

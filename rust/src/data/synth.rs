@@ -1,0 +1,245 @@
+//! Synthetic class-structured time-series datasets mirroring the UCR
+//! archive sets in the paper's Table 1 (the archive is not redistributable
+//! and unavailable offline — see DESIGN.md §6 for the substitution
+//! argument).
+//!
+//! Generator model: each class k has a smooth base curve built from a few
+//! random Fourier components; each instance is an amplitude-scaled,
+//! time-shifted copy of its class base plus AR(1) noise. This produces the
+//! statistical object the pipeline actually consumes — an n×n Pearson
+//! matrix with strong intra-class and weak inter-class correlation blocks,
+//! corrupted by noise — which is what drives the relative behaviour of the
+//! TMFG/DBHT variants.
+
+use super::matrix::Matrix;
+use crate::parlay::{self, SendPtr};
+use crate::util::rng::Rng;
+
+/// A labelled time-series dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// n × L panel: one series per row.
+    pub data: Matrix,
+    /// Ground-truth class per series (0..n_classes).
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.data.rows
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.rows == 0
+    }
+}
+
+/// Specification for one synthetic dataset.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub name: String,
+    /// number of series
+    pub n: usize,
+    /// series length
+    pub len: usize,
+    /// number of classes
+    pub k: usize,
+    /// AR(1) noise amplitude relative to signal (higher = harder)
+    pub noise: f64,
+    /// number of Fourier components per class base curve
+    pub components: usize,
+}
+
+impl SynthSpec {
+    pub fn new(name: &str, n: usize, len: usize, k: usize) -> SynthSpec {
+        SynthSpec {
+            name: name.to_string(),
+            n,
+            len,
+            k,
+            noise: 0.6,
+            components: 6,
+        }
+    }
+
+    pub fn with_noise(mut self, noise: f64) -> SynthSpec {
+        self.noise = noise;
+        self
+    }
+
+    /// Generate the dataset deterministically from `seed`.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        assert!(self.k >= 1 && self.n >= self.k, "need n >= k >= 1");
+        assert!(self.len >= 8, "series too short");
+        let mut rng = Rng::new(seed ^ 0xD1F7_0000);
+
+        // Class base curves: sum of `components` random sinusoids, plus a
+        // slow random-walk trend to decorrelate classes further.
+        let mut bases = Vec::with_capacity(self.k);
+        for _ in 0..self.k {
+            let mut curve = vec![0.0f64; self.len];
+            for _ in 0..self.components {
+                let freq = rng.range_f64(1.0, 12.0);
+                let phase = rng.range_f64(0.0, std::f64::consts::TAU);
+                let amp = rng.range_f64(0.4, 1.0);
+                for (t, c) in curve.iter_mut().enumerate() {
+                    *c += amp
+                        * (std::f64::consts::TAU * freq * t as f64 / self.len as f64 + phase).sin();
+                }
+            }
+            // normalize base to unit variance so `noise` is comparable
+            let mean = curve.iter().sum::<f64>() / self.len as f64;
+            let var =
+                curve.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / self.len as f64;
+            let inv = 1.0 / var.sqrt().max(1e-9);
+            for c in curve.iter_mut() {
+                *c = (*c - mean) * inv;
+            }
+            bases.push(curve);
+        }
+
+        // Class sizes: balanced with a mild random imbalance.
+        let mut labels = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            labels.push(i % self.k);
+        }
+        rng.shuffle(&mut labels);
+
+        // Instances, generated in parallel with per-row forked RNG streams.
+        let mut data = vec![0.0f32; self.n * self.len];
+        let dp = SendPtr(data.as_mut_ptr());
+        let master = rng.clone();
+        let bases_ref = &bases;
+        let labels_ref = &labels;
+        let (len, noise) = (self.len, self.noise);
+        parlay::parallel_for(self.n, 8, |i| {
+            let mut r = master.clone().fork(i as u64 + 1);
+            let base = &bases_ref[labels_ref[i]];
+            let scale = r.range_f64(0.7, 1.3);
+            let shift = r.next_below(len / 8 + 1);
+            // AR(1) noise
+            let rho = 0.6;
+            let mut eps = 0.0f64;
+            for t in 0..len {
+                eps = rho * eps + (1.0 - rho * rho).sqrt() * r.next_gaussian();
+                let sig = base[(t + shift) % len] * scale;
+                // SAFETY: row i written only by iteration i.
+                unsafe { dp.write(i * len + t, (sig + noise * eps) as f32) };
+            }
+        });
+
+        Dataset {
+            name: self.name.clone(),
+            data: Matrix::from_vec(self.n, self.len, data),
+            labels,
+            n_classes: self.k,
+        }
+    }
+}
+
+/// The 18 UCR datasets of Table 1, mirrored as synthetic specs with the
+/// same (n, L, #classes). `scale` shrinks n (and caps L) for CI-speed
+/// runs; scale=1.0 reproduces the paper's sizes.
+pub fn table1_specs(scale: f64) -> Vec<SynthSpec> {
+    let raw: &[(&str, usize, usize, usize)] = &[
+        ("CBF", 930, 128, 3),
+        ("ECG5000", 5000, 140, 5),
+        ("Crop", 19412, 46, 24),
+        ("ElectricDevices", 16160, 96, 7),
+        ("FreezerSmallTrain", 2878, 301, 2),
+        ("HandOutlines", 1370, 2709, 2),
+        ("InsectWingbeatSound", 2200, 256, 11),
+        ("Mallat", 2400, 1024, 8),
+        ("MixedShapesRegularTrain", 2925, 1024, 5),
+        ("MixedShapesSmallTrain", 2525, 1024, 5),
+        ("NonInvasiveFetalECGThorax1", 3765, 750, 42),
+        ("NonInvasiveFetalECGThorax2", 3765, 750, 42),
+        ("ShapesAll", 1200, 512, 60),
+        ("SonyAIBORobotSurface2", 980, 65, 2),
+        ("StarLightCurves", 9236, 84, 2),
+        ("UWaveGestureLibraryAll", 4478, 945, 8),
+        ("UWaveGestureLibraryX", 4478, 315, 8),
+        ("UWaveGestureLibraryY", 4478, 315, 8),
+    ];
+    raw.iter()
+        .map(|&(name, n, l, k)| {
+            let n_scaled = ((n as f64 * scale).round() as usize).max(k.max(8) * 4);
+            // Cap very long series when scaling down — correlation cost is
+            // n²L and the paper's behaviour is driven by n.
+            let l_scaled = if scale < 1.0 { l.min(1024) } else { l };
+            SynthSpec::new(name, n_scaled, l_scaled.max(16), k)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corr::pearson_correlation;
+
+    #[test]
+    fn generate_shapes_and_labels() {
+        let ds = SynthSpec::new("t", 100, 64, 5).generate(1);
+        assert_eq!(ds.n(), 100);
+        assert_eq!(ds.len(), 64);
+        assert_eq!(ds.labels.len(), 100);
+        assert_eq!(ds.n_classes, 5);
+        assert!(ds.labels.iter().all(|&l| l < 5));
+        // every class non-empty
+        for c in 0..5 {
+            assert!(ds.labels.iter().any(|&l| l == c));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = SynthSpec::new("t", 50, 32, 3).generate(7);
+        let b = SynthSpec::new("t", 50, 32, 3).generate(7);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
+        let c = SynthSpec::new("t", 50, 32, 3).generate(8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn intra_class_correlation_exceeds_inter() {
+        let ds = SynthSpec::new("t", 60, 128, 3).generate(3);
+        let s = pearson_correlation(&ds.data);
+        let mut intra = (0.0f64, 0usize);
+        let mut inter = (0.0f64, 0usize);
+        for i in 0..ds.n() {
+            for j in (i + 1)..ds.n() {
+                let v = s.at(i, j) as f64;
+                if ds.labels[i] == ds.labels[j] {
+                    intra = (intra.0 + v, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + v, inter.1 + 1);
+                }
+            }
+        }
+        let mi = intra.0 / intra.1 as f64;
+        let mo = inter.0 / inter.1 as f64;
+        assert!(
+            mi > mo + 0.2,
+            "intra-class mean corr {mi:.3} should exceed inter-class {mo:.3}"
+        );
+    }
+
+    #[test]
+    fn table1_mirrors_paper_sizes() {
+        let specs = table1_specs(1.0);
+        assert_eq!(specs.len(), 18);
+        let crop = specs.iter().find(|s| s.name == "Crop").unwrap();
+        assert_eq!((crop.n, crop.len, crop.k), (19412, 46, 24));
+        let scaled = table1_specs(0.1);
+        let crop_s = scaled.iter().find(|s| s.name == "Crop").unwrap();
+        assert_eq!(crop_s.n, 1941);
+        assert!(scaled.iter().all(|s| s.n >= s.k));
+    }
+}

@@ -1,0 +1,178 @@
+//! The bubble tree: one node per TMFG 4-clique, edges between cliques
+//! sharing a triangular face. TMFG construction already tracks the parent
+//! relation (`TmfgResult::parent`); this module adds children lists,
+//! Euler-tour intervals for O(1) subtree tests, and vertex↔bubble maps.
+
+use crate::tmfg::TmfgResult;
+
+#[derive(Debug, Clone)]
+pub struct BubbleTree {
+    pub n_bubbles: usize,
+    pub n_vertices: usize,
+    pub cliques: Vec<[u32; 4]>,
+    pub parent: Vec<i32>,
+    pub children: Vec<Vec<u32>>,
+    /// Euler-tour entry/exit times (subtree(b) ⇔ tin[b] ≤ tin[x] < tout[b]).
+    pub tin: Vec<u32>,
+    pub tout: Vec<u32>,
+    /// Bubble that *introduced* each vertex (the root introduces the 4
+    /// seed vertices; every other bubble introduces exactly one).
+    pub intro_bubble: Vec<u32>,
+    /// All bubbles whose clique contains the vertex.
+    pub vertex_bubbles: Vec<Vec<u32>>,
+}
+
+impl BubbleTree {
+    pub fn new(t: &TmfgResult) -> BubbleTree {
+        let nb = t.cliques.len();
+        let n = t.n;
+        let mut children: Vec<Vec<u32>> = vec![Vec::new(); nb];
+        for b in 1..nb {
+            children[t.parent[b] as usize].push(b as u32);
+        }
+        // Iterative Euler tour (the tree can be path-shaped → no recursion).
+        let mut tin = vec![0u32; nb];
+        let mut tout = vec![0u32; nb];
+        let mut clock = 0u32;
+        let mut stack: Vec<(u32, usize)> = vec![(0, 0)];
+        tin[0] = clock;
+        clock += 1;
+        while let Some(&mut (b, ref mut ci)) = stack.last_mut() {
+            if *ci < children[b as usize].len() {
+                let c = children[b as usize][*ci];
+                *ci += 1;
+                tin[c as usize] = clock;
+                clock += 1;
+                stack.push((c, 0));
+            } else {
+                tout[b as usize] = clock;
+                stack.pop();
+            }
+        }
+
+        let mut intro_bubble = vec![0u32; n];
+        let mut vertex_bubbles: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (b, c) in t.cliques.iter().enumerate() {
+            for &v in c {
+                vertex_bubbles[v as usize].push(b as u32);
+            }
+            if b > 0 {
+                intro_bubble[c[3] as usize] = b as u32;
+            }
+        }
+        for &v in &t.cliques[0] {
+            intro_bubble[v as usize] = 0;
+        }
+
+        BubbleTree {
+            n_bubbles: nb,
+            n_vertices: n,
+            cliques: t.cliques.clone(),
+            parent: t.parent.clone(),
+            children,
+            tin,
+            tout,
+            intro_bubble,
+            vertex_bubbles,
+        }
+    }
+
+    /// Is bubble `x` inside the subtree rooted at `b`?
+    #[inline]
+    pub fn in_subtree(&self, x: u32, b: u32) -> bool {
+        self.tin[b as usize] <= self.tin[x as usize]
+            && self.tin[x as usize] < self.tout[b as usize]
+    }
+
+    /// Is vertex `v` introduced inside the subtree rooted at bubble `b`?
+    #[inline]
+    pub fn vertex_in_subtree(&self, v: u32, b: u32) -> bool {
+        self.in_subtree(self.intro_bubble[v as usize], b)
+    }
+
+    /// The triangular face bubble `b > 0` shares with its parent.
+    #[inline]
+    pub fn shared_face(&self, b: u32) -> [u32; 3] {
+        debug_assert!(b > 0);
+        let c = self.cliques[b as usize];
+        [c[0], c[1], c[2]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn tree(n: usize, seed: u64) -> BubbleTree {
+        let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        BubbleTree::new(&r)
+    }
+
+    #[test]
+    fn structure_counts() {
+        let bt = tree(60, 1);
+        assert_eq!(bt.n_bubbles, 60 - 3);
+        // children counts sum to nb - 1
+        let total: usize = bt.children.iter().map(|c| c.len()).sum();
+        assert_eq!(total, bt.n_bubbles - 1);
+        // every vertex in >= 1 bubble; every bubble has 4 distinct vertices
+        assert!(bt.vertex_bubbles.iter().all(|b| !b.is_empty()));
+        for c in &bt.cliques {
+            let mut d = c.to_vec();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 4);
+        }
+    }
+
+    #[test]
+    fn euler_intervals_consistent() {
+        let bt = tree(80, 2);
+        for b in 0..bt.n_bubbles as u32 {
+            assert!(bt.in_subtree(b, b));
+            assert!(bt.in_subtree(b, 0), "root contains all");
+            if b > 0 {
+                let p = bt.parent[b as usize] as u32;
+                assert!(bt.in_subtree(b, p));
+                assert!(!bt.in_subtree(p, b));
+            }
+        }
+        // siblings are disjoint
+        for b in 0..bt.n_bubbles {
+            let ch = &bt.children[b];
+            for i in 0..ch.len() {
+                for j in (i + 1)..ch.len() {
+                    assert!(!bt.in_subtree(ch[i], ch[j]));
+                    assert!(!bt.in_subtree(ch[j], ch[i]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intro_partition() {
+        let bt = tree(50, 3);
+        // introduced counts: root 4, everyone else 1 → total = n
+        let mut count = vec![0usize; bt.n_bubbles];
+        for v in 0..bt.n_vertices {
+            count[bt.intro_bubble[v] as usize] += 1;
+        }
+        assert_eq!(count[0], 4);
+        assert!(count[1..].iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn shared_face_belongs_to_parent() {
+        let bt = tree(40, 4);
+        for b in 1..bt.n_bubbles as u32 {
+            let f = bt.shared_face(b);
+            let pc = bt.cliques[bt.parent[b as usize] as usize];
+            for v in f {
+                assert!(pc.contains(&v), "face vertex {v} of bubble {b} not in parent");
+            }
+        }
+    }
+}

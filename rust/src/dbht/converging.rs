@@ -1,0 +1,205 @@
+//! Converging-bubble basins and vertex assignments (DESIGN.md §7.3–7.5).
+//!
+//! * Every bubble flows to a converging bubble by repeatedly following its
+//!   strongest outgoing edge (strength = χ of the side the edge points
+//!   to); the map is memoized.
+//! * Every vertex is assigned to a converging bubble: among the basins of
+//!   the bubbles containing it, the one with the largest total similarity
+//!   from the vertex to those bubbles' clique vertices.
+//! * Within its basin, every vertex is assigned to the bubble with the
+//!   smallest mean APSP distance to the bubble's clique vertices (the
+//!   paper: connection strength "determined by shortest-path distances in
+//!   the TMFG").
+
+use super::bubble::BubbleTree;
+use super::direction::Directions;
+use crate::data::matrix::Matrix;
+use crate::parlay;
+
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    /// Converging bubble ids (sorted).
+    pub converging: Vec<u32>,
+    /// basin[b] = converging bubble that bubble b flows to.
+    pub bubble_basin: Vec<u32>,
+    /// Converging bubble assigned to each vertex.
+    pub vertex_basin: Vec<u32>,
+    /// Bubble (within its basin) assigned to each vertex.
+    pub vertex_bubble: Vec<u32>,
+}
+
+/// Follow strongest outgoing edges to a converging bubble, memoized.
+fn compute_basins(bt: &BubbleTree, dir: &Directions) -> Vec<u32> {
+    let nb = bt.n_bubbles;
+    let mut basin: Vec<u32> = vec![u32::MAX; nb];
+    for start in 0..nb as u32 {
+        if basin[start as usize] != u32::MAX {
+            continue;
+        }
+        let mut path = Vec::new();
+        let mut cur = start;
+        loop {
+            if basin[cur as usize] != u32::MAX {
+                break;
+            }
+            if dir.out_degree[cur as usize] == 0 {
+                basin[cur as usize] = cur;
+                break;
+            }
+            path.push(cur);
+            // strongest outgoing edge: candidates are the parent edge (if
+            // it points away from cur) and child edges pointing into the
+            // child's subtree.
+            let mut best: Option<(f64, u32)> = None;
+            if cur != 0 && !dir.to_child[cur as usize] {
+                let st = dir.strength_parent[cur as usize];
+                best = Some((st, bt.parent[cur as usize] as u32));
+            }
+            for &c in &bt.children[cur as usize] {
+                if dir.to_child[c as usize] {
+                    let st = dir.strength_child[c as usize];
+                    if best.map(|(bs, bt_)| st > bs || (st == bs && c < bt_)).unwrap_or(true) {
+                        best = Some((st, c));
+                    }
+                }
+            }
+            cur = best.expect("out_degree > 0 implies an outgoing edge").1;
+        }
+        let sink = basin[cur as usize];
+        for p in path {
+            basin[p as usize] = sink;
+        }
+    }
+    basin
+}
+
+/// Full assignment: basins, vertex→basin, vertex→bubble.
+/// `apsp` is the (exact or approximate) shortest-path distance matrix.
+pub fn assign(bt: &BubbleTree, dir: &Directions, s: &Matrix, apsp: &Matrix) -> Assignment {
+    let bubble_basin = compute_basins(bt, dir);
+    let mut converging: Vec<u32> = dir.converging();
+    converging.sort_unstable();
+
+    // vertex → basin: strongest attachment among the basins of the
+    // vertex's own bubbles.
+    let bb = &bubble_basin;
+    let vertex_basin: Vec<u32> = parlay::par_map(bt.n_vertices, 64, |v| {
+        let mut strength: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        for &b in &bt.vertex_bubbles[v] {
+            let cb = bb[b as usize];
+            let e = strength.entry(cb).or_insert(0.0);
+            for &u in &bt.cliques[b as usize] {
+                if u as usize != v {
+                    *e += s.at(v, u as usize) as f64;
+                }
+            }
+        }
+        let mut best = (f64::NEG_INFINITY, u32::MAX);
+        for (&cb, &st) in &strength {
+            if st > best.0 || (st == best.0 && cb < best.1) {
+                best = (st, cb);
+            }
+        }
+        best.1
+    });
+
+    // Bubbles per basin (for the within-basin bubble assignment).
+    let mut basin_bubbles: std::collections::HashMap<u32, Vec<u32>> =
+        std::collections::HashMap::new();
+    for b in 0..bt.n_bubbles as u32 {
+        basin_bubbles.entry(bubble_basin[b as usize]).or_default().push(b);
+    }
+
+    // vertex → bubble within its basin: min mean APSP distance to the
+    // bubble's clique vertices.
+    let vb = &vertex_basin;
+    let bbs = &basin_bubbles;
+    let vertex_bubble: Vec<u32> = parlay::par_map(bt.n_vertices, 16, |v| {
+        let basin = vb[v];
+        let candidates = &bbs[&basin];
+        let mut best = (f64::INFINITY, u32::MAX);
+        for &b in candidates {
+            let mut d = 0.0f64;
+            for &u in &bt.cliques[b as usize] {
+                d += apsp.at(v, u as usize) as f64;
+            }
+            d /= 4.0;
+            if d < best.0 || (d == best.0 && b < best.1) {
+                best = (d, b);
+            }
+        }
+        best.1
+    });
+
+    Assignment { converging, bubble_basin, vertex_basin, vertex_bubble }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::{apsp_exact, CsrGraph};
+    use crate::data::synth::SynthSpec;
+    use crate::dbht::direction::direct_edges;
+
+    fn setup(n: usize, seed: u64) -> (Matrix, BubbleTree, Directions, Matrix) {
+        let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let bt = BubbleTree::new(&r);
+        let dir = direct_edges(&bt, &r.adjacency(), &s);
+        let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
+        (s, bt, dir, apsp)
+    }
+
+    #[test]
+    fn basins_map_to_converging() {
+        let (s, bt, dir, apsp) = setup(90, 1);
+        let a = assign(&bt, &dir, &s, &apsp);
+        let conv: std::collections::HashSet<u32> = a.converging.iter().copied().collect();
+        for b in 0..bt.n_bubbles {
+            assert!(conv.contains(&a.bubble_basin[b]), "bubble {b} basin not converging");
+        }
+        // converging bubbles are their own basin
+        for &c in &a.converging {
+            assert_eq!(a.bubble_basin[c as usize], c);
+        }
+    }
+
+    #[test]
+    fn vertex_assignments_consistent() {
+        let (s, bt, dir, apsp) = setup(120, 2);
+        let a = assign(&bt, &dir, &s, &apsp);
+        let conv: std::collections::HashSet<u32> = a.converging.iter().copied().collect();
+        for v in 0..bt.n_vertices {
+            // basin must be converging
+            assert!(conv.contains(&a.vertex_basin[v]));
+            // assigned bubble must flow to the assigned basin
+            assert_eq!(
+                a.bubble_basin[a.vertex_bubble[v] as usize],
+                a.vertex_basin[v],
+                "vertex {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_vertices_covered_small() {
+        let (s, bt, dir, apsp) = setup(10, 3);
+        let a = assign(&bt, &dir, &s, &apsp);
+        assert_eq!(a.vertex_basin.len(), 10);
+        assert_eq!(a.vertex_bubble.len(), 10);
+        assert!(a.vertex_bubble.iter().all(|&b| (b as usize) < bt.n_bubbles));
+    }
+
+    #[test]
+    fn basin_partition_covers_all_bubbles() {
+        let (s, bt, dir, apsp) = setup(70, 4);
+        let a = assign(&bt, &dir, &s, &apsp);
+        // group bubbles by basin; sizes sum to n_bubbles
+        let mut count = 0usize;
+        for &c in &a.converging {
+            count += (0..bt.n_bubbles).filter(|&b| a.bubble_basin[b] == c).count();
+        }
+        assert_eq!(count, bt.n_bubbles);
+    }
+}

@@ -1,0 +1,360 @@
+//! Dendrogram representation, incremental construction (union-find over
+//! representative leaves, with per-path monotone height clamping), and
+//! cutting to k clusters.
+
+/// A rooted binary dendrogram over `n_leaves` leaves. Node ids: leaves are
+//  `0..n_leaves`; internal node `n_leaves + i` is created by the i-th merge.
+#[derive(Debug, Clone)]
+pub struct Dendrogram {
+    pub n_leaves: usize,
+    /// (left child, right child, height) per internal node, in creation
+    /// order. Heights are monotone along every leaf-to-root path.
+    pub nodes: Vec<(u32, u32, f32)>,
+}
+
+impl Dendrogram {
+    pub fn n_nodes(&self) -> usize {
+        self.n_leaves + self.nodes.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.nodes.len() + 1 == self.n_leaves || self.n_leaves == 0
+    }
+
+    fn parents(&self) -> Vec<u32> {
+        let total = self.n_nodes();
+        let mut parent = vec![u32::MAX; total];
+        for (i, &(l, r, _)) in self.nodes.iter().enumerate() {
+            let id = (self.n_leaves + i) as u32;
+            parent[l as usize] = id;
+            parent[r as usize] = id;
+        }
+        parent
+    }
+
+    /// Cut into exactly `k` clusters (1 ≤ k ≤ n_leaves): remove the k−1
+    /// internal nodes ranking highest by (height, creation order) — an
+    /// upward-closed set thanks to monotone heights — and label each leaf
+    /// by its remaining component. Returns dense labels 0..k.
+    pub fn cut(&self, k: usize) -> Vec<usize> {
+        let n = self.n_leaves;
+        assert!(self.is_complete(), "cut requires a complete dendrogram");
+        let k = k.clamp(1, n.max(1));
+        if n == 0 {
+            return Vec::new();
+        }
+        let m = self.nodes.len();
+        let n_cut = k - 1; // top k-1 internal nodes are removed
+        // rank internal nodes by (height, index); creation order breaks
+        // ties so parents (created later, height ≥ children) rank higher.
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by(|&a, &b| {
+            self.nodes[a]
+                .2
+                .total_cmp(&self.nodes[b].2)
+                .then(a.cmp(&b))
+        });
+        let mut removed = vec![false; n + m];
+        for &i in order.iter().rev().take(n_cut) {
+            removed[n + i] = true;
+        }
+        // cluster root of node x: x itself if its parent is removed (or x
+        // is root) and x is not removed.
+        let parent = self.parents();
+        let mut label = vec![usize::MAX; n + m];
+        let mut next = 0usize;
+        // process nodes top-down (root has the largest id)
+        for x in (0..n + m).rev() {
+            if removed[x] {
+                continue;
+            }
+            let p = parent[x];
+            if p == u32::MAX || removed[p as usize] {
+                label[x] = next;
+                next += 1;
+            } else {
+                label[x] = label[p as usize];
+            }
+        }
+        debug_assert_eq!(next, k);
+        label.truncate(n);
+        label
+    }
+}
+
+impl Dendrogram {
+    /// Export as a Newick tree string (heights become branch lengths;
+    /// leaves are named by `names`, or `v<i>` when `names` is None) —
+    /// loadable by standard phylogenetics/clustering tooling.
+    pub fn to_newick(&self, names: Option<&[String]>) -> String {
+        assert!(self.is_complete(), "newick export requires a complete dendrogram");
+        let n = self.n_leaves;
+        if n == 0 {
+            return ";".into();
+        }
+        let height_of = |id: usize| -> f32 {
+            if id < n {
+                0.0
+            } else {
+                self.nodes[id - n].2
+            }
+        };
+        // Iterative post-order rendering (trees can be path-shaped).
+        let root = n + self.nodes.len() - 1;
+        let mut rendered: Vec<Option<String>> = vec![None; self.n_nodes()];
+        let mut stack = vec![if self.nodes.is_empty() { 0 } else { root }];
+        while let Some(&id) = stack.last() {
+            if id < n {
+                let name = names
+                    .map(|ns| ns[id].clone())
+                    .unwrap_or_else(|| format!("v{id}"));
+                rendered[id] = Some(name);
+                stack.pop();
+                continue;
+            }
+            let (l, r, h) = self.nodes[id - n];
+            match (&rendered[l as usize], &rendered[r as usize]) {
+                (Some(ls), Some(rs)) => {
+                    let bl = (h - height_of(l as usize)).max(0.0);
+                    let br = (h - height_of(r as usize)).max(0.0);
+                    rendered[id] = Some(format!("({ls}:{bl},{rs}:{br})"));
+                    stack.pop();
+                }
+                _ => {
+                    if rendered[l as usize].is_none() {
+                        stack.push(l as usize);
+                    }
+                    if rendered[r as usize].is_none() {
+                        stack.push(r as usize);
+                    }
+                }
+            }
+        }
+        format!("{};", rendered[if self.nodes.is_empty() { 0 } else { root }].take().unwrap())
+    }
+
+    /// Export merges as JSON (scipy-linkage-like rows [left, right, height]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("n_leaves", Json::Num(self.n_leaves as f64)),
+            (
+                "merges",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|&(l, r, h)| {
+                            Json::Arr(vec![
+                                Json::Num(l as f64),
+                                Json::Num(r as f64),
+                                Json::Num(h as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Incremental dendrogram builder. Merges are specified by *representative
+/// leaves* — any leaf of each cluster — so layered construction (DBHT) and
+/// height-sorted reconstruction (NN-chain output) both compose naturally.
+#[derive(Debug)]
+pub struct DendroBuilder {
+    n_leaves: usize,
+    nodes: Vec<(u32, u32, f32)>,
+    /// union-find over all node ids
+    uf: Vec<u32>,
+    /// current dendrogram node of each union-find root
+    cluster_node: Vec<u32>,
+    /// current height of each cluster's top node
+    cluster_height: Vec<f32>,
+}
+
+impl DendroBuilder {
+    pub fn new(n_leaves: usize) -> DendroBuilder {
+        DendroBuilder {
+            n_leaves,
+            nodes: Vec::with_capacity(n_leaves.saturating_sub(1)),
+            uf: (0..n_leaves as u32).collect(),
+            cluster_node: (0..n_leaves as u32).collect(),
+            cluster_height: vec![0.0; n_leaves],
+        }
+    }
+
+    fn find(&mut self, x: u32) -> u32 {
+        let mut root = x;
+        while self.uf[root as usize] != root {
+            root = self.uf[root as usize];
+        }
+        let mut cur = x;
+        while self.uf[cur as usize] != root {
+            let next = self.uf[cur as usize];
+            self.uf[cur as usize] = root;
+            cur = next;
+        }
+        root
+    }
+
+    /// Merge the clusters containing leaves `a` and `b` at `height`
+    /// (clamped to keep per-path monotonicity). No-op if already merged
+    /// (returns None).
+    pub fn merge(&mut self, a: u32, b: u32, height: f32) -> Option<u32> {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return None;
+        }
+        let (na, nb) = (self.cluster_node[ra as usize], self.cluster_node[rb as usize]);
+        let h = height
+            .max(self.cluster_height[ra as usize])
+            .max(self.cluster_height[rb as usize]);
+        let new_id = (self.n_leaves + self.nodes.len()) as u32;
+        self.nodes.push((na, nb, h));
+        // union: attach rb under ra
+        self.uf[rb as usize] = ra;
+        self.cluster_node[ra as usize] = new_id;
+        self.cluster_height[ra as usize] = h;
+        Some(new_id)
+    }
+
+    /// Number of merges applied so far.
+    pub fn n_merges(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn finish(self) -> Dendrogram {
+        Dendrogram { n_leaves: self.n_leaves, nodes: self.nodes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_dendro(n: usize) -> Dendrogram {
+        // merge 0-1 at h=1, then +2 at h=2, ...
+        let mut b = DendroBuilder::new(n);
+        for i in 1..n {
+            b.merge(0, i as u32, i as f32).unwrap();
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn builder_basic() {
+        let mut b = DendroBuilder::new(4);
+        assert!(b.merge(0, 1, 1.0).is_some());
+        assert!(b.merge(2, 3, 0.5).is_some());
+        assert!(b.merge(0, 3, 2.0).is_some());
+        assert!(b.merge(1, 2, 9.0).is_none(), "already one cluster");
+        let d = b.finish();
+        assert!(d.is_complete());
+        assert_eq!(d.nodes.len(), 3);
+    }
+
+    #[test]
+    fn heights_clamped_monotone() {
+        let mut b = DendroBuilder::new(3);
+        b.merge(0, 1, 5.0);
+        b.merge(0, 2, 1.0); // lower than child → clamped to 5.0
+        let d = b.finish();
+        assert_eq!(d.nodes[1].2, 5.0);
+    }
+
+    #[test]
+    fn cut_chain() {
+        let d = chain_dendro(5);
+        let l1 = d.cut(1);
+        assert!(l1.iter().all(|&x| x == 0));
+        let l5 = d.cut(5);
+        let set: std::collections::HashSet<_> = l5.iter().collect();
+        assert_eq!(set.len(), 5);
+        // k=2 splits off the last-merged leaf (highest merge)
+        let l2 = d.cut(2);
+        assert_eq!(l2.iter().filter(|&&x| x == l2[4]).count(), 1);
+        let base = l2[0];
+        assert!(l2[..4].iter().all(|&x| x == base));
+    }
+
+    #[test]
+    fn cut_respects_structure() {
+        // two tight pairs merged high: cut(2) must recover the pairs
+        let mut b = DendroBuilder::new(4);
+        b.merge(0, 1, 0.1);
+        b.merge(2, 3, 0.2);
+        b.merge(0, 2, 5.0);
+        let d = b.finish();
+        let l = d.cut(2);
+        assert_eq!(l[0], l[1]);
+        assert_eq!(l[2], l[3]);
+        assert_ne!(l[0], l[2]);
+        // labels dense
+        let mx = *l.iter().max().unwrap();
+        assert_eq!(mx, 1);
+    }
+
+    #[test]
+    fn cut_k_bounds() {
+        let d = chain_dendro(6);
+        assert_eq!(d.cut(0).iter().max(), Some(&0)); // clamped to 1
+        let l = d.cut(100); // clamped to n
+        let set: std::collections::HashSet<_> = l.iter().collect();
+        assert_eq!(set.len(), 6);
+    }
+
+    #[test]
+    fn newick_roundtrip_structure() {
+        let mut b = DendroBuilder::new(3);
+        b.merge(0, 1, 1.0);
+        b.merge(0, 2, 2.5);
+        let d = b.finish();
+        let nw = d.to_newick(None);
+        assert_eq!(nw, "((v0:1,v1:1):1.5,v2:2.5);");
+        let named = d.to_newick(Some(&["a".into(), "b".into(), "c".into()]));
+        assert!(named.contains("a:1") && named.contains("c:2.5"));
+        // balanced parens, single trailing semicolon
+        assert_eq!(nw.matches('(').count(), nw.matches(')').count());
+        assert!(nw.ends_with(';'));
+    }
+
+    #[test]
+    fn newick_single_leaf_and_deep_chain() {
+        let d = DendroBuilder::new(1).finish();
+        assert_eq!(d.to_newick(None), "v0;");
+        // deep path-shaped tree must not overflow the stack
+        let deep = chain_dendro(5000);
+        let nw = deep.to_newick(None);
+        assert!(nw.ends_with(';'));
+        assert_eq!(nw.matches('(').count(), 4999);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut b = DendroBuilder::new(3);
+        b.merge(0, 1, 1.0);
+        b.merge(0, 2, 2.0);
+        let j = b.finish().to_json();
+        assert_eq!(j.get("n_leaves").as_usize(), Some(3));
+        let merges = j.get("merges").as_arr().unwrap();
+        assert_eq!(merges.len(), 2);
+        let s = j.to_string();
+        let back = crate::util::json::Json::parse(&s).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn cut_with_tied_heights() {
+        let mut b = DendroBuilder::new(4);
+        b.merge(0, 1, 1.0);
+        b.merge(2, 3, 1.0);
+        b.merge(0, 2, 1.0);
+        let d = b.finish();
+        for k in 1..=4 {
+            let l = d.cut(k);
+            let set: std::collections::HashSet<_> = l.iter().collect();
+            assert_eq!(set.len(), k, "k={k}");
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Bubble-tree edge directioning (DESIGN.md §7.2).
+//!
+//! For the tree edge between bubble `b` and its parent, sharing face `t`:
+//! removing the edge splits the tree into the subtree under `b` and the
+//! rest. The *connection strength* of each side is
+//! χ(t, side) = Σ_{v ∈ t} Σ_{u: (v,u) ∈ TMFG, u ∉ t, u introduced on side} S[v,u].
+//! The edge is directed toward the stronger side (ties → toward the
+//! parent side, which keeps degenerate flat-similarity inputs converging
+//! at the root).
+
+use super::bubble::BubbleTree;
+use crate::data::matrix::Matrix;
+use crate::parlay;
+
+/// Directions for every non-root bubble's parent edge.
+#[derive(Debug, Clone)]
+pub struct Directions {
+    /// For bubble b > 0: is the parent edge directed *into* b's subtree?
+    pub to_child: Vec<bool>,
+    /// χ toward the child side / parent side, per bubble (index 0 unused).
+    pub strength_child: Vec<f64>,
+    pub strength_parent: Vec<f64>,
+    /// Out-degree of each bubble under these directions.
+    pub out_degree: Vec<u32>,
+}
+
+/// Compute edge directions. `adj` is the TMFG adjacency (from
+/// [`crate::tmfg::TmfgResult::adjacency`]); `s` the similarity matrix.
+pub fn direct_edges(bt: &BubbleTree, adj: &[Vec<u32>], s: &Matrix) -> Directions {
+    let nb = bt.n_bubbles;
+    let mut to_child = vec![false; nb];
+    let mut strength_child = vec![0.0f64; nb];
+    let mut strength_parent = vec![0.0f64; nb];
+    if nb > 1 {
+        let results: Vec<(bool, f64, f64)> = parlay::par_map(nb - 1, 16, |i| {
+            let b = (i + 1) as u32;
+            let t = bt.shared_face(b);
+            let mut chi_child = 0.0f64;
+            let mut chi_parent = 0.0f64;
+            for &v in &t {
+                for &u in &adj[v as usize] {
+                    if t.contains(&u) {
+                        continue;
+                    }
+                    let w = s.at(v as usize, u as usize) as f64;
+                    if bt.vertex_in_subtree(u, b) {
+                        chi_child += w;
+                    } else {
+                        chi_parent += w;
+                    }
+                }
+            }
+            (chi_child > chi_parent, chi_child, chi_parent)
+        });
+        for (i, (tc, cc, cp)) in results.into_iter().enumerate() {
+            to_child[i + 1] = tc;
+            strength_child[i + 1] = cc;
+            strength_parent[i + 1] = cp;
+        }
+    }
+    let mut out_degree = vec![0u32; nb];
+    for b in 1..nb {
+        if to_child[b] {
+            // edge points into b's subtree → outgoing for the parent
+            out_degree[bt.parent[b] as usize] += 1;
+        } else {
+            out_degree[b] += 1;
+        }
+    }
+    Directions { to_child, strength_child, strength_parent, out_degree }
+}
+
+impl Directions {
+    /// Converging bubbles: only incoming edges.
+    pub fn converging(&self) -> Vec<u32> {
+        let conv: Vec<u32> = (0..self.out_degree.len() as u32)
+            .filter(|&b| self.out_degree[b as usize] == 0)
+            .collect();
+        debug_assert!(!conv.is_empty(), "a finite directed tree has a sink");
+        conv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::tmfg::TmfgResult;
+
+    fn setup(n: usize, seed: u64) -> (Matrix, TmfgResult, BubbleTree) {
+        let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let bt = BubbleTree::new(&r);
+        (s, r, bt)
+    }
+
+    #[test]
+    fn out_degrees_consistent() {
+        let (s, r, bt) = setup(80, 1);
+        let d = direct_edges(&bt, &r.adjacency(), &s);
+        // each of nb-1 edges contributes exactly one out-degree
+        let total: u32 = d.out_degree.iter().sum();
+        assert_eq!(total as usize, bt.n_bubbles - 1);
+    }
+
+    #[test]
+    fn converging_exists_and_has_no_outgoing() {
+        for seed in [2u64, 3, 4] {
+            let (s, r, bt) = setup(100, seed);
+            let d = direct_edges(&bt, &r.adjacency(), &s);
+            let conv = d.converging();
+            assert!(!conv.is_empty());
+            for &c in &conv {
+                assert_eq!(d.out_degree[c as usize], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn strengths_nonnegative_for_positive_similarity() {
+        let (mut s, r, bt) = setup(60, 5);
+        // force all similarities positive
+        for v in s.data.iter_mut() {
+            *v = v.abs();
+        }
+        let d = direct_edges(&bt, &r.adjacency(), &s);
+        for b in 1..bt.n_bubbles {
+            assert!(d.strength_child[b] >= 0.0);
+            assert!(d.strength_parent[b] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn single_bubble_tree() {
+        let (s, r, bt) = setup(4, 6);
+        assert_eq!(bt.n_bubbles, 1);
+        let d = direct_edges(&bt, &r.adjacency(), &s);
+        assert_eq!(d.converging(), vec![0]);
+    }
+}

@@ -1,0 +1,231 @@
+//! Stitch the DBHT hierarchy (DESIGN.md §7.6): complete-linkage HAC on
+//! APSP distances at three layers — inside each bubble group, between the
+//! bubble groups of a converging basin, and between basins — combined into
+//! one dendrogram over all vertices.
+
+use super::bubble::BubbleTree;
+use super::converging::{assign, Assignment};
+use super::dendrogram::{DendroBuilder, Dendrogram};
+use super::direction::direct_edges;
+use super::linkage::{nn_chain_hac, Linkage};
+use crate::data::matrix::Matrix;
+use crate::parlay;
+use crate::tmfg::TmfgResult;
+use std::collections::HashMap;
+
+/// Group-level complete/single/average distance between two vertex sets
+/// under the pointwise APSP metric.
+fn group_distance(apsp: &Matrix, a: &[u32], b: &[u32], linkage: Linkage) -> f32 {
+    let mut agg: f64 = match linkage {
+        Linkage::Single => f64::INFINITY,
+        _ => 0.0,
+    };
+    for &x in a {
+        for &y in b {
+            let d = apsp.at(x as usize, y as usize) as f64;
+            match linkage {
+                Linkage::Single => agg = agg.min(d),
+                Linkage::Complete => agg = agg.max(d),
+                Linkage::Average => agg += d,
+            }
+        }
+    }
+    if linkage == Linkage::Average {
+        agg /= (a.len() * b.len()) as f64;
+    }
+    agg as f32
+}
+
+/// HAC over pre-formed groups: builds the group-level distance matrix in
+/// parallel, runs NN-chain, and applies the merges to `builder` using
+/// each group's first vertex as representative.
+fn agglomerate_groups(
+    builder: &mut DendroBuilder,
+    apsp: &Matrix,
+    groups: &[Vec<u32>],
+    linkage: Linkage,
+) {
+    let m = groups.len();
+    if m <= 1 {
+        return;
+    }
+    let mut d = Matrix::zeros(m, m);
+    {
+        use crate::parlay::SendPtr;
+        let dp = SendPtr(d.data.as_mut_ptr());
+        parlay::parallel_for(m, 1, |i| {
+            for j in (i + 1)..m {
+                let v = group_distance(apsp, &groups[i], &groups[j], linkage);
+                unsafe {
+                    dp.write(i * m + j, v);
+                    dp.write(j * m + i, v);
+                }
+            }
+        });
+    }
+    let sizes: Vec<f64> = groups.iter().map(|g| g.len() as f64).collect();
+    for mg in nn_chain_hac(&d, &sizes, linkage) {
+        builder.merge(groups[mg.a as usize][0], groups[mg.b as usize][0], mg.height);
+    }
+}
+
+/// Full DBHT output.
+#[derive(Debug, Clone)]
+pub struct DbhtResult {
+    pub dendrogram: Dendrogram,
+    pub assignment: Assignment,
+    pub n_converging: usize,
+}
+
+/// Run DBHT on a constructed TMFG with a precomputed APSP matrix.
+pub fn dbht_dendrogram(s: &Matrix, tmfg: &TmfgResult, apsp: &Matrix, linkage: Linkage) -> DbhtResult {
+    let n = tmfg.n;
+    let bt = BubbleTree::new(tmfg);
+    let dir = direct_edges(&bt, &tmfg.adjacency(), s);
+    let assignment = assign(&bt, &dir, s, apsp);
+
+    // groups[(basin, bubble)] = vertices
+    let mut groups: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
+    for v in 0..n {
+        groups
+            .entry((assignment.vertex_basin[v], assignment.vertex_bubble[v]))
+            .or_default()
+            .push(v as u32);
+    }
+
+    let mut builder = DendroBuilder::new(n);
+
+    // Layer 1: within-bubble-group complete linkage.
+    // Collect groups per basin while we're at it.
+    let mut basin_groups: HashMap<u32, Vec<Vec<u32>>> = HashMap::new();
+    let mut keys: Vec<(u32, u32)> = groups.keys().copied().collect();
+    keys.sort_unstable();
+    // Precompute each group's intra merges in parallel, then apply in a
+    // deterministic order.
+    let group_list: Vec<&Vec<u32>> = keys.iter().map(|k| &groups[k]).collect();
+    let intra: Vec<Vec<super::linkage::Merge>> = parlay::par_map(group_list.len(), 1, |gi| {
+        let g = group_list[gi];
+        let m = g.len();
+        if m <= 1 {
+            return Vec::new();
+        }
+        let mut d = Matrix::zeros(m, m);
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let v = apsp.at(g[i] as usize, g[j] as usize);
+                d.set(i, j, v);
+                d.set(j, i, v);
+            }
+        }
+        nn_chain_hac(&d, &vec![1.0; m], linkage)
+    });
+    for (gi, key) in keys.iter().enumerate() {
+        let g = &groups[key];
+        for mg in &intra[gi] {
+            builder.merge(g[mg.a as usize], g[mg.b as usize], mg.height);
+        }
+        basin_groups.entry(key.0).or_default().push(g.clone());
+    }
+
+    // Layer 2: between bubble groups within each basin.
+    let mut basins: Vec<u32> = basin_groups.keys().copied().collect();
+    basins.sort_unstable();
+    for b in &basins {
+        agglomerate_groups(&mut builder, apsp, &basin_groups[b], linkage);
+    }
+
+    // Layer 3: between basins.
+    let basin_vertex_groups: Vec<Vec<u32>> = basins
+        .iter()
+        .map(|b| {
+            let mut vs: Vec<u32> = basin_groups[b].iter().flatten().copied().collect();
+            vs.sort_unstable();
+            vs
+        })
+        .collect();
+    agglomerate_groups(&mut builder, apsp, &basin_vertex_groups, linkage);
+
+    debug_assert_eq!(builder.n_merges(), n - 1, "dendrogram must be complete");
+    DbhtResult {
+        dendrogram: builder.finish(),
+        n_converging: assignment.converging.len(),
+        assignment,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apsp::{apsp_exact, CsrGraph};
+    use crate::data::synth::SynthSpec;
+    use crate::metrics::adjusted_rand_index;
+    use crate::tmfg::heap_tmfg;
+
+    fn run(n: usize, k: usize, seed: u64, noise: f64) -> (DbhtResult, Vec<usize>, usize) {
+        let ds = SynthSpec::new("t", n, 64, k).with_noise(noise).generate(seed);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = heap_tmfg(&s, &Default::default());
+        let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
+        let out = dbht_dendrogram(&s, &r, &apsp, Linkage::Complete);
+        (out, ds.labels, ds.n_classes)
+    }
+
+    #[test]
+    fn dendrogram_complete_all_sizes() {
+        for n in [4usize, 5, 8, 30, 100] {
+            let (out, _, _) = run(n, 3.min(n / 2).max(1), n as u64, 0.5);
+            assert!(out.dendrogram.is_complete(), "n={n}");
+            assert_eq!(out.dendrogram.n_leaves, n);
+        }
+    }
+
+    #[test]
+    fn recovers_well_separated_classes() {
+        // DBHT clustering quality varies per instance (the paper's own
+        // average ARI across real datasets is 0.388); check a fixed-seed
+        // ensemble average instead of a single run.
+        let mut sum = 0.0;
+        let mut best: f64 = 0.0;
+        let seeds = [7u64, 8, 9, 10];
+        for &seed in &seeds {
+            let (out, labels, k) = run(120, 3, seed, 0.3);
+            let pred = out.dendrogram.cut(k);
+            let ari = adjusted_rand_index(&labels, &pred);
+            sum += ari;
+            best = best.max(ari);
+        }
+        let mean = sum / seeds.len() as f64;
+        assert!(mean > 0.35, "mean ARI too low: {mean}");
+        assert!(best > 0.5, "best ARI too low: {best}");
+    }
+
+    #[test]
+    fn cut_sizes() {
+        let (out, _, _) = run(60, 4, 9, 0.5);
+        for k in [1usize, 2, 4, 10, 60] {
+            let labels = out.dendrogram.cut(k);
+            let uniq: std::collections::HashSet<_> = labels.iter().collect();
+            assert_eq!(uniq.len(), k, "k={k}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (a, _, _) = run(50, 3, 11, 0.5);
+        let (b, _, _) = run(50, 3, 11, 0.5);
+        assert_eq!(a.dendrogram.nodes, b.dendrogram.nodes);
+        assert_eq!(a.n_converging, b.n_converging);
+    }
+
+    #[test]
+    fn linkage_variants_complete() {
+        for linkage in [Linkage::Single, Linkage::Average, Linkage::Complete] {
+            let ds = SynthSpec::new("t", 40, 48, 3).generate(13);
+            let s = crate::data::corr::pearson_correlation(&ds.data);
+            let r = heap_tmfg(&s, &Default::default());
+            let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
+            let out = dbht_dendrogram(&s, &r, &apsp, linkage);
+            assert!(out.dendrogram.is_complete(), "{linkage:?}");
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Hierarchical agglomerative clustering by the nearest-neighbour-chain
+//! algorithm (as in Yu et al.'s ParChain, which the baseline uses for its
+//! complete-linkage step). Supports single, complete, and average linkage
+//! — all reducible, so NN-chain produces the exact HAC result in O(m²).
+
+use crate::data::matrix::Matrix;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Linkage {
+    Single,
+    #[default]
+    Complete,
+    Average,
+}
+
+/// One merge step between the clusters containing representative leaves
+/// `a` and `b`, at the given linkage height.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Merge {
+    pub a: u32,
+    pub b: u32,
+    pub height: f32,
+}
+
+/// Exact HAC over a dense m×m distance matrix (consumed as working
+/// space). `sizes` are initial cluster sizes (for average linkage over
+/// pre-grouped items); pass all-1s for plain points. Returns m−1 merges
+/// sorted by height ascending, each identified by representative leaves.
+pub fn nn_chain_hac(dist: &Matrix, sizes: &[f64], linkage: Linkage) -> Vec<Merge> {
+    let m = dist.rows;
+    assert_eq!(dist.cols, m);
+    assert_eq!(sizes.len(), m);
+    if m <= 1 {
+        return Vec::new();
+    }
+    // Working distance matrix (f64 to keep Lance-Williams updates stable).
+    let mut d: Vec<f64> = dist.data.iter().map(|&x| x as f64).collect();
+    let idx = |i: usize, j: usize| i * m + j;
+    let mut active: Vec<bool> = vec![true; m];
+    let mut size: Vec<f64> = sizes.to_vec();
+    // representative leaf of the cluster currently stored at slot i
+    let rep: Vec<u32> = (0..m as u32).collect();
+    let mut n_active = m;
+    let mut chain: Vec<usize> = Vec::with_capacity(m);
+    let mut merges: Vec<Merge> = Vec::with_capacity(m - 1);
+
+    while n_active > 1 {
+        if chain.is_empty() {
+            let first = (0..m).find(|&i| active[i]).unwrap();
+            chain.push(first);
+        }
+        loop {
+            let c = *chain.last().unwrap();
+            // nearest active neighbour of c (tie-break: previous chain
+            // element first — guarantees termination — then lowest index)
+            let prev = if chain.len() >= 2 { Some(chain[chain.len() - 2]) } else { None };
+            let mut best = f64::INFINITY;
+            let mut who = usize::MAX;
+            for x in 0..m {
+                if x != c && active[x] {
+                    let dx = d[idx(c, x)];
+                    if dx < best || (dx == best && Some(x) == prev) {
+                        best = dx;
+                        who = x;
+                    }
+                }
+            }
+            if Some(who) == prev {
+                // reciprocal nearest neighbours → merge c and who
+                chain.pop();
+                chain.pop();
+                let (a, b) = (c.min(who), c.max(who));
+                merges.push(Merge { a: rep[a], b: rep[b], height: best as f32 });
+                // Lance-Williams update into slot a
+                let (sa, sb) = (size[a], size[b]);
+                for x in 0..m {
+                    if x != a && x != b && active[x] {
+                        let dax = d[idx(a, x)];
+                        let dbx = d[idx(b, x)];
+                        let nd = match linkage {
+                            Linkage::Single => dax.min(dbx),
+                            Linkage::Complete => dax.max(dbx),
+                            Linkage::Average => (sa * dax + sb * dbx) / (sa + sb),
+                        };
+                        d[idx(a, x)] = nd;
+                        d[idx(x, a)] = nd;
+                    }
+                }
+                active[b] = false;
+                size[a] += size[b];
+                n_active -= 1;
+                break;
+            }
+            chain.push(who);
+        }
+    }
+    merges.sort_by(|x, y| x.height.total_cmp(&y.height).then(x.a.cmp(&y.a)));
+    merges
+}
+
+/// Brute-force HAC (for testing): repeatedly merge the closest pair.
+#[cfg(test)]
+pub fn brute_force_hac(dist: &Matrix, linkage: Linkage) -> Vec<Merge> {
+    let m = dist.rows;
+    let mut d: Vec<Vec<f64>> = (0..m)
+        .map(|i| (0..m).map(|j| dist.at(i, j) as f64).collect())
+        .collect();
+    let mut active: Vec<bool> = vec![true; m];
+    let mut size: Vec<f64> = vec![1.0; m];
+    let mut rep: Vec<u32> = (0..m as u32).collect();
+    let mut merges = Vec::new();
+    for _ in 0..m.saturating_sub(1) {
+        let mut best = (f64::INFINITY, usize::MAX, usize::MAX);
+        for i in 0..m {
+            if !active[i] {
+                continue;
+            }
+            for j in (i + 1)..m {
+                if active[j] && d[i][j] < best.0 {
+                    best = (d[i][j], i, j);
+                }
+            }
+        }
+        let (h, a, b) = best;
+        merges.push(Merge { a: rep[a], b: rep[b], height: h as f32 });
+        for x in 0..m {
+            if x != a && x != b && active[x] {
+                let nd = match linkage {
+                    Linkage::Single => d[a][x].min(d[b][x]),
+                    Linkage::Complete => d[a][x].max(d[b][x]),
+                    Linkage::Average => (size[a] * d[a][x] + size[b] * d[b][x]) / (size[a] + size[b]),
+                };
+                d[a][x] = nd;
+                d[x][a] = nd;
+            }
+        }
+        active[b] = false;
+        size[a] += size[b];
+    }
+    merges.sort_by(|x, y| x.height.total_cmp(&y.height).then(x.a.cmp(&y.a)));
+    merges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dist(m: usize, seed: u64) -> Matrix {
+        let mut r = Rng::new(seed);
+        let mut d = Matrix::zeros(m, m);
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let v = r.next_f32() + 0.01;
+                d.set(i, j, v);
+                d.set(j, i, v);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn matches_brute_force_heights() {
+        for &linkage in &[Linkage::Single, Linkage::Complete, Linkage::Average] {
+            for seed in 0..5u64 {
+                let m = 12 + (seed as usize % 8);
+                let d = random_dist(m, seed * 7 + 1);
+                let sizes = vec![1.0; m];
+                let a = nn_chain_hac(&d, &sizes, linkage);
+                let b = brute_force_hac(&d, linkage);
+                assert_eq!(a.len(), b.len());
+                // Height multisets must match (tree shapes equal up to ties).
+                let ha: Vec<f32> = a.iter().map(|x| x.height).collect();
+                let hb: Vec<f32> = b.iter().map(|x| x.height).collect();
+                for (x, y) in ha.iter().zip(&hb) {
+                    assert!(
+                        (x - y).abs() < 1e-5,
+                        "{linkage:?} seed {seed}: {ha:?} vs {hb:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heights_sorted_and_count() {
+        let d = random_dist(30, 9);
+        let merges = nn_chain_hac(&d, &vec![1.0; 30], Linkage::Complete);
+        assert_eq!(merges.len(), 29);
+        for w in merges.windows(2) {
+            assert!(w[0].height <= w[1].height);
+        }
+    }
+
+    #[test]
+    fn single_linkage_is_mst_heights() {
+        // single-linkage merge heights = MST edge weights (Kruskal)
+        let d = random_dist(15, 3);
+        let merges = nn_chain_hac(&d, &vec![1.0; 15], Linkage::Single);
+        // Kruskal
+        let m = 15;
+        let mut edges: Vec<(f32, usize, usize)> = Vec::new();
+        for i in 0..m {
+            for j in (i + 1)..m {
+                edges.push((d.at(i, j), i, j));
+            }
+        }
+        edges.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut parent: Vec<usize> = (0..m).collect();
+        fn find(p: &mut Vec<usize>, x: usize) -> usize {
+            if p[x] != x {
+                let r = find(p, p[x]);
+                p[x] = r;
+            }
+            p[x]
+        }
+        let mut mst = Vec::new();
+        for (w, a, b) in edges {
+            let (ra, rb) = (find(&mut parent, a), find(&mut parent, b));
+            if ra != rb {
+                parent[ra] = rb;
+                mst.push(w);
+            }
+        }
+        for (x, y) in merges.iter().map(|m| m.height).zip(mst) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn trivial_sizes() {
+        let d = Matrix::zeros(1, 1);
+        assert!(nn_chain_hac(&d, &[1.0], Linkage::Complete).is_empty());
+        let d2 = random_dist(2, 1);
+        let m = nn_chain_hac(&d2, &[1.0, 1.0], Linkage::Complete);
+        assert_eq!(m.len(), 1);
+        assert_eq!((m[0].a, m[0].b), (0, 1));
+    }
+
+    #[test]
+    fn merges_reference_distinct_clusters() {
+        let d = random_dist(20, 11);
+        let merges = nn_chain_hac(&d, &vec![1.0; 20], Linkage::Average);
+        // each leaf id appears as representative; every merge pairs two
+        // distinct reps; overall forms a full binary tree over 20 leaves
+        let mut uf: Vec<u32> = (0..20).collect();
+        fn find(uf: &mut Vec<u32>, x: u32) -> u32 {
+            if uf[x as usize] != x {
+                let r = find(uf, uf[x as usize]);
+                uf[x as usize] = r;
+            }
+            uf[x as usize]
+        }
+        for mg in &merges {
+            let (ra, rb) = (find(&mut uf, mg.a), find(&mut uf, mg.b));
+            assert_ne!(ra, rb, "merge joins same cluster");
+            uf[ra as usize] = rb;
+        }
+    }
+}

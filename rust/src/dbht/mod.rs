@@ -1,0 +1,26 @@
+//! Directed Bubble Hierarchy Tree (DBHT) hierarchical clustering
+//! [Song, Di Matteo, Aste 2012], as used by the paper on top of the TMFG.
+//!
+//! Pipeline: the TMFG's 4-cliques form a tree of "bubbles" (nodes =
+//! cliques, edges = shared triangular faces). Each bubble-tree edge is
+//! directed toward the side with stronger similarity to the shared face;
+//! bubbles with no outgoing edge are *converging* and seed the coarsest
+//! clusters. Vertices are assigned to converging bubbles (basins) and to
+//! individual bubbles within each basin; complete-linkage agglomeration
+//! over APSP distances then builds a dendrogram at three layers
+//! (within-bubble, between bubbles of a basin, between basins).
+//! DESIGN.md §7 documents the exact rules used where the papers leave
+//! freedom.
+
+pub mod bubble;
+pub mod converging;
+pub mod dendrogram;
+pub mod direction;
+pub mod hierarchy;
+pub mod linkage;
+
+pub use bubble::BubbleTree;
+pub use converging::Assignment;
+pub use dendrogram::Dendrogram;
+pub use hierarchy::dbht_dendrogram;
+pub use linkage::Linkage;

@@ -1,0 +1,32 @@
+//! # tmfg — Faster Parallel Triangular Maximally Filtered Graphs and
+//! # Hierarchical Clustering
+//!
+//! A full reproduction of Raphael & Shun (2024): parallel TMFG
+//! construction (the PAR-TMFG baseline of Yu & Shun plus the paper's
+//! CORR-TMFG and HEAP-TMFG), DBHT hierarchical clustering, exact and
+//! approximate all-pairs shortest paths, and the complete evaluation
+//! harness — organized as a three-layer system where the dense
+//! similarity-matrix computation is AOT-compiled from JAX/Pallas to an
+//! XLA executable driven from Rust via PJRT, and all graph algorithms run
+//! on a from-scratch parallel-primitives substrate (`parlay`).
+//!
+//! Quick start:
+//! ```no_run
+//! use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
+//! use tmfg::data::synth::SynthSpec;
+//!
+//! let ds = SynthSpec::new("demo", 200, 64, 4).generate(42);
+//! let cfg = PipelineConfig { algo: TmfgAlgo::Heap, ..Default::default() };
+//! let out = Pipeline::new(cfg).run_dataset(&ds);
+//! println!("ARI = {:.3}", out.ari.unwrap());
+//! ```
+
+pub mod apsp;
+pub mod coordinator;
+pub mod data;
+pub mod dbht;
+pub mod metrics;
+pub mod parlay;
+pub mod runtime;
+pub mod tmfg;
+pub mod util;

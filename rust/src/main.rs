@@ -1,0 +1,201 @@
+//! `tmfg` CLI — the leader entrypoint of the coordinator.
+//!
+//! Subcommands:
+//!   run         run the pipeline once on a dataset and report metrics
+//!   experiment  regenerate the paper's tables/figures (table1, fig2..fig7,
+//!               apsp, ablation, all)
+//!   gen         generate a synthetic dataset to CSV
+//!   serve       start the TCP clustering service
+//!   info        print artifact/runtime/pool information
+
+use tmfg::coordinator::experiments::{self, ExpOpts};
+use tmfg::coordinator::pipeline::{ApspMode, Pipeline, PipelineConfig, TmfgAlgo};
+use tmfg::coordinator::registry;
+use tmfg::coordinator::service::{serve, ServiceConfig};
+use tmfg::dbht::Linkage;
+use tmfg::parlay;
+use tmfg::util::cli::Args;
+
+const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|info> [flags]
+
+  tmfg run --dataset <name|csv> [--algo par1|par10|par200|corr|heap|opt]
+           [--scale 0.1] [--seed N] [--threads N] [--apsp exact|approx]
+           [--linkage complete|average|single] [--no-xla] [--check]
+  tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|ablation|all>
+           [--scale 0.1] [--seed N] [--datasets a,b,c] [--threads 1,2,4]
+           [--out-dir results]
+  tmfg gen --dataset <name> --out <file.csv> [--scale 0.1] [--seed N]
+  tmfg serve [--addr 127.0.0.1:7401] [--algo opt] [--max-batch 8]
+  tmfg info
+";
+
+fn main() {
+    let args = match Args::parse(&[]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "experiment" => cmd_experiment(&args),
+        "gen" => cmd_gen(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_algo(args: &Args) -> TmfgAlgo {
+    let s = args.get_str("algo", "opt");
+    TmfgAlgo::parse(&s).unwrap_or_else(|| {
+        eprintln!("unknown algo {s}");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_run(args: &Args) {
+    let name = args.get_str("dataset", "demo");
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", registry::DEFAULT_SEED);
+    if let Some(t) = args.opt_str("threads") {
+        parlay::set_num_threads(t.parse().unwrap_or(1));
+    }
+    let ds = registry::get_dataset(&name, scale, seed).unwrap_or_else(|| {
+        eprintln!("unknown dataset {name}");
+        std::process::exit(2);
+    });
+    let apsp = match args.opt_str("apsp") {
+        Some("exact") => Some(ApspMode::Exact),
+        Some("approx") => Some(ApspMode::Approx),
+        _ => None,
+    };
+    let linkage = match args.get_str("linkage", "complete").as_str() {
+        "single" => Linkage::Single,
+        "average" => Linkage::Average,
+        _ => Linkage::Complete,
+    };
+    let cfg = PipelineConfig {
+        algo: parse_algo(args),
+        apsp,
+        linkage,
+        use_xla: !args.get_bool("no-xla", false),
+        check_invariants: args.get_bool("check", false),
+        ..Default::default()
+    };
+    println!(
+        "dataset {} (n={}, L={}, k={}), algo {}, {} threads",
+        ds.name,
+        ds.n(),
+        ds.len(),
+        ds.n_classes,
+        cfg.algo.name(),
+        parlay::num_threads()
+    );
+    let out = Pipeline::new(cfg).run_dataset(&ds);
+    println!("\nstage breakdown:\n{}", out.breakdown.table());
+    if let Some(p) = out.corr_path {
+        println!("similarity path: {p:?}");
+    }
+    println!("TMFG edges: {} (edge sum {:.3})", out.tmfg.edges.len(), out.edge_sum);
+    println!("converging bubbles: {}", out.dbht.n_converging);
+    if let Some(ari) = out.ari {
+        println!("ARI @ k={}: {ari:.4}", ds.n_classes);
+    }
+    if let Some(path) = args.opt_str("newick") {
+        std::fs::write(path, out.dbht.dendrogram.to_newick(None)).expect("write newick");
+        println!("wrote dendrogram (Newick) to {path}");
+    }
+    if let Some(path) = args.opt_str("json-out") {
+        std::fs::write(path, out.dbht.dendrogram.to_json().to_string()).expect("write json");
+        println!("wrote dendrogram (JSON) to {path}");
+    }
+}
+
+fn cmd_experiment(args: &Args) {
+    let which = args.positional.get(1).cloned().unwrap_or_else(|| "all".into());
+    let opts = ExpOpts {
+        scale: args.get_f64("scale", 0.1),
+        seed: args.get_u64("seed", registry::DEFAULT_SEED),
+        threads: args.get_usize_list("threads", &[]),
+        datasets: args
+            .opt_str("datasets")
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+            .unwrap_or_default(),
+        out_dir: args.get_str("out-dir", "results"),
+    };
+    match which.as_str() {
+        "table1" => experiments::table1(&opts),
+        "fig2" => experiments::fig2(&opts),
+        "fig3" => experiments::fig3(&opts),
+        "fig4" => experiments::fig4(&opts),
+        "fig5" => experiments::fig5(&opts),
+        "fig6" => experiments::fig6(&opts),
+        "fig7" => experiments::fig7(&opts),
+        "apsp" => experiments::apsp_speedup(&opts),
+        "ablation" => experiments::ablation_linkage(&opts),
+        "all" => experiments::all(&opts),
+        other => {
+            eprintln!("unknown experiment {other}\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_gen(args: &Args) {
+    let name = args.get_str("dataset", "demo");
+    let out = args.get_str("out", "dataset.csv");
+    let ds = registry::get_dataset(&name, args.get_f64("scale", 0.1), args.get_u64("seed", 1))
+        .unwrap_or_else(|| {
+            eprintln!("unknown dataset {name}");
+            std::process::exit(2);
+        });
+    tmfg::data::loader::save_ucr_csv(&ds, std::path::Path::new(&out)).expect("write csv");
+    println!("wrote {} (n={}, L={}, k={})", out, ds.n(), ds.len(), ds.n_classes);
+}
+
+fn cmd_serve(args: &Args) {
+    let cfg = ServiceConfig {
+        addr: args.get_str("addr", "127.0.0.1:7401"),
+        max_batch: args.get_usize("max-batch", 8),
+        default_algo: parse_algo(args),
+        ..Default::default()
+    };
+    let h = serve(cfg).expect("bind service");
+    println!("tmfg clustering service listening on {}", h.addr);
+    println!("protocol: one JSON request per line; see coordinator/service.rs");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_info() {
+    println!("tmfg — parallel TMFG-DBHT hierarchical clustering (Raphael & Shun 2024 reproduction)");
+    println!("pool threads: {}", parlay::num_threads());
+    match tmfg::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => {
+            println!("XLA artifacts ({} buckets):", m.buckets.len());
+            for b in &m.buckets {
+                println!(
+                    "  {}x{}  block_rows={} vmem/step={}KiB  {}",
+                    b.n,
+                    b.l,
+                    b.block_rows,
+                    b.vmem_bytes_per_step / 1024,
+                    b.file.display()
+                );
+            }
+            match tmfg::runtime::client::XlaRuntime::new() {
+                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                Err(e) => println!("PJRT unavailable: {e:#}"),
+            }
+        }
+        Err(e) => println!("no artifacts ({e:#}); run `make artifacts`"),
+    }
+    println!("datasets: {}", registry::table1_names().join(", "));
+}

@@ -1,0 +1,119 @@
+//! Adjusted Rand Index [Hubert & Arabie, 1985] — the paper's clustering
+//! quality metric (§5, Evaluation):
+//!
+//!   ARI = (Σ_ij C(n_ij,2) − [Σ_i C(a_i,2) Σ_j C(b_j,2)] / C(n,2))
+//!       / (½[Σ_i C(a_i,2) + Σ_j C(b_j,2)] − [Σ_i C(a_i,2) Σ_j C(b_j,2)] / C(n,2))
+//!
+//! 1.0 = identical partitions; 0 expected for random assignments.
+
+use std::collections::HashMap;
+
+#[inline]
+fn choose2(x: u64) -> f64 {
+    (x as f64) * (x as f64 - 1.0) / 2.0
+}
+
+/// Compute the ARI between two partitions given as dense label vectors.
+/// Labels need not be contiguous. Panics if lengths differ or inputs are
+/// empty.
+pub fn adjusted_rand_index(truth: &[usize], pred: &[usize]) -> f64 {
+    assert_eq!(truth.len(), pred.len(), "partition length mismatch");
+    assert!(!truth.is_empty(), "empty partitions");
+    let n = truth.len() as u64;
+
+    let mut joint: HashMap<(usize, usize), u64> = HashMap::new();
+    let mut rows: HashMap<usize, u64> = HashMap::new();
+    let mut cols: HashMap<usize, u64> = HashMap::new();
+    for (&t, &p) in truth.iter().zip(pred) {
+        *joint.entry((t, p)).or_insert(0) += 1;
+        *rows.entry(t).or_insert(0) += 1;
+        *cols.entry(p).or_insert(0) += 1;
+    }
+
+    let sum_ij: f64 = joint.values().map(|&c| choose2(c)).sum();
+    let sum_i: f64 = rows.values().map(|&c| choose2(c)).sum();
+    let sum_j: f64 = cols.values().map(|&c| choose2(c)).sum();
+    let total = choose2(n);
+    let expected = sum_i * sum_j / total.max(1.0);
+    let max_index = 0.5 * (sum_i + sum_j);
+    let denom = max_index - expected;
+    if denom.abs() < 1e-12 {
+        // Degenerate: both partitions are all-singletons or one cluster.
+        return if (sum_i - sum_j).abs() < 1e-12 { 1.0 } else { 0.0 };
+    }
+    (sum_ij - expected) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_partitions() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relabelled_partitions_are_identical() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![7, 7, 3, 3, 9, 9];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_value() {
+        // Classic example: truth [0,0,0,1,1,1], pred [0,0,1,1,2,2]
+        // contingency: rows a=(3,3), cols b=(2,2,2), nij = (2,1,0 / 0,1,2)
+        // sum_ij = C(2,2)*2 + ... = 1+0+0+0+0+1 = 2
+        // sum_i = 3+3 = 6, sum_j = 1+1+1 = 3, total = C(6,2)=15
+        // expected = 6*3/15 = 1.2; max = 4.5; ari = (2-1.2)/(4.5-1.2) = 0.2424...
+        let t = vec![0, 0, 0, 1, 1, 1];
+        let p = vec![0, 0, 1, 1, 2, 2];
+        let ari = adjusted_rand_index(&t, &p);
+        assert!((ari - 0.8 / 3.3).abs() < 1e-9, "{ari}");
+    }
+
+    #[test]
+    fn random_assignment_near_zero() {
+        let mut r = Rng::new(13);
+        let n = 20_000;
+        let t: Vec<usize> = (0..n).map(|_| r.next_below(5)).collect();
+        let p: Vec<usize> = (0..n).map(|_| r.next_below(5)).collect();
+        let ari = adjusted_rand_index(&t, &p);
+        assert!(ari.abs() < 0.02, "expected ≈0, got {ari}");
+    }
+
+    #[test]
+    fn symmetry() {
+        let mut r = Rng::new(17);
+        let t: Vec<usize> = (0..500).map(|_| r.next_below(4)).collect();
+        let p: Vec<usize> = (0..500).map(|_| r.next_below(3)).collect();
+        let a = adjusted_rand_index(&t, &p);
+        let b = adjusted_rand_index(&p, &t);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounded_above_by_one() {
+        let mut r = Rng::new(23);
+        for _ in 0..50 {
+            let n = 50 + r.next_below(100);
+            let t: Vec<usize> = (0..n).map(|_| r.next_below(6)).collect();
+            let p: Vec<usize> = (0..n).map(|_| r.next_below(6)).collect();
+            let ari = adjusted_rand_index(&t, &p);
+            assert!(ari <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn degenerate_single_cluster() {
+        let t = vec![0; 10];
+        let p = vec![0; 10];
+        assert!((adjusted_rand_index(&t, &p) - 1.0).abs() < 1e-12);
+        let q: Vec<usize> = (0..10).collect();
+        // all-singleton vs one-cluster: denominator 0, partitions differ
+        assert_eq!(adjusted_rand_index(&t, &q), 0.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! TMFG edge-sum quality metric (Fig. 7): the sum of similarity weights
+//! over the filtered graph's edges. Higher is better — the TMFG objective
+//! is to (approximately) maximize this; the paper reports each parallel
+//! method's percent *reduction* relative to PAR-TDBHT-1.
+
+use crate::data::matrix::Matrix;
+
+/// Sum of S[u,v] over the given undirected edge list.
+pub fn edge_sum(s: &Matrix, edges: &[(u32, u32)]) -> f64 {
+    edges
+        .iter()
+        .map(|&(u, v)| s.at(u as usize, v as usize) as f64)
+        .sum()
+}
+
+/// Percent reduction of `sum` relative to `baseline_sum` (positive =
+/// worse than baseline), as plotted in Fig. 7.
+pub fn edge_sum_reduction_pct(baseline_sum: f64, sum: f64) -> f64 {
+    if baseline_sum.abs() < 1e-12 {
+        return 0.0;
+    }
+    100.0 * (baseline_sum - sum) / baseline_sum.abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_edges() {
+        let s = Matrix::from_vec(3, 3, vec![1.0, 0.5, 0.2, 0.5, 1.0, 0.1, 0.2, 0.1, 1.0]);
+        let e = vec![(0u32, 1u32), (1, 2)];
+        assert!((edge_sum(&s, &e) - 0.6).abs() < 1e-6);
+        assert_eq!(edge_sum(&s, &[]), 0.0);
+    }
+
+    #[test]
+    fn reduction_pct() {
+        assert!((edge_sum_reduction_pct(100.0, 99.0) - 1.0).abs() < 1e-12);
+        assert!((edge_sum_reduction_pct(100.0, 101.0) + 1.0).abs() < 1e-12);
+        assert_eq!(edge_sum_reduction_pct(0.0, 5.0), 0.0);
+    }
+}

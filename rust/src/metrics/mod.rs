@@ -1,0 +1,8 @@
+//! Evaluation metrics: Adjusted Rand Index (Fig. 6) and TMFG edge sums
+//! (Fig. 7).
+
+pub mod ari;
+pub mod edgesum;
+
+pub use ari::adjusted_rand_index;
+pub use edgesum::{edge_sum, edge_sum_reduction_pct};

@@ -1,0 +1,53 @@
+//! `parlay` — a from-scratch shared-memory parallel-primitives substrate
+//! standing in for ParlayLib [Blelloch et al., SPAA'20], which the paper
+//! uses for all of its parallelism. Provides a persistent fork-join thread
+//! pool with a runtime-adjustable active-thread count (needed for the
+//! paper's Fig. 3/4 core-count sweeps), flat data-parallel operations
+//! (map/reduce/scan/filter), a parallel comparison sort (chunk sort +
+//! merge-path parallel merging), and a parallel LSD radix sort for f32
+//! keys (our stand-in for Google Highway's vqsort, used by OPT-TDBHT).
+
+pub mod ops;
+pub mod pool;
+pub mod radix;
+pub mod sort;
+
+pub use ops::*;
+pub use pool::{num_threads, parallel_for, parallel_for_chunks, set_num_threads, with_threads};
+pub use radix::{par_radix_sort_pairs_desc, radix_key_desc};
+pub use sort::{par_sort_by, par_sort_pairs_desc};
+
+/// Wrapper making a raw mutable pointer Send+Sync so disjoint regions of a
+/// buffer can be written from pool workers. Safety contract: callers must
+/// guarantee the regions written by different chunks never overlap.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Raw pointer accessor — use this (not `.0`) inside closures so the
+    /// edition-2021 disjoint-capture rules capture the `SendPtr` wrapper
+    /// (which is Sync) rather than the bare `*mut T` (which is not).
+    #[inline]
+    pub fn ptr(&self) -> *mut T {
+        self.0
+    }
+
+    /// # Safety
+    /// `idx` must be in bounds and not concurrently written by another chunk.
+    #[inline]
+    pub unsafe fn write(&self, idx: usize, val: T) {
+        self.0.add(idx).write(val);
+    }
+
+    /// # Safety
+    /// `idx` must be in bounds; concurrent reads only.
+    #[inline]
+    pub unsafe fn read(&self, idx: usize) -> T
+    where
+        T: Copy,
+    {
+        self.0.add(idx).read()
+    }
+}

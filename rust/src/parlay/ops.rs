@@ -1,0 +1,239 @@
+//! Flat data-parallel operations built on the pool: map, reduce, scan,
+//! filter, pack, min/max location. These mirror the ParlayLib primitives
+//! the paper's implementation uses.
+
+use super::pool::{num_threads, parallel_for_chunks};
+use super::SendPtr;
+
+/// Parallel map: `out[i] = f(i)`.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, grain: usize, f: F) -> Vec<T> {
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks(n, grain, |s, e| {
+        for i in s..e {
+            // SAFETY: each index written exactly once, buffer has capacity n.
+            unsafe { ptr.write(i, f(i)) };
+        }
+    });
+    unsafe { out.set_len(n) };
+    out
+}
+
+/// Parallel reduce with an associative combiner. `id` must be the identity.
+pub fn par_reduce<T, F, G>(n: usize, grain: usize, id: T, f: F, combine: G) -> T
+where
+    T: Send + Sync + Clone,
+    F: Fn(usize) -> T + Sync,
+    G: Fn(T, T) -> T + Sync + Send,
+{
+    let nchunks_max = num_threads() * 8 + 1;
+    let partials: std::sync::Mutex<Vec<T>> =
+        std::sync::Mutex::new(Vec::with_capacity(nchunks_max));
+    parallel_for_chunks(n, grain, |s, e| {
+        let mut acc = id.clone();
+        for i in s..e {
+            acc = combine(acc, f(i));
+        }
+        partials.lock().unwrap().push(acc);
+    });
+    partials
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .fold(id, combine)
+}
+
+/// Parallel sum of f64 values.
+pub fn par_sum_f64<F: Fn(usize) -> f64 + Sync>(n: usize, f: F) -> f64 {
+    par_reduce(n, 2048, 0.0f64, f, |a, b| a + b)
+}
+
+/// Index of the maximum value by `key` (ties → lowest index).
+pub fn par_argmax<K: PartialOrd + Send + Sync + Clone, F: Fn(usize) -> K + Sync>(
+    n: usize,
+    grain: usize,
+    key: F,
+) -> Option<usize> {
+    if n == 0 {
+        return None;
+    }
+    let best = par_reduce(
+        n,
+        grain,
+        None::<(usize, K)>,
+        |i| Some((i, key(i))),
+        |a, b| match (a, b) {
+            (None, x) => x,
+            (x, None) => x,
+            (Some((ia, ka)), Some((ib, kb))) => {
+                if kb > ka || (kb == ka && ib < ia) {
+                    Some((ib, kb))
+                } else {
+                    Some((ia, ka))
+                }
+            }
+        },
+    );
+    best.map(|(i, _)| i)
+}
+
+/// Exclusive prefix sum of `xs`; returns (scanned vector, total).
+pub fn par_scan_usize(xs: &[usize]) -> (Vec<usize>, usize) {
+    let n = xs.len();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    // Two-pass block scan.
+    let nb = (num_threads() * 4).clamp(1, n);
+    let bsize = n.div_ceil(nb);
+    let nb = n.div_ceil(bsize);
+    let mut block_sums = vec![0usize; nb];
+    {
+        let bs = SendPtr(block_sums.as_mut_ptr());
+        parallel_for_chunks(nb, 1, |s, e| {
+            for b in s..e {
+                let lo = b * bsize;
+                let hi = ((b + 1) * bsize).min(n);
+                let sum: usize = xs[lo..hi].iter().sum();
+                unsafe { bs.write(b, sum) };
+            }
+        });
+    }
+    let mut offsets = vec![0usize; nb];
+    let mut acc = 0usize;
+    for b in 0..nb {
+        offsets[b] = acc;
+        acc += block_sums[b];
+    }
+    let total = acc;
+    let mut out: Vec<usize> = Vec::with_capacity(n);
+    {
+        let op = SendPtr(out.as_mut_ptr());
+        parallel_for_chunks(nb, 1, |s, e| {
+            for b in s..e {
+                let lo = b * bsize;
+                let hi = ((b + 1) * bsize).min(n);
+                let mut running = offsets[b];
+                for i in lo..hi {
+                    unsafe { op.write(i, running) };
+                    running += xs[i];
+                }
+            }
+        });
+    }
+    unsafe { out.set_len(n) };
+    (out, total)
+}
+
+/// Parallel filter: keep `i` where `pred(i)`, materialized via `f(i)`,
+/// preserving index order.
+pub fn par_filter<T, P, F>(n: usize, pred: P, f: F) -> Vec<T>
+where
+    T: Send,
+    P: Fn(usize) -> bool + Sync,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let nb = (num_threads() * 4).clamp(1, n);
+    let bsize = n.div_ceil(nb);
+    let nb = n.div_ceil(bsize);
+    let mut counts = vec![0usize; nb];
+    {
+        let cp = SendPtr(counts.as_mut_ptr());
+        parallel_for_chunks(nb, 1, |s, e| {
+            for b in s..e {
+                let lo = b * bsize;
+                let hi = ((b + 1) * bsize).min(n);
+                let c = (lo..hi).filter(|&i| pred(i)).count();
+                unsafe { cp.write(b, c) };
+            }
+        });
+    }
+    let (offsets, total) = par_scan_usize(&counts);
+    let mut out: Vec<T> = Vec::with_capacity(total);
+    {
+        let op = SendPtr(out.as_mut_ptr());
+        parallel_for_chunks(nb, 1, |s, e| {
+            for b in s..e {
+                let lo = b * bsize;
+                let hi = ((b + 1) * bsize).min(n);
+                let mut w = offsets[b];
+                for i in lo..hi {
+                    if pred(i) {
+                        unsafe { op.write(w, f(i)) };
+                        w += 1;
+                    }
+                }
+            }
+        });
+    }
+    unsafe { out.set_len(total) };
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_identity() {
+        let v = par_map(10_000, 64, |i| i * 2);
+        assert_eq!(v.len(), 10_000);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * 2));
+    }
+
+    #[test]
+    fn reduce_sum() {
+        let n = 100_000usize;
+        let s = par_reduce(n, 1024, 0usize, |i| i, |a, b| a + b);
+        assert_eq!(s, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn sum_f64_matches() {
+        let xs: Vec<f64> = (0..50_000).map(|i| (i as f64).sin()).collect();
+        let p = par_sum_f64(xs.len(), |i| xs[i]);
+        let s: f64 = xs.iter().sum();
+        assert!((p - s).abs() < 1e-6 * s.abs().max(1.0));
+    }
+
+    #[test]
+    fn argmax_finds_max_and_breaks_ties_low() {
+        let mut xs = vec![1.0f64; 10_000];
+        xs[7777] = 5.0;
+        assert_eq!(par_argmax(xs.len(), 64, |i| xs[i]), Some(7777));
+        let ys = vec![3.0f64; 1000];
+        assert_eq!(par_argmax(ys.len(), 16, |i| ys[i]), Some(0));
+        assert_eq!(par_argmax(0, 16, |_: usize| 0.0f64), None);
+    }
+
+    #[test]
+    fn scan_exclusive() {
+        let xs: Vec<usize> = (0..12_345).map(|i| i % 7).collect();
+        let (sc, total) = par_scan_usize(&xs);
+        let mut acc = 0;
+        for i in 0..xs.len() {
+            assert_eq!(sc[i], acc, "at {i}");
+            acc += xs[i];
+        }
+        assert_eq!(total, acc);
+        let (e, t) = par_scan_usize(&[]);
+        assert!(e.is_empty() && t == 0);
+    }
+
+    #[test]
+    fn filter_preserves_order() {
+        let n = 54_321;
+        let v = par_filter(n, |i| i % 3 == 0, |i| i);
+        let expect: Vec<usize> = (0..n).filter(|i| i % 3 == 0).collect();
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn filter_all_none() {
+        assert_eq!(par_filter(1000, |_| false, |i| i), Vec::<usize>::new());
+        assert_eq!(par_filter(100, |_| true, |i| i).len(), 100);
+    }
+}

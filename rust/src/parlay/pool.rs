@@ -1,0 +1,382 @@
+//! Persistent fork-join thread pool.
+//!
+//! Design: one global pool of `P-1` workers (plus the calling thread).
+//! A parallel-for posts a `Job` — a lifetime-erased chunk function plus an
+//! atomic chunk cursor — under a mutex, bumps an epoch, and wakes workers.
+//! Workers (and the caller) grab chunks with `fetch_add` until exhausted;
+//! the last finisher signals completion. Workers spin briefly before
+//! parking so back-to-back parallel loops (the TMFG insertion loop!) pay
+//! sub-microsecond dispatch instead of a futex round-trip.
+//!
+//! The *active thread count* is adjustable at runtime (`set_num_threads`)
+//! — only workers with id < active-1 participate — which is how the
+//! experiment harness reproduces the paper's core-count sweeps (Figs 3/4).
+//!
+//! Nested parallel calls from inside a worker run sequentially (ParlayLib
+//! would fork; our algorithms only use flat outer-level parallelism, and
+//! sequential nesting keeps the pool deadlock-free by construction).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One posted parallel job: `func` processes chunk `[start, end)`.
+struct Job {
+    /// Lifetime-erased chunk closure. Valid until `completed == nchunks`
+    /// is observed by the posting thread (which owns the real closure and
+    /// blocks until then).
+    func: *const (dyn Fn(usize, usize) + Sync),
+    n: usize,
+    chunk: usize,
+    nchunks: usize,
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    /// Number of pool workers allowed to participate (callers always do).
+    worker_limit: usize,
+    done_lock: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Pull chunks until the cursor is exhausted. Returns when no work is left.
+    fn work(&self) {
+        loop {
+            let c = self.next.fetch_add(1, Ordering::Relaxed);
+            if c >= self.nchunks {
+                return;
+            }
+            let start = c * self.chunk;
+            let end = (start + self.chunk).min(self.n);
+            // SAFETY: the posting thread keeps the closure alive until all
+            // chunks complete; we only run chunks we claimed.
+            unsafe { (*self.func)(start, end) };
+            let fin = self.completed.fetch_add(1, Ordering::AcqRel) + 1;
+            if fin == self.nchunks {
+                let mut done = self.done_lock.lock().unwrap();
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Shared {
+    /// Epoch counter; bumped on every post. Workers spin on this.
+    epoch: AtomicU64,
+    slot: Mutex<Option<Arc<Job>>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+    /// Serializes top-level parallel sections from different OS threads
+    /// (e.g. the clustering service); held for the duration of one job.
+    run_lock: Mutex<()>,
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    n_workers: usize,
+}
+
+thread_local! {
+    /// True while executing inside a pool worker (or inside a chunk run by
+    /// the caller) — makes nested parallel calls sequential.
+    static IN_PARALLEL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+const SPIN_ROUNDS: u32 = 20_000;
+
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    let mut seen_epoch: u64 = 0;
+    loop {
+        // Spin briefly waiting for a new epoch, then park.
+        let mut spins = 0u32;
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            if shared.epoch.load(Ordering::Acquire) != seen_epoch {
+                break;
+            }
+            spins += 1;
+            if spins < SPIN_ROUNDS {
+                std::hint::spin_loop();
+            } else {
+                let mut guard = shared.slot.lock().unwrap();
+                while shared.epoch.load(Ordering::Acquire) == seen_epoch
+                    && !shared.shutdown.load(Ordering::Acquire)
+                {
+                    guard = shared.cv.wait(guard).unwrap();
+                }
+                break;
+            }
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // Fetch the current job (if any) and participate if within limit.
+        let job = {
+            let guard = shared.slot.lock().unwrap();
+            seen_epoch = shared.epoch.load(Ordering::Acquire);
+            guard.clone()
+        };
+        if let Some(job) = job {
+            if id < job.worker_limit {
+                IN_PARALLEL.with(|f| f.set(true));
+                job.work();
+                IN_PARALLEL.with(|f| f.set(false));
+            }
+        }
+    }
+}
+
+impl Pool {
+    fn new(n_workers: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            epoch: AtomicU64::new(0),
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(n_workers + 1),
+            run_lock: Mutex::new(()),
+        });
+        for id in 0..n_workers {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("parlay-{id}"))
+                .spawn(move || worker_loop(sh, id))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, n_workers }
+    }
+
+    fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let n = std::env::var("PARLAY_NUM_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(hw)
+                .max(1);
+            Pool::new(n.saturating_sub(1))
+        })
+    }
+
+    /// Run `f(start, end)` over chunks of `[0, n)` on the active threads.
+    fn run_chunked<F: Fn(usize, usize) + Sync>(&self, n: usize, grain: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let active = self.shared.active.load(Ordering::Relaxed).min(self.n_workers + 1);
+        let nested = IN_PARALLEL.with(|fl| fl.get());
+        if active <= 1 || n <= grain || nested {
+            f(0, n);
+            return;
+        }
+        // ~8 chunks per active thread for load balance, but ≥ grain each.
+        let chunk = grain.max(n.div_ceil(active * 8)).max(1);
+        let nchunks = n.div_ceil(chunk);
+        if nchunks <= 1 {
+            f(0, n);
+            return;
+        }
+
+        let _serial = self.shared.run_lock.lock().unwrap();
+        // Erase the closure's lifetime: we guarantee below that we do not
+        // return until every chunk has completed.
+        let func: &(dyn Fn(usize, usize) + Sync) = &f;
+        let func: *const (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(func) };
+        let job = Arc::new(Job {
+            func,
+            n,
+            chunk,
+            nchunks,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            worker_limit: active - 1,
+            done_lock: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            *slot = Some(job.clone());
+            self.shared.epoch.fetch_add(1, Ordering::Release);
+            self.shared.cv.notify_all();
+        }
+        // The caller participates too.
+        IN_PARALLEL.with(|fl| fl.set(true));
+        job.work();
+        IN_PARALLEL.with(|fl| fl.set(false));
+        // Wait for stragglers: spin a little, then block on the condvar.
+        let mut spins = 0u32;
+        while job.completed.load(Ordering::Acquire) < nchunks {
+            spins += 1;
+            if spins < SPIN_ROUNDS {
+                std::hint::spin_loop();
+            } else {
+                let mut done = job.done_lock.lock().unwrap();
+                while !*done {
+                    done = job.done_cv.wait(done).unwrap();
+                }
+                break;
+            }
+        }
+        // Clear the slot so late-waking workers don't redundantly scan it.
+        let mut slot = self.shared.slot.lock().unwrap();
+        if let Some(cur) = slot.as_ref() {
+            if Arc::ptr_eq(cur, &job) {
+                *slot = None;
+            }
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        let _g = self.shared.slot.lock().unwrap();
+        self.shared.cv.notify_all();
+    }
+}
+
+/// Number of active threads (including the caller).
+pub fn num_threads() -> usize {
+    let p = Pool::global();
+    p.shared.active.load(Ordering::Relaxed).min(p.n_workers + 1)
+}
+
+/// Set the number of active threads (including the caller); clamped to
+/// [1, hardware]. Used by the core-count sweep experiments.
+pub fn set_num_threads(t: usize) {
+    let p = Pool::global();
+    p.shared.active.store(t.clamp(1, p.n_workers + 1), Ordering::Relaxed);
+}
+
+/// Run `f` with the active-thread count temporarily set to `t`.
+pub fn with_threads<R>(t: usize, f: impl FnOnce() -> R) -> R {
+    let prev = num_threads();
+    set_num_threads(t);
+    let r = f();
+    set_num_threads(prev);
+    r
+}
+
+/// Parallel for over `i in [0, n)` with a grain-size hint.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, grain: usize, f: F) {
+    Pool::global().run_chunked(n, grain.max(1), |s, e| {
+        for i in s..e {
+            f(i);
+        }
+    });
+}
+
+/// Parallel for over chunks `[start, end)` of `[0, n)` — use when per-chunk
+/// setup (buffers, local accumulators) matters.
+pub fn parallel_for_chunks<F: Fn(usize, usize) + Sync>(n: usize, grain: usize, f: F) {
+    Pool::global().run_chunked(n, grain.max(1), f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64 as TestAtomic;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 100_000;
+        let hits: Vec<TestAtomic> = (0..n).map(|_| TestAtomic::new(0)).collect();
+        parallel_for(n, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_partition_range() {
+        let n = 12_345;
+        let total = TestAtomic::new(0);
+        parallel_for_chunks(n, 10, |s, e| {
+            assert!(s < e && e <= n);
+            total.fetch_add((e - s) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), n as u64);
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        parallel_for(0, 1, |_| panic!("should not run"));
+        let c = TestAtomic::new(0);
+        parallel_for(1, 1024, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_runs_sequentially() {
+        let n = 1000;
+        let c = TestAtomic::new(0);
+        parallel_for(n, 1, |_| {
+            // nested call must not deadlock
+            parallel_for(10, 1, |_| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(c.load(Ordering::Relaxed), (n * 10) as u64);
+    }
+
+    #[test]
+    fn with_threads_restores() {
+        let before = num_threads();
+        let inside = with_threads(1, num_threads);
+        assert_eq!(inside, 1);
+        assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn single_thread_mode_works() {
+        with_threads(1, || {
+            let n = 10_000;
+            let c = TestAtomic::new(0);
+            parallel_for(n, 16, |_| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(c.load(Ordering::Relaxed), n as u64);
+        });
+    }
+
+    #[test]
+    fn many_consecutive_small_jobs() {
+        // Stress the spin/park dispatch path.
+        for round in 0..2000 {
+            let c = TestAtomic::new(0);
+            parallel_for(257, 16, |_| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(c.load(Ordering::Relaxed), 257, "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_posters_serialize() {
+        // Multiple OS threads issuing parallel sections must not interleave
+        // incorrectly (the run_lock serializes them).
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let c = TestAtomic::new(0);
+                    parallel_for(50_000, 64, |_| {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    });
+                    c.load(Ordering::Relaxed)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 50_000);
+        }
+    }
+}

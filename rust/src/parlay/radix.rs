@@ -1,0 +1,263 @@
+//! Parallel LSD radix sort for `(f32, u32)` pairs — our stand-in for the
+//! Google Highway vectorized sort (vqsort) used by OPT-TDBHT's "initial
+//! sorting of correlations" step. Radix sort plays the same role: beat
+//! comparison sorting on large arrays of f32 keys by using the key bits
+//! directly, with word-level (rather than lane-level) data parallelism.
+//!
+//! The f32 keys are mapped to order-preserving u32s, inverted for
+//! descending order, then sorted with 4 passes of 8-bit counting sort.
+//! Each pass is two flat parallel phases (histogram, scatter) plus a small
+//! sequential prefix over `nblocks × 256` counters.
+
+use super::pool::{num_threads, parallel_for_chunks};
+use super::SendPtr;
+
+/// Map f32 to u32 such that u32 ascending order == f32 **descending**
+/// order. NaNs map below every real number (sort last). Total order.
+#[inline]
+pub fn radix_key_desc(x: f32) -> u32 {
+    if x.is_nan() {
+        return u32::MAX; // last in ascending u32 order
+    }
+    let b = x.to_bits();
+    // Standard order-preserving transform for ascending: flip sign bit for
+    // positives, flip all bits for negatives. Then invert for descending.
+    let asc = if b & 0x8000_0000 != 0 { !b } else { b ^ 0x8000_0000 };
+    !asc
+}
+
+const RADIX_BITS: usize = 8;
+const BUCKETS: usize = 1 << RADIX_BITS;
+
+/// Sequential 4-pass counting sort of `(key, payload)` items ascending by
+/// key, with a caller-provided scratch buffer (resized as needed) so hot
+/// loops can sort many rows without reallocating (§Perf L3 iter. 5).
+/// Stable. Result ends in `src`.
+pub fn radix_sort_keyed_scratch(src: &mut Vec<(u32, u32)>, scratch: &mut Vec<(u32, u32)>) {
+    let n = src.len();
+    if n < 2 {
+        return;
+    }
+    scratch.clear();
+    scratch.resize(n, (0, 0));
+    for pass in 0..(32 / RADIX_BITS) {
+        let shift = pass * RADIX_BITS;
+        let mut counts = [0usize; BUCKETS];
+        for &(k, _) in src.iter() {
+            counts[(k as usize >> shift) & (BUCKETS - 1)] += 1;
+        }
+        let mut acc = 0;
+        let mut offsets = [0usize; BUCKETS];
+        for b in 0..BUCKETS {
+            offsets[b] = acc;
+            acc += counts[b];
+        }
+        for &(k, p) in src.iter() {
+            let b = (k as usize >> shift) & (BUCKETS - 1);
+            scratch[offsets[b]] = (k, p);
+            offsets[b] += 1;
+        }
+        std::mem::swap(src, scratch);
+    }
+    // 4 passes = even number of swaps → result is back in `src`.
+}
+
+/// Sort `pairs` in place by `radix_key_desc(pair.0)` ascending, i.e. by the
+/// f32 key **descending**, NaNs last. Stable.
+pub fn par_radix_sort_pairs_desc(pairs: &mut [(f32, u32)]) {
+    let n = pairs.len();
+    if n < 2 {
+        return;
+    }
+    // Precompute (key, payload-index-into-original) tuples to avoid
+    // re-deriving keys each pass.
+    let mut src: Vec<(u32, (f32, u32))> = pairs.iter().map(|&p| (radix_key_desc(p.0), p)).collect();
+    let mut dst: Vec<(u32, (f32, u32))> = Vec::with_capacity(n);
+    unsafe { dst.set_len(n) };
+
+    if n < 1 << 14 || num_threads() == 1 {
+        // Sequential counting sort passes for small inputs.
+        for pass in 0..(32 / RADIX_BITS) {
+            let shift = pass * RADIX_BITS;
+            let mut counts = [0usize; BUCKETS];
+            for &(k, _) in src.iter() {
+                counts[(k as usize >> shift) & (BUCKETS - 1)] += 1;
+            }
+            let mut acc = 0;
+            let mut offsets = [0usize; BUCKETS];
+            for b in 0..BUCKETS {
+                offsets[b] = acc;
+                acc += counts[b];
+            }
+            for &(k, p) in src.iter() {
+                let b = (k as usize >> shift) & (BUCKETS - 1);
+                dst[offsets[b]] = (k, p);
+                offsets[b] += 1;
+            }
+            std::mem::swap(&mut src, &mut dst);
+        }
+    } else {
+        let nblocks = (num_threads() * 4).min(n / 4096).max(1);
+        let bsize = n.div_ceil(nblocks);
+        let nblocks = n.div_ceil(bsize);
+        let mut hist = vec![0usize; nblocks * BUCKETS];
+        for pass in 0..(32 / RADIX_BITS) {
+            let shift = pass * RADIX_BITS;
+            // Phase 1: per-block histograms.
+            {
+                let hp = SendPtr(hist.as_mut_ptr());
+                let sr = &src;
+                parallel_for_chunks(nblocks, 1, |s, e| {
+                    for blk in s..e {
+                        let lo = blk * bsize;
+                        let hi = ((blk + 1) * bsize).min(n);
+                        let mut local = [0usize; BUCKETS];
+                        for &(k, _) in &sr[lo..hi] {
+                            local[(k as usize >> shift) & (BUCKETS - 1)] += 1;
+                        }
+                        for b in 0..BUCKETS {
+                            // SAFETY: each block writes its own row.
+                            unsafe { hp.write(blk * BUCKETS + b, local[b]) };
+                        }
+                    }
+                });
+            }
+            // Phase 2: sequential prefix over buckets-major order (bucket 0
+            // of all blocks, then bucket 1 of all blocks, …) — gives each
+            // (block, bucket) its global write offset. Stable.
+            let mut acc = 0usize;
+            let mut offsets = vec![0usize; nblocks * BUCKETS];
+            for b in 0..BUCKETS {
+                for blk in 0..nblocks {
+                    offsets[blk * BUCKETS + b] = acc;
+                    acc += hist[blk * BUCKETS + b];
+                }
+            }
+            // Phase 3: parallel scatter.
+            {
+                let dp = SendPtr(dst.as_mut_ptr());
+                let sr = &src;
+                let off = &offsets;
+                parallel_for_chunks(nblocks, 1, |s, e| {
+                    for blk in s..e {
+                        let lo = blk * bsize;
+                        let hi = ((blk + 1) * bsize).min(n);
+                        let mut local = [0usize; BUCKETS];
+                        local.copy_from_slice(&off[blk * BUCKETS..(blk + 1) * BUCKETS]);
+                        for &(k, p) in &sr[lo..hi] {
+                            let b = (k as usize >> shift) & (BUCKETS - 1);
+                            // SAFETY: offset ranges are disjoint by construction.
+                            unsafe { dp.write(local[b], (k, p)) };
+                            local[b] += 1;
+                        }
+                    }
+                });
+            }
+            std::mem::swap(&mut src, &mut dst);
+        }
+    }
+    // 4 passes of 8 bits = even number of swaps → result is in `src`.
+    for (out, (_, p)) in pairs.iter_mut().zip(src.into_iter()) {
+        *out = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn key_order_preserving() {
+        let vals = [
+            f32::NEG_INFINITY,
+            -1e30,
+            -2.5,
+            -0.0,
+            0.0,
+            1e-20,
+            2.5,
+            1e30,
+            f32::INFINITY,
+        ];
+        // descending f32 order == ascending key order
+        for w in vals.windows(2) {
+            assert!(
+                radix_key_desc(w[0]) >= radix_key_desc(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert_eq!(radix_key_desc(f32::NAN), u32::MAX);
+    }
+
+    fn check_sorted_desc(v: &[(f32, u32)]) {
+        let non_nan: Vec<_> = v.iter().take_while(|p| !p.0.is_nan()).collect();
+        for w in non_nan.windows(2) {
+            assert!(w[0].0 >= w[1].0, "{:?} before {:?}", w[0], w[1]);
+        }
+        for p in &v[non_nan.len()..] {
+            assert!(p.0.is_nan());
+        }
+    }
+
+    #[test]
+    fn radix_matches_comparison_sort() {
+        let mut r = Rng::new(4);
+        for &n in &[0usize, 1, 2, 100, 5000, 60_000] {
+            let mut v: Vec<(f32, u32)> = (0..n)
+                .map(|i| ((r.next_f32() * 4.0 - 2.0), i as u32))
+                .collect();
+            let mut expect = v.clone();
+            crate::parlay::sort::par_sort_pairs_desc(&mut expect);
+            par_radix_sort_pairs_desc(&mut v);
+            check_sorted_desc(&v);
+            // keys must match exactly (payload order may differ only on ties;
+            // both sorts are stable so full equality must hold)
+            assert_eq!(v, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn radix_handles_negatives_zeros_nan() {
+        let mut v = vec![
+            (0.5, 0),
+            (-0.5, 1),
+            (f32::NAN, 2),
+            (0.0, 3),
+            (-0.0, 4),
+            (2.0, 5),
+            (-3.0, 6),
+        ];
+        par_radix_sort_pairs_desc(&mut v);
+        let keys: Vec<f32> = v.iter().map(|p| p.0).collect();
+        assert_eq!(&keys[..5], &[2.0, 0.5, 0.0, -0.0, -0.5]);
+        assert_eq!(keys[5], -3.0);
+        assert!(keys[6].is_nan());
+    }
+
+    #[test]
+    fn radix_stability() {
+        let mut v: Vec<(f32, u32)> = (0..40_000).map(|i| (((i / 64) % 5) as f32, i as u32)).collect();
+        par_radix_sort_pairs_desc(&mut v);
+        for w in v.windows(2) {
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1);
+            }
+        }
+    }
+
+    #[test]
+    fn radix_large_parallel_path() {
+        let mut r = Rng::new(9);
+        let n = 300_000;
+        let mut v: Vec<(f32, u32)> = (0..n).map(|i| (r.next_f32() * 100.0 - 50.0, i as u32)).collect();
+        par_radix_sort_pairs_desc(&mut v);
+        check_sorted_desc(&v);
+        assert_eq!(v.len(), n);
+        let mut payloads: Vec<u32> = v.iter().map(|p| p.1).collect();
+        payloads.sort_unstable();
+        assert!(payloads.iter().enumerate().all(|(i, &p)| p == i as u32));
+    }
+}

@@ -1,0 +1,266 @@
+//! Parallel comparison sort: per-chunk pdqsort (std unstable sort) followed
+//! by log(chunks) rounds of pairwise merging, where each merge is itself
+//! parallelized by merge-path (co-rank) splitting — so every round is a
+//! flat parallel-for, compatible with the pool's flat execution model.
+
+use super::pool::{num_threads, parallel_for_chunks};
+use super::SendPtr;
+use std::cmp::Ordering;
+
+/// Find split point for merging: the number of elements of `a` that go
+/// before position `k` of the merged output (co-rank). Stable: elements of
+/// `a` win ties (a-before-b ordering is preserved).
+fn co_rank<T, C: Fn(&T, &T) -> Ordering>(k: usize, a: &[T], b: &[T], cmp: &C) -> (usize, usize) {
+    let mut lo = k.saturating_sub(b.len());
+    let mut hi = k.min(a.len());
+    while lo < hi {
+        let i = (lo + hi) / 2; // elements taken from a
+        let j = k - i - 1;
+        // a[i] vs b[j]: if a[i] <= b[j] (stable), we can take more from a.
+        if j < b.len() && cmp(&a[i], &b[j]) != Ordering::Greater {
+            lo = i + 1;
+        } else {
+            hi = i;
+        }
+    }
+    // Validate boundary: ensure b side doesn't violate order.
+    let mut i = lo;
+    while i > 0 {
+        let j = k - i;
+        if j < b.len() && cmp(&b[j], &a[i - 1]) == Ordering::Less {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    (i, k - i)
+}
+
+/// Sequential stable merge of `a` and `b` into `out` (len = a.len()+b.len()).
+fn seq_merge<T: Copy, C: Fn(&T, &T) -> Ordering>(a: &[T], b: &[T], out: &mut [T], cmp: &C) {
+    debug_assert_eq!(out.len(), a.len() + b.len());
+    let (mut i, mut j, mut k) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        if cmp(&a[i], &b[j]) != Ordering::Greater {
+            out[k] = a[i];
+            i += 1;
+        } else {
+            out[k] = b[j];
+            j += 1;
+        }
+        k += 1;
+    }
+    while i < a.len() {
+        out[k] = a[i];
+        i += 1;
+        k += 1;
+    }
+    while j < b.len() {
+        out[k] = b[j];
+        j += 1;
+        k += 1;
+    }
+}
+
+/// Parallel merge of `a` and `b` into `out` using merge-path splitting.
+fn par_merge<T: Copy + Send + Sync, C: Fn(&T, &T) -> Ordering + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    grain: usize,
+    cmp: &C,
+) {
+    let total = a.len() + b.len();
+    if total <= grain.max(1) * 2 {
+        seq_merge(a, b, out, cmp);
+        return;
+    }
+    let nseg = (total.div_ceil(grain)).min(num_threads() * 4).max(1);
+    let seg = total.div_ceil(nseg);
+    let optr = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks(nseg, 1, |ss, se| {
+        for s in ss..se {
+            let k0 = s * seg;
+            let k1 = ((s + 1) * seg).min(total);
+            if k0 >= k1 {
+                continue;
+            }
+            let (i0, j0) = co_rank(k0, a, b, cmp);
+            let (i1, j1) = co_rank(k1, a, b, cmp);
+            // SAFETY: segments [k0,k1) are disjoint across s.
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(optr.ptr().add(k0), k1 - k0) };
+            seq_merge(&a[i0..i1], &b[j0..j1], dst, cmp);
+        }
+    });
+}
+
+/// Parallel stable sort by comparator.
+pub fn par_sort_by<T: Copy + Send + Sync, C: Fn(&T, &T) -> Ordering + Sync>(v: &mut [T], cmp: C) {
+    let n = v.len();
+    if n < 4096 || num_threads() == 1 {
+        v.sort_by(&cmp);
+        return;
+    }
+    let nchunks = (num_threads() * 2).min(n / 2048).max(2);
+    let csize = n.div_ceil(nchunks);
+    let nchunks = n.div_ceil(csize);
+    // Sort chunks in parallel (in place).
+    {
+        let vptr = SendPtr(v.as_mut_ptr());
+        parallel_for_chunks(nchunks, 1, |s, e| {
+            for c in s..e {
+                let lo = c * csize;
+                let hi = ((c + 1) * csize).min(n);
+                // SAFETY: chunks are disjoint.
+                let chunk = unsafe { std::slice::from_raw_parts_mut(vptr.ptr().add(lo), hi - lo) };
+                chunk.sort_by(&cmp);
+            }
+        });
+    }
+    // Merge rounds, ping-ponging between v and a buffer.
+    let mut buf: Vec<T> = Vec::with_capacity(n);
+    unsafe { buf.set_len(n) };
+    let mut width = csize;
+    let mut src_is_v = true;
+    while width < n {
+        {
+            let (src, dst): (&[T], &mut [T]) = if src_is_v {
+                (unsafe { std::slice::from_raw_parts(v.as_ptr(), n) }, &mut buf[..])
+            } else {
+                (unsafe { std::slice::from_raw_parts(buf.as_ptr(), n) }, &mut *v)
+            };
+            let npairs = n.div_ceil(2 * width);
+            // Each pair merge is internally parallel; do pairs one at a time
+            // when few, or let outer loop be sequential (merges are parallel).
+            for p in 0..npairs {
+                let lo = p * 2 * width;
+                let mid = (lo + width).min(n);
+                let hi = (lo + 2 * width).min(n);
+                par_merge(&src[lo..mid], &src[mid..hi], &mut dst[lo..hi], 4096, &cmp);
+            }
+        }
+        src_is_v = !src_is_v;
+        width *= 2;
+    }
+    if !src_is_v {
+        v.copy_from_slice(&buf);
+    }
+}
+
+/// Sort `(f32 key, u32 payload)` pairs by key **descending** (the order
+/// CORR-TMFG needs: most-similar first). NaN keys sort last. Stable.
+pub fn par_sort_pairs_desc(pairs: &mut [(f32, u32)]) {
+    par_sort_by(pairs, |a, b| {
+        // descending by key; total order with NaN last
+        match (a.0.is_nan(), b.0.is_nan()) {
+            (true, true) => Ordering::Equal,
+            (true, false) => Ordering::Greater,
+            (false, true) => Ordering::Less,
+            (false, false) => b.0.partial_cmp(&a.0).unwrap(),
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn co_rank_boundaries() {
+        let a = [1, 3, 5, 7];
+        let b = [2, 4, 6, 8];
+        let cmp = |x: &i32, y: &i32| x.cmp(y);
+        for k in 0..=8 {
+            let (i, j) = co_rank(k, &a, &b, &cmp);
+            assert_eq!(i + j, k);
+            // merged prefix of length k must contain the k smallest
+            let mut all: Vec<i32> = a.iter().chain(b.iter()).cloned().collect();
+            all.sort();
+            let mut pre: Vec<i32> = a[..i].iter().chain(b[..j].iter()).cloned().collect();
+            pre.sort();
+            assert_eq!(pre, all[..k].to_vec(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn merge_correct() {
+        let mut r = Rng::new(1);
+        for _ in 0..50 {
+            let la = r.next_below(200);
+            let lb = r.next_below(200);
+            let mut a: Vec<i32> = (0..la).map(|_| r.next_below(100) as i32).collect();
+            let mut b: Vec<i32> = (0..lb).map(|_| r.next_below(100) as i32).collect();
+            a.sort();
+            b.sort();
+            let mut out = vec![0; la + lb];
+            par_merge(&a, &b, &mut out, 16, &|x, y| x.cmp(y));
+            let mut expect = [a, b].concat();
+            expect.sort();
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn sort_random_large() {
+        let mut r = Rng::new(2);
+        let mut v: Vec<u32> = (0..100_000).map(|_| r.next_u64() as u32).collect();
+        let mut expect = v.clone();
+        expect.sort_unstable();
+        par_sort_by(&mut v, |a, b| a.cmp(b));
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn sort_already_sorted_and_reverse() {
+        let mut v: Vec<u32> = (0..50_000).collect();
+        let expect = v.clone();
+        par_sort_by(&mut v, |a, b| a.cmp(b));
+        assert_eq!(v, expect);
+        let mut w: Vec<u32> = (0..50_000).rev().collect();
+        par_sort_by(&mut w, |a, b| a.cmp(b));
+        assert_eq!(w, expect);
+    }
+
+    #[test]
+    fn sort_pairs_desc_with_nan() {
+        let mut r = Rng::new(3);
+        let mut v: Vec<(f32, u32)> = (0..20_000)
+            .map(|i| (r.next_f32() * 2.0 - 1.0, i as u32))
+            .collect();
+        v[7] = (f32::NAN, 7);
+        v[19_999] = (f32::NAN, 19_999);
+        par_sort_pairs_desc(&mut v);
+        // non-NaN prefix is non-increasing; NaNs at the end
+        let non_nan = v.iter().take_while(|p| !p.0.is_nan()).collect::<Vec<_>>();
+        assert_eq!(non_nan.len(), v.len() - 2);
+        for w in non_nan.windows(2) {
+            assert!(w[0].0 >= w[1].0);
+        }
+    }
+
+    #[test]
+    fn sort_small_sizes() {
+        for n in [0usize, 1, 2, 3, 17, 100] {
+            let mut r = Rng::new(n as u64);
+            let mut v: Vec<u32> = (0..n).map(|_| r.next_u64() as u32).collect();
+            let mut expect = v.clone();
+            expect.sort_unstable();
+            par_sort_by(&mut v, |a, b| a.cmp(b));
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn sort_stability() {
+        // pairs with equal keys must keep payload order
+        let mut v: Vec<(f32, u32)> = (0..30_000).map(|i| (((i / 100) % 7) as f32, i as u32)).collect();
+        par_sort_by(&mut v, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        for w in v.windows(2) {
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "stability violated: {:?} {:?}", w[0], w[1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, cache the loaded
+//! executables keyed by artifact path.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// A lazily-compiling executable cache over one PJRT CPU client.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    pub fn new() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaRuntime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the HLO-text artifact at `path`.
+    pub fn load(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a 1-input → tuple-output executable with a dense f32 input
+    /// of shape `dims`, returning the tuple elements as f32 vectors.
+    pub fn execute_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        input: &[f32],
+        dims: &[i64],
+    ) -> Result<Vec<Vec<f32>>> {
+        let lit = xla::Literal::vec1(input)
+            .reshape(dims)
+            .context("reshape input literal")?;
+        let result = exe.execute::<xla::Literal>(&[lit]).context("execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let parts = out.to_tuple().context("untuple result")?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().context("read f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn client_starts() {
+        let rt = XlaRuntime::new().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn load_caches() {
+        let dir = artifacts_dir();
+        let art = dir.join("corr_128x64.hlo.txt");
+        if !art.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = XlaRuntime::new().unwrap();
+        let a = rt.load(&art).unwrap();
+        let b = rt.load(&art).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn load_missing_fails() {
+        let rt = XlaRuntime::new().unwrap();
+        assert!(rt.load(Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+}

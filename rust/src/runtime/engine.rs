@@ -1,0 +1,184 @@
+//! The similarity engine: computes the n×n Pearson matrix either through
+//! the AOT-compiled XLA artifact (padding the panel to the smallest shape
+//! bucket, executing via PJRT, slicing the result) or through the native
+//! Rust parallel path (fallback for shapes above the largest bucket, and
+//! the baseline the XLA path is validated against).
+//!
+//! Padding scheme (proved sound in python/tests/test_model.py): extra
+//! rows are zero (their correlations are sliced away); extra *columns* of
+//! real rows are filled with the row's mean, which leaves the row mean and
+//! centered norm unchanged so the real correlations are exact.
+
+use super::client::XlaRuntime;
+use super::manifest::Manifest;
+use crate::data::corr::pearson_correlation;
+use crate::data::matrix::Matrix;
+use crate::parlay;
+use anyhow::Result;
+use std::path::Path;
+
+/// Which compute path produced a result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorrPath {
+    Xla,
+    Native,
+}
+
+pub struct CorrEngine {
+    runtime: Option<XlaRuntime>,
+    manifest: Option<Manifest>,
+    /// Force the native path even when a bucket fits.
+    pub force_native: bool,
+}
+
+impl CorrEngine {
+    /// Engine with the XLA path enabled from an artifacts directory.
+    pub fn with_artifacts(dir: &Path) -> Result<CorrEngine> {
+        let manifest = Manifest::load(dir)?;
+        let runtime = XlaRuntime::new()?;
+        Ok(CorrEngine {
+            runtime: Some(runtime),
+            manifest: Some(manifest),
+            force_native: false,
+        })
+    }
+
+    /// Native-only engine (no artifacts required).
+    pub fn native_only() -> CorrEngine {
+        CorrEngine { runtime: None, manifest: None, force_native: true }
+    }
+
+    /// Try the default artifacts dir; fall back to native-only.
+    pub fn auto(dir: &Path) -> CorrEngine {
+        match Self::with_artifacts(dir) {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!(
+                    "note: XLA artifacts unavailable ({err:#}); using native correlation path"
+                );
+                Self::native_only()
+            }
+        }
+    }
+
+    /// Compute the similarity matrix + row sums; reports which path ran.
+    pub fn similarity(&self, x: &Matrix) -> Result<(Matrix, Vec<f64>, CorrPath)> {
+        let (n, l) = (x.rows, x.cols);
+        if !self.force_native {
+            if let (Some(rt), Some(man)) = (&self.runtime, &self.manifest) {
+                if let Some(bucket) = man.pick(n, l) {
+                    let s = self.run_xla(rt, &bucket.file, x, bucket.n, bucket.l)?;
+                    let rowsums = row_sums(&s);
+                    return Ok((s, rowsums, CorrPath::Xla));
+                }
+            }
+        }
+        let s = pearson_correlation(x);
+        let rowsums = row_sums(&s);
+        Ok((s, rowsums, CorrPath::Native))
+    }
+
+    fn run_xla(
+        &self,
+        rt: &XlaRuntime,
+        artifact: &Path,
+        x: &Matrix,
+        bn: usize,
+        bl: usize,
+    ) -> Result<Matrix> {
+        let (n, l) = (x.rows, x.cols);
+        let exe = rt.load(artifact)?;
+        // Pad: rows 0..n get real data + mean-padding columns; rows n..bn zero.
+        let mut padded = vec![0.0f32; bn * bl];
+        {
+            use crate::parlay::SendPtr;
+            let pp = SendPtr(padded.as_mut_ptr());
+            parlay::parallel_for(n, 8, |i| {
+                let row = x.row(i);
+                let mean =
+                    (row.iter().map(|&v| v as f64).sum::<f64>() / l as f64) as f32;
+                for (j, &v) in row.iter().enumerate() {
+                    unsafe { pp.write(i * bl + j, v) };
+                }
+                for j in l..bl {
+                    unsafe { pp.write(i * bl + j, mean) };
+                }
+            });
+        }
+        let outs = rt.execute_f32(&exe, &padded, &[bn as i64, bl as i64])?;
+        anyhow::ensure!(outs.len() == 2, "expected (similarity, rowsums) tuple");
+        let big = &outs[0];
+        anyhow::ensure!(big.len() == bn * bn, "bad output size");
+        // Slice the top-left n×n block.
+        let mut s = Matrix::zeros(n, n);
+        {
+            use crate::parlay::SendPtr;
+            let sp = SendPtr(s.data.as_mut_ptr());
+            parlay::parallel_for(n, 16, |i| {
+                for j in 0..n {
+                    unsafe { sp.write(i * n + j, big[i * bn + j]) };
+                }
+            });
+        }
+        Ok(s)
+    }
+}
+
+fn row_sums(s: &Matrix) -> Vec<f64> {
+    parlay::par_map(s.rows, 8, |i| s.row(i).iter().map(|&v| v as f64).sum::<f64>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn artifacts() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn native_path_works() {
+        let ds = SynthSpec::new("t", 30, 20, 3).generate(1);
+        let e = CorrEngine::native_only();
+        let (s, rowsums, path) = e.similarity(&ds.data).unwrap();
+        assert_eq!(path, CorrPath::Native);
+        assert_eq!(s.rows, 30);
+        assert_eq!(rowsums.len(), 30);
+        assert!(s.is_symmetric(1e-5));
+    }
+
+    #[test]
+    fn xla_matches_native() {
+        if !artifacts().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        // Deliberately off-bucket shape to exercise padding + slicing.
+        let ds = SynthSpec::new("t", 100, 46, 4).generate(2);
+        let engine = CorrEngine::with_artifacts(&artifacts()).unwrap();
+        let (sx, rx, path) = engine.similarity(&ds.data).unwrap();
+        assert_eq!(path, CorrPath::Xla);
+        let (sn, rn, _) = CorrEngine::native_only().similarity(&ds.data).unwrap();
+        assert!(
+            sx.max_abs_diff(&sn) < 1e-4,
+            "XLA vs native mismatch: {}",
+            sx.max_abs_diff(&sn)
+        );
+        for (a, b) in rx.iter().zip(&rn) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn oversized_falls_back_to_native() {
+        if !artifacts().join("manifest.json").exists() {
+            return;
+        }
+        let engine = CorrEngine::with_artifacts(&artifacts()).unwrap();
+        // L larger than the largest bucket forces the native path.
+        let ds = SynthSpec::new("t", 16, 2048, 2).generate(3);
+        let (_, _, path) = engine.similarity(&ds.data).unwrap();
+        assert_eq!(path, CorrPath::Native);
+    }
+}

@@ -1,0 +1,132 @@
+//! The artifact manifest written by `python -m compile.aot`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bucket {
+    pub n: usize,
+    pub l: usize,
+    pub file: PathBuf,
+    pub block_rows: usize,
+    pub vmem_bytes_per_step: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<Bucket>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        if j.get("version").as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        if j.get("interchange").as_str() != Some("hlo-text") {
+            bail!("unsupported interchange format");
+        }
+        let arts = j
+            .get("artifacts")
+            .as_arr()
+            .context("manifest.artifacts missing")?;
+        let mut buckets = Vec::with_capacity(arts.len());
+        for a in arts {
+            let file = dir.join(a.get("file").as_str().context("artifact.file")?);
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            buckets.push(Bucket {
+                n: a.get("n").as_usize().context("artifact.n")?,
+                l: a.get("l").as_usize().context("artifact.l")?,
+                file,
+                block_rows: a.get("block_rows").as_usize().unwrap_or(128),
+                vmem_bytes_per_step: a.get("vmem_bytes_per_step").as_usize().unwrap_or(0),
+            });
+        }
+        buckets.sort_by_key(|b| (b.n, b.l));
+        if buckets.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), buckets })
+    }
+
+    /// Smallest bucket covering (n, l), if any.
+    pub fn pick(&self, n: usize, l: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.n >= n && b.l >= l)
+            .min_by_key(|b| (b.n * b.l, b.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_manifest(entries: &[(usize, usize)]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tmfg_manifest_{}_{}",
+            std::process::id(),
+            entries.len()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let arts: Vec<String> = entries
+            .iter()
+            .map(|(n, l)| {
+                let f = format!("corr_{n}x{l}.hlo.txt");
+                std::fs::write(dir.join(&f), "HloModule fake").unwrap();
+                format!(
+                    r#"{{"n":{n},"l":{l},"file":"{f}","block_rows":128,"vmem_bytes_per_step":1,"outputs":["similarity","rowsums"]}}"#
+                )
+            })
+            .collect();
+        let manifest = format!(
+            r#"{{"version":1,"interchange":"hlo-text","model":"similarity_graph_inputs","dtype":"f32","artifacts":[{}]}}"#,
+            arts.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_picks() {
+        let dir = tmp_manifest(&[(128, 64), (256, 128), (1024, 512)]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.buckets.len(), 3);
+        assert_eq!(m.pick(100, 50).unwrap().n, 128);
+        assert_eq!(m.pick(128, 64).unwrap().n, 128);
+        assert_eq!(m.pick(129, 64).unwrap().n, 256);
+        assert_eq!(m.pick(300, 500).unwrap().n, 1024);
+        assert!(m.pick(5000, 64).is_none());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = tmp_manifest(&[(64, 32)]);
+        std::fs::remove_file(dir.join("corr_64x32.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        // When `make artifacts` has run, validate the real manifest too.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.buckets.is_empty());
+            assert!(m.pick(100, 60).is_some());
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python never runs here — the artifacts are self-contained HLO text.
+
+pub mod client;
+pub mod engine;
+pub mod manifest;
+
+pub use engine::CorrEngine;
+pub use manifest::Manifest;

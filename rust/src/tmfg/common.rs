@@ -1,0 +1,435 @@
+//! Shared TMFG machinery: gains, the initial 4-clique, face bookkeeping
+//! with bubble-tree tracking, and the result type.
+
+use crate::data::matrix::Matrix;
+use crate::parlay;
+
+/// How the `MaxCorrs` forward scan over a pre-sorted row is executed
+/// (§4.3 "manual vectorization for AVX2 and AVX512" — see `scan.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScanKind {
+    #[default]
+    Scalar,
+    /// 8-wide unrolled scan over a u8 inserted-flag array (the portable
+    /// analog of the paper's AVX2 gather+movemask scan).
+    Chunked,
+}
+
+/// How the initial per-row correlation sort is executed
+/// (§4.3 "vectorized sorting algorithm from Google Highway").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SortKind {
+    /// std pdqsort per row (rows sorted in parallel).
+    #[default]
+    Comparison,
+    /// LSD radix sort on order-preserving f32 key bits per row — our
+    /// vqsort stand-in.
+    Radix,
+}
+
+/// Construction parameters shared by the TMFG variants.
+#[derive(Debug, Clone)]
+pub struct TmfgConfig {
+    /// Vertices inserted per round (the paper's prefix size). CORR-TMFG
+    /// defaults to 1 (its best configuration); ORIG-TMFG uses 1/10/200 in
+    /// the paper's experiments. HEAP-TMFG always inserts one at a time.
+    pub prefix: usize,
+    pub scan: ScanKind,
+    pub sort: SortKind,
+}
+
+impl Default for TmfgConfig {
+    fn default() -> Self {
+        TmfgConfig { prefix: 1, scan: ScanKind::Scalar, sort: SortKind::Comparison }
+    }
+}
+
+/// Wall-clock seconds per construction phase — the Fig. 5 decomposition
+/// ("finding initial faces" / "initial sorting of correlations" (or the
+/// baseline's interleaved per-face sorts) / "adding vertices").
+#[derive(Debug, Clone, Default)]
+pub struct TmfgTimings {
+    pub init: f64,
+    pub sort: f64,
+    pub insert: f64,
+}
+
+/// Output of TMFG construction. Besides the filtered graph itself it
+/// carries the 4-clique insertion structure ("bubbles") that DBHT consumes.
+#[derive(Debug, Clone)]
+pub struct TmfgResult {
+    pub n: usize,
+    /// Undirected edges; exactly `3n − 6` for n ≥ 4.
+    pub edges: Vec<(u32, u32)>,
+    /// Triangular faces alive at the end; exactly `2n − 4`.
+    pub faces: Vec<[u32; 3]>,
+    /// Bubbles: cliques[0] is the seed 4-clique `[v1,v2,v3,v4]`; every
+    /// later entry is `[x, y, z, v]` where vertex `v` was inserted into
+    /// face `{x,y,z}`.
+    pub cliques: Vec<[u32; 4]>,
+    /// Bubble-tree parent: `parent[0] = -1`; `parent[b]` is the bubble
+    /// that owned the face `cliques[b][0..3]` when `cliques[b][3]` was
+    /// inserted.
+    pub parent: Vec<i32>,
+    /// Vertex insertion order (the 4 seed vertices first).
+    pub order: Vec<u32>,
+    /// Per-phase construction timings.
+    pub timings: TmfgTimings,
+}
+
+impl TmfgResult {
+    /// Sum of similarity over all edges (the Fig. 7 quality metric).
+    pub fn edge_sum(&self, s: &Matrix) -> f64 {
+        crate::metrics::edge_sum(s, &self.edges)
+    }
+
+    /// Adjacency lists (sorted) of the filtered graph.
+    pub fn adjacency(&self) -> Vec<Vec<u32>> {
+        let mut adj = vec![Vec::new(); self.n];
+        for &(u, v) in &self.edges {
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+            a.dedup();
+        }
+        adj
+    }
+}
+
+/// Gain of pairing vertex `v` with face `f`: Σ_{u ∈ f} S[v, u].
+#[inline]
+pub fn gain(s: &Matrix, f: &[u32; 3], v: u32) -> f32 {
+    let r = v as usize;
+    s.at(r, f[0] as usize) + s.at(r, f[1] as usize) + s.at(r, f[2] as usize)
+}
+
+/// The four seed vertices: largest total similarity row sums (Alg. 1/2,
+/// line 1). Row sums are computed in parallel.
+pub fn initial_clique(s: &Matrix) -> [u32; 4] {
+    let n = s.rows;
+    assert!(n >= 4, "TMFG needs at least 4 vertices");
+    let sums = parlay::par_map(n, 8, |i| {
+        let mut acc = 0.0f64;
+        for &v in s.row(i) {
+            acc += v as f64;
+        }
+        acc
+    });
+    // top-4 by sum (ties → lower index), selection in one pass
+    let mut best: Vec<(f64, u32)> = Vec::with_capacity(5);
+    for (i, &v) in sums.iter().enumerate() {
+        best.push((v, i as u32));
+        best.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        best.truncate(4);
+    }
+    [best[0].1, best[1].1, best[2].1, best[3].1]
+}
+
+/// Face table with bubble ownership and a compacting alive-list.
+pub struct Faces {
+    pub verts: Vec<[u32; 3]>,
+    pub owner: Vec<u32>,
+    pub alive: Vec<bool>,
+    alive_list: Vec<u32>,
+    dead_in_list: usize,
+}
+
+impl Faces {
+    /// Initialize with the 4 faces of the seed clique, all owned by bubble 0.
+    pub fn new(c: &[u32; 4]) -> Faces {
+        let verts = vec![
+            [c[0], c[1], c[2]],
+            [c[0], c[1], c[3]],
+            [c[0], c[2], c[3]],
+            [c[1], c[2], c[3]],
+        ];
+        Faces {
+            owner: vec![0; 4],
+            alive: vec![true; 4],
+            alive_list: vec![0, 1, 2, 3],
+            verts,
+            dead_in_list: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.verts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.verts.is_empty()
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.alive_list.len() - self.dead_in_list
+    }
+
+    /// Kill face `f` and create the three faces of the new bubble `owner`
+    /// formed by inserting `v` into `f`. Returns the three new face ids.
+    pub fn split(&mut self, f: u32, v: u32, owner: u32) -> [u32; 3] {
+        debug_assert!(self.alive[f as usize], "splitting a dead face");
+        let [x, y, z] = self.verts[f as usize];
+        self.alive[f as usize] = false;
+        self.dead_in_list += 1;
+        let base = self.verts.len() as u32;
+        for tri in [[v, x, y], [v, y, z], [v, x, z]] {
+            self.verts.push(tri);
+            self.owner.push(owner);
+            self.alive.push(true);
+            self.alive_list.push(self.verts.len() as u32 - 1);
+        }
+        [base, base + 1, base + 2]
+    }
+
+    /// Snapshot of the alive face ids. The internal list is compacted
+    /// lazily when more than half of it is dead; the returned snapshot is
+    /// fully filtered.
+    pub fn alive_ids(&mut self) -> Vec<u32> {
+        if self.dead_in_list * 2 > self.alive_list.len() {
+            self.alive_list.retain(|&f| self.alive[f as usize]);
+            self.dead_in_list = 0;
+        }
+        self.alive_list
+            .iter()
+            .copied()
+            .filter(|&f| self.alive[f as usize])
+            .collect()
+    }
+
+    /// Final triangular faces.
+    pub fn alive_faces(&self) -> Vec<[u32; 3]> {
+        (0..self.verts.len())
+            .filter(|&i| self.alive[i])
+            .map(|i| self.verts[i])
+            .collect()
+    }
+}
+
+/// Incremental result builder shared by all construction algorithms.
+pub struct Builder {
+    pub edges: Vec<(u32, u32)>,
+    pub cliques: Vec<[u32; 4]>,
+    pub parent: Vec<i32>,
+    pub order: Vec<u32>,
+}
+
+impl Builder {
+    pub fn new(seed: [u32; 4], n: usize) -> Builder {
+        let mut edges = Vec::with_capacity(3 * n);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                edges.push((seed[i], seed[j]));
+            }
+        }
+        Builder {
+            edges,
+            cliques: vec![seed],
+            parent: vec![-1],
+            order: seed.to_vec(),
+        }
+    }
+
+    /// Record insertion of `v` into face `f` (id `fid`, owner `owner`);
+    /// returns the new bubble id.
+    pub fn insert(&mut self, v: u32, fverts: [u32; 3], owner: u32) -> u32 {
+        let [x, y, z] = fverts;
+        self.edges.push((v, x));
+        self.edges.push((v, y));
+        self.edges.push((v, z));
+        self.cliques.push([x, y, z, v]);
+        self.parent.push(owner as i32);
+        self.order.push(v);
+        (self.cliques.len() - 1) as u32
+    }
+
+    pub fn finish(self, n: usize, faces: Vec<[u32; 3]>) -> TmfgResult {
+        TmfgResult {
+            n,
+            edges: self.edges,
+            faces,
+            cliques: self.cliques,
+            parent: self.parent,
+            order: self.order,
+            timings: TmfgTimings::default(),
+        }
+    }
+}
+
+/// Structural invariant checks used by tests and (in debug builds) by the
+/// pipeline: maximal-planar edge/face counts, single insertion, parent
+/// validity, and that every clique is a genuine 4-clique of the edge set.
+pub fn check_invariants(r: &TmfgResult) -> Result<(), String> {
+    let n = r.n;
+    if n < 4 {
+        return Err("n < 4".into());
+    }
+    if r.edges.len() != 3 * n - 6 {
+        return Err(format!("edge count {} != 3n-6 = {}", r.edges.len(), 3 * n - 6));
+    }
+    if r.faces.len() != 2 * n - 4 {
+        return Err(format!("face count {} != 2n-4 = {}", r.faces.len(), 2 * n - 4));
+    }
+    if r.cliques.len() != n - 3 {
+        return Err(format!("clique count {} != n-3 = {}", r.cliques.len(), n - 3));
+    }
+    if r.order.len() != n {
+        return Err("order must contain every vertex".into());
+    }
+    let mut seen = vec![false; n];
+    for &v in &r.order {
+        if seen[v as usize] {
+            return Err(format!("vertex {v} inserted twice"));
+        }
+        seen[v as usize] = true;
+    }
+    if !seen.iter().all(|&b| b) {
+        return Err("some vertex never inserted".into());
+    }
+    // no duplicate / self edges
+    let mut es: Vec<(u32, u32)> = r
+        .edges
+        .iter()
+        .map(|&(u, v)| (u.min(v), u.max(v)))
+        .collect();
+    es.sort_unstable();
+    for w in es.windows(2) {
+        if w[0] == w[1] {
+            return Err(format!("duplicate edge {:?}", w[0]));
+        }
+    }
+    if es.iter().any(|&(u, v)| u == v) {
+        return Err("self edge".into());
+    }
+    let has_edge = |a: u32, b: u32| es.binary_search(&(a.min(b), a.max(b))).is_ok();
+    // cliques are 4-cliques; parent links valid
+    for (b, c) in r.cliques.iter().enumerate() {
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                if !has_edge(c[i], c[j]) {
+                    return Err(format!("clique {b} not a 4-clique: missing ({},{})", c[i], c[j]));
+                }
+            }
+        }
+        let p = r.parent[b];
+        if b == 0 {
+            if p != -1 {
+                return Err("root parent must be -1".into());
+            }
+        } else {
+            if p < 0 || p as usize >= b {
+                return Err(format!("parent[{b}] = {p} invalid (must precede child)"));
+            }
+            // shared face: first three vertices of clique b must all belong
+            // to the parent clique
+            let pc = r.cliques[p as usize];
+            for k in 0..3 {
+                if !pc.contains(&c[k]) {
+                    return Err(format!("clique {b} face vertex {} not in parent", c[k]));
+                }
+            }
+        }
+    }
+    // faces are triangles of the edge set
+    for f in &r.faces {
+        if !(has_edge(f[0], f[1]) && has_edge(f[1], f[2]) && has_edge(f[0], f[2])) {
+            return Err(format!("face {f:?} is not a triangle of E"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_s() -> Matrix {
+        // 6 vertices; vertex 0 is strongly connected to everything.
+        let n = 6;
+        let mut s = Matrix::zeros(n, n);
+        let w = [
+            [1.0, 0.9, 0.8, 0.7, 0.2, 0.1],
+            [0.9, 1.0, 0.6, 0.5, 0.3, 0.2],
+            [0.8, 0.6, 1.0, 0.4, 0.2, 0.3],
+            [0.7, 0.5, 0.4, 1.0, 0.1, 0.2],
+            [0.2, 0.3, 0.2, 0.1, 1.0, 0.6],
+            [0.1, 0.2, 0.3, 0.2, 0.6, 1.0],
+        ];
+        for i in 0..n {
+            for j in 0..n {
+                s.set(i, j, w[i][j]);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn initial_clique_picks_top_row_sums() {
+        let s = small_s();
+        let c = initial_clique(&s);
+        // row sums: v0 largest, then v1, v2, v3
+        assert_eq!(c, [0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn gain_is_sum_of_three() {
+        let s = small_s();
+        let g = gain(&s, &[0, 1, 2], 4);
+        assert!((g - (0.2 + 0.3 + 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn faces_split_bookkeeping() {
+        let mut f = Faces::new(&[0, 1, 2, 3]);
+        assert_eq!(f.n_alive(), 4);
+        let new = f.split(0, 4, 1);
+        assert_eq!(f.n_alive(), 6);
+        assert!(!f.alive[0]);
+        assert_eq!(f.verts[new[0] as usize], [4, 0, 1]);
+        assert_eq!(f.verts[new[1] as usize], [4, 1, 2]);
+        assert_eq!(f.verts[new[2] as usize], [4, 0, 2]);
+        assert!(new.iter().all(|&i| f.owner[i as usize] == 1));
+        // alive ids contain only live faces after compaction trigger
+        for _ in 0..4 {
+            let id = f.alive_ids()[0];
+            f.split(id, 5, 2);
+        }
+        // 4 initial faces, 5 splits total, each split is net +2 alive.
+        assert_eq!(f.n_alive(), 4 + 2 * 5);
+    }
+
+    #[test]
+    fn builder_structure() {
+        let mut b = Builder::new([0, 1, 2, 3], 6);
+        assert_eq!(b.edges.len(), 6);
+        let id = b.insert(4, [0, 1, 2], 0);
+        assert_eq!(id, 1);
+        assert_eq!(b.edges.len(), 9);
+        assert_eq!(b.cliques[1], [0, 1, 2, 4]);
+        assert_eq!(b.parent[1], 0);
+    }
+
+    #[test]
+    fn invariants_accept_manual_tmfg() {
+        // Build a valid TMFG by hand for n=5: seed {0,1,2,3}, insert 4
+        // into face {0,1,2}.
+        let mut b = Builder::new([0, 1, 2, 3], 5);
+        let mut f = Faces::new(&[0, 1, 2, 3]);
+        let owner = b.insert(4, f.verts[0], f.owner[0]);
+        f.split(0, 4, owner);
+        let r = b.finish(5, f.alive_faces());
+        check_invariants(&r).unwrap();
+    }
+
+    #[test]
+    fn invariants_reject_bad() {
+        let mut b = Builder::new([0, 1, 2, 3], 5);
+        let mut f = Faces::new(&[0, 1, 2, 3]);
+        let owner = b.insert(4, f.verts[0], f.owner[0]);
+        f.split(0, 4, owner);
+        let mut r = b.finish(5, f.alive_faces());
+        r.edges.pop();
+        assert!(check_invariants(&r).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! CORR-TMFG (Algorithm 1): correlation-based TMFG construction.
+//!
+//! The key idea: replace the per-face-creation gain sorts of the original
+//! algorithm with **one** up-front parallel sort of every similarity row.
+//! Afterwards, the best candidate vertex for a face is derived from the
+//! per-vertex `MaxCorrs` pointers (first uninserted entry of each face
+//! vertex's pre-sorted row) — up to three candidates per face, of which
+//! the max-gain one is kept. Only faces whose chosen candidate was just
+//! inserted (plus the three new faces) are recomputed per round.
+
+use super::common::{
+    gain, initial_clique, Builder, Faces, ScanKind, SortKind, TmfgConfig, TmfgResult,
+};
+use super::scan::scan;
+use crate::data::matrix::Matrix;
+use crate::parlay::{self, SendPtr};
+
+/// Pre-sorted similarity rows + insertion flags + `MaxCorrs` pointers.
+/// Shared by CORR-TMFG and HEAP-TMFG.
+pub struct CorrState {
+    pub n: usize,
+    stride: usize,
+    /// Flat n × (n−1) matrix: row v lists all u ≠ v by S[v,u] descending.
+    sorted: Vec<u32>,
+    /// Per-vertex scan pointer into its sorted row.
+    ptr: Vec<u32>,
+    /// 1 = inserted into the TMFG. u8 (not a bitset) so the chunked scan
+    /// can vector-load flags.
+    pub inserted: Vec<u8>,
+    pub n_rem: usize,
+    scan_kind: ScanKind,
+}
+
+impl CorrState {
+    /// The "initial sorting of correlations" step (Alg. 1 lines 6–7): sort
+    /// every row in parallel. `sort` picks comparison sort vs radix sort
+    /// (the §4.3 Highway-vqsort analog).
+    pub fn build(s: &Matrix, sort: SortKind, scan_kind: ScanKind) -> CorrState {
+        let n = s.rows;
+        let stride = n - 1;
+        let mut sorted: Vec<u32> = Vec::with_capacity(n * stride);
+        let sp = SendPtr(sorted.as_mut_ptr());
+        // Chunked so sort scratch buffers are reused across rows in a chunk
+        // (no per-row allocation — §Perf L3 iter. 5).
+        parlay::parallel_for_chunks(n, 1, |lo, hi| {
+            let mut pairs: Vec<(f32, u32)> = Vec::with_capacity(stride);
+            let mut keyed: Vec<(u32, u32)> = Vec::with_capacity(stride);
+            let mut scratch: Vec<(u32, u32)> = Vec::with_capacity(stride);
+            for v in lo..hi {
+                let row = s.row(v);
+                match sort {
+                    // Nested inside a parallel loop these run sequentially
+                    // per row (rows are the parallel dimension).
+                    SortKind::Comparison => {
+                        pairs.clear();
+                        for (u, &sim) in row.iter().enumerate() {
+                            if u != v {
+                                pairs.push((sim, u as u32));
+                            }
+                        }
+                        pairs.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                        for (k, &(_, u)) in pairs.iter().enumerate() {
+                            // SAFETY: row v writes only its own stride segment.
+                            unsafe { sp.write(v * stride + k, u) };
+                        }
+                    }
+                    SortKind::Radix => {
+                        keyed.clear();
+                        for (u, &sim) in row.iter().enumerate() {
+                            if u != v {
+                                keyed.push((crate::parlay::radix_key_desc(sim), u as u32));
+                            }
+                        }
+                        crate::parlay::radix::radix_sort_keyed_scratch(&mut keyed, &mut scratch);
+                        for (k, &(_, u)) in keyed.iter().enumerate() {
+                            // SAFETY: row v writes only its own stride segment.
+                            unsafe { sp.write(v * stride + k, u) };
+                        }
+                    }
+                }
+            }
+        });
+        unsafe { sorted.set_len(n * stride) };
+        CorrState {
+            n,
+            stride,
+            sorted,
+            ptr: vec![0; n],
+            inserted: vec![0; n],
+            n_rem: n,
+            scan_kind,
+        }
+    }
+
+    #[inline]
+    pub fn mark_inserted(&mut self, v: u32) {
+        debug_assert_eq!(self.inserted[v as usize], 0, "double insertion of {v}");
+        self.inserted[v as usize] = 1;
+        self.n_rem -= 1;
+    }
+
+    /// `MaxCorrs[v]`: the uninserted vertex most similar to `v`, advancing
+    /// the cached pointer past inserted entries (the §4.3 scan).
+    /// Returns `None` only when every other vertex is inserted.
+    #[inline]
+    pub fn maxcorr(&mut self, v: u32) -> Option<u32> {
+        let row = &self.sorted[v as usize * self.stride..(v as usize + 1) * self.stride];
+        let p = scan(self.scan_kind, row, &self.inserted, self.ptr[v as usize] as usize);
+        self.ptr[v as usize] = p as u32;
+        row.get(p).copied()
+    }
+
+    /// Best (gain, vertex) face-vertex pair for face `f` from the up-to-3
+    /// `MaxCorrs` candidates (Alg. 1 lines 9–11 / 23–25).
+    pub fn best_pair(&mut self, s: &Matrix, f: &[u32; 3]) -> Option<(f32, u32)> {
+        let mut best: Option<(f32, u32)> = None;
+        for &w in f {
+            if let Some(cand) = self.maxcorr(w) {
+                let g = gain(s, f, cand);
+                match best {
+                    Some((bg, bv)) if bg > g || (bg == g && bv <= cand) => {}
+                    _ => best = Some((g, cand)),
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Run CORR-TMFG. `cfg.prefix` ≥ 1 vertices are inserted per round
+/// (1 is the paper's best-performing configuration).
+pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
+    let n = s.rows;
+    assert!(n >= 4, "TMFG needs n >= 4");
+    assert!(cfg.prefix >= 1);
+    let mut timer = crate::util::timer::Timer::start();
+    let mut timings = super::common::TmfgTimings::default();
+    let seed = initial_clique(s);
+    timings.init = timer.lap();
+    let mut builder = Builder::new(seed, n);
+    let mut faces = Faces::new(&seed);
+    // The single up-front sorting step (the paper's headline change).
+    let mut state = CorrState::build(s, cfg.sort, cfg.scan);
+    timings.sort = timer.lap();
+    for &v in &seed {
+        state.mark_inserted(v);
+    }
+
+    if n == 4 {
+        let mut r = builder.finish(n, faces.alive_faces());
+        r.timings = timings;
+        return r;
+    }
+
+    // gains[f] = best (gain, vertex) pair for face f; f indexes `faces`.
+    let mut gains: Vec<(f32, u32)> = Vec::with_capacity(6 * n);
+    for fid in 0..4 {
+        let fv = faces.verts[fid];
+        let p = state.best_pair(s, &fv).expect("n >= 5 has candidates");
+        gains.push(p);
+    }
+
+    while state.n_rem > 0 {
+        // ---- selection (Alg. 1 lines 13–14) --------------------------------
+        // Collect the winning face-vertex pairs for this round.
+        let selected: Vec<(f32, u32, u32)> = if cfg.prefix == 1 {
+            // argmax over alive faces
+            let ids = faces.alive_ids();
+            let g = &gains;
+            let best = parlay::par_argmax(ids.len(), 256, |k| g[ids[k] as usize].0)
+                .expect("alive faces exist");
+            let fid = ids[best];
+            let (gg, v) = gains[fid as usize];
+            vec![(gg, fid, v)]
+        } else {
+            // top-P by gain via parallel sort, then dedupe by vertex.
+            let ids = faces.alive_ids();
+            let mut pairs: Vec<(f32, u32)> = Vec::with_capacity(ids.len());
+            for &f in &ids {
+                pairs.push((gains[f as usize].0, f));
+            }
+            parlay::par_sort_pairs_desc(&mut pairs);
+            let mut taken_v = std::collections::HashSet::new();
+            let mut sel = Vec::with_capacity(cfg.prefix);
+            for (g, f) in pairs {
+                let v = gains[f as usize].1;
+                if taken_v.insert(v) {
+                    sel.push((g, f, v));
+                    if sel.len() == cfg.prefix {
+                        break;
+                    }
+                }
+            }
+            sel
+        };
+
+        // ---- insertion (lines 15–18) ---------------------------------------
+        let mut new_faces: Vec<u32> = Vec::with_capacity(3 * selected.len());
+        let mut inserted_now: Vec<u32> = Vec::with_capacity(selected.len());
+        for &(_, fid, v) in &selected {
+            debug_assert!(faces.alive[fid as usize]);
+            debug_assert_eq!(state.inserted[v as usize], 0);
+            let fv = faces.verts[fid as usize];
+            let owner = builder.insert(v, fv, faces.owner[fid as usize]);
+            let nf = faces.split(fid, v, owner);
+            new_faces.extend_from_slice(&nf);
+            inserted_now.push(v);
+            state.mark_inserted(v);
+        }
+
+        if state.n_rem == 0 {
+            break;
+        }
+
+        // ---- update (lines 19–25) -------------------------------------------
+        // Faces needing recomputation: the new faces, plus alive faces whose
+        // chosen candidate was just inserted.
+        gains.resize(faces.len(), (f32::NEG_INFINITY, u32::MAX));
+        let just: std::collections::HashSet<u32> = inserted_now.iter().copied().collect();
+        let mut to_update: Vec<u32> = new_faces;
+        for f in faces.alive_ids() {
+            if gains.get(f as usize).map(|p| just.contains(&p.1)).unwrap_or(false) {
+                to_update.push(f);
+            }
+        }
+        to_update.sort_unstable();
+        to_update.dedup();
+        // Recompute best pairs. The maxcorr pointer advance mutates state,
+        // so this loop is sequential; each recompute is O(candidates) with
+        // the amortized pointer scan (total scan work is O(n²/rounds)).
+        for f in to_update {
+            let fv = faces.verts[f as usize];
+            let p = state
+                .best_pair(s, &fv)
+                .expect("candidates exist while n_rem > 0");
+            gains[f as usize] = p;
+        }
+    }
+
+    timings.insert = timer.lap();
+    let mut r = builder.finish(n, faces.alive_faces());
+    r.timings = timings;
+    debug_assert!(super::common::check_invariants(&r).is_ok());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::tmfg::common::check_invariants;
+
+    fn random_corr(n: usize, seed: u64) -> Matrix {
+        let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
+        crate::data::corr::pearson_correlation(&ds.data)
+    }
+
+    #[test]
+    fn corrstate_maxcorr_is_true_argmax() {
+        let s = random_corr(30, 1);
+        let mut st = CorrState::build(&s, SortKind::Comparison, ScanKind::Scalar);
+        // insert a few vertices
+        for v in [3u32, 7, 20] {
+            st.mark_inserted(v);
+        }
+        for v in 0..30u32 {
+            let got = st.maxcorr(v).unwrap();
+            // brute-force argmax over uninserted u != v
+            let mut best = (f32::NEG_INFINITY, u32::MAX);
+            for u in 0..30u32 {
+                if u != v && st.inserted[u as usize] == 0 {
+                    let sim = s.at(v as usize, u as usize);
+                    if sim > best.0 {
+                        best = (sim, u);
+                    }
+                }
+            }
+            assert_eq!(
+                s.at(v as usize, got as usize),
+                best.0,
+                "v={v}: got {got}, expect {}",
+                best.1
+            );
+        }
+    }
+
+    #[test]
+    fn corrstate_radix_equals_comparison() {
+        let s = random_corr(40, 2);
+        let a = CorrState::build(&s, SortKind::Comparison, ScanKind::Scalar);
+        let b = CorrState::build(&s, SortKind::Radix, ScanKind::Scalar);
+        // the sorted orders must produce identical similarity sequences
+        for v in 0..40usize {
+            let ka: Vec<f32> = a.sorted[v * 39..(v + 1) * 39]
+                .iter()
+                .map(|&u| s.at(v, u as usize))
+                .collect();
+            let kb: Vec<f32> = b.sorted[v * 39..(v + 1) * 39]
+                .iter()
+                .map(|&u| s.at(v, u as usize))
+                .collect();
+            assert_eq!(ka, kb, "row {v}");
+        }
+    }
+
+    #[test]
+    fn builds_valid_tmfg() {
+        for n in [4usize, 5, 6, 10, 50, 200] {
+            let s = random_corr(n, n as u64);
+            let r = corr_tmfg(&s, &TmfgConfig::default());
+            check_invariants(&r).unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn prefix_variants_valid() {
+        let s = random_corr(100, 9);
+        for p in [1usize, 5, 10, 50] {
+            let cfg = TmfgConfig { prefix: p, ..Default::default() };
+            let r = corr_tmfg(&s, &cfg);
+            check_invariants(&r).unwrap_or_else(|e| panic!("prefix={p}: {e}"));
+        }
+    }
+
+    #[test]
+    fn scan_and_sort_variants_give_same_graph() {
+        let s = random_corr(80, 4);
+        let base = corr_tmfg(&s, &TmfgConfig::default());
+        for (scan, sort) in [
+            (ScanKind::Chunked, SortKind::Comparison),
+            (ScanKind::Scalar, SortKind::Radix),
+            (ScanKind::Chunked, SortKind::Radix),
+        ] {
+            let r = corr_tmfg(&s, &TmfgConfig { prefix: 1, scan, sort });
+            assert_eq!(r.edges, base.edges, "scan={scan:?} sort={sort:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = random_corr(60, 5);
+        let a = corr_tmfg(&s, &TmfgConfig::default());
+        let b = corr_tmfg(&s, &TmfgConfig::default());
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.cliques, b.cliques);
+    }
+
+    #[test]
+    fn larger_prefix_no_better_edge_sum() {
+        // A bigger prefix inserts greedier batches → edge sum should not
+        // improve (paper: large prefixes reduce quality).
+        let s = random_corr(150, 6);
+        let e1 = corr_tmfg(&s, &TmfgConfig { prefix: 1, ..Default::default() }).edge_sum(&s);
+        let e50 = corr_tmfg(&s, &TmfgConfig { prefix: 50, ..Default::default() }).edge_sum(&s);
+        assert!(
+            e50 <= e1 + 1e-3,
+            "prefix-50 edge sum {e50} unexpectedly beats prefix-1 {e1}"
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Triangular Maximally Filtered Graph construction.
+//!
+//! Three algorithms, as in the paper:
+//! * [`orig::orig_tmfg`] — PAR-TMFG of Yu & Shun (ICDE'23) with prefix
+//!   size P: per-face sorted gain arrays created (and sorted) at face
+//!   creation time; each round sorts the face-best pairs and inserts the
+//!   top P non-conflicting face-vertex pairs. This is the baseline whose
+//!   per-insertion sorting the paper eliminates.
+//! * [`corrbased::corr_tmfg`] — CORR-TMFG (Alg. 1): one up-front parallel
+//!   sort of every similarity row; per-face candidates come from
+//!   per-vertex `MaxCorrs` pointers into the pre-sorted rows.
+//! * [`heap::heap_tmfg`] — HEAP-TMFG (Alg. 2): lazy max-heap over
+//!   face-vertex pairs; pairs are recomputed only when they surface at the
+//!   root with a stale (already-inserted) vertex.
+//!
+//! All three produce a [`common::TmfgResult`] carrying the edges, the
+//! 4-clique list with parent links (the bubble tree DBHT consumes), and
+//! the final triangular faces.
+
+pub mod common;
+pub mod corrbased;
+pub mod heap;
+pub mod orig;
+pub mod scan;
+
+pub use common::{ScanKind, SortKind, TmfgConfig, TmfgResult};
+pub use corrbased::corr_tmfg;
+pub use heap::heap_tmfg;
+pub use orig::orig_tmfg;

@@ -1,0 +1,187 @@
+//! Micro/macro-benchmark harness (replaces criterion, unavailable offline).
+//!
+//! Each `cargo bench` target (declared `harness = false`) builds a
+//! `BenchSuite`, registers named cases, and gets warmup, repeated timed
+//! runs, summary statistics, and CSV output under `results/`.
+
+use super::timer::Timer;
+use std::io::Write;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub reps: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, samples: &[f64]) -> Stats {
+        let n = samples.len().max(1) as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Stats {
+            name: name.to_string(),
+            reps: samples.len(),
+            mean,
+            stddev: var.sqrt(),
+            min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+/// Time a single invocation of `f` in seconds.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t = Timer::start();
+    f();
+    t.elapsed()
+}
+
+/// Configuration for a suite; tuned via env vars so CI can shrink runs:
+/// `BENCH_REPS`, `BENCH_WARMUP`, `BENCH_MIN_SECS`.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub reps: usize,
+    /// Keep repeating (up to `reps`) until this much total time has been
+    /// measured, so fast cases get enough samples.
+    pub min_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let envu = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        let envf = |k: &str, d: f64| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        BenchConfig {
+            warmup: envu("BENCH_WARMUP", 1),
+            reps: envu("BENCH_REPS", 3),
+            min_secs: envf("BENCH_MIN_SECS", 0.0),
+        }
+    }
+}
+
+pub struct BenchSuite {
+    pub suite: String,
+    pub config: BenchConfig,
+    pub results: Vec<Stats>,
+    /// Extra (key, value) columns attached to the next `run` call.
+    pending_meta: Vec<(String, String)>,
+    meta_rows: Vec<Vec<(String, String)>>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> BenchSuite {
+        println!("== bench suite: {suite} ==");
+        BenchSuite {
+            suite: suite.to_string(),
+            config: BenchConfig::default(),
+            results: Vec::new(),
+            pending_meta: Vec::new(),
+            meta_rows: Vec::new(),
+        }
+    }
+
+    /// Attach metadata columns (dataset, algo, threads, …) to the next case.
+    pub fn meta(&mut self, key: &str, value: &str) -> &mut Self {
+        self.pending_meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Run a case: warmups then timed reps; prints and records stats.
+    /// `f` receives the rep index and returns an optional "work" payload
+    /// printed as-is (e.g. an accuracy check) — return `None` normally.
+    pub fn run<F: FnMut(usize)>(&mut self, name: &str, mut f: F) -> &Stats {
+        for w in 0..self.config.warmup {
+            f(w);
+        }
+        let mut samples = Vec::with_capacity(self.config.reps);
+        let mut spent = 0.0;
+        for r in 0..self.config.reps.max(1) {
+            let t = Timer::start();
+            f(r);
+            let dt = t.elapsed();
+            samples.push(dt);
+            spent += dt;
+            if r + 1 >= self.config.reps && spent >= self.config.min_secs {
+                break;
+            }
+        }
+        let s = Stats::from_samples(name, &samples);
+        println!(
+            "{:<48} mean {:>10.4}s  sd {:>8.4}s  min {:>10.4}s  (n={})",
+            s.name, s.mean, s.stddev, s.min, s.reps
+        );
+        self.results.push(s);
+        self.meta_rows.push(std::mem::take(&mut self.pending_meta));
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as CSV under `results/<suite>.csv`.
+    pub fn write_csv(&self) -> std::io::Result<String> {
+        std::fs::create_dir_all("results")?;
+        let path = format!("results/{}.csv", self.suite);
+        let mut f = std::fs::File::create(&path)?;
+        // union of metadata keys, in first-seen order
+        let mut keys: Vec<String> = Vec::new();
+        for row in &self.meta_rows {
+            for (k, _) in row {
+                if !keys.contains(k) {
+                    keys.push(k.clone());
+                }
+            }
+        }
+        write!(f, "name")?;
+        for k in &keys {
+            write!(f, ",{k}")?;
+        }
+        writeln!(f, ",reps,mean_s,stddev_s,min_s,max_s")?;
+        for (s, row) in self.results.iter().zip(&self.meta_rows) {
+            write!(f, "{}", s.name.replace(',', ";"))?;
+            for k in &keys {
+                let v = row.iter().find(|(rk, _)| rk == k).map(|(_, v)| v.as_str()).unwrap_or("");
+                write!(f, ",{v}")?;
+            }
+            writeln!(f, ",{},{:.6},{:.6},{:.6},{:.6}", s.reps, s.mean, s.stddev, s.min, s.max)?;
+        }
+        println!("wrote {path}");
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples("x", &[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.stddev - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_counts() {
+        let mut suite = BenchSuite::new("test_suite_tmp");
+        suite.config = BenchConfig { warmup: 2, reps: 3, min_secs: 0.0 };
+        let mut calls = 0;
+        suite.meta("k", "v").run("case", |_| calls += 1);
+        assert_eq!(calls, 5); // 2 warmup + 3 reps
+        assert_eq!(suite.results.len(), 1);
+        assert_eq!(suite.results[0].reps, 3);
+    }
+
+    #[test]
+    fn time_once_positive() {
+        let t = time_once(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(t >= 0.001);
+    }
+}

@@ -1,0 +1,165 @@
+//! Tiny command-line argument parser (replaces clap, unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors and defaults. Each binary declares its
+//! own usage string; unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list. `known` lists accepted flag names
+    /// (without the `--`); pass an empty list to accept anything.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        tokens: I,
+        known: &[&str],
+    ) -> Result<Args, String> {
+        let mut a = Args {
+            known: known.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if !a.known.is_empty() && !a.known.contains(&key) {
+                    return Err(format!("unknown flag --{key}"));
+                }
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // Consume the next token as the value unless it is
+                        // another flag — then this is a boolean flag.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                a.flags.insert(key, val);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse(known: &[&str]) -> Result<Args, String> {
+        Self::parse_from(std::env::args().skip(1), known)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `--threads 1,2,4,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn basic_flags() {
+        let a = Args::parse_from(toks("run --algo heap --threads 8 --verbose"), &[]).unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_str("algo", "x"), "heap");
+        assert_eq!(a.get_usize("threads", 1), 8);
+        assert!(a.get_bool("verbose", false));
+        assert!(!a.get_bool("quiet", false));
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = Args::parse_from(toks("--scale=0.5 --threads=1,2,4"), &[]).unwrap();
+        assert_eq!(a.get_f64("scale", 1.0), 0.5);
+        assert_eq!(a.get_usize_list("threads", &[]), vec![1, 2, 4]);
+        assert_eq!(a.get_usize_list("missing", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn bool_flag_before_flag() {
+        let a = Args::parse_from(toks("--approx --out x.csv"), &[]).unwrap();
+        assert!(a.get_bool("approx", false));
+        assert_eq!(a.get_str("out", ""), "x.csv");
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let r = Args::parse_from(toks("--bogus 1"), &["real"]);
+        assert!(r.is_err());
+        let r2 = Args::parse_from(toks("--real 1"), &["real"]);
+        assert!(r2.is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(toks(""), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 42), 42);
+        assert_eq!(a.get_str("s", "d"), "d");
+        assert_eq!(a.get_f64("f", 1.5), 1.5);
+        assert!(a.opt_str("s").is_none());
+    }
+}

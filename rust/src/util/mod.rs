@@ -1,0 +1,8 @@
+//! Small self-contained substrates that replace crates unavailable in the
+//! offline build environment (serde, clap, rand, criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,129 @@
+//! Wall-clock timing helpers and the per-stage `Breakdown` used to
+//! reproduce the paper's Figure 5 (time breakdown by pipeline stage).
+
+use std::time::Instant;
+
+/// A simple wall-clock stopwatch.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds elapsed since `start` (or the last `reset`).
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+
+    /// Elapsed seconds, then reset — convenient for sequential stages.
+    pub fn lap(&mut self) -> f64 {
+        let e = self.elapsed();
+        self.reset();
+        e
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Named stage timings for one pipeline run (the Fig. 5 artifact).
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    entries: Vec<(String, f64)>,
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `secs` under `stage`, accumulating if the stage repeats.
+    pub fn add(&mut self, stage: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(s, _)| s == stage) {
+            e.1 += secs;
+        } else {
+            self.entries.push((stage.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, stage: &str) -> Option<f64> {
+        self.entries.iter().find(|(s, _)| s == stage).map(|(_, t)| *t)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn stages(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    /// Merge another breakdown into this one (stage-wise sum).
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (s, t) in &other.entries {
+            self.add(s, *t);
+        }
+    }
+
+    /// Render as an aligned two-column table with a total row.
+    pub fn table(&self) -> String {
+        let width = self.entries.iter().map(|(s, _)| s.len()).max().unwrap_or(5).max(5);
+        let mut out = String::new();
+        for (s, t) in &self.entries {
+            out.push_str(&format!("{s:width$}  {t:10.4}s  ({:5.1}%)\n", 100.0 * t / self.total().max(1e-12)));
+        }
+        out.push_str(&format!("{:width$}  {:10.4}s\n", "TOTAL", self.total()));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed();
+        let b = t.elapsed();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = Breakdown::new();
+        b.add("tmfg", 1.0);
+        b.add("apsp", 2.0);
+        b.add("tmfg", 0.5);
+        assert_eq!(b.get("tmfg"), Some(1.5));
+        assert!((b.total() - 3.5).abs() < 1e-12);
+        assert_eq!(b.stages().len(), 2);
+    }
+
+    #[test]
+    fn breakdown_merge_and_table() {
+        let mut a = Breakdown::new();
+        a.add("x", 1.0);
+        let mut b = Breakdown::new();
+        b.add("x", 1.0);
+        b.add("y", 2.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), Some(2.0));
+        assert_eq!(a.get("y"), Some(2.0));
+        let t = a.table();
+        assert!(t.contains("TOTAL"));
+        assert!(t.contains('x'));
+    }
+}

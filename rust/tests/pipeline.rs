@@ -1,0 +1,120 @@
+//! Integration tests: the full pipeline across algorithms, dataset IO, and
+//! cross-method quality relationships (the invariants behind Figs 6/7).
+
+use tmfg::coordinator::pipeline::{ApspMode, Pipeline, PipelineConfig, TmfgAlgo};
+use tmfg::coordinator::registry;
+use tmfg::data::corr::pearson_correlation;
+use tmfg::data::synth::SynthSpec;
+use tmfg::metrics::edge_sum_reduction_pct;
+
+fn cfg(algo: TmfgAlgo) -> PipelineConfig {
+    PipelineConfig { algo, use_xla: false, check_invariants: true, ..Default::default() }
+}
+
+#[test]
+fn full_matrix_of_methods_on_registry_dataset() {
+    let ds = registry::get_dataset("CBF", 0.08, 1).unwrap();
+    let s = pearson_correlation(&ds.data);
+    for algo in [
+        TmfgAlgo::Par(1),
+        TmfgAlgo::Par(10),
+        TmfgAlgo::Par(200),
+        TmfgAlgo::Corr,
+        TmfgAlgo::Heap,
+        TmfgAlgo::Opt,
+    ] {
+        let out = Pipeline::new(cfg(algo)).run_similarity(&s, Some(&ds.labels), ds.n_classes);
+        assert_eq!(out.tmfg.edges.len(), 3 * ds.n() - 6, "{algo:?}");
+        assert!(out.dbht.dendrogram.is_complete(), "{algo:?}");
+        let ari = out.ari.unwrap();
+        assert!((-1.0..=1.0).contains(&ari), "{algo:?} ari={ari}");
+    }
+}
+
+#[test]
+fn edge_sum_ordering_matches_fig7() {
+    // Fig 7's qualitative shape: par-1 ≥ corr/heap ≈ par-10 ≫ par-200,
+    // with corr/heap within ~1-2% of par-1.
+    let ds = SynthSpec::new("t", 250, 64, 5).generate(3);
+    let s = pearson_correlation(&ds.data);
+    let es = |algo| {
+        Pipeline::new(cfg(algo))
+            .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+            .edge_sum
+    };
+    let e1 = es(TmfgAlgo::Par(1));
+    let e200 = es(TmfgAlgo::Par(200));
+    let ecorr = es(TmfgAlgo::Corr);
+    let eheap = es(TmfgAlgo::Heap);
+    assert!(e1 >= ecorr - 1e-6);
+    assert!(e1 >= eheap - 1e-6);
+    assert!(edge_sum_reduction_pct(e1, ecorr) < 2.0, "corr too far below par-1");
+    assert!(edge_sum_reduction_pct(e1, eheap) < 2.0, "heap too far below par-1");
+    assert!(
+        edge_sum_reduction_pct(e1, e200) > edge_sum_reduction_pct(e1, eheap),
+        "par-200 ({e200}) should lose more edge sum than heap ({eheap}) vs par-1 ({e1})"
+    );
+}
+
+#[test]
+fn approx_apsp_preserves_ari_ballpark() {
+    // §4.3: approximate APSP "without sacrificing accuracy".
+    let ds = SynthSpec::new("t", 200, 64, 4).generate(5);
+    let s = pearson_correlation(&ds.data);
+    let run = |mode| {
+        let mut c = cfg(TmfgAlgo::Heap);
+        c.apsp = Some(mode);
+        Pipeline::new(c)
+            .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+            .ari
+            .unwrap()
+    };
+    let exact = run(ApspMode::Exact);
+    let approx = run(ApspMode::Approx);
+    assert!(
+        (exact - approx).abs() < 0.25,
+        "approx APSP moved ARI too much: {exact} vs {approx}"
+    );
+}
+
+#[test]
+fn csv_roundtrip_through_pipeline() {
+    let dir = std::env::temp_dir().join(format!("tmfg_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = SynthSpec::new("rt", 60, 32, 3).generate(9);
+    let path = dir.join("rt.csv");
+    tmfg::data::loader::save_ucr_csv(&ds, &path).unwrap();
+    let loaded = registry::get_dataset(path.to_str().unwrap(), 1.0, 0).unwrap();
+    assert_eq!(loaded.n(), 60);
+    let out = Pipeline::new(cfg(TmfgAlgo::Opt)).run_dataset(&loaded);
+    assert!(out.dbht.dendrogram.is_complete());
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    // Determinism across parallelism levels: same graph, same dendrogram.
+    let ds = SynthSpec::new("t", 150, 48, 3).generate(11);
+    let s = pearson_correlation(&ds.data);
+    let run = |threads| {
+        tmfg::parlay::with_threads(threads, || {
+            let out =
+                Pipeline::new(cfg(TmfgAlgo::Opt)).run_similarity(&s, Some(&ds.labels), ds.n_classes);
+            (out.tmfg.edges.clone(), out.labels.unwrap(), out.ari.unwrap())
+        })
+    };
+    let (e1, l1, a1) = run(1);
+    let (e2, l2, a2) = run(tmfg::parlay::num_threads());
+    assert_eq!(e1, e2);
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+}
+
+#[test]
+fn breakdown_covers_all_stages() {
+    let ds = SynthSpec::new("t", 80, 32, 3).generate(13);
+    let out = Pipeline::new(cfg(TmfgAlgo::Opt)).run_dataset(&ds);
+    for stage in ["similarity", "tmfg:init-faces", "tmfg:sort", "tmfg:add-vertices", "apsp", "dbht"] {
+        assert!(out.breakdown.get(stage).is_some(), "missing stage {stage}");
+    }
+    assert!(out.breakdown.total() > 0.0);
+}

@@ -1,0 +1,179 @@
+//! Property-based tests: randomized instance sweeps over the core
+//! invariants (our stand-in for proptest, which is unavailable offline —
+//! explicit seed loops keep every failure reproducible).
+
+use tmfg::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
+use tmfg::data::corr::pearson_correlation;
+use tmfg::data::matrix::Matrix;
+use tmfg::data::synth::SynthSpec;
+use tmfg::dbht::dendrogram::DendroBuilder;
+use tmfg::dbht::linkage::{nn_chain_hac, Linkage};
+use tmfg::metrics::adjusted_rand_index;
+use tmfg::tmfg::common::check_invariants;
+use tmfg::tmfg::{corr_tmfg, heap_tmfg, orig_tmfg, TmfgConfig};
+use tmfg::util::rng::Rng;
+
+fn random_similarity(n: usize, seed: u64) -> Matrix {
+    // arbitrary symmetric matrix in [-1, 1] with unit diagonal — more
+    // adversarial than correlation matrices (no PSD structure).
+    let mut rng = Rng::new(seed);
+    let mut s = Matrix::zeros(n, n);
+    for i in 0..n {
+        s.set(i, i, 1.0);
+        for j in (i + 1)..n {
+            let v = (rng.next_f32() * 2.0 - 1.0).clamp(-1.0, 1.0);
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+    }
+    s
+}
+
+#[test]
+fn prop_tmfg_invariants_on_adversarial_matrices() {
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed * 1000 + 17);
+        let n = 4 + rng.next_below(120);
+        let s = random_similarity(n, seed);
+        for (name, r) in [
+            ("corr", corr_tmfg(&s, &TmfgConfig::default())),
+            ("heap", heap_tmfg(&s, &TmfgConfig::default())),
+            ("orig-1", orig_tmfg(&s, 1)),
+            ("orig-7", orig_tmfg(&s, 7)),
+        ] {
+            check_invariants(&r).unwrap_or_else(|e| panic!("{name} n={n} seed={seed}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_heap_matches_corr_edge_sum_closely() {
+    // §4.2: the lazy heap's graph quality is "only slightly different".
+    let mut worst: f64 = 0.0;
+    for seed in 0..10u64 {
+        let ds = SynthSpec::new("p", 100, 48, 4).generate(seed + 100);
+        let s = pearson_correlation(&ds.data);
+        let ec = corr_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
+        let eh = heap_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
+        worst = worst.max(((ec - eh) / ec.abs().max(1e-9)).abs());
+    }
+    assert!(worst < 0.02, "max relative edge-sum gap {worst}");
+}
+
+#[test]
+fn prop_hub_apsp_upper_bounds_exact() {
+    for seed in 0..8u64 {
+        let ds = SynthSpec::new("p", 80, 32, 3).generate(seed + 500);
+        let s = pearson_correlation(&ds.data);
+        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()), &s);
+        let exact = apsp_exact(&g);
+        let approx = apsp_hub(&g, &HubConfig::default());
+        for i in 0..g.n {
+            for j in 0..g.n {
+                assert!(
+                    approx.at(i, j) >= exact.at(i, j) - 1e-4,
+                    "seed {seed} ({i},{j}): {} < {}",
+                    approx.at(i, j),
+                    exact.at(i, j)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ari_bounds_and_identity() {
+    let mut rng = Rng::new(99);
+    for _ in 0..30 {
+        let n = 10 + rng.next_below(200);
+        let k = 1 + rng.next_below(8);
+        let a: Vec<usize> = (0..n).map(|_| rng.next_below(k)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.next_below(k)).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari <= 1.0 + 1e-12, "{ari}");
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        // invariance under relabeling
+        let shift: Vec<usize> = b.iter().map(|&x| x + 100).collect();
+        assert!((adjusted_rand_index(&a, &b) - adjusted_rand_index(&a, &shift)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_dendrogram_cut_monotone_refinement() {
+    // cutting at k+1 refines the cut at k (splits exactly one cluster)
+    // for dendrograms built from HAC merges.
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed + 7);
+        let m = 20 + rng.next_below(30);
+        let mut d = Matrix::zeros(m, m);
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let v = rng.next_f32() + 0.01;
+                d.set(i, j, v);
+                d.set(j, i, v);
+            }
+        }
+        let merges = nn_chain_hac(&d, &vec![1.0; m], Linkage::Complete);
+        let mut b = DendroBuilder::new(m);
+        for mg in merges {
+            b.merge(mg.a, mg.b, mg.height);
+        }
+        let dendro = b.finish();
+        let mut prev = dendro.cut(1);
+        for k in 2..=m.min(12) {
+            let cur = dendro.cut(k);
+            let uniq: std::collections::HashSet<_> = cur.iter().collect();
+            assert_eq!(uniq.len(), k);
+            // refinement: points in the same cur-cluster were in the same
+            // prev-cluster
+            for i in 0..m {
+                for j in 0..m {
+                    if cur[i] == cur[j] {
+                        assert_eq!(prev[i], prev[j], "k={k} ({i},{j})");
+                    }
+                }
+            }
+            prev = cur;
+        }
+    }
+}
+
+#[test]
+fn prop_sssp_triangle_inequality() {
+    for seed in 0..5u64 {
+        let ds = SynthSpec::new("p", 60, 32, 3).generate(seed + 900);
+        let s = pearson_correlation(&ds.data);
+        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()), &s);
+        let d = apsp_exact(&g);
+        let mut rng = Rng::new(seed);
+        for _ in 0..200 {
+            let (a, b, c) = (
+                rng.next_below(g.n),
+                rng.next_below(g.n),
+                rng.next_below(g.n),
+            );
+            assert!(
+                d.at(a, b) <= d.at(a, c) + d.at(c, b) + 1e-4,
+                "triangle violated: d({a},{b}) > d({a},{c}) + d({c},{b})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_sorts_match_std() {
+    let mut rng = Rng::new(4242);
+    for _ in 0..10 {
+        let n = 1000 + rng.next_below(60_000);
+        let mut pairs: Vec<(f32, u32)> = (0..n)
+            .map(|i| (rng.next_f32() * 200.0 - 100.0, i as u32))
+            .collect();
+        let mut expect = pairs.clone();
+        expect.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut by_merge = pairs.clone();
+        tmfg::parlay::par_sort_pairs_desc(&mut by_merge);
+        tmfg::parlay::par_radix_sort_pairs_desc(&mut pairs);
+        assert_eq!(by_merge, expect);
+        assert_eq!(pairs, expect);
+    }
+}

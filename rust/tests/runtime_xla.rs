@@ -1,0 +1,65 @@
+//! Integration over the AOT bridge: the XLA artifact path must agree with
+//! the native Rust path, end to end through the full pipeline.
+//! Skipped gracefully when `make artifacts` has not run.
+
+use std::path::Path;
+use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
+use tmfg::data::synth::SynthSpec;
+use tmfg::runtime::engine::{CorrEngine, CorrPath};
+
+fn artifacts() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("manifest.json").exists()
+}
+
+#[test]
+fn engine_equivalence_across_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = CorrEngine::with_artifacts(&artifacts()).unwrap();
+    // Off-bucket shapes exercising padding in n, L, or both.
+    for (n, l, seed) in [(50usize, 46usize, 1u64), (128, 64, 2), (130, 100, 3), (7, 9, 4)] {
+        let ds = SynthSpec::new("t", n, l, 2).generate(seed);
+        let (sx, _, path) = engine.similarity(&ds.data).unwrap();
+        assert_eq!(path, CorrPath::Xla, "n={n} l={l}");
+        let (sn, _, _) = CorrEngine::native_only().similarity(&ds.data).unwrap();
+        let diff = sx.max_abs_diff(&sn);
+        assert!(diff < 2e-4, "n={n} l={l}: XLA vs native diff {diff}");
+    }
+}
+
+#[test]
+fn pipeline_same_clusters_with_and_without_xla() {
+    if !have_artifacts() {
+        return;
+    }
+    let ds = SynthSpec::new("t", 120, 46, 3).generate(7);
+    let mk = |use_xla| PipelineConfig { algo: TmfgAlgo::Heap, use_xla, ..Default::default() };
+    let with = Pipeline::new(mk(true)).run_dataset(&ds);
+    let without = Pipeline::new(mk(false)).run_dataset(&ds);
+    assert_eq!(with.corr_path, Some(CorrPath::Xla));
+    assert_eq!(without.corr_path, Some(CorrPath::Native));
+    // Correlations agree to ~1e-5; the discrete pipeline may only diverge
+    // on near-ties, so compare quality rather than exact structures.
+    let (a, b) = (with.ari.unwrap(), without.ari.unwrap());
+    assert!((a - b).abs() < 0.15, "XLA vs native ARI: {a} vs {b}");
+    let rel = (with.edge_sum - without.edge_sum).abs() / without.edge_sum.abs().max(1e-9);
+    assert!(rel < 0.01, "edge sums diverged: {} vs {}", with.edge_sum, without.edge_sum);
+}
+
+#[test]
+fn manifest_buckets_cover_defaults() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = tmfg::runtime::Manifest::load(&artifacts()).unwrap();
+    // The default bucket grid must cover the scaled experiment suite
+    // (scale 0.1 → n ≤ 1942, L ≤ 1024).
+    assert!(m.pick(1942, 96).is_some());
+    assert!(m.pick(128, 64).is_some());
+}

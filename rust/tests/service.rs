@@ -1,0 +1,133 @@
+//! Integration tests for the batched TCP clustering service.
+
+use tmfg::coordinator::service::{serve, Client, ServiceConfig};
+use tmfg::util::json::Json;
+
+fn start() -> tmfg::coordinator::service::ServiceHandle {
+    serve(ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() }).expect("bind")
+}
+
+#[test]
+fn ping_roundtrip() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    let resp = c.call(&Json::obj(vec![("cmd", Json::str("ping"))])).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true));
+    h.stop();
+}
+
+#[test]
+fn named_dataset_request() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    let req = Json::obj(vec![
+        ("id", Json::Num(42.0)),
+        ("dataset", Json::str("CBF")),
+        ("scale", Json::Num(0.03)),
+        ("seed", Json::Num(1.0)),
+        ("algo", Json::str("heap")),
+    ]);
+    let resp = c.call(&req).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("id").as_usize(), Some(42));
+    assert_eq!(resp.get("algo").as_str(), Some("heap-tdbht"));
+    let labels = resp.get("labels").as_arr().unwrap();
+    // n = max(round(930 * 0.03), generator minimum) — just check sanity
+    let expected_n = tmfg::coordinator::registry::get_dataset("CBF", 0.03, 1).unwrap().n();
+    assert_eq!(labels.len(), expected_n);
+    assert!(resp.get("ari").as_f64().is_some());
+    h.stop();
+}
+
+#[test]
+fn inline_data_request() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    // two clear groups of constant-ish series
+    let n = 8;
+    let l = 16;
+    let mut data = Vec::new();
+    for i in 0..n {
+        for t in 0..l {
+            let base = if i < 4 { (t as f64 / 2.0).sin() } else { (t as f64 / 2.0).cos() };
+            data.push(base + 0.01 * ((i * 31 + t * 7) % 13) as f64);
+        }
+    }
+    let req = Json::obj(vec![
+        ("id", Json::Num(1.0)),
+        ("n", Json::Num(n as f64)),
+        ("l", Json::Num(l as f64)),
+        ("data", Json::arr_f64(&data)),
+        ("k", Json::Num(2.0)),
+    ]);
+    let resp = c.call(&req).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let labels: Vec<usize> = resp
+        .get("labels")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(labels.len(), n);
+    // the two sine/cosine groups must separate
+    assert!(labels[..4].iter().all(|&x| x == labels[0]));
+    assert!(labels[4..].iter().all(|&x| x == labels[4]));
+    assert_ne!(labels[0], labels[4]);
+    h.stop();
+}
+
+#[test]
+fn error_paths() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    // unknown dataset
+    let resp = c
+        .call(&Json::obj(vec![("id", Json::Num(1.0)), ("dataset", Json::str("Nope"))]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    assert!(resp.get("error").as_str().unwrap().contains("unknown dataset"));
+    // inline without k
+    let resp2 = c
+        .call(&Json::obj(vec![
+            ("n", Json::Num(2.0)),
+            ("l", Json::Num(2.0)),
+            ("data", Json::arr_f64(&[1.0, 2.0, 3.0, 4.0])),
+        ]))
+        .unwrap();
+    assert_eq!(resp2.get("ok").as_bool(), Some(false));
+    // malformed json line
+    use std::io::{BufRead, BufReader, Write};
+    let mut raw = std::net::TcpStream::connect(&h.addr).unwrap();
+    writeln!(raw, "this is not json").unwrap();
+    let mut line = String::new();
+    BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+    assert!(line.contains("bad json"));
+    h.stop();
+}
+
+#[test]
+fn concurrent_clients_batching() {
+    let h = start();
+    let addr = h.addr.clone();
+    let joins: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let req = Json::obj(vec![
+                    ("id", Json::Num(i as f64)),
+                    ("dataset", Json::str("SonyAIBORobotSurface2")),
+                    ("scale", Json::Num(0.05)),
+                    ("algo", Json::str("opt")),
+                ]);
+                let resp = c.call(&req).unwrap();
+                assert_eq!(resp.get("ok").as_bool(), Some(true));
+                resp.get("batch").as_usize().unwrap()
+            })
+        })
+        .collect();
+    let batches: Vec<usize> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert!(batches.iter().all(|&b| b >= 1));
+    h.stop();
+}
