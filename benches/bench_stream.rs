@@ -1,0 +1,73 @@
+//! Streaming per-tick update vs full recompute — the tentpole speedup.
+//!
+//! Per tick, the incremental path does an O(n²) rank-2 update of the
+//! Pearson sufficient statistics plus an O(n²) correlation extraction;
+//! the baseline recomputes pearson_correlation on the window contents,
+//! O(n²·L). At L=256 the asymptotic gap is ~L/2; the acceptance bar is
+//! ≥5× at n=500.
+//!
+//!     cargo bench --bench bench_stream
+//! Env: BENCH_REPS, BENCH_WARMUP (see util::bench).
+
+use tmfg::data::corr::pearson_correlation;
+use tmfg::stream::SlidingWindow;
+use tmfg::util::bench::BenchSuite;
+use tmfg::util::rng::Rng;
+
+fn main() {
+    let l: usize = std::env::var("BENCH_WINDOW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let mut suite = BenchSuite::new("bench_stream");
+    let mut speedups = Vec::new();
+    for &n in &[100usize, 500, 1000] {
+        let mut rng = Rng::new(n as u64);
+        let mut sample = vec![0.0f32; n];
+        let mut w = SlidingWindow::new(n, l, 0);
+        for _ in 0..l {
+            for v in sample.iter_mut() {
+                *v = rng.next_gaussian() as f32;
+            }
+            w.push(&sample);
+        }
+
+        let incremental = suite
+            .meta("n", &n.to_string())
+            .meta("window", &l.to_string())
+            .meta("mode", "incremental")
+            .run(&format!("tick/incremental/n{n}"), |_| {
+                for v in sample.iter_mut() {
+                    *v = rng.next_gaussian() as f32;
+                }
+                w.push(&sample);
+                let s = w.corr_matrix();
+                assert_eq!(s.rows, n);
+            })
+            .mean;
+
+        let full = suite
+            .meta("n", &n.to_string())
+            .meta("window", &l.to_string())
+            .meta("mode", "full-recompute")
+            .run(&format!("tick/full-recompute/n{n}"), |_| {
+                for v in sample.iter_mut() {
+                    *v = rng.next_gaussian() as f32;
+                }
+                w.push(&sample);
+                let panel = w.contents();
+                let s = pearson_correlation(&panel);
+                assert_eq!(s.rows, n);
+            })
+            .mean;
+
+        let speedup = full / incremental.max(1e-12);
+        speedups.push((n, speedup));
+        println!("n={n} L={l}: per-tick incremental speedup {speedup:.1}x\n");
+    }
+    println!("== per-tick speedup summary (L={l}, ΔL=1) ==");
+    for (n, s) in &speedups {
+        println!("n={n:5}: {s:.1}x");
+    }
+    suite.write_csv().unwrap();
+}

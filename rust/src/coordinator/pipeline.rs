@@ -10,6 +10,7 @@ use crate::dbht::hierarchy::{dbht_dendrogram, DbhtResult};
 use crate::dbht::Linkage;
 use crate::metrics::adjusted_rand_index;
 use crate::runtime::engine::{CorrEngine, CorrPath};
+use crate::stream::session::{StreamConfig, StreamSession, TickOutput};
 use crate::tmfg::{corr_tmfg, heap_tmfg, orig_tmfg, ScanKind, SortKind, TmfgConfig, TmfgResult};
 use crate::util::timer::{Breakdown, Timer};
 use std::path::PathBuf;
@@ -102,6 +103,27 @@ pub struct PipelineOutput {
     pub corr_path: Option<CorrPath>,
 }
 
+/// Build a TMFG with the given algorithm's standard configuration — the
+/// mapping `Pipeline` uses internally, shared with the streaming
+/// subsystem (which constructs topologies outside a `Pipeline`).
+pub fn build_tmfg_for(algo: TmfgAlgo, s: &Matrix) -> TmfgResult {
+    match algo {
+        TmfgAlgo::Par(p) => orig_tmfg(s, p),
+        TmfgAlgo::Corr => corr_tmfg(s, &TmfgConfig::default()),
+        TmfgAlgo::Heap => heap_tmfg(s, &TmfgConfig::default()),
+        // OPT = HEAP + radix sort (+ approximate APSP via
+        // effective_apsp). The paper's manual-vectorization scan is
+        // kept available as ScanKind::Chunked but measured a net
+        // 0.9–1.0× on this host (the paper itself reports 0.97–1.07×),
+        // so the default follows the perf-pass keep-if-it-helps rule
+        // (EXPERIMENTS.md §Perf iter. 6).
+        TmfgAlgo::Opt => heap_tmfg(
+            s,
+            &TmfgConfig { prefix: 1, scan: ScanKind::Scalar, sort: SortKind::Radix },
+        ),
+    }
+}
+
 pub struct Pipeline {
     pub config: PipelineConfig,
     engine: CorrEngine,
@@ -125,21 +147,7 @@ impl Pipeline {
     }
 
     fn build_tmfg(&self, s: &Matrix) -> TmfgResult {
-        match self.config.algo {
-            TmfgAlgo::Par(p) => orig_tmfg(s, p),
-            TmfgAlgo::Corr => corr_tmfg(s, &TmfgConfig::default()),
-            TmfgAlgo::Heap => heap_tmfg(s, &TmfgConfig::default()),
-            // OPT = HEAP + radix sort (+ approximate APSP via
-            // effective_apsp). The paper's manual-vectorization scan is
-            // kept available as ScanKind::Chunked but measured a net
-            // 0.9–1.0× on this host (the paper itself reports 0.97–1.07×),
-            // so the default follows the perf-pass keep-if-it-helps rule
-            // (EXPERIMENTS.md §Perf iter. 6).
-            TmfgAlgo::Opt => heap_tmfg(
-                s,
-                &TmfgConfig { prefix: 1, scan: ScanKind::Scalar, sort: SortKind::Radix },
-            ),
-        }
+        build_tmfg_for(self.config.algo, s)
     }
 
     /// Run from a raw dataset (computes the similarity matrix first).
@@ -211,6 +219,40 @@ impl Pipeline {
             corr_path: None,
         }
     }
+
+    /// Stream configuration inheriting this pipeline's algorithm,
+    /// linkage, APSP mode, and hub parameters.
+    pub fn stream_config(&self, n: usize, window: usize, k: usize) -> StreamConfig {
+        let mut cfg = StreamConfig::new(n, window, k);
+        cfg.algo = self.config.algo;
+        cfg.linkage = self.config.linkage;
+        cfg.apsp = self.config.apsp;
+        cfg.hub = self.config.hub.clone();
+        cfg
+    }
+
+    /// Streaming entry point: replay an n×T panel column-by-column
+    /// through a [`StreamSession`] — each tick feeds one new observation
+    /// per series, the window correlation updates in O(n²), and the
+    /// session refreshes or rebuilds the topology per its drift policy.
+    /// Returns the session (for stats/history/topology) and the per-tick
+    /// outputs.
+    pub fn run_stream(
+        &self,
+        panel: &Matrix,
+        cfg: StreamConfig,
+    ) -> Result<(StreamSession, Vec<TickOutput>), String> {
+        let mut session = StreamSession::new(cfg)?;
+        let mut outputs = Vec::with_capacity(panel.cols);
+        let mut sample = vec![0.0f32; panel.rows];
+        for t in 0..panel.cols {
+            for (i, v) in sample.iter_mut().enumerate() {
+                *v = panel.at(i, t);
+            }
+            outputs.push(session.tick(&sample)?);
+        }
+        Ok((session, outputs))
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +299,33 @@ mod tests {
         let mut c = cfg(TmfgAlgo::Opt);
         c.apsp = Some(ApspMode::Exact);
         assert_eq!(Pipeline::new(c).effective_apsp(), ApspMode::Exact);
+    }
+
+    #[test]
+    fn run_stream_replays_whole_panel() {
+        let ds = SynthSpec::new("t", 30, 48, 3).generate(5);
+        let p = Pipeline::new(cfg(TmfgAlgo::Heap));
+        let scfg = p.stream_config(ds.n(), 24, 3);
+        let warmup = scfg.warmup;
+        let (session, outs) = p.run_stream(&ds.data, scfg).unwrap();
+        assert_eq!(outs.len(), 48);
+        let warming = outs.iter().filter(|o| o.labels.is_none()).count();
+        assert_eq!(warming, warmup - 1);
+        let st = session.stats();
+        assert_eq!(st.ticks, 48);
+        assert_eq!(st.emissions, 48 - (warmup as u64 - 1));
+        assert_eq!(st.rebuilds + st.refreshes, st.emissions);
+        assert_eq!(session.generation(), st.emissions);
+        // stream config inherits the pipeline's algorithm
+        assert_eq!(session.config.algo, TmfgAlgo::Heap);
+    }
+
+    #[test]
+    fn run_stream_rejects_bad_config() {
+        let ds = SynthSpec::new("t", 3, 16, 1).generate(6);
+        let p = Pipeline::new(cfg(TmfgAlgo::Heap));
+        let scfg = p.stream_config(3, 8, 1); // n < 4
+        assert!(p.run_stream(&ds.data, scfg).is_err());
     }
 
     #[test]

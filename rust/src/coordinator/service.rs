@@ -12,24 +12,44 @@
 //! Response: {"id": 7, "ok": true, "labels": [...], "ari": 0.4,
 //!            "secs": 0.01, "algo": "opt-tdbht", "batch": 3}
 //!
+//! Streaming (one session per connection, state lives in the dispatcher):
+//!   {"cmd": "open_stream", "n": 16, "k": 2, "window": 64, "algo": "opt",
+//!    "drift": 0.1, "warmup": 8, "max_refreshes": 64}
+//!     → {"ok": true, "stream": true, ...}
+//!   {"cmd": "tick", "data": [ ... n floats, one per series ... ]}
+//!     → {"ok": true, "generation": 12, "decision": "refresh"|"rebuild"|
+//!        "warming", "labels": [...], "drift": 0.03, "secs": ..., ...}
+//!       (labels/drift absent while warming; generation increases
+//!        monotonically, stepping on every emitted clustering)
+//!   {"cmd": "close_stream"} → {"ok": true, "closed": true, "ticks": ...,
+//!        "emissions": ..., "rebuilds": ..., "refreshes": ...}
+//!   Sessions are freed automatically when the connection drops.
+//!
 //! Architecture: acceptor threads parse requests into a shared queue; a
 //! single dispatcher drains the queue in small batches (batching window),
 //! runs each batch's similarity computations through one shared engine
 //! (amortizing executable-cache hits), then the graph stages per request
 //! on the parallel pool, and replies. The batch size a request rode in on
-//! is reported so clients/tests can observe batching.
+//! is reported so clients/tests can observe batching. Stream sessions are
+//! owned by the same dispatcher (keyed by connection), so per-tick state
+//! never needs locking and rides the same batching queue.
 
 use super::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
 use super::registry;
 use crate::data::matrix::Matrix;
 use crate::data::synth::Dataset;
+use crate::stream::{StreamConfig, StreamSession};
 use crate::util::json::Json;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Distinguishes connections so the dispatcher can key stream sessions.
+static CONN_SEQ: AtomicU64 = AtomicU64::new(1);
 
 pub struct ServiceConfig {
     pub addr: String,
@@ -54,6 +74,8 @@ impl Default for ServiceConfig {
 struct Job {
     request: Json,
     reply: Sender<String>,
+    /// Originating connection (stream sessions are per-connection).
+    conn: u64,
 }
 
 /// Handle to a running service (for tests and the `serve` example).
@@ -144,10 +166,128 @@ fn process(req: &Json, pipeline: &Pipeline, batch_size: usize) -> Json {
     }
 }
 
+fn error_json(id: Json, msg: &str) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+/// Handle one streaming command against the dispatcher-owned session map.
+fn stream_cmd(
+    req: &Json,
+    cmd: &str,
+    streams: &mut HashMap<u64, StreamSession>,
+    conn: u64,
+    default_algo: TmfgAlgo,
+    batch: usize,
+) -> Json {
+    let id = req.get("id").clone();
+    match cmd {
+        "open_stream" => {
+            let Some(n) = req.get("n").as_usize() else {
+                return error_json(id, "open_stream requires n (number of series)");
+            };
+            let window = req.get("window").as_usize().unwrap_or(64);
+            let k = req.get("k").as_usize().unwrap_or(2);
+            let algo = req
+                .get("algo")
+                .as_str()
+                .and_then(TmfgAlgo::parse)
+                .unwrap_or(default_algo);
+            let mut scfg = StreamConfig::new(n, window, k);
+            scfg.algo = algo;
+            if let Some(d) = req.get("drift").as_f64() {
+                scfg.policy.drift_threshold = d as f32;
+            }
+            if let Some(w) = req.get("warmup").as_usize() {
+                scfg.warmup = w;
+            }
+            if let Some(m) = req.get("max_refreshes").as_usize() {
+                scfg.policy.max_refreshes = m as u32;
+            }
+            match StreamSession::new(scfg) {
+                Ok(session) => {
+                    // replacing an existing session is allowed (re-open)
+                    streams.insert(conn, session);
+                    Json::obj(vec![
+                        ("id", id),
+                        ("ok", Json::Bool(true)),
+                        ("stream", Json::Bool(true)),
+                        ("n", Json::Num(n as f64)),
+                        ("window", Json::Num(window as f64)),
+                        ("k", Json::Num(k as f64)),
+                        ("algo", Json::str(&algo.name())),
+                    ])
+                }
+                Err(e) => error_json(id, &e),
+            }
+        }
+        "tick" => {
+            let Some(session) = streams.get_mut(&conn) else {
+                return error_json(id, "no open stream on this connection");
+            };
+            let Some(arr) = req.get("data").as_arr() else {
+                return error_json(id, "tick requires data (one value per series)");
+            };
+            let sample: Vec<f32> = arr
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+                .collect();
+            match session.tick(&sample) {
+                Ok(out) => {
+                    let mut pairs = vec![
+                        ("id", id),
+                        ("ok", Json::Bool(true)),
+                        ("generation", Json::Num(out.generation as f64)),
+                        ("tick", Json::Num(out.tick as f64)),
+                        ("decision", Json::str(out.decision.name())),
+                        ("secs", Json::Num(out.secs)),
+                        ("batch", Json::Num(batch as f64)),
+                    ];
+                    if let Some(labels) = &out.labels {
+                        pairs.push(("labels", Json::arr_usize(labels)));
+                    }
+                    if let Some(d) = out.drift {
+                        pairs.push(("drift", Json::Num(d.max_abs as f64)));
+                    }
+                    Json::obj(pairs)
+                }
+                Err(e) => error_json(id, &e),
+            }
+        }
+        // close_stream; also issued internally on disconnect (idempotent).
+        _ => match streams.remove(&conn) {
+            Some(session) => {
+                let st = session.stats();
+                Json::obj(vec![
+                    ("id", id),
+                    ("ok", Json::Bool(true)),
+                    ("closed", Json::Bool(true)),
+                    ("ticks", Json::Num(st.ticks as f64)),
+                    ("emissions", Json::Num(st.emissions as f64)),
+                    ("rebuilds", Json::Num(st.rebuilds as f64)),
+                    ("refreshes", Json::Num(st.refreshes as f64)),
+                    ("generation", Json::Num(session.generation() as f64)),
+                ])
+            }
+            None => Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(true)),
+                ("closed", Json::Bool(false)),
+            ]),
+        },
+    }
+}
+
 fn dispatcher(rx: Receiver<Job>, cfg: &ServiceConfig, shutdown: Arc<AtomicBool>) {
     // One pipeline per algo, built lazily; engines (and their compiled
     // XLA executables) are shared across the whole service lifetime.
     let mut pipelines: std::collections::HashMap<String, Pipeline> = Default::default();
+    // Per-connection streaming sessions, owned here so tick state needs
+    // no locking.
+    let mut streams: HashMap<u64, StreamSession> = Default::default();
     loop {
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(j) => j,
@@ -174,6 +314,14 @@ fn dispatcher(rx: Receiver<Job>, cfg: &ServiceConfig, shutdown: Arc<AtomicBool>)
         }
         let bsize = batch.len();
         for job in batch {
+            if let Some(cmd) = job.request.get("cmd").as_str() {
+                if matches!(cmd, "open_stream" | "tick" | "close_stream") {
+                    let resp =
+                        stream_cmd(&job.request, cmd, &mut streams, job.conn, cfg.default_algo, bsize);
+                    let _ = job.reply.send(resp.to_string());
+                    continue;
+                }
+            }
             let algo = job
                 .request
                 .get("algo")
@@ -216,6 +364,7 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
+    let conn = CONN_SEQ.fetch_add(1, Ordering::Relaxed);
     let peer = stream.try_clone();
     let reader = BufReader::new(stream);
     let Ok(mut writer) = peer else { return };
@@ -252,7 +401,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
             _ => {}
         }
         let (rtx, rrx) = channel();
-        if tx.send(Job { request: req, reply: rtx }).is_err() {
+        if tx.send(Job { request: req, reply: rtx, conn }).is_err() {
             break;
         }
         match rrx.recv() {
@@ -264,6 +413,14 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
             Err(_) => break,
         }
     }
+    // Connection gone: free any stream session it owned (idempotent; the
+    // reply channel's receiver is dropped, so the response is discarded).
+    let (rtx, _rrx) = channel();
+    let _ = tx.send(Job {
+        request: Json::obj(vec![("cmd", Json::str("close_stream"))]),
+        reply: rtx,
+        conn,
+    });
 }
 
 /// Minimal blocking client used by tests and the serve example.

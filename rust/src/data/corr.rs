@@ -83,6 +83,46 @@ pub fn pearson_correlation(x: &Matrix) -> Matrix {
     s
 }
 
+/// Two-pass f64 Pearson reference: the row-major n×n correlation matrix
+/// with f64 accumulation end to end (centered rows, then normalized dot
+/// products). The f32 output of [`pearson_correlation`] carries ~1e-5
+/// rounding, which is too coarse to validate the streaming subsystem's
+/// incremental sufficient-statistics path — that property test compares
+/// against this function at 1e-10 instead.
+pub fn pearson_correlation_f64(x: &Matrix) -> Vec<f64> {
+    let (n, l) = (x.rows, x.cols);
+    let centered: Vec<Vec<f64>> = parlay::par_map(n, 1, |i| {
+        let row = x.row(i);
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / l.max(1) as f64;
+        row.iter().map(|&v| v as f64 - mean).collect()
+    });
+    let sqnorms: Vec<f64> = parlay::par_map(n, 8, |i| centered[i].iter().map(|d| d * d).sum());
+    let mut s = vec![0.0f64; n * n];
+    let sp = SendPtr(s.as_mut_ptr());
+    let (cref, nref) = (&centered, &sqnorms);
+    parlay::par_symmetric_rows(n, |i| {
+        for j in i..n {
+            let v = if i == j {
+                1.0
+            } else if nref[i] <= 1e-12 || nref[j] <= 1e-12 {
+                0.0
+            } else {
+                let dot: f64 = cref[i].iter().zip(&cref[j]).map(|(a, b)| a * b).sum();
+                (dot / (nref[i] * nref[j]).sqrt()).clamp(-1.0, 1.0)
+            };
+            // SAFETY: par_symmetric_rows visits each row i exactly once,
+            // so the (i,j≥i)/(j,i) cell pairs are written by one task.
+            unsafe {
+                sp.write(i * n + j, v);
+                if j != i {
+                    sp.write(j * n + i, v);
+                }
+            }
+        }
+    });
+    s
+}
+
 /// The standard correlation→metric transform used throughout the
 /// PMFG/TMFG/DBHT literature: d(i,j) = sqrt(2·(1 − ρ(i,j))) ∈ [0, 2].
 #[inline]
@@ -180,6 +220,31 @@ mod tests {
         let s = pearson_correlation(&x);
         assert!((s.at(0, 1) - 1.0).abs() < 1e-5);
         assert!((s.at(0, 2) + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn f64_reference_matches_f32_path() {
+        let mut r = Rng::new(5);
+        let n = 30;
+        let l = 48;
+        let x = Matrix::from_vec(n, l, (0..n * l).map(|_| r.next_gaussian() as f32).collect());
+        let s32 = pearson_correlation(&x);
+        let s64 = pearson_correlation_f64(&x);
+        for i in 0..n {
+            assert_eq!(s64[i * n + i], 1.0);
+            for j in 0..n {
+                assert!(
+                    (s32.at(i, j) as f64 - s64[i * n + j]).abs() < 1e-4,
+                    "({i},{j}): {} vs {}",
+                    s32.at(i, j),
+                    s64[i * n + j]
+                );
+            }
+        }
+        // constant row convention matches (0 off-diagonal, 1 on)
+        let c = Matrix::from_vec(2, 8, vec![3.0; 8].into_iter().chain((0..8).map(|t| t as f32)).collect());
+        let sc = pearson_correlation_f64(&c);
+        assert_eq!(sc, vec![1.0, 0.0, 0.0, 1.0]);
     }
 
     #[test]

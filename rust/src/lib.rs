@@ -8,7 +8,14 @@
 //! harness — organized as a three-layer system where the dense
 //! similarity-matrix computation is AOT-compiled from JAX/Pallas to an
 //! XLA executable driven from Rust via PJRT, and all graph algorithms run
-//! on a from-scratch parallel-primitives substrate (`parlay`).
+//! on a from-scratch parallel-primitives substrate (`parlay`). On top of
+//! the batch pipeline, the [`stream`] subsystem serves live time-series
+//! traffic with O(n²) per-tick incremental correlation updates and
+//! drift-gated topology reuse.
+//!
+//! The top-level `README.md` documents the three-layer architecture, the
+//! streaming subsystem and its wire protocol, and how to run the
+//! examples, benches, and experiments.
 //!
 //! Quick start:
 //! ```no_run
@@ -28,5 +35,6 @@ pub mod dbht;
 pub mod metrics;
 pub mod parlay;
 pub mod runtime;
+pub mod stream;
 pub mod tmfg;
 pub mod util;

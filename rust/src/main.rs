@@ -6,6 +6,8 @@
 //!               apsp, ablation, all)
 //!   gen         generate a synthetic dataset to CSV
 //!   serve       start the TCP clustering service
+//!   stream      replay a dataset tick-by-tick through the incremental
+//!               streaming session (sliding-window TMFG-DBHT)
 //!   info        print artifact/runtime/pool information
 
 use tmfg::coordinator::experiments::{self, ExpOpts};
@@ -16,7 +18,7 @@ use tmfg::dbht::Linkage;
 use tmfg::parlay;
 use tmfg::util::cli::Args;
 
-const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|info> [flags]
+const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
 
   tmfg run --dataset <name|csv> [--algo par1|par10|par200|corr|heap|opt]
            [--scale 0.1] [--seed N] [--threads N] [--apsp exact|approx]
@@ -26,6 +28,8 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|info> [flags]
            [--out-dir results]
   tmfg gen --dataset <name> --out <file.csv> [--scale 0.1] [--seed N]
   tmfg serve [--addr 127.0.0.1:7401] [--algo opt] [--max-batch 8]
+  tmfg stream --dataset <name|csv> [--window 64] [--k N] [--algo opt]
+           [--drift 0.1] [--scale 0.1] [--seed N] [--threads N]
   tmfg info
 ";
 
@@ -37,12 +41,12 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let cmd = args.positional.first().cloned().unwrap_or_default();
-    match cmd.as_str() {
+    match args.subcommand().unwrap_or_default() {
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
         "gen" => cmd_gen(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!("{USAGE}");
@@ -171,6 +175,63 @@ fn cmd_serve(args: &Args) {
     println!("protocol: one JSON request per line; see coordinator/service.rs");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_stream(args: &Args) {
+    let name = args.get_str("dataset", "demo");
+    let scale = args.get_f64("scale", 0.1);
+    let seed = args.get_u64("seed", registry::DEFAULT_SEED);
+    if let Some(t) = args.opt_str("threads") {
+        parlay::set_num_threads(t.parse().unwrap_or(1));
+    }
+    let ds = registry::get_dataset(&name, scale, seed).unwrap_or_else(|| {
+        eprintln!("unknown dataset {name}");
+        std::process::exit(2);
+    });
+    let window = args.get_usize("window", 64);
+    let k = args.get_usize("k", ds.n_classes);
+    // The streaming path recomputes similarity incrementally itself; the
+    // XLA batch engine never runs, so skip its initialization.
+    let cfg = PipelineConfig { algo: parse_algo(args), use_xla: false, ..Default::default() };
+    let pipeline = Pipeline::new(cfg);
+    let mut scfg = pipeline.stream_config(ds.n(), window, k);
+    scfg.policy.drift_threshold =
+        args.get_f64("drift", scfg.policy.drift_threshold as f64) as f32;
+    println!(
+        "streaming {} (n={}, {} ticks), window {}, k {}, algo {}, drift threshold {:.3}, {} threads",
+        ds.name,
+        ds.n(),
+        ds.len(),
+        window,
+        k,
+        pipeline.config.algo.name(),
+        scfg.policy.drift_threshold,
+        parlay::num_threads()
+    );
+    let (session, outputs) = pipeline.run_stream(&ds.data, scfg).unwrap_or_else(|e| {
+        eprintln!("stream failed: {e}");
+        std::process::exit(2);
+    });
+    let st = session.stats();
+    println!(
+        "ticks {}  emissions {}  rebuilds {}  refreshes {}  (final generation {})",
+        st.ticks,
+        st.emissions,
+        st.rebuilds,
+        st.refreshes,
+        session.generation()
+    );
+    let emitted: Vec<f64> =
+        outputs.iter().filter(|o| o.labels.is_some()).map(|o| o.secs).collect();
+    if !emitted.is_empty() {
+        let mean = emitted.iter().sum::<f64>() / emitted.len() as f64;
+        let max = emitted.iter().cloned().fold(0.0f64, f64::max);
+        println!("per-tick latency (emitting ticks): mean {mean:.5}s  max {max:.5}s");
+    }
+    if let Some(last) = outputs.iter().rev().find_map(|o| o.labels.as_ref()) {
+        let ari = tmfg::metrics::adjusted_rand_index(&ds.labels, last);
+        println!("final clustering ARI vs ground truth @ k={k}: {ari:.4}");
     }
 }
 

@@ -19,6 +19,23 @@ pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, grain: usize, f: F) 
     out
 }
 
+/// Triangle-balanced parallel iteration over the rows of an n×n symmetric
+/// matrix: `f(i)` runs exactly once for every `i in 0..n`, with task h
+/// covering rows h and n−1−h so long (early) and short (late)
+/// upper-triangle rows pair up for load balance. Because each row is
+/// visited exactly once, a body that writes cells (i, j≥i) — plus their
+/// (j, i) mirrors — touches disjoint memory across calls, which is the
+/// safety contract the `SendPtr` users of this helper rely on.
+pub fn par_symmetric_rows<F: Fn(usize) + Sync>(n: usize, f: F) {
+    super::pool::parallel_for(n.div_ceil(2), 1, |half| {
+        f(half);
+        let hi = n - 1 - half;
+        if hi != half {
+            f(hi);
+        }
+    });
+}
+
 /// Parallel reduce with an associative combiner. `id` must be the identity.
 pub fn par_reduce<T, F, G>(n: usize, grain: usize, id: T, f: F, combine: G) -> T
 where
@@ -182,6 +199,21 @@ mod tests {
         let v = par_map(10_000, 64, |i| i * 2);
         assert_eq!(v.len(), 10_000);
         assert!(v.iter().enumerate().all(|(i, &x)| x == i * 2));
+    }
+
+    #[test]
+    fn symmetric_rows_visit_each_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for n in [0usize, 1, 2, 7, 8, 101] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_symmetric_rows(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n}"
+            );
+        }
     }
 
     #[test]

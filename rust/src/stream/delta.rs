@@ -1,0 +1,127 @@
+//! Change detection between the correlation matrix backing the current
+//! TMFG topology and the freshly updated one.
+//!
+//! After each tick the session diffs the new window correlation against
+//! the matrix the standing TMFG was built from and picks between two
+//! paths: *refresh* (keep the filtered-graph topology; re-derive edge
+//! weights, APSP distances, and dendrogram heights from the new matrix)
+//! and *rebuild* (full TMFG reconstruction). Refresh skips the most
+//! expensive stages (initial sort + vertex insertion) and is correct as
+//! long as the correlation ordering has not moved enough to change which
+//! edges the TMFG would keep — the drift threshold is the knob trading
+//! that staleness against per-tick cost, and `max_refreshes` bounds how
+//! long a topology may persist under slow drift that never trips the
+//! threshold.
+
+use crate::data::matrix::Matrix;
+use crate::parlay;
+
+/// Elementwise drift summary between two same-shape matrices.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Drift {
+    pub max_abs: f32,
+    pub mean_abs: f32,
+}
+
+/// Parallel elementwise |old − new| reduction (max and mean).
+pub fn corr_drift(old: &Matrix, new: &Matrix) -> Drift {
+    assert_eq!(
+        (old.rows, old.cols),
+        (new.rows, new.cols),
+        "drift requires same-shape matrices"
+    );
+    let m = old.data.len();
+    if m == 0 {
+        return Drift::default();
+    }
+    let (oa, na) = (&old.data, &new.data);
+    let (sum, max) = parlay::par_reduce(
+        m,
+        4096,
+        (0.0f64, 0.0f64),
+        |i| {
+            let d = (oa[i] - na[i]).abs() as f64;
+            (d, d)
+        },
+        |a, b| (a.0 + b.0, a.1.max(b.1)),
+    );
+    Drift { max_abs: max as f32, mean_abs: (sum / m as f64) as f32 }
+}
+
+/// When to abandon the standing topology.
+#[derive(Debug, Clone, Copy)]
+pub struct DeltaPolicy {
+    /// Rebuild when any correlation entry moved more than this since the
+    /// matrix the current TMFG was built from.
+    pub drift_threshold: f32,
+    /// Rebuild after this many consecutive refreshes regardless of drift
+    /// (0 = unlimited), so slow sub-threshold drift cannot keep a stale
+    /// topology alive forever.
+    pub max_refreshes: u32,
+}
+
+impl Default for DeltaPolicy {
+    fn default() -> Self {
+        DeltaPolicy { drift_threshold: 0.1, max_refreshes: 64 }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep the TMFG topology; re-derive weights/APSP/dendrogram heights.
+    Refresh,
+    /// Rebuild the TMFG from the current correlation matrix.
+    Rebuild,
+}
+
+impl DeltaPolicy {
+    pub fn decide(&self, drift: Drift, refreshes_since_rebuild: u32) -> Decision {
+        if drift.max_abs > self.drift_threshold {
+            return Decision::Rebuild;
+        }
+        if self.max_refreshes > 0 && refreshes_since_rebuild >= self.max_refreshes {
+            return Decision::Rebuild;
+        }
+        Decision::Refresh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_max_and_mean() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 0.5, 0.5, 1.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 0.1, 0.9, 1.0]);
+        let d = corr_drift(&a, &b);
+        assert!((d.max_abs - 0.4).abs() < 1e-6);
+        assert!((d.mean_abs - 0.2).abs() < 1e-6);
+        let z = corr_drift(&a, &a);
+        assert_eq!(z.max_abs, 0.0);
+        assert_eq!(z.mean_abs, 0.0);
+    }
+
+    #[test]
+    fn policy_thresholds() {
+        let p = DeltaPolicy { drift_threshold: 0.25, max_refreshes: 3 };
+        let small = Drift { max_abs: 0.2, mean_abs: 0.01 };
+        let big = Drift { max_abs: 0.3, mean_abs: 0.01 };
+        assert_eq!(p.decide(small, 0), Decision::Refresh);
+        assert_eq!(p.decide(big, 0), Decision::Rebuild);
+        // refresh budget exhaustion
+        assert_eq!(p.decide(small, 2), Decision::Refresh);
+        assert_eq!(p.decide(small, 3), Decision::Rebuild);
+        // unlimited refreshes when max_refreshes = 0
+        let p0 = DeltaPolicy { drift_threshold: 0.25, max_refreshes: 0 };
+        assert_eq!(p0.decide(small, 1_000_000), Decision::Refresh);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(3, 3);
+        corr_drift(&a, &b);
+    }
+}

@@ -1,0 +1,31 @@
+//! Streaming clustering subsystem: sliding-window incremental TMFG-DBHT.
+//!
+//! The batch pipeline (`coordinator::pipeline`) recomputes everything
+//! from scratch per request — O(n²·L) correlation plus full TMFG / APSP /
+//! DBHT. For live time-series traffic, where each tick shifts a sliding
+//! window by one sample, this subsystem instead:
+//!
+//! 1. [`window`] — maintains per-series ring buffers with running sums
+//!    Σxᵢ and the cross-product matrix Σxᵢxⱼ, updating the full n×n
+//!    Pearson matrix in O(n²) per tick;
+//! 2. [`delta`] — diffs the new matrix against the one backing the
+//!    standing TMFG and chooses between *refresh* (keep topology,
+//!    re-derive edge weights + dendrogram heights) and *rebuild*;
+//! 3. [`session`] — a `StreamSession` state machine (ingest →
+//!    maybe-rebuild → emit labeled clustering + generation counter) with
+//!    bounded snapshot history.
+//!
+//! Entry points: [`StreamSession`] in-process,
+//! [`crate::coordinator::pipeline::Pipeline::run_stream`] for replaying a
+//! panel, the `open_stream`/`tick`/`close_stream` wire commands of
+//! `coordinator::service`, and the `tmfg stream` CLI subcommand.
+
+pub mod delta;
+pub mod session;
+pub mod window;
+
+pub use delta::{corr_drift, Decision, DeltaPolicy, Drift};
+pub use session::{
+    Snapshot, StreamConfig, StreamSession, StreamStats, TickDecision, TickOutput,
+};
+pub use window::SlidingWindow;

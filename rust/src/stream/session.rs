@@ -1,0 +1,459 @@
+//! The streaming state machine: ingest → maybe-rebuild → emit.
+//!
+//! A [`StreamSession`] owns a [`SlidingWindow`] of per-series sufficient
+//! statistics plus the TMFG topology (and the correlation matrix it was
+//! built from). Each `tick` pushes one observation per series, updates
+//! the Pearson matrix in O(n²), and — once the window is warm — either
+//! *refreshes* the standing topology (new edge weights → APSP → DBHT
+//! dendrogram heights) or *rebuilds* it from scratch, per the
+//! [`DeltaPolicy`]. Every emission carries a monotonically increasing
+//! generation counter; a bounded snapshot history keeps recent labelings
+//! for clients that poll.
+
+use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
+use crate::coordinator::pipeline::{build_tmfg_for, ApspMode, TmfgAlgo};
+use crate::data::matrix::Matrix;
+use crate::dbht::hierarchy::dbht_dendrogram;
+use crate::dbht::Linkage;
+use crate::stream::delta::{corr_drift, Decision, DeltaPolicy, Drift};
+use crate::stream::window::SlidingWindow;
+use crate::tmfg::TmfgResult;
+use crate::util::timer::Timer;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Number of series (TMFG needs ≥ 4).
+    pub n: usize,
+    /// Sliding-window length L (samples per series).
+    pub window: usize,
+    /// Clusters to cut the dendrogram into on each emission.
+    pub k: usize,
+    pub algo: TmfgAlgo,
+    pub linkage: Linkage,
+    /// None = algorithm default (Opt → approx, everything else → exact),
+    /// mirroring `PipelineConfig`.
+    pub apsp: Option<ApspMode>,
+    pub hub: HubConfig,
+    pub policy: DeltaPolicy,
+    /// Minimum samples in the window before clusterings are emitted
+    /// (clamped to [2, window]).
+    pub warmup: usize,
+    /// Exact sufficient-statistics rebuild period in ticks (0 = never);
+    /// bounds floating-point drift on unbounded streams.
+    pub refresh_stats_every: u64,
+    /// Number of past emissions kept in the snapshot history.
+    pub history: usize,
+}
+
+impl StreamConfig {
+    pub fn new(n: usize, window: usize, k: usize) -> StreamConfig {
+        StreamConfig {
+            n,
+            window,
+            k,
+            algo: TmfgAlgo::Opt,
+            linkage: Linkage::Complete,
+            apsp: None,
+            hub: HubConfig::default(),
+            policy: DeltaPolicy::default(),
+            warmup: 8,
+            refresh_stats_every: 4096,
+            history: 16,
+        }
+    }
+}
+
+/// What a tick did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TickDecision {
+    /// Window not warm yet — no clustering emitted.
+    Warming,
+    /// Full TMFG reconstruction from the new correlation matrix.
+    Rebuilt,
+    /// Topology kept; weights + APSP + dendrogram heights re-derived.
+    Refreshed,
+}
+
+impl TickDecision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TickDecision::Warming => "warming",
+            TickDecision::Rebuilt => "rebuild",
+            TickDecision::Refreshed => "refresh",
+        }
+    }
+}
+
+/// Per-tick result. `labels`/`drift` are None while warming (and `drift`
+/// also on the very first emission, which has no standing topology to
+/// diff against).
+#[derive(Debug, Clone)]
+pub struct TickOutput {
+    pub tick: u64,
+    pub generation: u64,
+    pub decision: TickDecision,
+    pub labels: Option<Vec<usize>>,
+    pub drift: Option<Drift>,
+    pub secs: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub ticks: u64,
+    pub emissions: u64,
+    pub rebuilds: u64,
+    pub refreshes: u64,
+}
+
+/// One retained emission.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub tick: u64,
+    pub generation: u64,
+    pub decision: TickDecision,
+    pub labels: Vec<usize>,
+}
+
+pub struct StreamSession {
+    pub config: StreamConfig,
+    window: SlidingWindow,
+    tmfg: Option<TmfgResult>,
+    /// Correlation matrix backing the current TMFG topology (drift is
+    /// measured against this, not against the previous tick).
+    tmfg_corr: Option<Matrix>,
+    generation: u64,
+    refreshes_since_rebuild: u32,
+    stats: StreamStats,
+    history: VecDeque<Snapshot>,
+}
+
+impl StreamSession {
+    pub fn new(config: StreamConfig) -> Result<StreamSession, String> {
+        if config.n < 4 {
+            return Err(format!("streaming needs n >= 4 series for TMFG, got {}", config.n));
+        }
+        if config.window < 2 {
+            return Err("window must hold at least 2 samples".into());
+        }
+        if config.k < 1 || config.k > config.n {
+            return Err(format!("k must be in 1..={}, got {}", config.n, config.k));
+        }
+        let window = SlidingWindow::new(config.n, config.window, config.refresh_stats_every);
+        Ok(StreamSession {
+            window,
+            tmfg: None,
+            tmfg_corr: None,
+            generation: 0,
+            refreshes_since_rebuild: 0,
+            stats: StreamStats::default(),
+            history: VecDeque::new(),
+            config,
+        })
+    }
+
+    fn warmup(&self) -> usize {
+        self.config.warmup.clamp(2, self.config.window)
+    }
+
+    fn effective_apsp(&self) -> ApspMode {
+        self.config.apsp.unwrap_or(match self.config.algo {
+            TmfgAlgo::Opt => ApspMode::Approx,
+            _ => ApspMode::Exact,
+        })
+    }
+
+    /// Generation of the latest emission (0 until the first one).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
+    }
+
+    /// Recent emissions, oldest first (bounded by `config.history`).
+    pub fn history(&self) -> &VecDeque<Snapshot> {
+        &self.history
+    }
+
+    pub fn window(&self) -> &SlidingWindow {
+        &self.window
+    }
+
+    /// The standing TMFG topology, if one has been built.
+    pub fn topology(&self) -> Option<&TmfgResult> {
+        self.tmfg.as_ref()
+    }
+
+    /// Ingest one observation per series; returns what happened.
+    pub fn tick(&mut self, sample: &[f32]) -> Result<TickOutput, String> {
+        if sample.len() != self.config.n {
+            return Err(format!(
+                "sample length {} != n = {}",
+                sample.len(),
+                self.config.n
+            ));
+        }
+        // A single NaN/inf would poison the incremental cross-products —
+        // and keep poisoning them after eviction (NaN − NaN = NaN) until
+        // the next exact stats rebuild — so reject it before it enters.
+        if let Some(pos) = sample.iter().position(|v| !v.is_finite()) {
+            return Err(format!(
+                "non-finite sample value {} for series {pos}",
+                sample[pos]
+            ));
+        }
+        let t = Timer::start();
+        self.window.push(sample);
+        self.stats.ticks += 1;
+        let tick = self.stats.ticks;
+        if self.window.len() < self.warmup() {
+            return Ok(TickOutput {
+                tick,
+                generation: self.generation,
+                decision: TickDecision::Warming,
+                labels: None,
+                drift: None,
+                secs: t.elapsed(),
+            });
+        }
+        let s = self.window.corr_matrix();
+        let (decision, drift) = match (&self.tmfg, &self.tmfg_corr) {
+            (Some(_), Some(backing)) => {
+                let d = corr_drift(backing, &s);
+                let dec = match self.config.policy.decide(d, self.refreshes_since_rebuild) {
+                    Decision::Rebuild => TickDecision::Rebuilt,
+                    Decision::Refresh => TickDecision::Refreshed,
+                };
+                (dec, Some(d))
+            }
+            _ => (TickDecision::Rebuilt, None),
+        };
+        let labels = match decision {
+            TickDecision::Rebuilt => self.rebuild(s),
+            TickDecision::Refreshed => self.refresh(&s),
+            TickDecision::Warming => unreachable!("warming handled above"),
+        };
+        self.generation += 1;
+        self.stats.emissions += 1;
+        if self.config.history > 0 {
+            if self.history.len() == self.config.history {
+                self.history.pop_front();
+            }
+            self.history.push_back(Snapshot {
+                tick,
+                generation: self.generation,
+                decision,
+                labels: labels.clone(),
+            });
+        }
+        Ok(TickOutput {
+            tick,
+            generation: self.generation,
+            decision,
+            labels: Some(labels),
+            drift,
+            secs: t.elapsed(),
+        })
+    }
+
+    fn rebuild(&mut self, s: Matrix) -> Vec<usize> {
+        let tmfg = build_tmfg_for(self.config.algo, &s);
+        let labels = self.cluster(&tmfg, &s);
+        self.tmfg = Some(tmfg);
+        self.tmfg_corr = Some(s);
+        self.refreshes_since_rebuild = 0;
+        self.stats.rebuilds += 1;
+        labels
+    }
+
+    fn refresh(&mut self, s: &Matrix) -> Vec<usize> {
+        let labels = {
+            let tmfg = self.tmfg.as_ref().expect("refresh without a standing topology");
+            self.cluster(tmfg, s)
+        };
+        self.refreshes_since_rebuild += 1;
+        self.stats.refreshes += 1;
+        labels
+    }
+
+    /// The downstream stages shared by both paths: edge weights from the
+    /// current matrix → APSP → DBHT dendrogram → cut at k.
+    fn cluster(&self, tmfg: &TmfgResult, s: &Matrix) -> Vec<usize> {
+        let g = CsrGraph::from_tmfg(tmfg, s);
+        let apsp = match self.effective_apsp() {
+            ApspMode::Exact => apsp_exact(&g),
+            ApspMode::Approx => apsp_hub(&g, &self.config.hub),
+        };
+        let dbht = dbht_dendrogram(s, tmfg, &apsp, self.config.linkage);
+        dbht.dendrogram.cut(self.config.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(n: usize, window: usize, k: usize) -> StreamConfig {
+        let mut c = StreamConfig::new(n, window, k);
+        c.algo = TmfgAlgo::Heap; // exact APSP, deterministic
+        c.warmup = 4;
+        c
+    }
+
+    fn gaussian_sample(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(StreamSession::new(StreamConfig::new(3, 8, 1)).is_err());
+        assert!(StreamSession::new(StreamConfig::new(8, 1, 1)).is_err());
+        assert!(StreamSession::new(StreamConfig::new(8, 8, 0)).is_err());
+        assert!(StreamSession::new(StreamConfig::new(8, 8, 9)).is_err());
+        assert!(StreamSession::new(StreamConfig::new(8, 8, 3)).is_ok());
+    }
+
+    #[test]
+    fn warms_then_emits_with_monotone_generations() {
+        let mut s = StreamSession::new(cfg(8, 16, 2)).unwrap();
+        let mut rng = Rng::new(1);
+        let mut last_gen = 0u64;
+        for t in 1..=20u64 {
+            let out = s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
+            assert_eq!(out.tick, t);
+            if t < 4 {
+                assert_eq!(out.decision, TickDecision::Warming);
+                assert!(out.labels.is_none());
+                assert_eq!(out.generation, 0);
+            } else {
+                let labels = out.labels.expect("warm tick must emit");
+                assert_eq!(labels.len(), 8);
+                assert_eq!(out.generation, last_gen + 1, "generation must step by 1");
+            }
+            assert!(out.generation >= last_gen);
+            last_gen = out.generation;
+        }
+        assert_eq!(s.generation(), 17);
+        let st = s.stats();
+        assert_eq!(st.ticks, 20);
+        assert_eq!(st.emissions, 17);
+        assert_eq!(st.rebuilds + st.refreshes, 17);
+        assert!(st.rebuilds >= 1);
+    }
+
+    #[test]
+    fn first_emission_rebuilds_without_drift() {
+        let mut s = StreamSession::new(cfg(8, 16, 2)).unwrap();
+        let mut rng = Rng::new(2);
+        let mut first = None;
+        for _ in 0..6 {
+            let out = s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
+            if out.labels.is_some() && first.is_none() {
+                first = Some(out);
+            }
+        }
+        let first = first.unwrap();
+        assert_eq!(first.decision, TickDecision::Rebuilt);
+        assert!(first.drift.is_none());
+    }
+
+    #[test]
+    fn max_refreshes_forces_rebuild_cadence() {
+        let mut c = cfg(8, 16, 2);
+        // threshold 10 can never trip (|Δρ| ≤ 2), so only the refresh
+        // budget drives rebuilds: R, r, r, r, R, r, r, r, ...
+        c.policy = DeltaPolicy { drift_threshold: 10.0, max_refreshes: 3 };
+        let mut s = StreamSession::new(c).unwrap();
+        let mut rng = Rng::new(3);
+        let mut decisions = Vec::new();
+        for _ in 0..20 {
+            let out = s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
+            if out.labels.is_some() {
+                decisions.push(out.decision);
+            }
+        }
+        for (i, d) in decisions.iter().enumerate() {
+            let expect = if i % 4 == 0 { TickDecision::Rebuilt } else { TickDecision::Refreshed };
+            assert_eq!(*d, expect, "emission {i}");
+        }
+    }
+
+    #[test]
+    fn zero_threshold_always_rebuilds() {
+        let mut c = cfg(8, 12, 2);
+        c.policy = DeltaPolicy { drift_threshold: -1.0, max_refreshes: 0 };
+        let mut s = StreamSession::new(c).unwrap();
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            let out = s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
+            if out.labels.is_some() {
+                assert_eq!(out.decision, TickDecision::Rebuilt);
+            }
+        }
+        assert_eq!(s.stats().refreshes, 0);
+    }
+
+    #[test]
+    fn history_is_bounded_and_ordered() {
+        let mut c = cfg(8, 16, 2);
+        c.history = 3;
+        let mut s = StreamSession::new(c).unwrap();
+        let mut rng = Rng::new(5);
+        for _ in 0..12 {
+            s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
+        }
+        let h = s.history();
+        assert_eq!(h.len(), 3);
+        let gens: Vec<u64> = h.iter().map(|x| x.generation).collect();
+        assert_eq!(gens, vec![s.generation() - 2, s.generation() - 1, s.generation()]);
+    }
+
+    #[test]
+    fn wrong_length_sample_is_an_error() {
+        let mut s = StreamSession::new(cfg(8, 16, 2)).unwrap();
+        assert!(s.tick(&[1.0; 5]).is_err());
+        // session still usable afterwards
+        let mut rng = Rng::new(6);
+        assert!(s.tick(&gaussian_sample(&mut rng, 8)).is_ok());
+    }
+
+    #[test]
+    fn non_finite_samples_are_rejected_and_do_not_poison_stats() {
+        let mut s = StreamSession::new(cfg(8, 16, 2)).unwrap();
+        let mut rng = Rng::new(16);
+        for _ in 0..6 {
+            s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
+        }
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut sample = gaussian_sample(&mut rng, 8);
+            sample[3] = bad;
+            let err = s.tick(&sample).unwrap_err();
+            assert!(err.contains("non-finite"), "{err}");
+            assert!(err.contains("series 3"), "{err}");
+        }
+        // the rejected ticks never entered the window or the stats
+        assert_eq!(s.stats().ticks, 6);
+        let out = s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
+        let labels = out.labels.unwrap();
+        assert!(labels.len() == 8);
+        for row in s.window().corr_f64() {
+            assert!(row.is_finite());
+        }
+    }
+
+    #[test]
+    fn cut_always_yields_k_clusters() {
+        let mut s = StreamSession::new(cfg(12, 16, 4)).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let out = s.tick(&gaussian_sample(&mut rng, 12)).unwrap();
+            if let Some(labels) = out.labels {
+                let uniq: std::collections::HashSet<_> = labels.iter().collect();
+                assert_eq!(uniq.len(), 4);
+            }
+        }
+    }
+}

@@ -1,0 +1,373 @@
+//! Sliding-window sufficient statistics for streaming Pearson correlation.
+//!
+//! Holds the last `cap` observations of `n` series in a ring buffer
+//! together with the running sums Σxᵢ and the full n×n cross-product
+//! matrix Σxᵢxⱼ. Appending one tick (and evicting the oldest sample once
+//! the window is full) is a rank-2 update of the statistics costing
+//! O(n²), versus the O(n²·L) full recompute in [`crate::data::corr`] —
+//! the asymptotic win the streaming subsystem is built on. The update is
+//! parallelized over the `parlay` pool with the same triangle-balanced
+//! row pairing as `pearson_correlation`.
+//!
+//! All accumulators are f64, so the incremental correlations match a
+//! two-pass f64 recompute ([`crate::data::corr::pearson_correlation_f64`])
+//! to ~1e-12 over hundreds of ticks; an optional periodic exact rebuild
+//! (`refresh_every`) bounds the drift on unbounded streams.
+
+use crate::data::matrix::Matrix;
+use crate::parlay::{self, SendPtr};
+
+/// Zero-variance guard on the centered second moment (Σx² − (Σx)²/L);
+/// below this a series is treated as constant and its correlations are
+/// defined as 0, matching `data::corr::standardize_rows`.
+const VAR_EPS: f64 = 1e-12;
+
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    n: usize,
+    cap: usize,
+    len: usize,
+    /// Slot holding the oldest sample (== the next write position once
+    /// the window is full).
+    head: usize,
+    /// Ring storage, slot-major: `buf[slot * n + i]` = series `i` at slot.
+    buf: Vec<f32>,
+    /// Per-series running sum Σxᵢ over the window.
+    sum: Vec<f64>,
+    /// Row-major n×n cross-product matrix Σxᵢxⱼ over the window.
+    cross: Vec<f64>,
+    ticks: u64,
+    /// Rebuild the statistics exactly from the ring every this many ticks
+    /// (0 = never).
+    refresh_every: u64,
+}
+
+impl SlidingWindow {
+    /// A window over `n` series holding up to `cap` samples each.
+    pub fn new(n: usize, cap: usize, refresh_every: u64) -> SlidingWindow {
+        assert!(n > 0 && cap > 0, "window needs n > 0 and cap > 0");
+        SlidingWindow {
+            n,
+            cap,
+            len: 0,
+            head: 0,
+            buf: vec![0.0; n * cap],
+            sum: vec![0.0; n],
+            cross: vec![0.0; n * n],
+            ticks: 0,
+            refresh_every,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Samples currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    /// Total ticks pushed over the window's lifetime.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    #[inline]
+    fn slot_at(&self, s: usize) -> usize {
+        (self.head + s) % self.cap
+    }
+
+    /// Append one observation per series, evicting the oldest sample when
+    /// full. O(n²) parallel rank-2 update of the sufficient statistics.
+    ///
+    /// Values must be finite: a NaN/inf corrupts the running statistics
+    /// beyond its own eviction (NaN − NaN = NaN) until the next exact
+    /// rebuild. `StreamSession::tick` validates this; callers using the
+    /// window directly must do the same (or call `rebuild_stats`).
+    pub fn push(&mut self, sample: &[f32]) {
+        assert_eq!(sample.len(), self.n, "sample length != n");
+        let n = self.n;
+        let slot = (self.head + self.len) % self.cap;
+        // Copy the evicted column before overwriting its slot.
+        let evicted: Option<Vec<f64>> = if self.len == self.cap {
+            Some(self.buf[slot * n..(slot + 1) * n].iter().map(|&v| v as f64).collect())
+        } else {
+            None
+        };
+        let fresh: Vec<f64> = sample.iter().map(|&v| v as f64).collect();
+        self.buf[slot * n..(slot + 1) * n].copy_from_slice(sample);
+        {
+            let cp = SendPtr(self.cross.as_mut_ptr());
+            let sp = SendPtr(self.sum.as_mut_ptr());
+            let old = evicted.as_deref();
+            let new = &fresh;
+            parlay::par_symmetric_rows(n, |i| {
+                let di = new[i] - old.map_or(0.0, |o| o[i]);
+                // SAFETY: par_symmetric_rows visits each row i exactly
+                // once, so sum[i] and the (i,j≥i)/(j,i) cell pairs below
+                // are written by a single task.
+                unsafe { sp.write(i, sp.read(i) + di) };
+                for j in i..n {
+                    let delta = new[i] * new[j] - old.map_or(0.0, |o| o[i] * o[j]);
+                    let a = i * n + j;
+                    unsafe { cp.write(a, cp.read(a) + delta) };
+                    if j != i {
+                        let b = j * n + i;
+                        unsafe { cp.write(b, cp.read(b) + delta) };
+                    }
+                }
+            });
+        }
+        if evicted.is_some() {
+            self.head = (self.head + 1) % self.cap;
+        } else {
+            self.len += 1;
+        }
+        self.ticks += 1;
+        if self.refresh_every > 0 && self.ticks % self.refresh_every == 0 {
+            self.rebuild_stats();
+        }
+    }
+
+    /// Recompute Σxᵢ and Σxᵢxⱼ exactly from the ring contents (O(n²·L)),
+    /// discarding any accumulated floating-point drift.
+    pub fn rebuild_stats(&mut self) {
+        let n = self.n;
+        let len = self.len;
+        let slots: Vec<usize> = (0..len).map(|s| self.slot_at(s)).collect();
+        let buf = &self.buf;
+        self.sum = parlay::par_map(n, 8, |i| {
+            let mut acc = 0.0f64;
+            for &sl in &slots {
+                acc += buf[sl * n + i] as f64;
+            }
+            acc
+        });
+        let cp = SendPtr(self.cross.as_mut_ptr());
+        parlay::par_symmetric_rows(n, |i| {
+            for j in i..n {
+                let mut acc = 0.0f64;
+                for &sl in &slots {
+                    acc += buf[sl * n + i] as f64 * buf[sl * n + j] as f64;
+                }
+                // SAFETY: par_symmetric_rows visits each row once; the
+                // (i,j≥i)/(j,i) cell pairs belong to row i's task alone.
+                unsafe {
+                    cp.write(i * n + j, acc);
+                    if j != i {
+                        cp.write(j * n + i, acc);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Window contents as an n×len panel, columns ordered oldest→newest
+    /// (the input a full recompute would consume).
+    pub fn contents(&self) -> Matrix {
+        let n = self.n;
+        let len = self.len;
+        let mut m = Matrix::zeros(n, len);
+        if len == 0 {
+            return m;
+        }
+        let mp = SendPtr(m.data.as_mut_ptr());
+        parlay::parallel_for(n, 8, |i| {
+            for s in 0..len {
+                // SAFETY: row i written only by iteration i.
+                unsafe { mp.write(i * len + s, self.buf[self.slot_at(s) * n + i]) };
+            }
+        });
+        m
+    }
+
+    /// Pearson correlation from the sufficient statistics, in f64:
+    /// ρᵢⱼ = cᵢⱼ / √(cᵢᵢ·cⱼⱼ) with cᵢⱼ = Σxᵢxⱼ − ΣxᵢΣxⱼ/L. Rows with
+    /// ~zero variance correlate 0 with everything; the diagonal is 1.
+    pub fn corr_f64(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut out = vec![0.0f64; n * n];
+        if self.len < 2 {
+            for i in 0..n {
+                out[i * n + i] = 1.0;
+            }
+            return out;
+        }
+        let l = self.len as f64;
+        let var: Vec<f64> = (0..n)
+            .map(|i| self.cross[i * n + i] - self.sum[i] * self.sum[i] / l)
+            .collect();
+        let op = SendPtr(out.as_mut_ptr());
+        let (cross, sum, varr) = (&self.cross, &self.sum, &var);
+        parlay::par_symmetric_rows(n, |i| {
+            for j in i..n {
+                let v = if i == j {
+                    1.0
+                } else if varr[i] <= VAR_EPS || varr[j] <= VAR_EPS {
+                    0.0
+                } else {
+                    let c = cross[i * n + j] - sum[i] * sum[j] / l;
+                    (c / (varr[i] * varr[j]).sqrt()).clamp(-1.0, 1.0)
+                };
+                // SAFETY: par_symmetric_rows visits each row once; the
+                // (i,j≥i)/(j,i) cell pairs belong to row i's task alone.
+                unsafe {
+                    op.write(i * n + j, v);
+                    if j != i {
+                        op.write(j * n + i, v);
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// f32 correlation matrix (the pipeline input shape).
+    pub fn corr_matrix(&self) -> Matrix {
+        let c = self.corr_f64();
+        let n = self.n;
+        let mut m = Matrix::zeros(n, n);
+        let mp = SendPtr(m.data.as_mut_ptr());
+        parlay::parallel_for_chunks(n * n, 4096, |a, b| {
+            for idx in a..b {
+                // SAFETY: disjoint chunks.
+                unsafe { mp.write(idx, c[idx] as f32) };
+            }
+        });
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corr::{pearson_correlation, pearson_correlation_f64};
+    use crate::util::rng::Rng;
+
+    fn push_random(w: &mut SlidingWindow, rng: &mut Rng, ticks: usize) {
+        let mut sample = vec![0.0f32; w.n()];
+        for _ in 0..ticks {
+            for v in sample.iter_mut() {
+                *v = (rng.next_gaussian() * 1.5 + 0.3) as f32;
+            }
+            w.push(&sample);
+        }
+    }
+
+    #[test]
+    fn fills_then_slides() {
+        let mut w = SlidingWindow::new(3, 4, 0);
+        assert!(w.is_empty());
+        for t in 0..6 {
+            w.push(&[t as f32, 2.0 * t as f32, -(t as f32)]);
+        }
+        assert!(w.is_full());
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.ticks(), 6);
+        // contents are the last 4 ticks, oldest first
+        let c = w.contents();
+        assert_eq!(c.row(0), &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(c.row(2), &[-2.0, -3.0, -4.0, -5.0]);
+    }
+
+    #[test]
+    fn incremental_matches_recompute_through_wraparound() {
+        let mut rng = Rng::new(7);
+        let mut w = SlidingWindow::new(11, 16, 0);
+        push_random(&mut w, &mut rng, 50); // > 3 full wraps
+        let inc = w.corr_f64();
+        let full = pearson_correlation_f64(&w.contents());
+        for (a, b) in inc.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-11, "{a} vs {b}");
+        }
+        // and against the f32 production path, loosely
+        let f32_path = pearson_correlation(&w.contents());
+        let m = w.corr_matrix();
+        assert!(m.max_abs_diff(&f32_path) < 1e-4);
+    }
+
+    #[test]
+    fn rebuild_stats_is_a_noop_within_tolerance() {
+        let mut rng = Rng::new(9);
+        let mut w = SlidingWindow::new(8, 12, 0);
+        push_random(&mut w, &mut rng, 40);
+        let before = w.corr_f64();
+        w.rebuild_stats();
+        let after = w.corr_f64();
+        for (a, b) in before.iter().zip(&after) {
+            assert!((a - b).abs() < 1e-11, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn periodic_refresh_fires() {
+        let mut rng = Rng::new(3);
+        let mut a = SlidingWindow::new(6, 8, 5); // refresh every 5 ticks
+        let mut b = SlidingWindow::new(6, 8, 0);
+        let mut sample = vec![0.0f32; 6];
+        for _ in 0..23 {
+            for v in sample.iter_mut() {
+                *v = rng.next_f32() * 4.0 - 2.0;
+            }
+            a.push(&sample);
+            b.push(&sample);
+        }
+        let (ca, cb) = (a.corr_f64(), b.corr_f64());
+        for (x, y) in ca.iter().zip(&cb) {
+            assert!((x - y).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn constant_series_correlates_zero() {
+        let mut w = SlidingWindow::new(3, 8, 0);
+        for t in 0..8 {
+            w.push(&[5.0, t as f32, (t as f32).sin()]);
+        }
+        let c = w.corr_f64();
+        assert_eq!(c[0], 1.0); // diagonal stays 1
+        assert_eq!(c[1], 0.0); // constant row: 0 off-diagonal
+        assert_eq!(c[2], 0.0);
+        assert_eq!(c[3], 0.0); // symmetric counterpart
+    }
+
+    #[test]
+    fn perfectly_correlated_pair() {
+        let mut w = SlidingWindow::new(2, 6, 0);
+        for t in 0..10 {
+            let x = (t as f32 * 0.7).sin();
+            w.push(&[x, 3.0 * x + 1.0]);
+        }
+        let c = w.corr_f64();
+        assert!((c[1] - 1.0).abs() < 1e-12, "{}", c[1]);
+    }
+
+    #[test]
+    fn underfilled_window_is_identity() {
+        let mut w = SlidingWindow::new(3, 8, 0);
+        w.push(&[1.0, 2.0, 3.0]);
+        let c = w.corr_f64();
+        assert_eq!(c[0], 1.0);
+        assert_eq!(c[1], 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_sample_length_panics() {
+        let mut w = SlidingWindow::new(3, 4, 0);
+        w.push(&[1.0, 2.0]);
+    }
+}

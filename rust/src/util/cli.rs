@@ -62,6 +62,11 @@ impl Args {
         self.flags.contains_key(key)
     }
 
+    /// First positional token — the subcommand in `tmfg <cmd> [flags]`.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
@@ -125,6 +130,8 @@ mod tests {
     fn basic_flags() {
         let a = Args::parse_from(toks("run --algo heap --threads 8 --verbose"), &[]).unwrap();
         assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(Args::parse_from(toks("--x 1"), &[]).unwrap().subcommand(), None);
         assert_eq!(a.get_str("algo", "x"), "heap");
         assert_eq!(a.get_usize("threads", 1), 8);
         assert!(a.get_bool("verbose", false));

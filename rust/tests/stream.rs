@@ -1,0 +1,287 @@
+//! Streaming subsystem integration tests: the incremental
+//! sufficient-statistics path against the full recompute (the 1e-10
+//! acceptance property), session decision behaviour across a regime
+//! shift, and the open_stream/tick/close_stream TCP protocol.
+
+use tmfg::coordinator::service::{serve, Client, ServiceConfig};
+use tmfg::data::corr::pearson_correlation_f64;
+use tmfg::data::synth::SynthSpec;
+use tmfg::stream::{DeltaPolicy, SlidingWindow, StreamConfig, StreamSession, TickDecision};
+use tmfg::util::json::Json;
+use tmfg::util::rng::Rng;
+
+#[test]
+fn prop_incremental_pearson_matches_full_recompute_to_1e10() {
+    // Regimes: partial fill, exactly full, and deep wrap-around, with
+    // non-zero-mean data so the centered-moment cancellation is exercised.
+    for &(n, l, ticks, seed) in &[
+        (12usize, 16usize, 7usize, 1u64),
+        (20, 32, 32, 2),
+        (16, 24, 100, 3),
+        (40, 64, 300, 4),
+    ] {
+        let mut rng = Rng::new(seed);
+        let mut w = SlidingWindow::new(n, l, 0); // no periodic refresh: raw drift
+        let mut sample = vec![0.0f32; n];
+        for tick in 0..ticks {
+            for v in sample.iter_mut() {
+                *v = (rng.next_gaussian() * 1.5 + 0.7) as f32;
+            }
+            w.push(&sample);
+            let inc = w.corr_f64();
+            let full = pearson_correlation_f64(&w.contents());
+            let mut worst = 0.0f64;
+            for (a, b) in inc.iter().zip(&full) {
+                worst = worst.max((a - b).abs());
+            }
+            assert!(
+                worst < 1e-10,
+                "n={n} l={l} seed={seed} tick={tick}: max |inc - full| = {worst:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_incremental_matches_after_structured_stream() {
+    // Same property on correlated (class-structured) data rather than
+    // i.i.d. noise, replayed column-by-column with eviction churn.
+    let ds = SynthSpec::new("s", 24, 96, 3).generate(9);
+    let mut w = SlidingWindow::new(24, 32, 0);
+    let mut sample = vec![0.0f32; 24];
+    for t in 0..ds.data.cols {
+        for (i, v) in sample.iter_mut().enumerate() {
+            *v = ds.data.at(i, t);
+        }
+        w.push(&sample);
+    }
+    let inc = w.corr_f64();
+    let full = pearson_correlation_f64(&w.contents());
+    for (a, b) in inc.iter().zip(&full) {
+        assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn session_detects_regime_shift() {
+    let n = 40;
+    let k = 3;
+    let regime_a = SynthSpec::new("a", n, 96, k).generate(5);
+    let regime_b = SynthSpec::new("b", n, 48, k).generate(55);
+    let boundary = regime_a.data.cols;
+    let window = 32;
+    let mut cfg = StreamConfig::new(n, window, k);
+    cfg.policy = DeltaPolicy { drift_threshold: 0.35, max_refreshes: 0 };
+    let mut session = StreamSession::new(cfg).unwrap();
+
+    let mut sample = vec![0.0f32; n];
+    let mut last_gen = 0u64;
+    let mut post_shift_rebuild = false;
+    for t in 0..boundary + regime_b.data.cols {
+        let (panel, col) = if t < boundary {
+            (&regime_a.data, t)
+        } else {
+            (&regime_b.data, t - boundary)
+        };
+        for (i, v) in sample.iter_mut().enumerate() {
+            *v = panel.at(i, col);
+        }
+        let out = session.tick(&sample).unwrap();
+        assert!(out.generation >= last_gen);
+        if let Some(labels) = &out.labels {
+            assert_eq!(labels.len(), n);
+            assert_eq!(out.generation, last_gen + 1);
+            let uniq: std::collections::HashSet<_> = labels.iter().collect();
+            assert_eq!(uniq.len(), k, "cut must yield exactly k clusters");
+            if out.decision == TickDecision::Rebuilt && t > boundary && t <= boundary + window {
+                post_shift_rebuild = true;
+            }
+        }
+        last_gen = out.generation;
+    }
+    let st = session.stats();
+    assert!(st.rebuilds >= 1);
+    assert!(st.refreshes >= 1, "stationary stretches should refresh, not rebuild");
+    assert!(
+        post_shift_rebuild,
+        "a full rebuild must trigger within one window of the regime shift \
+         (rebuilds={}, refreshes={})",
+        st.rebuilds, st.refreshes
+    );
+}
+
+fn start() -> tmfg::coordinator::service::ServiceHandle {
+    serve(ServiceConfig { addr: "127.0.0.1:0".into(), ..Default::default() }).expect("bind")
+}
+
+#[test]
+fn tcp_stream_protocol_end_to_end() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    let n = 12;
+    let warmup = 4;
+    let total_ticks = 110u64;
+
+    let resp = c
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("open_stream")),
+            ("id", Json::Num(1.0)),
+            ("n", Json::Num(n as f64)),
+            ("window", Json::Num(32.0)),
+            ("k", Json::Num(2.0)),
+            ("warmup", Json::Num(warmup as f64)),
+            ("algo", Json::str("heap")),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("stream").as_bool(), Some(true));
+    assert_eq!(resp.get("algo").as_str(), Some("heap-tdbht"));
+
+    let mut rng = Rng::new(42);
+    let mut last_gen = 0usize;
+    let mut emissions = 0u64;
+    for t in 0..total_ticks {
+        // two structured groups plus noise so the clustering is stable
+        let data: Vec<f64> = (0..n)
+            .map(|i| {
+                let phase = t as f64 / 3.0 + (i % 6) as f64 * 0.05;
+                let base = if i < 6 { phase.sin() } else { phase.cos() };
+                base + 0.1 * rng.next_gaussian()
+            })
+            .collect();
+        let resp = c
+            .call(&Json::obj(vec![
+                ("cmd", Json::str("tick")),
+                ("id", Json::Num(t as f64)),
+                ("data", Json::arr_f64(&data)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "tick {t}: {resp:?}");
+        assert_eq!(resp.get("id").as_usize(), Some(t as usize));
+        let gen = resp.get("generation").as_usize().unwrap();
+        assert!(gen >= last_gen, "generation must be monotone");
+        match resp.get("labels").as_arr() {
+            Some(labels) => {
+                assert_eq!(labels.len(), n);
+                assert_eq!(gen, last_gen + 1, "each emission steps the generation");
+                let d = resp.get("decision").as_str().unwrap();
+                assert!(d == "rebuild" || d == "refresh", "{d}");
+                emissions += 1;
+            }
+            None => assert_eq!(resp.get("decision").as_str(), Some("warming")),
+        }
+        last_gen = gen;
+    }
+    assert_eq!(emissions, total_ticks - (warmup - 1));
+    assert!(emissions >= 100, "at least 100 labeled clusterings over the stream");
+
+    let resp = c
+        .call(&Json::obj(vec![("cmd", Json::str("close_stream")), ("id", Json::Num(999.0))]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("closed").as_bool(), Some(true));
+    assert_eq!(resp.get("ticks").as_usize(), Some(total_ticks as usize));
+    assert_eq!(resp.get("emissions").as_usize(), Some(emissions as usize));
+    assert!(resp.get("rebuilds").as_usize().unwrap() >= 1);
+    assert_eq!(resp.get("generation").as_usize(), Some(last_gen));
+
+    // closing again is idempotent
+    let resp = c.call(&Json::obj(vec![("cmd", Json::str("close_stream"))])).unwrap();
+    assert_eq!(resp.get("closed").as_bool(), Some(false));
+    h.stop();
+}
+
+#[test]
+fn tcp_stream_error_paths_and_isolation() {
+    let h = start();
+    // tick without an open stream
+    let mut c1 = Client::connect(&h.addr).unwrap();
+    let resp = c1
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("tick")),
+            ("data", Json::arr_f64(&[1.0, 2.0, 3.0, 4.0])),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+    assert!(resp.get("error").as_str().unwrap().contains("no open stream"));
+
+    // open_stream parameter validation
+    let resp = c1.call(&Json::obj(vec![("cmd", Json::str("open_stream"))])).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp:?}");
+    let resp = c1
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("open_stream")),
+            ("n", Json::Num(3.0)), // < 4
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+
+    // sessions are per-connection: c1's stream is invisible to c2
+    let resp = c1
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("open_stream")),
+            ("n", Json::Num(6.0)),
+            ("window", Json::Num(8.0)),
+            ("k", Json::Num(2.0)),
+            ("warmup", Json::Num(2.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let mut c2 = Client::connect(&h.addr).unwrap();
+    let resp = c2
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("tick")),
+            ("data", Json::arr_f64(&[0.0; 6])),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+
+    // wrong tick width on the open stream errors but keeps the session
+    let resp = c1
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("tick")),
+            ("data", Json::arr_f64(&[1.0, 2.0])),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false));
+
+    // non-numeric entries (parsed as NaN) are rejected rather than
+    // silently poisoning the incremental statistics
+    let resp = c1
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("tick")),
+            (
+                "data",
+                Json::Arr(vec![
+                    Json::Null,
+                    Json::Num(0.1),
+                    Json::Num(0.2),
+                    Json::Num(0.3),
+                    Json::Num(0.4),
+                    Json::Num(0.5),
+                ]),
+            ),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp:?}");
+    assert!(resp.get("error").as_str().unwrap().contains("non-finite"));
+    let resp = c1
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("tick")),
+            ("data", Json::arr_f64(&[0.5, -0.25, 1.5, 0.75, -1.0, 0.25])),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+
+    // ordinary batch requests still work on a connection with a stream
+    let resp = c1
+        .call(&Json::obj(vec![
+            ("id", Json::Num(7.0)),
+            ("dataset", Json::str("CBF")),
+            ("scale", Json::Num(0.03)),
+            ("algo", Json::str("heap")),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    h.stop();
+}
