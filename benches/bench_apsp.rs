@@ -17,7 +17,7 @@ fn main() {
     for name in registry::largest3_names() {
         let ds = registry::get_dataset(name, scale, registry::DEFAULT_SEED).unwrap();
         let s = pearson_correlation(&ds.data);
-        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()), &s);
+        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()).unwrap(), &s);
         let n = g.n.to_string();
 
         suite

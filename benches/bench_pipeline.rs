@@ -1,11 +1,28 @@
 //! End-to-end pipeline benchmark (Fig. 2 in criterion-style form) plus a
-//! thread-scaling mini-sweep (Figs. 3/4 shape check).
+//! thread-scaling mini-sweep (Figs. 3/4 shape check). Drives the typed
+//! staged API with a shared `Arc` similarity matrix, so each timed
+//! iteration measures one full request — build/validation (a single
+//! O(n²) finiteness scan, no payload copies) plus the pipeline stages.
+//! For stage-only timings see `tmfg experiment fig2`, which builds the
+//! plan before starting the stopwatch.
 
-use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
+use std::sync::Arc;
+use tmfg::api::{ClusterRequest, TmfgAlgo};
 use tmfg::coordinator::registry;
 use tmfg::data::corr::pearson_correlation;
+use tmfg::data::matrix::Matrix;
 use tmfg::parlay;
 use tmfg::util::bench::BenchSuite;
+
+fn run_once(algo: TmfgAlgo, s: &Arc<Matrix>, labels: &[usize], k: usize) {
+    let out = ClusterRequest::similarity(s.clone())
+        .algo(algo)
+        .labels(labels.to_vec())
+        .k(k.max(1))
+        .run()
+        .unwrap();
+    assert!(out.ari.is_some());
+}
 
 fn main() {
     let scale: f64 = std::env::var("BENCH_SCALE")
@@ -24,23 +41,21 @@ fn main() {
     // as in the paper).
     for name in ["CBF", "ECG5000", "Crop", "StarLightCurves"] {
         let ds = registry::get_dataset(name, scale, registry::DEFAULT_SEED).unwrap();
-        let s = pearson_correlation(&ds.data);
+        let s = Arc::new(pearson_correlation(&ds.data));
         for algo in algos {
-            let p = Pipeline::new(PipelineConfig { algo, use_xla: false, ..Default::default() });
             suite
                 .meta("dataset", name)
                 .meta("n", &ds.n().to_string())
                 .meta("algo", &algo.name())
                 .meta("threads", &parlay::num_threads().to_string())
                 .run(&format!("{name}/{}", algo.name()), |_| {
-                    let out = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
-                    assert!(out.ari.is_some());
+                    run_once(algo, &s, &ds.labels, ds.n_classes);
                 });
         }
     }
     // Scaling mini-sweep on the largest dataset: OPT vs PAR-10.
     let ds = registry::get_dataset("Crop", scale, registry::DEFAULT_SEED).unwrap();
-    let s = pearson_correlation(&ds.data);
+    let s = Arc::new(pearson_correlation(&ds.data));
     let max_t = parlay::num_threads();
     let mut threads = vec![1usize];
     let mut t = 2;
@@ -51,7 +66,6 @@ fn main() {
     threads.push(max_t);
     for algo in [TmfgAlgo::Opt, TmfgAlgo::Par(10)] {
         for &t in &threads {
-            let p = Pipeline::new(PipelineConfig { algo, use_xla: false, ..Default::default() });
             suite
                 .meta("dataset", "Crop")
                 .meta("n", &ds.n().to_string())
@@ -59,7 +73,7 @@ fn main() {
                 .meta("threads", &t.to_string())
                 .run(&format!("scaling/{}@{t}", algo.name()), |_| {
                     parlay::with_threads(t, || {
-                        let _ = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
+                        run_once(algo, &s, &ds.labels, ds.n_classes);
                     })
                 });
         }

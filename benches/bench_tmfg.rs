@@ -27,7 +27,7 @@ fn main() {
                 .meta("n", &n.to_string())
                 .meta("algo", &format!("par-{p}"))
                 .run(&format!("{name}/par-{p}"), |_| {
-                    let r = orig_tmfg(&s, p);
+                    let r = orig_tmfg(&s, p).unwrap();
                     assert_eq!(r.edges.len(), 3 * n - 6);
                 });
         }
@@ -36,7 +36,7 @@ fn main() {
             .meta("n", &n.to_string())
             .meta("algo", "corr")
             .run(&format!("{name}/corr"), |_| {
-                let r = corr_tmfg(&s, &TmfgConfig::default());
+                let r = corr_tmfg(&s, &TmfgConfig::default()).unwrap();
                 assert_eq!(r.edges.len(), 3 * n - 6);
             });
         suite
@@ -44,7 +44,7 @@ fn main() {
             .meta("n", &n.to_string())
             .meta("algo", "heap")
             .run(&format!("{name}/heap"), |_| {
-                let r = heap_tmfg(&s, &TmfgConfig::default());
+                let r = heap_tmfg(&s, &TmfgConfig::default()).unwrap();
                 assert_eq!(r.edges.len(), 3 * n - 6);
             });
         // §4.3 ablation: scan × sort on the heap algorithm (OPT = chunked+radix).
@@ -58,7 +58,7 @@ fn main() {
                 .meta("n", &n.to_string())
                 .meta("algo", label)
                 .run(&format!("{name}/{label}"), |_| {
-                    let r = heap_tmfg(&s, &TmfgConfig { prefix: 1, scan, sort });
+                    let r = heap_tmfg(&s, &TmfgConfig { prefix: 1, scan, sort }).unwrap();
                     assert_eq!(r.edges.len(), 3 * n - 6);
                 });
         }

@@ -50,7 +50,8 @@ fn main() {
     println!("{} stocks × {} days, {} sectors", n, days, sectors);
 
     let out = Pipeline::new(PipelineConfig { algo: TmfgAlgo::Opt, ..Default::default() })
-        .run_dataset(&ds);
+        .run_dataset(&ds)
+        .expect("pipeline run");
     println!("\nstage breakdown:\n{}", out.breakdown.table());
     println!(
         "TMFG: {} edges over {} stocks (3n-6 = {}); edge sum {:.2}",

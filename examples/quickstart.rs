@@ -1,23 +1,44 @@
-//! Quickstart: cluster a small synthetic time-series dataset end to end.
+//! Quickstart: cluster a small synthetic time-series dataset end to end
+//! through the typed staged API (`tmfg::api`).
 //!
 //!     cargo run --release --example quickstart
 
-use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
+use tmfg::api::{ApspMode, ClusterRequest, TmfgAlgo, TmfgError};
 use tmfg::data::synth::SynthSpec;
 
-fn main() {
+fn main() -> Result<(), TmfgError> {
     // 200 series of length 64 from 4 latent classes.
     let ds = SynthSpec::new("quickstart", 200, 64, 4).generate(42);
 
-    // OPT-TDBHT: heap-based TMFG + radix sort + vectorized scans +
-    // approximate APSP (the paper's fastest configuration).
-    let cfg = PipelineConfig { algo: TmfgAlgo::Opt, ..Default::default() };
-    let out = Pipeline::new(cfg).run_dataset(&ds);
+    // OPT-TDBHT: heap-based TMFG + radix sort + approximate APSP (the
+    // paper's fastest configuration). The builder validates everything
+    // up front and resolves into a staged plan.
+    let mut plan = ClusterRequest::panel(ds.data.clone())
+        .algo(TmfgAlgo::Opt)
+        .labels(ds.labels.clone())
+        .k(4)
+        .build()?;
 
-    println!("stage breakdown:\n{}", out.breakdown.table());
-    println!("TMFG: {} edges, edge sum {:.2}", out.tmfg.edges.len(), out.edge_sum);
+    // Stages run individually; each leaves an inspectable artifact.
+    let tmfg = plan.run_tmfg()?;
+    println!("TMFG: {} edges over {} series", tmfg.edges.len(), tmfg.n);
+
+    // The same TMFG serves both APSP solvers: run the exact one for a
+    // reference clustering, then switch back to OPT's approximate mode
+    // (only the APSP/DBHT/cut artifacts are invalidated)...
+    plan.set_apsp_mode(ApspMode::Exact);
+    let exact_labels = plan.run_cut(4)?.to_vec();
+    plan.set_apsp_mode(ApspMode::Approx);
+    // ...and finish under the paper's fast configuration (cuts at k,
+    // computes ARI, reports per-stage timings).
+    let out = plan.finish()?;
+    let exact_ari = tmfg::metrics::adjusted_rand_index(&ds.labels, &exact_labels);
+    println!("exact-APSP reference ARI: {exact_ari:.3}");
+
+    println!("\nstage breakdown:\n{}", out.breakdown.table());
+    println!("edge sum {:.2}", out.edge_sum);
     println!("DBHT: {} converging bubbles", out.dbht.n_converging);
-    println!("ARI vs ground truth (k=4): {:.3}", out.ari.unwrap());
+    println!("ARI vs ground truth (k=4): {:.3}", out.ari.unwrap_or(f64::NAN));
 
     // The dendrogram is a full hierarchy — cut it anywhere you like:
     for k in [2, 4, 8] {
@@ -25,4 +46,5 @@ fn main() {
         let ari = tmfg::metrics::adjusted_rand_index(&ds.labels, &labels);
         println!("  cut at k={k}: ARI {ari:.3}");
     }
+    Ok(())
 }

@@ -49,7 +49,10 @@ fn main() {
             let cfg = PipelineConfig { algo: *algo, use_xla, ..Default::default() };
             let pipeline = Pipeline::new(cfg);
             let t = Timer::start();
-            let out = pipeline.run_dataset(&ds);
+            let out = pipeline.run_dataset(&ds).unwrap_or_else(|e| {
+                eprintln!("pipeline failed on {}: {e}", ds.name);
+                std::process::exit(1);
+            });
             let total = t.elapsed();
             let g = |k: &str| out.breakdown.get(k).unwrap_or(0.0);
             let tmfg_s = g("tmfg:init-faces") + g("tmfg:sort") + g("tmfg:add-vertices");

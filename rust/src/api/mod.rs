@@ -1,0 +1,57 @@
+//! The typed, staged public clustering API — the one way to run
+//! TMFG-DBHT clustering.
+//!
+//! The paper's pipeline is a fixed stage chain (initial faces → sort →
+//! vertex adding → APSP → DBHT); this module exposes it as:
+//!
+//! * [`ClusterRequest`] — a builder over the three input shapes (dataset
+//!   by name, inline time-series panel, precomputed similarity matrix)
+//!   plus every knob (`algo`, `apsp`, `linkage`, `hub`, `k`, ...);
+//! * [`Plan`] — a staged executor where Similarity → Tmfg → Apsp → Dbht
+//!   → Cut are individually runnable, memoized, and inspectable (per
+//!   stage artifacts and wall-clock timings), so callers can reuse a
+//!   TMFG across APSP modes or stop after construction;
+//! * [`TmfgError`] — the unified, typed error replacing every
+//!   library-path panic and stringly-typed result;
+//! * [`wire`] — the versioned request/response types of the TCP service.
+//!
+//! One-shot:
+//!
+//! ```no_run
+//! use tmfg::api::{ClusterRequest, TmfgAlgo};
+//!
+//! let out = ClusterRequest::dataset("CBF")
+//!     .scale(0.05)
+//!     .algo(TmfgAlgo::Opt)
+//!     .run()?;
+//! println!("ARI = {:.3}", out.ari.unwrap_or(f64::NAN));
+//! # Ok::<(), tmfg::api::TmfgError>(())
+//! ```
+//!
+//! Staged, reusing one TMFG under both APSP modes:
+//!
+//! ```no_run
+//! use tmfg::api::{ApspMode, ClusterRequest, TmfgAlgo};
+//! use tmfg::data::synth::SynthSpec;
+//!
+//! let ds = SynthSpec::new("demo", 200, 64, 4).generate(42);
+//! let mut plan = ClusterRequest::panel(ds.data)
+//!     .algo(TmfgAlgo::Heap)
+//!     .k(4)
+//!     .build()?;
+//! plan.run_tmfg()?; // built once
+//! for mode in [ApspMode::Exact, ApspMode::Approx] {
+//!     plan.set_apsp_mode(mode); // keeps the TMFG artifact
+//!     let labels = plan.run_cut(4)?;
+//!     println!("{mode:?}: {} labels", labels.len());
+//! }
+//! # Ok::<(), tmfg::api::TmfgError>(())
+//! ```
+
+pub mod plan;
+pub mod request;
+pub mod wire;
+
+pub use crate::error::TmfgError;
+pub use plan::{build_tmfg_for, ApspMode, ClusterOutput, Plan, Stage, TmfgAlgo};
+pub use request::ClusterRequest;

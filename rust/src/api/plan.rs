@@ -1,0 +1,431 @@
+//! The staged plan executor: Similarity → Tmfg → Apsp → Dbht → Cut.
+//!
+//! A [`Plan`] is a resolved, validated clustering request (built by
+//! [`crate::api::ClusterRequest`]) whose stages can be run individually.
+//! Every stage is fallible, memoized, and leaves an inspectable artifact
+//! (`similarity()`, `tmfg()`, `apsp()`, `dbht()`, `labels()`) plus a
+//! wall-clock entry in [`Plan::timings`]. Running a stage implicitly runs
+//! the stages it depends on; re-running a completed stage is free.
+//!
+//! Because artifacts are explicit, callers can reuse expensive work: for
+//! example [`Plan::set_apsp_mode`] invalidates only the APSP/DBHT/cut
+//! artifacts, so one TMFG construction can be measured under both exact
+//! and approximate APSP (see `coordinator::experiments::apsp_speedup`).
+
+use crate::error::TmfgError;
+use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
+use crate::data::matrix::Matrix;
+use crate::dbht::hierarchy::{dbht_dendrogram, DbhtResult};
+use crate::dbht::Linkage;
+use crate::metrics::adjusted_rand_index;
+use crate::runtime::engine::{CorrEngine, CorrPath};
+use crate::tmfg::{corr_tmfg, heap_tmfg, orig_tmfg, ScanKind, SortKind, TmfgConfig, TmfgResult};
+use crate::util::timer::{Breakdown, Timer};
+use std::sync::Arc;
+
+/// Which TMFG construction algorithm to run — mirrors the paper's
+/// implementation list (§5 "Implementations").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TmfgAlgo {
+    /// PAR-TDBHT-P (Yu & Shun) with the given prefix size.
+    Par(usize),
+    /// CORR-TDBHT (Alg. 1), prefix 1.
+    Corr,
+    /// HEAP-TDBHT (Alg. 2).
+    Heap,
+    /// OPT-TDBHT: HEAP + vectorized scan + radix sort + approximate APSP.
+    Opt,
+}
+
+impl TmfgAlgo {
+    pub fn name(&self) -> String {
+        match self {
+            TmfgAlgo::Par(p) => format!("par-tdbht-{p}"),
+            TmfgAlgo::Corr => "corr-tdbht".into(),
+            TmfgAlgo::Heap => "heap-tdbht".into(),
+            TmfgAlgo::Opt => "opt-tdbht".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TmfgAlgo> {
+        match s.to_ascii_lowercase().as_str() {
+            "corr" | "corr-tdbht" => Some(TmfgAlgo::Corr),
+            "heap" | "heap-tdbht" => Some(TmfgAlgo::Heap),
+            "opt" | "opt-tdbht" => Some(TmfgAlgo::Opt),
+            other => {
+                let p = other
+                    .strip_prefix("par-tdbht-")
+                    .or_else(|| other.strip_prefix("par"))?;
+                p.parse().ok().map(TmfgAlgo::Par)
+            }
+        }
+    }
+
+    /// The APSP mode this algorithm defaults to (OPT pairs with the
+    /// approximate hub solver; everything else is exact).
+    pub fn default_apsp(&self) -> ApspMode {
+        match self {
+            TmfgAlgo::Opt => ApspMode::Approx,
+            _ => ApspMode::Exact,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApspMode {
+    Exact,
+    Approx,
+}
+
+/// Build a TMFG with the given algorithm's standard configuration — the
+/// mapping shared by the batch [`Plan`] and the streaming subsystem
+/// (which constructs topologies outside a plan).
+pub fn build_tmfg_for(algo: TmfgAlgo, s: &Matrix) -> Result<TmfgResult, TmfgError> {
+    match algo {
+        TmfgAlgo::Par(p) => orig_tmfg(s, p),
+        TmfgAlgo::Corr => corr_tmfg(s, &TmfgConfig::default()),
+        TmfgAlgo::Heap => heap_tmfg(s, &TmfgConfig::default()),
+        // OPT = HEAP + radix sort (+ approximate APSP via the plan's
+        // apsp mode). The paper's manual-vectorization scan is kept
+        // available as ScanKind::Chunked but measured a net 0.9–1.0× on
+        // this host (the paper itself reports 0.97–1.07×), so the default
+        // follows the perf-pass keep-if-it-helps rule (EXPERIMENTS.md
+        // §Perf iter. 6).
+        TmfgAlgo::Opt => heap_tmfg(
+            s,
+            &TmfgConfig { prefix: 1, scan: ScanKind::Scalar, sort: SortKind::Radix },
+        ),
+    }
+}
+
+/// The five pipeline stages in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Similarity,
+    Tmfg,
+    Apsp,
+    Dbht,
+    Cut,
+}
+
+/// Owned result of a completed plan (what [`Plan::finish`] returns and
+/// what the legacy `Pipeline` facade hands back).
+#[derive(Debug)]
+pub struct ClusterOutput {
+    pub algo: TmfgAlgo,
+    pub apsp_mode: ApspMode,
+    /// Per-stage wall-clock seconds (the Fig. 5 decomposition).
+    pub breakdown: Breakdown,
+    pub tmfg: TmfgResult,
+    pub dbht: DbhtResult,
+    /// Predicted labels from cutting the dendrogram at `k` (None when no
+    /// `k` was requested and none could be inferred).
+    pub labels: Option<Vec<usize>>,
+    /// Adjusted Rand index vs the ground-truth labels (None without
+    /// ground truth or without a cut).
+    pub ari: Option<f64>,
+    /// Sum of similarity over the TMFG edges (the Fig. 7 quality metric).
+    pub edge_sum: f64,
+    /// Which compute path produced the similarity matrix (None when it
+    /// was supplied precomputed).
+    pub corr_path: Option<CorrPath>,
+}
+
+/// A resolved staged clustering request. See the module docs.
+pub struct Plan {
+    pub algo: TmfgAlgo,
+    pub linkage: Linkage,
+    pub hub: HubConfig,
+    pub check_invariants: bool,
+    apsp_mode: ApspMode,
+    /// Cut size; None = no cut in [`Plan::finish`].
+    k: Option<usize>,
+    /// Ground-truth labels (length n) for ARI reporting.
+    truth: Option<Vec<usize>>,
+    n: usize,
+    /// Raw n×L panel (absent when the similarity was supplied directly).
+    /// Shared, so many plans can run over one panel without copying it.
+    panel: Option<Arc<Matrix>>,
+    /// Similarity engine; only present when a panel must be reduced.
+    engine: Option<Arc<CorrEngine>>,
+    // ---- per-stage artifacts -------------------------------------------
+    similarity: Option<Arc<Matrix>>,
+    corr_path: Option<CorrPath>,
+    tmfg: Option<TmfgResult>,
+    apsp: Option<Matrix>,
+    dbht: Option<DbhtResult>,
+    cut: Option<Vec<usize>>,
+    /// The k the current `cut` artifact was made at.
+    cut_k: Option<usize>,
+    /// Per-stage wall-clock seconds, filled as stages run.
+    pub timings: Breakdown,
+}
+
+impl Plan {
+    /// Internal constructor used by `ClusterRequest::build` (which has
+    /// already validated shapes, labels, and `k`).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        algo: TmfgAlgo,
+        apsp_mode: ApspMode,
+        linkage: Linkage,
+        hub: HubConfig,
+        check_invariants: bool,
+        k: Option<usize>,
+        truth: Option<Vec<usize>>,
+        n: usize,
+        panel: Option<Arc<Matrix>>,
+        similarity: Option<Arc<Matrix>>,
+        engine: Option<Arc<CorrEngine>>,
+    ) -> Plan {
+        Plan {
+            algo,
+            linkage,
+            hub,
+            check_invariants,
+            apsp_mode,
+            k,
+            truth,
+            n,
+            panel,
+            engine,
+            similarity,
+            corr_path: None,
+            tmfg: None,
+            apsp: None,
+            dbht: None,
+            cut: None,
+            cut_k: None,
+            timings: Breakdown::new(),
+        }
+    }
+
+    /// Number of items being clustered.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The APSP mode the Apsp stage will run (or ran) with.
+    pub fn apsp_mode(&self) -> ApspMode {
+        self.apsp_mode
+    }
+
+    /// Switch the APSP mode, invalidating the APSP/DBHT/cut artifacts
+    /// (and their timing entries, so the breakdown never double-counts)
+    /// but keeping the similarity matrix and the TMFG — the idiomatic way
+    /// to compare exact vs approximate APSP on one construction.
+    pub fn set_apsp_mode(&mut self, mode: ApspMode) {
+        if mode != self.apsp_mode {
+            self.apsp_mode = mode;
+            self.apsp = None;
+            self.dbht = None;
+            self.cut = None;
+            self.cut_k = None;
+            self.timings.remove("apsp");
+            self.timings.remove("dbht");
+            self.timings.remove("cut");
+        }
+    }
+
+    // ---- artifact accessors -------------------------------------------
+    pub fn similarity(&self) -> Option<&Matrix> {
+        self.similarity.as_deref()
+    }
+
+    pub fn corr_path(&self) -> Option<CorrPath> {
+        self.corr_path
+    }
+
+    pub fn tmfg(&self) -> Option<&TmfgResult> {
+        self.tmfg.as_ref()
+    }
+
+    pub fn apsp(&self) -> Option<&Matrix> {
+        self.apsp.as_ref()
+    }
+
+    pub fn dbht(&self) -> Option<&DbhtResult> {
+        self.dbht.as_ref()
+    }
+
+    /// The most recent cut's labels.
+    pub fn labels(&self) -> Option<&[usize]> {
+        self.cut.as_deref()
+    }
+
+    // ---- stages --------------------------------------------------------
+
+    /// Stage 1: the n×n similarity matrix (computed from the panel via
+    /// the engine, or supplied precomputed — the paper's setting).
+    pub fn run_similarity(&mut self) -> Result<&Matrix, TmfgError> {
+        if self.similarity.is_none() {
+            let panel = self.panel.as_ref().ok_or_else(|| {
+                TmfgError::invariant("plan has neither a panel nor a similarity matrix")
+            })?;
+            let engine = self.engine.as_ref().ok_or_else(|| {
+                TmfgError::invariant("plan with a panel input has no similarity engine")
+            })?;
+            let t = Timer::start();
+            let (s, _rowsums, path) = engine
+                .similarity(panel)
+                .map_err(|e| TmfgError::SimilarityFailed(format!("{e:#}")))?;
+            self.timings.add("similarity", t.elapsed());
+            self.similarity = Some(Arc::new(s));
+            self.corr_path = Some(path);
+        }
+        self.similarity
+            .as_deref()
+            .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))
+    }
+
+    /// Stage 2: TMFG construction with the plan's algorithm.
+    pub fn run_tmfg(&mut self) -> Result<&TmfgResult, TmfgError> {
+        if self.tmfg.is_none() {
+            self.run_similarity()?;
+            let s = self
+                .similarity
+                .as_deref()
+                .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))?;
+            let tmfg = build_tmfg_for(self.algo, s)?;
+            if self.check_invariants {
+                crate::tmfg::common::check_invariants(&tmfg)?;
+            }
+            self.timings.add("tmfg:init-faces", tmfg.timings.init);
+            self.timings.add("tmfg:sort", tmfg.timings.sort);
+            self.timings.add("tmfg:add-vertices", tmfg.timings.insert);
+            self.tmfg = Some(tmfg);
+        }
+        self.tmfg
+            .as_ref()
+            .ok_or_else(|| TmfgError::invariant("tmfg artifact missing"))
+    }
+
+    /// Stage 3: all-pairs shortest paths on the filtered graph.
+    pub fn run_apsp(&mut self) -> Result<&Matrix, TmfgError> {
+        if self.apsp.is_none() {
+            self.run_tmfg()?;
+            let (tmfg, s) = match (&self.tmfg, &self.similarity) {
+                (Some(t), Some(s)) => (t, s.as_ref()),
+                _ => return Err(TmfgError::invariant("apsp stage missing inputs")),
+            };
+            let t = Timer::start();
+            let g = CsrGraph::from_tmfg(tmfg, s);
+            let apsp = match self.apsp_mode {
+                ApspMode::Exact => apsp_exact(&g),
+                ApspMode::Approx => apsp_hub(&g, &self.hub),
+            };
+            self.timings.add("apsp", t.elapsed());
+            self.apsp = Some(apsp);
+        }
+        self.apsp
+            .as_ref()
+            .ok_or_else(|| TmfgError::invariant("apsp artifact missing"))
+    }
+
+    /// Stage 4: the DBHT dendrogram.
+    pub fn run_dbht(&mut self) -> Result<&DbhtResult, TmfgError> {
+        if self.dbht.is_none() {
+            self.run_apsp()?;
+            let (tmfg, s, apsp) = match (&self.tmfg, &self.similarity, &self.apsp) {
+                (Some(t), Some(s), Some(a)) => (t, s.as_ref(), a),
+                _ => return Err(TmfgError::invariant("dbht stage missing inputs")),
+            };
+            let t = Timer::start();
+            let dbht = dbht_dendrogram(s, tmfg, apsp, self.linkage)?;
+            self.timings.add("dbht", t.elapsed());
+            self.dbht = Some(dbht);
+        }
+        self.dbht
+            .as_ref()
+            .ok_or_else(|| TmfgError::invariant("dbht artifact missing"))
+    }
+
+    /// Stage 5: cut the dendrogram into `k` clusters. Memoized per `k`:
+    /// repeating the same cut is free, a different `k` recomputes.
+    pub fn run_cut(&mut self, k: usize) -> Result<&[usize], TmfgError> {
+        if k < 1 || k > self.n {
+            return Err(TmfgError::invalid(format!(
+                "k must be in 1..={}, got {k}",
+                self.n
+            )));
+        }
+        if self.cut_k == Some(k) {
+            return self
+                .cut
+                .as_deref()
+                .ok_or_else(|| TmfgError::invariant("cut artifact missing"));
+        }
+        self.run_dbht()?;
+        let dbht = self
+            .dbht
+            .as_ref()
+            .ok_or_else(|| TmfgError::invariant("dbht artifact missing"))?;
+        let t = Timer::start();
+        self.cut = Some(dbht.dendrogram.cut(k));
+        self.cut_k = Some(k);
+        // replace rather than accumulate: a prior cut at another k was an
+        // invalidated artifact, not part of this pipeline's cost
+        self.timings.remove("cut");
+        self.timings.add("cut", t.elapsed());
+        self.cut
+            .as_deref()
+            .ok_or_else(|| TmfgError::invariant("cut artifact missing"))
+    }
+
+    /// Run one stage (and its prerequisites). `Stage::Cut` requires a `k`
+    /// on the plan.
+    pub fn run_stage(&mut self, stage: Stage) -> Result<(), TmfgError> {
+        match stage {
+            Stage::Similarity => self.run_similarity().map(|_| ()),
+            Stage::Tmfg => self.run_tmfg().map(|_| ()),
+            Stage::Apsp => self.run_apsp().map(|_| ()),
+            Stage::Dbht => self.run_dbht().map(|_| ()),
+            Stage::Cut => {
+                let k = self.k.ok_or_else(|| {
+                    TmfgError::invalid("Stage::Cut requires a k on the request")
+                })?;
+                self.run_cut(k).map(|_| ())
+            }
+        }
+    }
+
+    /// Run every remaining stage and return the owned output. Cuts at the
+    /// request's `k` when one was set (or inferred from the dataset),
+    /// re-cutting if the standing cut was made at a different `k`.
+    pub fn finish(mut self) -> Result<ClusterOutput, TmfgError> {
+        self.run_dbht()?;
+        if let Some(k) = self.k {
+            if self.cut_k != Some(k) {
+                self.run_cut(k)?;
+            }
+        }
+        let tmfg = self
+            .tmfg
+            .take()
+            .ok_or_else(|| TmfgError::invariant("tmfg artifact missing"))?;
+        let dbht = self
+            .dbht
+            .take()
+            .ok_or_else(|| TmfgError::invariant("dbht artifact missing"))?;
+        let s = self
+            .similarity
+            .as_deref()
+            .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))?;
+        let edge_sum = tmfg.edge_sum(s);
+        let ari = match (&self.truth, &self.cut) {
+            (Some(truth), Some(pred)) => Some(adjusted_rand_index(truth, pred)),
+            _ => None,
+        };
+        Ok(ClusterOutput {
+            algo: self.algo,
+            apsp_mode: self.apsp_mode,
+            breakdown: self.timings,
+            tmfg,
+            dbht,
+            labels: self.cut,
+            ari,
+            edge_sum,
+            corr_path: self.corr_path,
+        })
+    }
+}

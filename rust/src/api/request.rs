@@ -1,0 +1,276 @@
+//! The [`ClusterRequest`] builder — the one entry point for running a
+//! clustering, whatever the input shape.
+//!
+//! Three sources are supported:
+//! * [`ClusterRequest::dataset`] — a registry dataset by name (or a UCR
+//!   CSV path), with optional `scale`/`seed`;
+//! * [`ClusterRequest::panel`] — an inline n×L time-series panel (the
+//!   similarity matrix is computed by the engine);
+//! * [`ClusterRequest::similarity`] — a precomputed n×n similarity
+//!   matrix (the paper's setting; no engine is constructed).
+//!
+//! [`ClusterRequest::build`] validates everything up front (shapes,
+//! finiteness, label lengths, `k` range) and resolves the request into a
+//! staged [`Plan`]; [`ClusterRequest::run`] is the one-shot convenience.
+
+use crate::error::TmfgError;
+use super::plan::{ApspMode, ClusterOutput, Plan, TmfgAlgo};
+use crate::apsp::HubConfig;
+use crate::coordinator::registry;
+use crate::data::matrix::Matrix;
+use crate::dbht::Linkage;
+use crate::runtime::engine::CorrEngine;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+enum Source {
+    Dataset(String),
+    Panel(Arc<Matrix>),
+    Similarity(Arc<Matrix>),
+}
+
+/// Builder for one clustering run. Construct with [`dataset`]
+/// [`panel`], or [`similarity`]; chain option setters; then [`build`] a
+/// staged [`Plan`] or [`run`] it to completion.
+///
+/// [`dataset`]: ClusterRequest::dataset
+/// [`panel`]: ClusterRequest::panel
+/// [`similarity`]: ClusterRequest::similarity
+/// [`build`]: ClusterRequest::build
+/// [`run`]: ClusterRequest::run
+pub struct ClusterRequest {
+    source: Source,
+    algo: TmfgAlgo,
+    apsp: Option<ApspMode>,
+    linkage: Linkage,
+    hub: HubConfig,
+    k: Option<usize>,
+    labels: Option<Vec<usize>>,
+    scale: f64,
+    seed: u64,
+    use_xla: bool,
+    check_invariants: bool,
+    artifacts_dir: PathBuf,
+    engine: Option<Arc<CorrEngine>>,
+}
+
+impl ClusterRequest {
+    fn with_source(source: Source) -> ClusterRequest {
+        ClusterRequest {
+            source,
+            algo: TmfgAlgo::Opt,
+            apsp: None,
+            linkage: Linkage::Complete,
+            hub: HubConfig::default(),
+            k: None,
+            labels: None,
+            scale: 1.0,
+            seed: registry::DEFAULT_SEED,
+            use_xla: true,
+            check_invariants: false,
+            artifacts_dir: PathBuf::from("artifacts"),
+            engine: None,
+        }
+    }
+
+    /// Cluster a registry dataset (or UCR CSV path) by name.
+    pub fn dataset(name: impl Into<String>) -> ClusterRequest {
+        Self::with_source(Source::Dataset(name.into()))
+    }
+
+    /// Cluster an inline n×L time-series panel (one row per series).
+    /// Accepts an owned `Matrix` or a shared `Arc<Matrix>` — pass the
+    /// `Arc` to run many requests over one panel without copying it.
+    pub fn panel(panel: impl Into<Arc<Matrix>>) -> ClusterRequest {
+        Self::with_source(Source::Panel(panel.into()))
+    }
+
+    /// Cluster from a precomputed n×n similarity matrix (`Matrix` or
+    /// shared `Arc<Matrix>`).
+    pub fn similarity(s: impl Into<Arc<Matrix>>) -> ClusterRequest {
+        Self::with_source(Source::Similarity(s.into()))
+    }
+
+    // ---- option setters ------------------------------------------------
+
+    pub fn algo(mut self, algo: TmfgAlgo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Override the APSP mode (default: the algorithm's own default).
+    pub fn apsp(mut self, mode: ApspMode) -> Self {
+        self.apsp = Some(mode);
+        self
+    }
+
+    pub fn linkage(mut self, linkage: Linkage) -> Self {
+        self.linkage = linkage;
+        self
+    }
+
+    pub fn hub(mut self, hub: HubConfig) -> Self {
+        self.hub = hub;
+        self
+    }
+
+    /// Cluster count to cut the dendrogram into. Defaults to the
+    /// dataset's class count for dataset sources; without it, `finish`
+    /// stops after the dendrogram.
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    /// Ground-truth labels (length n) for ARI reporting. Dataset sources
+    /// carry their own; this overrides them.
+    pub fn labels(mut self, labels: Vec<usize>) -> Self {
+        self.labels = Some(labels);
+        self
+    }
+
+    /// n-scale for dataset sources (1.0 = paper sizes).
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Generator seed for dataset sources.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// false = always use the native Rust correlation path.
+    pub fn use_xla(mut self, use_xla: bool) -> Self {
+        self.use_xla = use_xla;
+        self
+    }
+
+    /// Validate TMFG structural invariants after construction.
+    pub fn check_invariants(mut self, check: bool) -> Self {
+        self.check_invariants = check;
+        self
+    }
+
+    /// Artifacts directory for the XLA similarity engine.
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Reuse an existing similarity engine (services share one across
+    /// requests to amortize executable-cache hits).
+    pub fn engine(mut self, engine: Arc<CorrEngine>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    // ---- resolution ----------------------------------------------------
+
+    /// Validate the request and resolve it into a staged [`Plan`].
+    pub fn build(self) -> Result<Plan, TmfgError> {
+        let (panel, similarity, mut truth, mut k) = match self.source {
+            Source::Dataset(name) => {
+                let ds = registry::get_dataset(&name, self.scale, self.seed)
+                    .ok_or(TmfgError::DatasetNotFound(name))?;
+                // Synthetic datasets are finite by construction, but this
+                // path also loads arbitrary UCR CSV files.
+                check_finite(&ds.data, "dataset panel")?;
+                (
+                    Some(Arc::new(ds.data)),
+                    None,
+                    Some(ds.labels),
+                    Some(ds.n_classes.max(1)),
+                )
+            }
+            Source::Panel(m) => {
+                if m.rows < 4 {
+                    return Err(TmfgError::invalid(format!(
+                        "TMFG needs at least 4 series, got {}",
+                        m.rows
+                    )));
+                }
+                if m.cols < 2 {
+                    return Err(TmfgError::invalid(format!(
+                        "panel needs at least 2 samples per series, got {}",
+                        m.cols
+                    )));
+                }
+                check_finite(&m, "panel")?;
+                (Some(m), None, None, None)
+            }
+            Source::Similarity(s) => {
+                // Shape rules live in one place (square, n >= 4).
+                crate::tmfg::common::validate_similarity(&s)?;
+                check_finite(&s, "similarity matrix")?;
+                (None, Some(s), None, None)
+            }
+        };
+        // Explicit options override what the dataset provided.
+        if self.labels.is_some() {
+            truth = self.labels;
+        }
+        if self.k.is_some() {
+            k = self.k;
+        }
+        let n = panel
+            .as_ref()
+            .map(|m| m.rows)
+            .or_else(|| similarity.as_ref().map(|s| s.rows))
+            .ok_or_else(|| TmfgError::invariant("request resolved to no input"))?;
+        if let Some(t) = &truth {
+            if t.len() != n {
+                return Err(TmfgError::invalid(format!(
+                    "labels length {} != n = {n}",
+                    t.len()
+                )));
+            }
+        }
+        if let Some(k) = k {
+            if k < 1 || k > n {
+                return Err(TmfgError::invalid(format!("k must be in 1..={n}, got {k}")));
+            }
+        }
+        // An engine is only needed when a panel must be reduced.
+        let engine = match (&panel, self.engine) {
+            (_, Some(e)) => Some(e),
+            (Some(_), None) if self.use_xla => {
+                Some(Arc::new(CorrEngine::auto(&self.artifacts_dir)))
+            }
+            (Some(_), None) => Some(Arc::new(CorrEngine::native_only())),
+            (None, None) => None,
+        };
+        let apsp_mode = self.apsp.unwrap_or_else(|| self.algo.default_apsp());
+        Ok(Plan::new(
+            self.algo,
+            apsp_mode,
+            self.linkage,
+            self.hub,
+            self.check_invariants,
+            k,
+            truth,
+            n,
+            panel,
+            similarity,
+            engine,
+        ))
+    }
+
+    /// Build the plan and run it to completion.
+    pub fn run(self) -> Result<ClusterOutput, TmfgError> {
+        self.build()?.finish()
+    }
+}
+
+fn check_finite(m: &Matrix, what: &str) -> Result<(), TmfgError> {
+    if let Some(pos) = m.data.iter().position(|v| !v.is_finite()) {
+        return Err(TmfgError::invalid(format!(
+            "non-finite value {} in {what} at row {} col {}",
+            m.data[pos],
+            pos / m.cols.max(1),
+            pos % m.cols.max(1)
+        )));
+    }
+    Ok(())
+}

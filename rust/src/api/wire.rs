@@ -1,0 +1,523 @@
+//! Versioned wire types for the TCP clustering service.
+//!
+//! One JSON object per line in, one per line out. [`Request::decode`] is
+//! the single validated parse path: every field is type-checked (no
+//! silent `unwrap_or` defaulting of malformed values), numeric payloads
+//! must be finite, unknown commands and algorithms are rejected, and an
+//! optional `v` field pins the protocol version. Error responses carry a
+//! human-readable `error` plus the stable machine-readable `code` from
+//! [`TmfgError::code`].
+
+use crate::error::TmfgError;
+use super::plan::TmfgAlgo;
+use crate::util::json::Json;
+
+/// Highest protocol version this build speaks. Requests may pin a
+/// version with `{"v": 1, ...}`; omitting it means "current".
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Upper bound on `open_stream` series count. A stream session keeps an
+/// n×n f64 cross-product matrix, so an unbounded `n` in one short
+/// request line would trigger an O(n²) allocation on the dispatcher
+/// thread; 4096 caps that state at ~128 MiB.
+pub const MAX_STREAM_SERIES: usize = 4096;
+
+/// Upper bound on the named-dataset `scale` factor (1.0 = paper sizes);
+/// keeps a one-line request from demanding an arbitrarily large
+/// synthetic dataset.
+pub const MAX_DATASET_SCALE: f64 = 10.0;
+
+/// Upper bound on the `open_stream` sliding-window length (ring buffers
+/// are O(n·window)).
+pub const MAX_STREAM_WINDOW: usize = 65_536;
+
+/// Upper bound on batch series count (inline panels *and* resolved
+/// named datasets) — the pipeline allocates O(n²) similarity/APSP
+/// matrices on the dispatcher thread. Larger workloads go through the
+/// CLI or the library API.
+pub const MAX_BATCH_SERIES: usize = MAX_STREAM_SERIES;
+
+/// A decoded wire request: the echoed `id`, the (validated) protocol
+/// version, and the typed command body.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: Json,
+    pub v: u64,
+    pub body: Command,
+}
+
+/// The service's command set.
+#[derive(Debug, Clone)]
+pub enum Command {
+    Ping,
+    Shutdown,
+    /// A batch clustering request (no `cmd` field).
+    Cluster(ClusterSpec),
+    OpenStream(StreamOpen),
+    /// One observation per series.
+    Tick(Vec<f32>),
+    CloseStream,
+}
+
+/// Where a batch request's data comes from.
+#[derive(Debug, Clone)]
+pub enum ClusterSource {
+    /// A registry dataset by name.
+    Named { name: String, scale: f64, seed: u64 },
+    /// An inline n×l panel, row-major.
+    Inline { n: usize, l: usize, data: Vec<f32> },
+}
+
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub source: ClusterSource,
+    /// None = service default algorithm.
+    pub algo: Option<TmfgAlgo>,
+    /// 0 = the dataset's own class count (named sources only).
+    pub k: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct StreamOpen {
+    pub n: usize,
+    pub window: usize,
+    pub k: usize,
+    pub algo: Option<TmfgAlgo>,
+    pub drift: Option<f32>,
+    pub warmup: Option<usize>,
+    pub max_refreshes: Option<u32>,
+}
+
+// ---- typed field extraction ------------------------------------------------
+
+fn opt_usize(j: &Json, key: &str) -> Result<Option<usize>, TmfgError> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => match v.as_usize() {
+            Some(x) => Ok(Some(x)),
+            None => Err(TmfgError::protocol(format!(
+                "field '{key}' must be a non-negative integer"
+            ))),
+        },
+    }
+}
+
+fn opt_finite_f64(j: &Json, key: &str) -> Result<Option<f64>, TmfgError> {
+    match j.get(key) {
+        Json::Null => Ok(None),
+        v => match v.as_f64() {
+            Some(x) if x.is_finite() => Ok(Some(x)),
+            _ => Err(TmfgError::protocol(format!(
+                "field '{key}' must be a finite number"
+            ))),
+        },
+    }
+}
+
+fn opt_algo(j: &Json) -> Result<Option<TmfgAlgo>, TmfgError> {
+    match j.get("algo") {
+        Json::Null => Ok(None),
+        v => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| TmfgError::protocol("field 'algo' must be a string"))?;
+            match TmfgAlgo::parse(s) {
+                Some(a) => Ok(Some(a)),
+                None => Err(TmfgError::protocol(format!("unknown algo '{s}'"))),
+            }
+        }
+    }
+}
+
+/// A finite f64 that stays finite as an f32 (payloads are stored f32;
+/// e.g. 1e300 is a finite f64 but casts to infinity).
+fn opt_finite_f32(j: &Json, key: &str) -> Result<Option<f32>, TmfgError> {
+    match opt_finite_f64(j, key)? {
+        None => Ok(None),
+        Some(x) => {
+            let f = x as f32;
+            if f.is_finite() {
+                Ok(Some(f))
+            } else {
+                Err(TmfgError::protocol(format!(
+                    "field '{key}' is non-finite in f32 (got {x})"
+                )))
+            }
+        }
+    }
+}
+
+/// `data` as finite f32s; rejects missing/non-array fields and any
+/// element that is non-numeric or non-finite (before or after the f32
+/// conversion).
+fn finite_data(j: &Json, key: &str) -> Result<Vec<f32>, TmfgError> {
+    let arr = j.get(key).as_arr().ok_or_else(|| {
+        TmfgError::protocol(format!("field '{key}' must be an array of numbers"))
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        match v.as_f64() {
+            Some(x) if x.is_finite() && (x as f32).is_finite() => out.push(x as f32),
+            _ => {
+                return Err(TmfgError::protocol(format!(
+                    "non-finite or non-numeric value at {key}[{i}]"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---- decode ---------------------------------------------------------------
+
+impl Request {
+    /// The single validated parse path from a JSON line to a typed
+    /// request.
+    pub fn decode(j: &Json) -> Result<Request, TmfgError> {
+        let id = j.get("id").clone();
+        let v = opt_usize(j, "v")?.map(|x| x as u64).unwrap_or(PROTOCOL_VERSION);
+        if v < 1 || v > PROTOCOL_VERSION {
+            return Err(TmfgError::protocol(format!(
+                "unsupported protocol version {v} (supported: 1..={PROTOCOL_VERSION})"
+            )));
+        }
+        let body = match j.get("cmd") {
+            Json::Null => Command::Cluster(decode_cluster(j)?),
+            cmd => {
+                let name = cmd
+                    .as_str()
+                    .ok_or_else(|| TmfgError::protocol("field 'cmd' must be a string"))?;
+                match name {
+                    "ping" => Command::Ping,
+                    "shutdown" => Command::Shutdown,
+                    "open_stream" => Command::OpenStream(decode_open_stream(j)?),
+                    "tick" => Command::Tick(finite_data(j, "data")?),
+                    "close_stream" => Command::CloseStream,
+                    other => {
+                        return Err(TmfgError::protocol(format!("unknown cmd '{other}'")))
+                    }
+                }
+            }
+        };
+        Ok(Request { id, v, body })
+    }
+}
+
+fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
+    let algo = opt_algo(j)?;
+    let k = opt_usize(j, "k")?.unwrap_or(0);
+    let source = match j.get("dataset") {
+        Json::Null => {
+            let n = opt_usize(j, "n")?
+                .ok_or_else(|| TmfgError::protocol("missing n (or dataset name)"))?;
+            if n > MAX_BATCH_SERIES {
+                return Err(TmfgError::protocol(format!(
+                    "n must be <= {MAX_BATCH_SERIES} for inline data, got {n}"
+                )));
+            }
+            let l = opt_usize(j, "l")?.ok_or_else(|| TmfgError::protocol("missing l"))?;
+            let data = finite_data(j, "data")?;
+            // checked: a huge n must not wrap n*l past the length check
+            // (in release the wrapped product could match data.len() and
+            // reach allocation with absurd dimensions).
+            let expected = n.checked_mul(l).ok_or_else(|| {
+                TmfgError::protocol(format!("n*l overflows: n={n}, l={l}"))
+            })?;
+            if data.len() != expected {
+                return Err(TmfgError::protocol(format!(
+                    "data length {} != n*l = {expected}",
+                    data.len(),
+                )));
+            }
+            if k == 0 {
+                return Err(TmfgError::protocol("inline data requires k"));
+            }
+            ClusterSource::Inline { n, l, data }
+        }
+        v => {
+            let name = v
+                .as_str()
+                .ok_or_else(|| TmfgError::protocol("field 'dataset' must be a string"))?;
+            // Registry names only. The registry also resolves '/'-ish
+            // names and '.csv' suffixes as filesystem paths — a remote
+            // client must not be able to make the server read arbitrary
+            // local files.
+            if name.contains('/') || name.contains('\\') || name.ends_with(".csv") {
+                return Err(TmfgError::protocol(format!(
+                    "dataset must be a registry name, not a file path: '{name}'"
+                )));
+            }
+            let scale = opt_finite_f64(j, "scale")?.unwrap_or(0.05);
+            if !(0.0..=MAX_DATASET_SCALE).contains(&scale) {
+                return Err(TmfgError::protocol(format!(
+                    "scale must be in 0..={MAX_DATASET_SCALE}, got {scale}"
+                )));
+            }
+            // Resolve the would-be series count without generating the
+            // dataset: 'demo-N' encodes n in the name and big registry
+            // datasets at large scales can exceed the service's O(n²)
+            // budget even under the scale cap. Unknown names fall through
+            // to a dataset_not_found error at run time.
+            if let Some(n) = crate::coordinator::registry::dataset_size(name, scale) {
+                if n > MAX_BATCH_SERIES {
+                    return Err(TmfgError::protocol(format!(
+                        "dataset '{name}' resolves to n={n} > {MAX_BATCH_SERIES}; \
+                         reduce scale or use the CLI/library for large runs"
+                    )));
+                }
+            }
+            ClusterSource::Named {
+                name: name.to_string(),
+                scale,
+                seed: opt_usize(j, "seed")?.unwrap_or(1) as u64,
+            }
+        }
+    };
+    Ok(ClusterSpec { source, algo, k })
+}
+
+fn decode_open_stream(j: &Json) -> Result<StreamOpen, TmfgError> {
+    let n = opt_usize(j, "n")?
+        .ok_or_else(|| TmfgError::protocol("open_stream requires n (number of series)"))?;
+    // Session state is O(n²); reject absurd n at the protocol boundary
+    // before any allocation happens on the dispatcher thread.
+    if n > MAX_STREAM_SERIES {
+        return Err(TmfgError::protocol(format!(
+            "n must be <= {MAX_STREAM_SERIES} for streaming, got {n}"
+        )));
+    }
+    let window = opt_usize(j, "window")?.unwrap_or(64);
+    if window > MAX_STREAM_WINDOW {
+        return Err(TmfgError::protocol(format!(
+            "window must be <= {MAX_STREAM_WINDOW}, got {window}"
+        )));
+    }
+    Ok(StreamOpen {
+        n,
+        window,
+        k: opt_usize(j, "k")?.unwrap_or(2),
+        algo: opt_algo(j)?,
+        drift: opt_finite_f32(j, "drift")?,
+        warmup: opt_usize(j, "warmup")?,
+        max_refreshes: match opt_usize(j, "max_refreshes")? {
+            // checked: wrapping to u32 could flip the policy (0 means
+            // "unlimited refreshes", the opposite of a cadence cap)
+            Some(m) if m > u32::MAX as usize => {
+                return Err(TmfgError::protocol(format!(
+                    "max_refreshes must be <= {}, got {m}",
+                    u32::MAX
+                )))
+            }
+            m => m.map(|m| m as u32),
+        },
+    })
+}
+
+// ---- encode ---------------------------------------------------------------
+
+/// An `{"ok": true}` response echoing the request id, plus extra fields.
+pub fn ok_response(id: &Json, fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("id", id.clone()), ("ok", Json::Bool(true))];
+    pairs.extend(fields);
+    Json::obj(pairs)
+}
+
+/// An `{"ok": false}` response with the human-readable message and the
+/// stable machine code.
+pub fn error_response(id: &Json, err: &TmfgError) -> Json {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(&err.to_string())),
+        ("code", Json::str(err.code())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn decodes_named_cluster_request() {
+        let r = Request::decode(&parse(
+            r#"{"id": 7, "dataset": "CBF", "scale": 0.1, "seed": 3, "algo": "heap", "k": 2}"#,
+        ))
+        .unwrap();
+        assert_eq!(r.v, PROTOCOL_VERSION);
+        let Command::Cluster(spec) = r.body else { panic!("not a cluster") };
+        assert_eq!(spec.k, 2);
+        assert_eq!(spec.algo, Some(TmfgAlgo::Heap));
+        let ClusterSource::Named { name, scale, seed } = spec.source else {
+            panic!("not named")
+        };
+        assert_eq!(name, "CBF");
+        assert_eq!(scale, 0.1);
+        assert_eq!(seed, 3);
+    }
+
+    #[test]
+    fn decodes_inline_cluster_request() {
+        let r = Request::decode(&parse(
+            r#"{"n": 2, "l": 2, "data": [1, 2, 3, 4], "k": 1}"#,
+        ))
+        .unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        let ClusterSource::Inline { n, l, data } = spec.source else { panic!() };
+        assert_eq!((n, l), (2, 2));
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn rejects_non_numeric_k() {
+        let e = Request::decode(&parse(r#"{"dataset": "CBF", "k": "three"}"#)).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("'k'"), "{e}");
+    }
+
+    #[test]
+    fn rejects_wrong_data_length() {
+        let e = Request::decode(&parse(r#"{"n": 2, "l": 3, "data": [1, 2], "k": 1}"#))
+            .unwrap_err();
+        assert!(e.to_string().contains("data length"), "{e}");
+    }
+
+    #[test]
+    fn rejects_overflowing_n_times_l() {
+        // A huge l would wrap n*l in release and could sneak a payload
+        // past the length check (n itself is bounded by the inline cap,
+        // so l is the only remaining overflow driver).
+        let line = format!(
+            r#"{{"n": 4096, "l": {}, "data": [], "k": 1}}"#,
+            1u64 << 61
+        );
+        let e = Request::decode(&parse(&line)).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("overflow"), "{e}");
+    }
+
+    #[test]
+    fn rejects_non_finite_data() {
+        // 1e999 overflows f64 parsing to infinity.
+        let e = Request::decode(&parse(r#"{"n": 1, "l": 2, "data": [1, 1e999], "k": 1}"#))
+            .unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
+        let e2 = Request::decode(&parse(
+            r#"{"cmd": "tick", "data": [null, 1.0]}"#,
+        ))
+        .unwrap_err();
+        assert!(e2.to_string().contains("non-finite"), "{e2}");
+    }
+
+    #[test]
+    fn rejects_unknown_cmd_and_algo() {
+        let e = Request::decode(&parse(r#"{"cmd": "bogus"}"#)).unwrap_err();
+        assert!(e.to_string().contains("unknown cmd"), "{e}");
+        let e2 = Request::decode(&parse(r#"{"dataset": "CBF", "algo": "quantum"}"#))
+            .unwrap_err();
+        assert!(e2.to_string().contains("unknown algo"), "{e2}");
+    }
+
+    #[test]
+    fn rejects_unsupported_version_accepts_current() {
+        let e = Request::decode(&parse(r#"{"v": 99, "cmd": "ping"}"#)).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+        let r = Request::decode(&parse(r#"{"v": 1, "cmd": "ping"}"#)).unwrap();
+        assert!(matches!(r.body, Command::Ping));
+    }
+
+    #[test]
+    fn inline_requires_k() {
+        let e = Request::decode(&parse(r#"{"n": 2, "l": 2, "data": [1, 2, 3, 4]}"#))
+            .unwrap_err();
+        assert!(e.to_string().contains("requires k"), "{e}");
+    }
+
+    #[test]
+    fn open_stream_decode_and_validation() {
+        let r = Request::decode(&parse(
+            r#"{"cmd": "open_stream", "n": 8, "window": 16, "k": 2, "drift": 0.2}"#,
+        ))
+        .unwrap();
+        let Command::OpenStream(o) = r.body else { panic!() };
+        assert_eq!((o.n, o.window, o.k), (8, 16, 2));
+        assert_eq!(o.drift, Some(0.2));
+        assert!(Request::decode(&parse(r#"{"cmd": "open_stream"}"#)).is_err());
+    }
+
+    #[test]
+    fn file_path_dataset_names_rejected() {
+        for name in ["/data/huge.csv", "../secrets.csv", "foo/bar", "x.csv", r"a\b"] {
+            let line = format!(r#"{{"dataset": "{}"}}"#, name.replace('\\', "\\\\"));
+            let e = Request::decode(&parse(&line)).unwrap_err();
+            assert_eq!(e.code(), "protocol", "{name}");
+            assert!(e.to_string().contains("registry name"), "{name}: {e}");
+        }
+        // plain registry names still pass
+        assert!(Request::decode(&parse(r#"{"dataset": "CBF"}"#)).is_ok());
+    }
+
+    #[test]
+    fn max_refreshes_overflow_rejected() {
+        let e = Request::decode(&parse(
+            r#"{"cmd": "open_stream", "n": 8, "max_refreshes": 4294967296}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("max_refreshes"), "{e}");
+    }
+
+    #[test]
+    fn resource_limits_rejected_at_decode() {
+        // open_stream n is capped: session state is O(n²)
+        let e = Request::decode(&parse(
+            r#"{"cmd": "open_stream", "n": 100000000}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        let e = Request::decode(&parse(
+            r#"{"cmd": "open_stream", "n": 8, "window": 10000000}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        // dataset scale is capped
+        let e = Request::decode(&parse(r#"{"dataset": "CBF", "scale": 1000000.0}"#))
+            .unwrap_err();
+        assert!(e.to_string().contains("scale"), "{e}");
+        // inline batch n is capped like the stream path (O(n²) pipeline
+        // allocations on the dispatcher)
+        let e = Request::decode(&parse(
+            r#"{"n": 30000, "l": 2, "data": [], "k": 2}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("inline"), "{e}");
+    }
+
+    #[test]
+    fn f32_overflowing_values_rejected() {
+        // 1e300 is a finite f64 but infinity as f32 — both the stream
+        // drift knob and data payloads must reject it.
+        let e = Request::decode(&parse(
+            r#"{"cmd": "open_stream", "n": 8, "drift": 1e300}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        let e = Request::decode(&parse(
+            r#"{"n": 4, "l": 1, "data": [1e300, 1, 2, 3], "k": 2}"#,
+        ))
+        .unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
+    }
+
+    #[test]
+    fn error_response_carries_code() {
+        let j = error_response(&Json::Num(5.0), &TmfgError::StreamClosed);
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        assert_eq!(j.get("code").as_str(), Some("stream_closed"));
+        assert_eq!(j.get("id").as_usize(), Some(5));
+    }
+}

@@ -92,7 +92,7 @@ mod tests {
         use crate::data::synth::SynthSpec;
         let ds = SynthSpec::new("t", 50, 48, 3).generate(2);
         let s = crate::data::corr::pearson_correlation(&ds.data);
-        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default()).unwrap();
         let g = CsrGraph::from_tmfg(&r, &s);
         assert_eq!(g.n, 50);
         assert_eq!(g.n_edges(), 3 * 50 - 6);

@@ -149,7 +149,7 @@ mod tests {
     fn tmfg_graph(n: usize, seed: u64) -> CsrGraph {
         let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
         let s = crate::data::corr::pearson_correlation(&ds.data);
-        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default()).unwrap();
         CsrGraph::from_tmfg(&r, &s)
     }
 

@@ -1,17 +1,22 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation section (§5) on the synthetic Table-1 mirror datasets.
 //! Each experiment prints the same rows/series the paper reports and
-//! writes a CSV under `results/`.
+//! writes a CSV under `results/`. All experiments drive the typed staged
+//! API ([`crate::api::ClusterRequest`] / [`crate::api::Plan`]) directly
+//! and are fallible — unknown datasets and IO failures surface as
+//! [`TmfgError`] instead of panics.
 
-use super::pipeline::{ApspMode, Pipeline, PipelineConfig, TmfgAlgo};
 use super::registry;
+use crate::api::{ApspMode, ClusterOutput, ClusterRequest, TmfgAlgo, TmfgError};
 use crate::data::corr::pearson_correlation;
 use crate::data::matrix::Matrix;
 use crate::data::synth::Dataset;
 use crate::dbht::Linkage;
+use crate::metrics::adjusted_rand_index;
 use crate::parlay;
 use crate::util::timer::Timer;
 use std::io::Write;
+use std::sync::Arc;
 
 /// Shared experiment options.
 #[derive(Debug, Clone)]
@@ -64,19 +69,21 @@ impl ExpOpts {
     }
 }
 
-fn write_csv(opts: &ExpOpts, name: &str, header: &str, rows: &[Vec<String>]) {
+fn write_csv(
+    opts: &ExpOpts,
+    name: &str,
+    header: &str,
+    rows: &[Vec<String>],
+) -> Result<(), TmfgError> {
     std::fs::create_dir_all(&opts.out_dir).ok();
     let path = format!("{}/{}.csv", opts.out_dir, name);
-    let mut f = std::fs::File::create(&path).expect("create csv");
-    writeln!(f, "{header}").unwrap();
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
     for r in rows {
-        writeln!(f, "{}", r.join(",")).unwrap();
+        writeln!(f, "{}", r.join(","))?;
     }
     println!("wrote {path}");
-}
-
-fn pipeline_for(algo: TmfgAlgo) -> Pipeline {
-    Pipeline::new(PipelineConfig { algo, use_xla: false, ..Default::default() })
+    Ok(())
 }
 
 /// The methods compared in the runtime/quality figures.
@@ -90,25 +97,64 @@ fn fig2_algos() -> Vec<TmfgAlgo> {
     ]
 }
 
-fn load(opts: &ExpOpts, name: &str) -> Dataset {
+fn load(opts: &ExpOpts, name: &str) -> Result<Dataset, TmfgError> {
     registry::get_dataset(name, opts.scale, opts.seed)
-        .unwrap_or_else(|| panic!("unknown dataset {name}"))
+        .ok_or_else(|| TmfgError::DatasetNotFound(name.to_string()))
 }
 
-/// Similarity matrices are the paper's *input*; compute once per dataset.
-fn similarity(ds: &Dataset) -> Matrix {
-    pearson_correlation(&ds.data)
+/// Similarity matrices are the paper's *input*; compute once per dataset
+/// and share (`Arc`) across every algorithm's request — no per-run copy.
+fn similarity(ds: &Dataset) -> Arc<Matrix> {
+    Arc::new(pearson_correlation(&ds.data))
+}
+
+/// One full run from a precomputed similarity through the staged API.
+fn run_algo(algo: TmfgAlgo, s: &Arc<Matrix>, ds: &Dataset) -> Result<ClusterOutput, TmfgError> {
+    run_algo_linkage(algo, s, ds, Linkage::Complete)
+}
+
+fn run_algo_linkage(
+    algo: TmfgAlgo,
+    s: &Arc<Matrix>,
+    ds: &Dataset,
+    linkage: Linkage,
+) -> Result<ClusterOutput, TmfgError> {
+    ClusterRequest::similarity(s.clone())
+        .algo(algo)
+        .linkage(linkage)
+        .labels(ds.labels.clone())
+        .k(ds.n_classes.max(1))
+        .run()
+}
+
+/// Like [`run_algo`], but times only the pipeline stages: request
+/// validation happens while building the plan, *before* the stopwatch
+/// starts, so the runtime/scaling figures measure the same work the
+/// paper's do.
+fn run_algo_timed(
+    algo: TmfgAlgo,
+    s: &Arc<Matrix>,
+    ds: &Dataset,
+) -> Result<(ClusterOutput, f64), TmfgError> {
+    let plan = ClusterRequest::similarity(s.clone())
+        .algo(algo)
+        .labels(ds.labels.clone())
+        .k(ds.n_classes.max(1))
+        .build()?;
+    let t = Timer::start();
+    let out = plan.finish()?;
+    Ok((out, t.elapsed()))
 }
 
 // ---------------------------------------------------------------------------
 // Table 1
 // ---------------------------------------------------------------------------
-pub fn table1(opts: &ExpOpts) {
+pub fn table1(opts: &ExpOpts) -> Result<(), TmfgError> {
     println!("\n== Table 1: datasets (scale {}) ==", opts.scale);
     println!("{:<4} {:<28} {:>7} {:>6} {:>8}", "ID", "Name", "n", "L", "classes");
     let mut rows = Vec::new();
     for (i, name) in registry::table1_names().iter().enumerate() {
-        let ds = load(opts, name);
+        let ds = load(opts, name)?;
         println!(
             "{:<4} {:<28} {:>7} {:>6} {:>8}",
             i + 1,
@@ -125,13 +171,13 @@ pub fn table1(opts: &ExpOpts) {
             ds.n_classes.to_string(),
         ]);
     }
-    write_csv(opts, "table1", "id,name,n,L,classes", &rows);
+    write_csv(opts, "table1", "id,name,n,L,classes", &rows)
 }
 
 // ---------------------------------------------------------------------------
 // Fig 2: parallel runtime of all methods per dataset
 // ---------------------------------------------------------------------------
-pub fn fig2(opts: &ExpOpts) {
+pub fn fig2(opts: &ExpOpts) -> Result<(), TmfgError> {
     println!("\n== Fig 2: parallel runtime (s) of TMFG-DBHT methods ==");
     let names = opts.dataset_names(registry::table1_names());
     let algos = fig2_algos();
@@ -142,18 +188,13 @@ pub fn fig2(opts: &ExpOpts) {
     println!();
     let mut rows = Vec::new();
     for name in &names {
-        let ds = load(opts, name);
+        let ds = load(opts, name)?;
         let s = similarity(&ds);
         print!("{:<28}", format!("{}(n={})", ds.name, ds.n()));
         let mut row = vec![ds.name.clone(), ds.n().to_string()];
         for algo in &algos {
-            let p = pipeline_for(*algo);
-            let t = Timer::start();
-            let out = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
-            let secs = t.elapsed();
-            let _ = out;
+            let (_out, secs) = run_algo_timed(*algo, &s, &ds)?;
             print!(" {:>14.4}", secs);
-            use std::io::Write as _;
             std::io::stdout().flush().ok();
             row.push(format!("{secs:.6}"));
         }
@@ -164,13 +205,13 @@ pub fn fig2(opts: &ExpOpts) {
         "dataset,n,{}",
         algos.iter().map(|a| a.name()).collect::<Vec<_>>().join(",")
     );
-    write_csv(opts, "fig2_runtime", &header, &rows);
+    write_csv(opts, "fig2_runtime", &header, &rows)
 }
 
 // ---------------------------------------------------------------------------
 // Figs 3 & 4: self-relative speedup on the three largest datasets
 // ---------------------------------------------------------------------------
-fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) {
+fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) -> Result<(), TmfgError> {
     println!(
         "\n== Self-relative speedup of {} on the 3 largest datasets ==",
         algo.name()
@@ -182,16 +223,13 @@ fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) {
     println!("{:<28} {:>8} {:>10} {:>9}", "dataset", "threads", "secs", "speedup");
     let mut rows = Vec::new();
     for name in &names {
-        let ds = load(opts, name);
+        let ds = load(opts, name)?;
         let s = similarity(&ds);
         let mut base = None;
         for &t in &sweep {
-            let secs = parlay::with_threads(t, || {
-                let p = pipeline_for(algo);
-                let timer = Timer::start();
-                let _ = p.run_similarity(&s, Some(&ds.labels), ds.n_classes);
-                timer.elapsed()
-            });
+            let secs = parlay::with_threads(t, || -> Result<f64, TmfgError> {
+                run_algo_timed(algo, &s, &ds).map(|(_, secs)| secs)
+            })?;
             let b = *base.get_or_insert(secs);
             println!("{:<28} {:>8} {:>10.4} {:>9.2}", ds.name, t, secs, b / secs);
             rows.push(vec![
@@ -202,24 +240,24 @@ fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) {
             ]);
         }
     }
-    write_csv(opts, csv, "dataset,threads,secs,speedup", &rows);
+    write_csv(opts, csv, "dataset,threads,secs,speedup", &rows)
 }
 
-pub fn fig3(opts: &ExpOpts) {
-    scaling(opts, TmfgAlgo::Opt, "fig3_scaling_opt");
+pub fn fig3(opts: &ExpOpts) -> Result<(), TmfgError> {
+    scaling(opts, TmfgAlgo::Opt, "fig3_scaling_opt")
 }
 
-pub fn fig4(opts: &ExpOpts) {
-    scaling(opts, TmfgAlgo::Par(10), "fig4_scaling_par10");
+pub fn fig4(opts: &ExpOpts) -> Result<(), TmfgError> {
+    scaling(opts, TmfgAlgo::Par(10), "fig4_scaling_par10")
 }
 
 // ---------------------------------------------------------------------------
 // Fig 5: stage breakdown on Crop (max threads and 1 thread)
 // ---------------------------------------------------------------------------
-pub fn fig5(opts: &ExpOpts) {
+pub fn fig5(opts: &ExpOpts) -> Result<(), TmfgError> {
     let names = opts.dataset_names(vec!["Crop".to_string()]);
     let name = &names[0];
-    let ds = load(opts, name);
+    let ds = load(opts, name)?;
     let s = similarity(&ds);
     let algos = fig2_algos();
     let mut rows = Vec::new();
@@ -235,9 +273,8 @@ pub fn fig5(opts: &ExpOpts) {
             "method", "init-faces", "sort", "add-verts", "apsp", "dbht", "total"
         );
         for algo in &algos {
-            let out = parlay::with_threads(threads, || {
-                pipeline_for(*algo).run_similarity(&s, Some(&ds.labels), ds.n_classes)
-            });
+            let out =
+                parlay::with_threads(threads, || run_algo(*algo, &s, &ds))?;
             let g = |k: &str| out.breakdown.get(k).unwrap_or(0.0);
             println!(
                 "{:<16} {:>12.4} {:>12.4} {:>12.4} {:>10.4} {:>10.4} {:>10.4}",
@@ -266,13 +303,13 @@ pub fn fig5(opts: &ExpOpts) {
         "fig5_breakdown",
         "method,threads,init_faces,sort,add_vertices,apsp,dbht,total",
         &rows,
-    );
+    )
 }
 
 // ---------------------------------------------------------------------------
 // Fig 6: ARI of every method per dataset
 // ---------------------------------------------------------------------------
-pub fn fig6(opts: &ExpOpts) {
+pub fn fig6(opts: &ExpOpts) -> Result<(), TmfgError> {
     println!("\n== Fig 6: ARI scores ==");
     let names = opts.dataset_names(registry::table1_names());
     let mut algos = fig2_algos();
@@ -285,16 +322,15 @@ pub fn fig6(opts: &ExpOpts) {
     let mut rows = Vec::new();
     let mut sums = vec![0.0f64; algos.len()];
     for name in &names {
-        let ds = load(opts, name);
+        let ds = load(opts, name)?;
         let s = similarity(&ds);
         print!("{:<28}", ds.name);
         let mut row = vec![ds.name.clone()];
         for (i, algo) in algos.iter().enumerate() {
-            let out = pipeline_for(*algo).run_similarity(&s, Some(&ds.labels), ds.n_classes);
-            let ari = out.ari.unwrap();
+            let out = run_algo(*algo, &s, &ds)?;
+            let ari = out.ari.unwrap_or(f64::NAN);
             sums[i] += ari;
             print!(" {:>14.3}", ari);
-            use std::io::Write as _;
             std::io::stdout().flush().ok();
             row.push(format!("{ari:.4}"));
         }
@@ -314,13 +350,13 @@ pub fn fig6(opts: &ExpOpts) {
         "dataset,{}",
         algos.iter().map(|a| a.name()).collect::<Vec<_>>().join(",")
     );
-    write_csv(opts, "fig6_ari", &header, &rows);
+    write_csv(opts, "fig6_ari", &header, &rows)
 }
 
 // ---------------------------------------------------------------------------
 // Fig 7: percent edge-sum reduction vs PAR-TDBHT-1
 // ---------------------------------------------------------------------------
-pub fn fig7(opts: &ExpOpts) {
+pub fn fig7(opts: &ExpOpts) -> Result<(), TmfgError> {
     println!("\n== Fig 7: % edge-sum reduction vs par-tdbht-1 (lower = better) ==");
     let names = opts.dataset_names(registry::table1_names());
     let algos = vec![TmfgAlgo::Par(10), TmfgAlgo::Par(200), TmfgAlgo::Corr, TmfgAlgo::Heap];
@@ -331,17 +367,13 @@ pub fn fig7(opts: &ExpOpts) {
     println!();
     let mut rows = Vec::new();
     for name in &names {
-        let ds = load(opts, name);
+        let ds = load(opts, name)?;
         let s = similarity(&ds);
-        let base = pipeline_for(TmfgAlgo::Par(1))
-            .run_similarity(&s, Some(&ds.labels), ds.n_classes)
-            .edge_sum;
+        let base = run_algo(TmfgAlgo::Par(1), &s, &ds)?.edge_sum;
         print!("{:<28}", ds.name);
         let mut row = vec![ds.name.clone()];
         for algo in &algos {
-            let es = pipeline_for(*algo)
-                .run_similarity(&s, Some(&ds.labels), ds.n_classes)
-                .edge_sum;
+            let es = run_algo(*algo, &s, &ds)?.edge_sum;
             let pct = crate::metrics::edge_sum_reduction_pct(base, es);
             print!(" {:>14.3}", pct);
             row.push(format!("{pct:.5}"));
@@ -353,72 +385,83 @@ pub fn fig7(opts: &ExpOpts) {
         "dataset,{}",
         algos.iter().map(|a| a.name()).collect::<Vec<_>>().join(",")
     );
-    write_csv(opts, "fig7_edgesum", &header, &rows);
+    write_csv(opts, "fig7_edgesum", &header, &rows)
 }
 
 // ---------------------------------------------------------------------------
 // §5.1 extra: exact vs approximate APSP
 // ---------------------------------------------------------------------------
-pub fn apsp_speedup(opts: &ExpOpts) {
-    println!("\n== §5.1: exact vs approximate APSP (OPT pipeline) ==");
+/// Uses the staged [`crate::api::Plan`] executor: each dataset's TMFG is
+/// constructed once and reused across both APSP modes via
+/// [`crate::api::Plan::set_apsp_mode`] — exactly the stage reuse the
+/// typed API exists for.
+pub fn apsp_speedup(opts: &ExpOpts) -> Result<(), TmfgError> {
+    println!("\n== §5.1: exact vs approximate APSP (OPT pipeline, shared TMFG) ==");
     let names = opts.dataset_names(registry::table1_names());
-    println!("{:<28} {:>10} {:>10} {:>9} {:>9} {:>9}", "dataset", "exact_s", "approx_s", "speedup", "ari_ex", "ari_ap");
+    println!(
+        "{:<28} {:>10} {:>10} {:>9} {:>9} {:>9}",
+        "dataset", "exact_s", "approx_s", "speedup", "ari_ex", "ari_ap"
+    );
     let mut rows = Vec::new();
     for name in &names {
-        let ds = load(opts, name);
+        let ds = load(opts, name)?;
         let s = similarity(&ds);
-        let run = |mode: ApspMode| {
-            let mut c = PipelineConfig {
-                algo: TmfgAlgo::Opt,
-                use_xla: false,
-                ..Default::default()
-            };
-            c.apsp = Some(mode);
-            let out = Pipeline::new(c).run_similarity(&s, Some(&ds.labels), ds.n_classes);
-            (out.breakdown.get("apsp").unwrap_or(0.0), out.ari.unwrap())
-        };
-        let (te, ae) = run(ApspMode::Exact);
-        let (ta, aa) = run(ApspMode::Approx);
+        let k = ds.n_classes.max(1);
+        let mut plan = ClusterRequest::similarity(s)
+            .algo(TmfgAlgo::Opt)
+            .k(k)
+            .build()?;
+        plan.run_tmfg()?; // built once, reused under both APSP modes
+        let mut secs = [0.0f64; 2];
+        let mut aris = [0.0f64; 2];
+        for (i, mode) in [ApspMode::Exact, ApspMode::Approx].into_iter().enumerate() {
+            plan.set_apsp_mode(mode);
+            let t = Timer::start();
+            plan.run_apsp()?;
+            secs[i] = t.elapsed();
+            let pred = plan.run_cut(k)?.to_vec();
+            aris[i] = adjusted_rand_index(&ds.labels, &pred);
+        }
+        let (te, ta) = (secs[0], secs[1]);
         println!(
             "{:<28} {:>10.4} {:>10.4} {:>9.2} {:>9.3} {:>9.3}",
             ds.name,
             te,
             ta,
             te / ta.max(1e-12),
-            ae,
-            aa
+            aris[0],
+            aris[1]
         );
         rows.push(vec![
             ds.name.clone(),
             format!("{te:.6}"),
             format!("{ta:.6}"),
             format!("{:.3}", te / ta.max(1e-12)),
-            format!("{ae:.4}"),
-            format!("{aa:.4}"),
+            format!("{:.4}", aris[0]),
+            format!("{:.4}", aris[1]),
         ]);
     }
-    write_csv(opts, "apsp_speedup", "dataset,exact_s,approx_s,speedup,ari_exact,ari_approx", &rows);
+    write_csv(
+        opts,
+        "apsp_speedup",
+        "dataset,exact_s,approx_s,speedup,ari_exact,ari_approx",
+        &rows,
+    )
 }
 
 /// Linkage ablation (DESIGN.md calls this out as a design choice).
-pub fn ablation_linkage(opts: &ExpOpts) {
+pub fn ablation_linkage(opts: &ExpOpts) -> Result<(), TmfgError> {
     println!("\n== Ablation: linkage function in DBHT (OPT pipeline) ==");
     let names = opts.dataset_names(vec!["CBF".into(), "ECG5000".into(), "ShapesAll".into()]);
     println!("{:<28} {:>10} {:>10} {:>10}", "dataset", "complete", "average", "single");
     let mut rows = Vec::new();
     for name in &names {
-        let ds = load(opts, name);
+        let ds = load(opts, name)?;
         let s = similarity(&ds);
         let mut aris = Vec::new();
         for linkage in [Linkage::Complete, Linkage::Average, Linkage::Single] {
-            let c = PipelineConfig {
-                algo: TmfgAlgo::Opt,
-                linkage,
-                use_xla: false,
-                ..Default::default()
-            };
-            let out = Pipeline::new(c).run_similarity(&s, Some(&ds.labels), ds.n_classes);
-            aris.push(out.ari.unwrap());
+            let out = run_algo_linkage(TmfgAlgo::Opt, &s, &ds, linkage)?;
+            aris.push(out.ari.unwrap_or(f64::NAN));
         }
         println!(
             "{:<28} {:>10.3} {:>10.3} {:>10.3}",
@@ -431,20 +474,20 @@ pub fn ablation_linkage(opts: &ExpOpts) {
             format!("{:.4}", aris[2]),
         ]);
     }
-    write_csv(opts, "ablation_linkage", "dataset,complete,average,single", &rows);
+    write_csv(opts, "ablation_linkage", "dataset,complete,average,single", &rows)
 }
 
 /// Run every experiment (the full evaluation section).
-pub fn all(opts: &ExpOpts) {
-    table1(opts);
-    fig2(opts);
-    fig3(opts);
-    fig4(opts);
-    fig5(opts);
-    fig6(opts);
-    fig7(opts);
-    apsp_speedup(opts);
-    ablation_linkage(opts);
+pub fn all(opts: &ExpOpts) -> Result<(), TmfgError> {
+    table1(opts)?;
+    fig2(opts)?;
+    fig3(opts)?;
+    fig4(opts)?;
+    fig5(opts)?;
+    fig6(opts)?;
+    fig7(opts)?;
+    apsp_speedup(opts)?;
+    ablation_linkage(opts)
 }
 
 #[cfg(test)]
@@ -464,14 +507,14 @@ mod tests {
     #[test]
     fn fig2_smoke() {
         let o = tiny_opts();
-        fig2(&o);
+        fig2(&o).unwrap();
         assert!(std::path::Path::new(&format!("{}/fig2_runtime.csv", o.out_dir)).exists());
     }
 
     #[test]
     fn fig3_smoke() {
         let o = tiny_opts();
-        fig3(&o);
+        fig3(&o).unwrap();
         let text = std::fs::read_to_string(format!("{}/fig3_scaling_opt.csv", o.out_dir)).unwrap();
         assert!(text.lines().count() >= 3, "{text}");
     }
@@ -479,11 +522,27 @@ mod tests {
     #[test]
     fn fig6_and_7_smoke() {
         let o = tiny_opts();
-        fig6(&o);
-        fig7(&o);
+        fig6(&o).unwrap();
+        fig7(&o).unwrap();
         let t6 = std::fs::read_to_string(format!("{}/fig6_ari.csv", o.out_dir)).unwrap();
         assert!(t6.contains("AVERAGE"));
         let t7 = std::fs::read_to_string(format!("{}/fig7_edgesum.csv", o.out_dir)).unwrap();
         assert!(t7.contains("CBF"));
+    }
+
+    #[test]
+    fn apsp_speedup_shares_one_tmfg() {
+        let o = tiny_opts();
+        apsp_speedup(&o).unwrap();
+        let t = std::fs::read_to_string(format!("{}/apsp_speedup.csv", o.out_dir)).unwrap();
+        assert!(t.contains("CBF"));
+    }
+
+    #[test]
+    fn unknown_dataset_is_err() {
+        let mut o = tiny_opts();
+        o.datasets = vec!["NoSuchDataset".into()];
+        let e = fig2(&o).unwrap_err();
+        assert_eq!(e.code(), "dataset_not_found");
     }
 }

@@ -1,64 +1,29 @@
-//! The TMFG-DBHT pipeline with stage timing (the paper's Fig. 5 stages:
-//! finding initial faces, initial sorting of correlations, TMFG vertex
-//! adding, APSP, DBHT — plus our explicit similarity stage, which the
-//! paper assumes precomputed).
+//! The TMFG-DBHT pipeline — now a thin compatibility facade over the
+//! typed staged API in [`crate::api`].
+//!
+//! `Pipeline` predates the [`crate::api::ClusterRequest`] builder and is
+//! kept for callers that configure once and run many datasets through a
+//! shared similarity engine. Internally every run builds an
+//! [`crate::api::Plan`] (the paper's Fig. 5 stage chain: finding initial
+//! faces, initial sorting of correlations, TMFG vertex adding, APSP,
+//! DBHT — plus our explicit similarity stage) and executes it to
+//! completion; all methods are fallible and return [`TmfgError`] instead
+//! of panicking. New code should prefer `ClusterRequest` directly.
 
-use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
+pub use crate::api::plan::{build_tmfg_for, ApspMode, ClusterOutput, TmfgAlgo};
+use crate::api::{ClusterRequest, TmfgError};
+use crate::apsp::HubConfig;
 use crate::data::matrix::Matrix;
 use crate::data::synth::Dataset;
-use crate::dbht::hierarchy::{dbht_dendrogram, DbhtResult};
 use crate::dbht::Linkage;
-use crate::metrics::adjusted_rand_index;
-use crate::runtime::engine::{CorrEngine, CorrPath};
+use crate::runtime::engine::CorrEngine;
 use crate::stream::session::{StreamConfig, StreamSession, TickOutput};
-use crate::tmfg::{corr_tmfg, heap_tmfg, orig_tmfg, ScanKind, SortKind, TmfgConfig, TmfgResult};
-use crate::util::timer::{Breakdown, Timer};
 use std::path::PathBuf;
+use std::sync::Arc;
 
-/// Which TMFG construction algorithm to run — mirrors the paper's
-/// implementation list (§5 "Implementations").
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TmfgAlgo {
-    /// PAR-TDBHT-P (Yu & Shun) with the given prefix size.
-    Par(usize),
-    /// CORR-TDBHT (Alg. 1), prefix 1.
-    Corr,
-    /// HEAP-TDBHT (Alg. 2).
-    Heap,
-    /// OPT-TDBHT: HEAP + vectorized scan + radix sort + approximate APSP.
-    Opt,
-}
-
-impl TmfgAlgo {
-    pub fn name(&self) -> String {
-        match self {
-            TmfgAlgo::Par(p) => format!("par-tdbht-{p}"),
-            TmfgAlgo::Corr => "corr-tdbht".into(),
-            TmfgAlgo::Heap => "heap-tdbht".into(),
-            TmfgAlgo::Opt => "opt-tdbht".into(),
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<TmfgAlgo> {
-        match s.to_ascii_lowercase().as_str() {
-            "corr" | "corr-tdbht" => Some(TmfgAlgo::Corr),
-            "heap" | "heap-tdbht" => Some(TmfgAlgo::Heap),
-            "opt" | "opt-tdbht" => Some(TmfgAlgo::Opt),
-            other => {
-                let p = other
-                    .strip_prefix("par-tdbht-")
-                    .or_else(|| other.strip_prefix("par"))?;
-                p.parse().ok().map(TmfgAlgo::Par)
-            }
-        }
-    }
-}
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ApspMode {
-    Exact,
-    Approx,
-}
+/// What a pipeline run returns — the owned output of a completed
+/// [`crate::api::Plan`].
+pub type PipelineOutput = ClusterOutput;
 
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -89,44 +54,10 @@ impl Default for PipelineConfig {
     }
 }
 
-#[derive(Debug)]
-pub struct PipelineOutput {
-    pub algo: TmfgAlgo,
-    pub breakdown: Breakdown,
-    pub tmfg: TmfgResult,
-    pub dbht: DbhtResult,
-    /// Predicted labels from cutting at the ground-truth class count
-    /// (None when the dataset has no labels).
-    pub labels: Option<Vec<usize>>,
-    pub ari: Option<f64>,
-    pub edge_sum: f64,
-    pub corr_path: Option<CorrPath>,
-}
-
-/// Build a TMFG with the given algorithm's standard configuration — the
-/// mapping `Pipeline` uses internally, shared with the streaming
-/// subsystem (which constructs topologies outside a `Pipeline`).
-pub fn build_tmfg_for(algo: TmfgAlgo, s: &Matrix) -> TmfgResult {
-    match algo {
-        TmfgAlgo::Par(p) => orig_tmfg(s, p),
-        TmfgAlgo::Corr => corr_tmfg(s, &TmfgConfig::default()),
-        TmfgAlgo::Heap => heap_tmfg(s, &TmfgConfig::default()),
-        // OPT = HEAP + radix sort (+ approximate APSP via
-        // effective_apsp). The paper's manual-vectorization scan is
-        // kept available as ScanKind::Chunked but measured a net
-        // 0.9–1.0× on this host (the paper itself reports 0.97–1.07×),
-        // so the default follows the perf-pass keep-if-it-helps rule
-        // (EXPERIMENTS.md §Perf iter. 6).
-        TmfgAlgo::Opt => heap_tmfg(
-            s,
-            &TmfgConfig { prefix: 1, scan: ScanKind::Scalar, sort: SortKind::Radix },
-        ),
-    }
-}
-
 pub struct Pipeline {
     pub config: PipelineConfig,
-    engine: CorrEngine,
+    /// Shared across runs so compiled XLA executables are reused.
+    engine: Arc<CorrEngine>,
 }
 
 impl Pipeline {
@@ -136,88 +67,55 @@ impl Pipeline {
         } else {
             CorrEngine::native_only()
         };
-        Pipeline { config, engine }
+        Pipeline { config, engine: Arc::new(engine) }
     }
 
-    fn effective_apsp(&self) -> ApspMode {
-        self.config.apsp.unwrap_or(match self.config.algo {
-            TmfgAlgo::Opt => ApspMode::Approx,
-            _ => ApspMode::Exact,
-        })
+    /// The APSP mode runs will use (config override or algorithm default).
+    pub fn effective_apsp(&self) -> ApspMode {
+        self.config.apsp.unwrap_or_else(|| self.config.algo.default_apsp())
     }
 
-    fn build_tmfg(&self, s: &Matrix) -> TmfgResult {
-        build_tmfg_for(self.config.algo, s)
+    /// Apply this pipeline's configuration to a request.
+    fn configure(&self, req: ClusterRequest) -> ClusterRequest {
+        let mut req = req
+            .algo(self.config.algo)
+            .linkage(self.config.linkage)
+            .hub(self.config.hub.clone())
+            .check_invariants(self.config.check_invariants)
+            .engine(self.engine.clone());
+        if let Some(mode) = self.config.apsp {
+            req = req.apsp(mode);
+        }
+        req
     }
 
     /// Run from a raw dataset (computes the similarity matrix first).
-    pub fn run_dataset(&self, ds: &Dataset) -> PipelineOutput {
-        let mut timer = Timer::start();
-        let (s, _rowsums, path) = self
-            .engine
-            .similarity(&ds.data)
-            .expect("similarity computation failed");
-        let sim_secs = timer.lap();
-        let mut out = self.run_similarity(&s, Some(&ds.labels), ds.n_classes);
-        out.corr_path = Some(path);
-        out.breakdown.add("similarity", sim_secs);
-        out
+    /// Cuts at the dataset's class count and reports ARI vs its labels.
+    /// Copies the panel and labels into the request; throughput-sensitive
+    /// callers should use [`ClusterRequest::panel`] with a shared
+    /// `Arc<Matrix>` instead.
+    pub fn run_dataset(&self, ds: &Dataset) -> Result<PipelineOutput, TmfgError> {
+        self.configure(ClusterRequest::panel(ds.data.clone()))
+            .labels(ds.labels.clone())
+            .k(ds.n_classes.max(1))
+            .run()
     }
 
     /// Run from a precomputed similarity matrix (the paper's setting).
+    /// Copies the matrix into the request; throughput-sensitive callers
+    /// should use [`ClusterRequest::similarity`] with a shared
+    /// `Arc<Matrix>` instead.
     pub fn run_similarity(
         &self,
         s: &Matrix,
         labels: Option<&[usize]>,
         n_classes: usize,
-    ) -> PipelineOutput {
-        let mut breakdown = Breakdown::new();
-        let mut timer = Timer::start();
-
-        // ---- TMFG construction ---------------------------------------------
-        let tmfg = self.build_tmfg(s);
-        timer.reset();
-        if self.config.check_invariants {
-            crate::tmfg::common::check_invariants(&tmfg).expect("TMFG invariants");
+    ) -> Result<PipelineOutput, TmfgError> {
+        let mut req = self.configure(ClusterRequest::similarity(s.clone()));
+        if let Some(truth) = labels {
+            req = req.labels(truth.to_vec()).k(n_classes.max(1));
         }
-        breakdown.add("tmfg:init-faces", tmfg.timings.init);
-        breakdown.add("tmfg:sort", tmfg.timings.sort);
-        breakdown.add("tmfg:add-vertices", tmfg.timings.insert);
-
-        // ---- APSP ------------------------------------------------------------
-        timer.reset();
-        let g = CsrGraph::from_tmfg(&tmfg, s);
-        let apsp = match self.effective_apsp() {
-            ApspMode::Exact => apsp_exact(&g),
-            ApspMode::Approx => apsp_hub(&g, &self.config.hub),
-        };
-        breakdown.add("apsp", timer.lap());
-
-        // ---- DBHT ------------------------------------------------------------
-        let dbht = dbht_dendrogram(s, &tmfg, &apsp, self.config.linkage);
-        breakdown.add("dbht", timer.lap());
-
-        // ---- metrics ----------------------------------------------------------
-        let edge_sum = tmfg.edge_sum(s);
-        let (labels_pred, ari) = match labels {
-            Some(truth) => {
-                let pred = dbht.dendrogram.cut(n_classes.max(1));
-                let ari = adjusted_rand_index(truth, &pred);
-                (Some(pred), Some(ari))
-            }
-            None => (None, None),
-        };
-
-        PipelineOutput {
-            algo: self.config.algo,
-            breakdown,
-            tmfg,
-            dbht,
-            labels: labels_pred,
-            ari,
-            edge_sum,
-            corr_path: None,
-        }
+        req.run()
     }
 
     /// Stream configuration inheriting this pipeline's algorithm,
@@ -241,7 +139,7 @@ impl Pipeline {
         &self,
         panel: &Matrix,
         cfg: StreamConfig,
-    ) -> Result<(StreamSession, Vec<TickOutput>), String> {
+    ) -> Result<(StreamSession, Vec<TickOutput>), TmfgError> {
         let mut session = StreamSession::new(cfg)?;
         let mut outputs = Vec::with_capacity(panel.cols);
         let mut sample = vec![0.0f32; panel.rows];
@@ -278,7 +176,7 @@ mod tests {
         let ds = SynthSpec::new("t", 80, 48, 3).generate(1);
         for algo in [TmfgAlgo::Par(1), TmfgAlgo::Par(10), TmfgAlgo::Corr, TmfgAlgo::Heap, TmfgAlgo::Opt] {
             let p = Pipeline::new(cfg(algo));
-            let out = p.run_dataset(&ds);
+            let out = p.run_dataset(&ds).unwrap();
             assert!(out.dbht.dendrogram.is_complete(), "{algo:?}");
             let ari = out.ari.unwrap();
             assert!((-1.0..=1.0).contains(&ari), "{algo:?}: {ari}");
@@ -299,6 +197,15 @@ mod tests {
         let mut c = cfg(TmfgAlgo::Opt);
         c.apsp = Some(ApspMode::Exact);
         assert_eq!(Pipeline::new(c).effective_apsp(), ApspMode::Exact);
+    }
+
+    #[test]
+    fn reports_apsp_mode_in_output() {
+        let ds = SynthSpec::new("t", 40, 32, 2).generate(7);
+        let out = Pipeline::new(cfg(TmfgAlgo::Opt)).run_dataset(&ds).unwrap();
+        assert_eq!(out.apsp_mode, ApspMode::Approx);
+        let out = Pipeline::new(cfg(TmfgAlgo::Heap)).run_dataset(&ds).unwrap();
+        assert_eq!(out.apsp_mode, ApspMode::Exact);
     }
 
     #[test]
@@ -332,11 +239,13 @@ mod tests {
     fn unlabeled_run() {
         let ds = SynthSpec::new("t", 40, 32, 2).generate(2);
         let p = Pipeline::new(cfg(TmfgAlgo::Heap));
-        let out = p.run_similarity(
-            &crate::data::corr::pearson_correlation(&ds.data),
-            None,
-            0,
-        );
+        let out = p
+            .run_similarity(
+                &crate::data::corr::pearson_correlation(&ds.data),
+                None,
+                0,
+            )
+            .unwrap();
         assert!(out.ari.is_none());
         assert!(out.labels.is_none());
     }

@@ -38,6 +38,26 @@ pub fn get_dataset(name: &str, scale: f64, seed: u64) -> Option<Dataset> {
     Some(spec.generate(ds_seed))
 }
 
+/// The series count `get_dataset` would produce for a name, *without*
+/// generating anything — lets the service reject oversized requests
+/// before any allocation. None for unknown names and CSV paths.
+pub fn dataset_size(name: &str, scale: f64) -> Option<usize> {
+    if let Some(rest) = name.strip_prefix("demo") {
+        let n = rest
+            .strip_prefix('-')
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200);
+        return Some(n);
+    }
+    if name.ends_with(".csv") || name.contains('/') {
+        return None;
+    }
+    table1_specs(scale)
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .map(|s| s.n)
+}
+
 /// Generate all Table-1 datasets at a scale.
 pub fn all_table1(scale: f64, seed: u64) -> Vec<Dataset> {
     table1_specs(scale)
@@ -84,6 +104,16 @@ mod tests {
     fn demo_sizes() {
         assert_eq!(get_dataset("demo", 1.0, 1).unwrap().n(), 200);
         assert_eq!(get_dataset("demo-50", 1.0, 1).unwrap().n(), 50);
+    }
+
+    #[test]
+    fn dataset_size_predicts_without_generating() {
+        assert_eq!(dataset_size("demo-50", 1.0), Some(50));
+        assert_eq!(dataset_size("demo-100000000", 1.0), Some(100_000_000));
+        let predicted = dataset_size("CBF", 0.1).unwrap();
+        assert_eq!(predicted, get_dataset("CBF", 0.1, 1).unwrap().n());
+        assert_eq!(dataset_size("NoSuchDataset", 1.0), None);
+        assert_eq!(dataset_size("some/path.csv", 1.0), None);
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! A batched TCP clustering service — the "deployment" face of the
 //! coordinator. Wire protocol: one JSON object per line per request;
-//! one JSON object per line back.
+//! one JSON object per line back. Requests are decoded through the
+//! single validated parse path in [`crate::api::wire`] (versioned typed
+//! requests; malformed fields are rejected with a stable error `code`
+//! instead of being silently defaulted).
 //!
 //! Request fields:
 //!   {"id": 7, "dataset": "CBF", "scale": 0.05, "seed": 1,
@@ -8,9 +11,11 @@
 //! or inline data:
 //!   {"id": 7, "n": 16, "l": 8, "data": [ ... n*l floats ... ], "k": 2}
 //! Special: {"cmd": "ping"} → {"ok": true}, {"cmd": "shutdown"}.
+//! Optional: {"v": 1, ...} pins the protocol version.
 //!
 //! Response: {"id": 7, "ok": true, "labels": [...], "ari": 0.4,
 //!            "secs": 0.01, "algo": "opt-tdbht", "batch": 3}
+//! Errors:   {"id": 7, "ok": false, "error": "...", "code": "protocol"}
 //!
 //! Streaming (one session per connection, state lives in the dispatcher):
 //!   {"cmd": "open_stream", "n": 16, "k": 2, "window": 64, "algo": "opt",
@@ -25,19 +30,19 @@
 //!        "emissions": ..., "rebuilds": ..., "refreshes": ...}
 //!   Sessions are freed automatically when the connection drops.
 //!
-//! Architecture: acceptor threads parse requests into a shared queue; a
-//! single dispatcher drains the queue in small batches (batching window),
-//! runs each batch's similarity computations through one shared engine
-//! (amortizing executable-cache hits), then the graph stages per request
-//! on the parallel pool, and replies. The batch size a request rode in on
-//! is reported so clients/tests can observe batching. Stream sessions are
-//! owned by the same dispatcher (keyed by connection), so per-tick state
-//! never needs locking and rides the same batching queue.
+//! Architecture: acceptor threads parse + decode requests into a shared
+//! queue; a single dispatcher drains the queue in small batches (batching
+//! window), runs each batch's similarity computations through one shared
+//! engine (amortizing executable-cache hits), then the graph stages per
+//! request on the parallel pool, and replies. The batch size a request
+//! rode in on is reported so clients/tests can observe batching. Stream
+//! sessions are owned by the same dispatcher (keyed by connection), so
+//! per-tick state never needs locking and rides the same batching queue.
 
-use super::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
-use super::registry;
+use crate::api::wire::{self, ClusterSource, ClusterSpec, Command};
+use crate::api::{ClusterRequest, TmfgAlgo, TmfgError};
 use crate::data::matrix::Matrix;
-use crate::data::synth::Dataset;
+use crate::runtime::engine::CorrEngine;
 use crate::stream::{StreamConfig, StreamSession};
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -72,13 +77,14 @@ impl Default for ServiceConfig {
 }
 
 struct Job {
-    request: Json,
+    request: wire::Request,
     reply: Sender<String>,
     /// Originating connection (stream sessions are per-connection).
     conn: u64,
 }
 
-/// Handle to a running service (for tests and the `serve` example).
+/// Handle to a running service (for tests, the `serve` example, and the
+/// CLI's `tmfg serve`).
 pub struct ServiceHandle {
     pub addr: String,
     shutdown: Arc<AtomicBool>,
@@ -86,6 +92,7 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
+    /// Request shutdown and join the service threads.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Release);
         // poke the acceptor so it notices
@@ -94,152 +101,116 @@ impl ServiceHandle {
             let _ = j.join();
         }
     }
-}
 
-fn parse_dataset(req: &Json) -> Result<(Dataset, usize), String> {
-    let k = req.get("k").as_usize().unwrap_or(0);
-    if let Some(name) = req.get("dataset").as_str() {
-        let scale = req.get("scale").as_f64().unwrap_or(0.05);
-        let seed = req.get("seed").as_f64().unwrap_or(1.0) as u64;
-        let ds = registry::get_dataset(name, scale, seed)
-            .ok_or_else(|| format!("unknown dataset {name}"))?;
-        let k = if k == 0 { ds.n_classes } else { k };
-        return Ok((ds, k));
-    }
-    let n = req.get("n").as_usize().ok_or("missing n")?;
-    let l = req.get("l").as_usize().ok_or("missing l")?;
-    let arr = req.get("data").as_arr().ok_or("missing data")?;
-    if arr.len() != n * l {
-        return Err(format!("data length {} != n*l = {}", arr.len(), n * l));
-    }
-    let data: Vec<f32> = arr
-        .iter()
-        .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
-        .collect();
-    if k == 0 {
-        return Err("inline data requires k".into());
-    }
-    Ok((
-        Dataset {
-            name: "inline".into(),
-            data: Matrix::from_vec(n, l, data),
-            labels: vec![0; n],
-            n_classes: k,
-        },
-        k,
-    ))
-}
-
-fn process(req: &Json, pipeline: &Pipeline, batch_size: usize) -> Json {
-    let id = req.get("id").clone();
-    let t = crate::util::timer::Timer::start();
-    match parse_dataset(req) {
-        Ok((ds, k)) => {
-            // run_dataset routes the similarity computation through the
-            // shared engine (XLA artifact path when a bucket fits).
-            let out = pipeline.run_dataset(&ds);
-            let labels = out.dbht.dendrogram.cut(k);
-            // Report ARI only for named datasets (which carry ground truth).
-            let ari = if req.get("dataset").as_str().is_some() {
-                Some(crate::metrics::adjusted_rand_index(&ds.labels, &labels))
-            } else {
-                None
-            };
-            Json::obj(vec![
-                ("id", id),
-                ("ok", Json::Bool(true)),
-                ("labels", Json::arr_usize(&labels)),
-                (
-                    "ari",
-                    ari.map(Json::Num).unwrap_or(Json::Null),
-                ),
-                ("secs", Json::Num(t.elapsed())),
-                ("algo", Json::str(&pipeline.config.algo.name())),
-                ("batch", Json::Num(batch_size as f64)),
-            ])
+    /// Block until the service shuts down (a client sent
+    /// {"cmd": "shutdown"}). Used by `tmfg serve` to exit cleanly
+    /// instead of sleeping forever.
+    pub fn wait(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
         }
-        Err(e) => Json::obj(vec![
-            ("id", id),
-            ("ok", Json::Bool(false)),
-            ("error", Json::str(&e)),
-        ]),
     }
 }
 
-fn error_json(id: Json, msg: &str) -> Json {
-    Json::obj(vec![
-        ("id", id),
-        ("ok", Json::Bool(false)),
-        ("error", Json::str(msg)),
-    ])
+/// Run one batch clustering request through the shared-engine API. Takes
+/// the spec by value so inline payloads move straight into the panel
+/// matrix (no second copy on the dispatcher hot path).
+fn run_cluster(
+    spec: ClusterSpec,
+    engine: &Arc<CorrEngine>,
+    default_algo: TmfgAlgo,
+) -> Result<(Vec<usize>, Option<f64>, TmfgAlgo), TmfgError> {
+    let algo = spec.algo.unwrap_or(default_algo);
+    let req = match spec.source {
+        ClusterSource::Named { name, scale, seed } => {
+            let mut r = ClusterRequest::dataset(name).scale(scale).seed(seed);
+            if spec.k > 0 {
+                r = r.k(spec.k);
+            }
+            r
+        }
+        ClusterSource::Inline { n, l, data } => {
+            // decode() validated len == n*l and finiteness; k >= 1.
+            let panel = Matrix::from_vec(n, l, data);
+            ClusterRequest::panel(panel).k(spec.k)
+        }
+    };
+    let out = req.algo(algo).engine(engine.clone()).run()?;
+    let labels = out.labels.ok_or_else(|| TmfgError::invariant("run produced no labels"))?;
+    Ok((labels, out.ari, algo))
+}
+
+fn process(
+    id: &Json,
+    spec: ClusterSpec,
+    engine: &Arc<CorrEngine>,
+    default_algo: TmfgAlgo,
+    batch_size: usize,
+) -> Json {
+    let t = crate::util::timer::Timer::start();
+    match run_cluster(spec, engine, default_algo) {
+        Ok((labels, ari, algo)) => wire::ok_response(
+            id,
+            vec![
+                ("labels", Json::arr_usize(&labels)),
+                ("ari", ari.map(Json::Num).unwrap_or(Json::Null)),
+                ("secs", Json::Num(t.elapsed())),
+                ("algo", Json::str(&algo.name())),
+                ("batch", Json::Num(batch_size as f64)),
+            ],
+        ),
+        Err(e) => wire::error_response(id, &e),
+    }
 }
 
 /// Handle one streaming command against the dispatcher-owned session map.
 fn stream_cmd(
-    req: &Json,
-    cmd: &str,
+    id: &Json,
+    body: &Command,
     streams: &mut HashMap<u64, StreamSession>,
     conn: u64,
     default_algo: TmfgAlgo,
     batch: usize,
 ) -> Json {
-    let id = req.get("id").clone();
-    match cmd {
-        "open_stream" => {
-            let Some(n) = req.get("n").as_usize() else {
-                return error_json(id, "open_stream requires n (number of series)");
-            };
-            let window = req.get("window").as_usize().unwrap_or(64);
-            let k = req.get("k").as_usize().unwrap_or(2);
-            let algo = req
-                .get("algo")
-                .as_str()
-                .and_then(TmfgAlgo::parse)
-                .unwrap_or(default_algo);
-            let mut scfg = StreamConfig::new(n, window, k);
+    match body {
+        Command::OpenStream(open) => {
+            let algo = open.algo.unwrap_or(default_algo);
+            let mut scfg = StreamConfig::new(open.n, open.window, open.k);
             scfg.algo = algo;
-            if let Some(d) = req.get("drift").as_f64() {
-                scfg.policy.drift_threshold = d as f32;
+            if let Some(d) = open.drift {
+                scfg.policy.drift_threshold = d;
             }
-            if let Some(w) = req.get("warmup").as_usize() {
+            if let Some(w) = open.warmup {
                 scfg.warmup = w;
             }
-            if let Some(m) = req.get("max_refreshes").as_usize() {
-                scfg.policy.max_refreshes = m as u32;
+            if let Some(m) = open.max_refreshes {
+                scfg.policy.max_refreshes = m;
             }
             match StreamSession::new(scfg) {
                 Ok(session) => {
                     // replacing an existing session is allowed (re-open)
                     streams.insert(conn, session);
-                    Json::obj(vec![
-                        ("id", id),
-                        ("ok", Json::Bool(true)),
-                        ("stream", Json::Bool(true)),
-                        ("n", Json::Num(n as f64)),
-                        ("window", Json::Num(window as f64)),
-                        ("k", Json::Num(k as f64)),
-                        ("algo", Json::str(&algo.name())),
-                    ])
+                    wire::ok_response(
+                        id,
+                        vec![
+                            ("stream", Json::Bool(true)),
+                            ("n", Json::Num(open.n as f64)),
+                            ("window", Json::Num(open.window as f64)),
+                            ("k", Json::Num(open.k as f64)),
+                            ("algo", Json::str(&algo.name())),
+                        ],
+                    )
                 }
-                Err(e) => error_json(id, &e),
+                Err(e) => wire::error_response(id, &e),
             }
         }
-        "tick" => {
+        Command::Tick(sample) => {
             let Some(session) = streams.get_mut(&conn) else {
-                return error_json(id, "no open stream on this connection");
+                return wire::error_response(id, &TmfgError::StreamClosed);
             };
-            let Some(arr) = req.get("data").as_arr() else {
-                return error_json(id, "tick requires data (one value per series)");
-            };
-            let sample: Vec<f32> = arr
-                .iter()
-                .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
-                .collect();
-            match session.tick(&sample) {
+            match session.tick(sample) {
                 Ok(out) => {
                     let mut pairs = vec![
-                        ("id", id),
-                        ("ok", Json::Bool(true)),
                         ("generation", Json::Num(out.generation as f64)),
                         ("tick", Json::Num(out.tick as f64)),
                         ("decision", Json::str(out.decision.name())),
@@ -252,39 +223,37 @@ fn stream_cmd(
                     if let Some(d) = out.drift {
                         pairs.push(("drift", Json::Num(d.max_abs as f64)));
                     }
-                    Json::obj(pairs)
+                    wire::ok_response(id, pairs)
                 }
-                Err(e) => error_json(id, &e),
+                Err(e) => wire::error_response(id, &e),
             }
         }
-        // close_stream; also issued internally on disconnect (idempotent).
+        // CloseStream; also issued internally on disconnect (idempotent).
         _ => match streams.remove(&conn) {
             Some(session) => {
                 let st = session.stats();
-                Json::obj(vec![
-                    ("id", id),
-                    ("ok", Json::Bool(true)),
-                    ("closed", Json::Bool(true)),
-                    ("ticks", Json::Num(st.ticks as f64)),
-                    ("emissions", Json::Num(st.emissions as f64)),
-                    ("rebuilds", Json::Num(st.rebuilds as f64)),
-                    ("refreshes", Json::Num(st.refreshes as f64)),
-                    ("generation", Json::Num(session.generation() as f64)),
-                ])
+                wire::ok_response(
+                    id,
+                    vec![
+                        ("closed", Json::Bool(true)),
+                        ("ticks", Json::Num(st.ticks as f64)),
+                        ("emissions", Json::Num(st.emissions as f64)),
+                        ("rebuilds", Json::Num(st.rebuilds as f64)),
+                        ("refreshes", Json::Num(st.refreshes as f64)),
+                        ("generation", Json::Num(session.generation() as f64)),
+                    ],
+                )
             }
-            None => Json::obj(vec![
-                ("id", id),
-                ("ok", Json::Bool(true)),
-                ("closed", Json::Bool(false)),
-            ]),
+            None => wire::ok_response(id, vec![("closed", Json::Bool(false))]),
         },
     }
 }
 
 fn dispatcher(rx: Receiver<Job>, cfg: &ServiceConfig, shutdown: Arc<AtomicBool>) {
-    // One pipeline per algo, built lazily; engines (and their compiled
-    // XLA executables) are shared across the whole service lifetime.
-    let mut pipelines: std::collections::HashMap<String, Pipeline> = Default::default();
+    // One similarity engine for the whole service lifetime: compiled XLA
+    // executables are cached inside and shared across every request and
+    // algorithm.
+    let engine = Arc::new(CorrEngine::auto(std::path::Path::new("artifacts")));
     // Per-connection streaming sessions, owned here so tick state needs
     // no locking.
     let mut streams: HashMap<u64, StreamSession> = Default::default();
@@ -314,25 +283,20 @@ fn dispatcher(rx: Receiver<Job>, cfg: &ServiceConfig, shutdown: Arc<AtomicBool>)
         }
         let bsize = batch.len();
         for job in batch {
-            if let Some(cmd) = job.request.get("cmd").as_str() {
-                if matches!(cmd, "open_stream" | "tick" | "close_stream") {
-                    let resp =
-                        stream_cmd(&job.request, cmd, &mut streams, job.conn, cfg.default_algo, bsize);
-                    let _ = job.reply.send(resp.to_string());
-                    continue;
+            let Job { request, reply, conn } = job;
+            let wire::Request { id, body, .. } = request;
+            let resp = match body {
+                Command::Cluster(spec) => {
+                    process(&id, spec, &engine, cfg.default_algo, bsize)
                 }
-            }
-            let algo = job
-                .request
-                .get("algo")
-                .as_str()
-                .and_then(TmfgAlgo::parse)
-                .unwrap_or(cfg.default_algo);
-            let pipeline = pipelines.entry(algo.name()).or_insert_with(|| {
-                Pipeline::new(PipelineConfig { algo, ..Default::default() })
-            });
-            let resp = process(&job.request, pipeline, bsize);
-            let _ = job.reply.send(resp.to_string());
+                body @ (Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream) => {
+                    stream_cmd(&id, &body, &mut streams, conn, cfg.default_algo, bsize)
+                }
+                // Ping/Shutdown are answered in the connection handler and
+                // never enqueued; answer defensively anyway.
+                Command::Ping | Command::Shutdown => wire::ok_response(&id, vec![]),
+            };
+            let _ = reply.send(resp.to_string());
         }
     }
 }
@@ -373,29 +337,42 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
         if line.trim().is_empty() {
             continue;
         }
-        let req = match Json::parse(&line) {
+        let raw = match Json::parse(&line) {
             Ok(j) => j,
             Err(e) => {
                 let _ = writeln!(
                     writer,
                     "{}",
-                    Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::str(&format!("bad json: {e}")))
-                    ])
+                    wire::error_response(
+                        &Json::Null,
+                        &TmfgError::protocol(format!("bad json: {e}"))
+                    )
                     .to_string()
                 );
                 continue;
             }
         };
-        match req.get("cmd").as_str() {
-            Some("ping") => {
-                let _ = writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string());
+        // The single validated parse path: typed command or typed error.
+        let req = match wire::Request::decode(&raw) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = writeln!(writer, "{}", wire::error_response(raw.get("id"), &e).to_string());
                 continue;
             }
-            Some("shutdown") => {
+        };
+        match &req.body {
+            Command::Ping => {
+                let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
+                continue;
+            }
+            Command::Shutdown => {
                 shutdown.store(true, Ordering::Release);
-                let _ = writeln!(writer, "{}", Json::obj(vec![("ok", Json::Bool(true))]).to_string());
+                let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
+                // Poke the acceptor (blocked in accept()) so it observes
+                // the flag and the whole service can exit cleanly.
+                if let Ok(addr) = writer.local_addr() {
+                    let _ = TcpStream::connect(addr);
+                }
                 return;
             }
             _ => {}
@@ -417,7 +394,11 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
     // reply channel's receiver is dropped, so the response is discarded).
     let (rtx, _rrx) = channel();
     let _ = tx.send(Job {
-        request: Json::obj(vec![("cmd", Json::str("close_stream"))]),
+        request: wire::Request {
+            id: Json::Null,
+            v: wire::PROTOCOL_VERSION,
+            body: Command::CloseStream,
+        },
         reply: rtx,
         conn,
     });

@@ -107,7 +107,7 @@ mod tests {
     fn tree(n: usize, seed: u64) -> BubbleTree {
         let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
         let s = crate::data::corr::pearson_correlation(&ds.data);
-        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default()).unwrap();
         BubbleTree::new(&r)
     }
 

@@ -13,6 +13,7 @@
 
 use super::bubble::BubbleTree;
 use super::direction::Directions;
+use crate::error::TmfgError;
 use crate::data::matrix::Matrix;
 use crate::parlay;
 
@@ -29,7 +30,7 @@ pub struct Assignment {
 }
 
 /// Follow strongest outgoing edges to a converging bubble, memoized.
-fn compute_basins(bt: &BubbleTree, dir: &Directions) -> Vec<u32> {
+fn compute_basins(bt: &BubbleTree, dir: &Directions) -> Result<Vec<u32>, TmfgError> {
     let nb = bt.n_bubbles;
     let mut basin: Vec<u32> = vec![u32::MAX; nb];
     for start in 0..nb as u32 {
@@ -63,20 +64,31 @@ fn compute_basins(bt: &BubbleTree, dir: &Directions) -> Vec<u32> {
                     }
                 }
             }
-            cur = best.expect("out_degree > 0 implies an outgoing edge").1;
+            cur = best
+                .ok_or_else(|| {
+                    TmfgError::invariant(
+                        "bubble with out_degree > 0 has no outgoing edge",
+                    )
+                })?
+                .1;
         }
         let sink = basin[cur as usize];
         for p in path {
             basin[p as usize] = sink;
         }
     }
-    basin
+    Ok(basin)
 }
 
 /// Full assignment: basins, vertex→basin, vertex→bubble.
 /// `apsp` is the (exact or approximate) shortest-path distance matrix.
-pub fn assign(bt: &BubbleTree, dir: &Directions, s: &Matrix, apsp: &Matrix) -> Assignment {
-    let bubble_basin = compute_basins(bt, dir);
+pub fn assign(
+    bt: &BubbleTree,
+    dir: &Directions,
+    s: &Matrix,
+    apsp: &Matrix,
+) -> Result<Assignment, TmfgError> {
+    let bubble_basin = compute_basins(bt, dir)?;
     let mut converging: Vec<u32> = dir.converging();
     converging.sort_unstable();
 
@@ -131,7 +143,7 @@ pub fn assign(bt: &BubbleTree, dir: &Directions, s: &Matrix, apsp: &Matrix) -> A
         best.1
     });
 
-    Assignment { converging, bubble_basin, vertex_basin, vertex_bubble }
+    Ok(Assignment { converging, bubble_basin, vertex_basin, vertex_bubble })
 }
 
 #[cfg(test)]
@@ -144,7 +156,7 @@ mod tests {
     fn setup(n: usize, seed: u64) -> (Matrix, BubbleTree, Directions, Matrix) {
         let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
         let s = crate::data::corr::pearson_correlation(&ds.data);
-        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default()).unwrap();
         let bt = BubbleTree::new(&r);
         let dir = direct_edges(&bt, &r.adjacency(), &s);
         let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
@@ -154,7 +166,7 @@ mod tests {
     #[test]
     fn basins_map_to_converging() {
         let (s, bt, dir, apsp) = setup(90, 1);
-        let a = assign(&bt, &dir, &s, &apsp);
+        let a = assign(&bt, &dir, &s, &apsp).unwrap();
         let conv: std::collections::HashSet<u32> = a.converging.iter().copied().collect();
         for b in 0..bt.n_bubbles {
             assert!(conv.contains(&a.bubble_basin[b]), "bubble {b} basin not converging");
@@ -168,7 +180,7 @@ mod tests {
     #[test]
     fn vertex_assignments_consistent() {
         let (s, bt, dir, apsp) = setup(120, 2);
-        let a = assign(&bt, &dir, &s, &apsp);
+        let a = assign(&bt, &dir, &s, &apsp).unwrap();
         let conv: std::collections::HashSet<u32> = a.converging.iter().copied().collect();
         for v in 0..bt.n_vertices {
             // basin must be converging
@@ -185,7 +197,7 @@ mod tests {
     #[test]
     fn all_vertices_covered_small() {
         let (s, bt, dir, apsp) = setup(10, 3);
-        let a = assign(&bt, &dir, &s, &apsp);
+        let a = assign(&bt, &dir, &s, &apsp).unwrap();
         assert_eq!(a.vertex_basin.len(), 10);
         assert_eq!(a.vertex_bubble.len(), 10);
         assert!(a.vertex_bubble.iter().all(|&b| (b as usize) < bt.n_bubbles));
@@ -194,7 +206,7 @@ mod tests {
     #[test]
     fn basin_partition_covers_all_bubbles() {
         let (s, bt, dir, apsp) = setup(70, 4);
-        let a = assign(&bt, &dir, &s, &apsp);
+        let a = assign(&bt, &dir, &s, &apsp).unwrap();
         // group bubbles by basin; sizes sum to n_bubbles
         let mut count = 0usize;
         for &c in &a.converging {

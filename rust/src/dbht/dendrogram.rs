@@ -130,7 +130,14 @@ impl Dendrogram {
                 }
             }
         }
-        format!("{};", rendered[if self.nodes.is_empty() { 0 } else { root }].take().unwrap())
+        // The post-order loop renders every node; fall back to an empty
+        // name rather than panicking if it ever did not.
+        format!(
+            "{};",
+            rendered[if self.nodes.is_empty() { 0 } else { root }]
+                .take()
+                .unwrap_or_default()
+        )
     }
 
     /// Export merges as JSON (scipy-linkage-like rows [left, right, height]).

@@ -90,7 +90,7 @@ mod tests {
     fn setup(n: usize, seed: u64) -> (Matrix, TmfgResult, BubbleTree) {
         let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
         let s = crate::data::corr::pearson_correlation(&ds.data);
-        let r = crate::tmfg::heap_tmfg(&s, &Default::default());
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default()).unwrap();
         let bt = BubbleTree::new(&r);
         (s, r, bt)
     }

@@ -8,6 +8,7 @@ use super::converging::{assign, Assignment};
 use super::dendrogram::{DendroBuilder, Dendrogram};
 use super::direction::direct_edges;
 use super::linkage::{nn_chain_hac, Linkage};
+use crate::error::TmfgError;
 use crate::data::matrix::Matrix;
 use crate::parlay;
 use crate::tmfg::TmfgResult;
@@ -78,11 +79,18 @@ pub struct DbhtResult {
 }
 
 /// Run DBHT on a constructed TMFG with a precomputed APSP matrix.
-pub fn dbht_dendrogram(s: &Matrix, tmfg: &TmfgResult, apsp: &Matrix, linkage: Linkage) -> DbhtResult {
+/// Internal structural failures (an incomplete dendrogram, a dangling
+/// basin) surface as [`TmfgError::InvariantViolation`], never a panic.
+pub fn dbht_dendrogram(
+    s: &Matrix,
+    tmfg: &TmfgResult,
+    apsp: &Matrix,
+    linkage: Linkage,
+) -> Result<DbhtResult, TmfgError> {
     let n = tmfg.n;
     let bt = BubbleTree::new(tmfg);
     let dir = direct_edges(&bt, &tmfg.adjacency(), s);
-    let assignment = assign(&bt, &dir, s, apsp);
+    let assignment = assign(&bt, &dir, s, apsp)?;
 
     // groups[(basin, bubble)] = vertices
     let mut groups: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
@@ -145,12 +153,17 @@ pub fn dbht_dendrogram(s: &Matrix, tmfg: &TmfgResult, apsp: &Matrix, linkage: Li
         .collect();
     agglomerate_groups(&mut builder, apsp, &basin_vertex_groups, linkage);
 
-    debug_assert_eq!(builder.n_merges(), n - 1, "dendrogram must be complete");
-    DbhtResult {
+    if builder.n_merges() != n - 1 {
+        return Err(TmfgError::invariant(format!(
+            "dendrogram incomplete: {} merges for {n} leaves",
+            builder.n_merges()
+        )));
+    }
+    Ok(DbhtResult {
         dendrogram: builder.finish(),
         n_converging: assignment.converging.len(),
         assignment,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -164,9 +177,9 @@ mod tests {
     fn run(n: usize, k: usize, seed: u64, noise: f64) -> (DbhtResult, Vec<usize>, usize) {
         let ds = SynthSpec::new("t", n, 64, k).with_noise(noise).generate(seed);
         let s = crate::data::corr::pearson_correlation(&ds.data);
-        let r = heap_tmfg(&s, &Default::default());
+        let r = heap_tmfg(&s, &Default::default()).unwrap();
         let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
-        let out = dbht_dendrogram(&s, &r, &apsp, Linkage::Complete);
+        let out = dbht_dendrogram(&s, &r, &apsp, Linkage::Complete).unwrap();
         (out, ds.labels, ds.n_classes)
     }
 
@@ -222,9 +235,9 @@ mod tests {
         for linkage in [Linkage::Single, Linkage::Average, Linkage::Complete] {
             let ds = SynthSpec::new("t", 40, 48, 3).generate(13);
             let s = crate::data::corr::pearson_correlation(&ds.data);
-            let r = heap_tmfg(&s, &Default::default());
+            let r = heap_tmfg(&s, &Default::default()).unwrap();
             let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
-            let out = dbht_dendrogram(&s, &r, &apsp, linkage);
+            let out = dbht_dendrogram(&s, &r, &apsp, linkage).unwrap();
             assert!(out.dendrogram.is_complete(), "{linkage:?}");
         }
     }

@@ -26,11 +26,20 @@ pub struct Merge {
 /// space). `sizes` are initial cluster sizes (for average linkage over
 /// pre-grouped items); pass all-1s for plain points. Returns m−1 merges
 /// sorted by height ascending, each identified by representative leaves.
+///
+/// Never panics: shape misuse (non-square `dist`, wrong `sizes` length)
+/// is a debug assertion, and in release it returns *fewer than m−1
+/// merges* — callers that require a complete hierarchy must check the
+/// merge count (as `dbht_dendrogram` does, turning a short list into
+/// [`crate::error::TmfgError::InvariantViolation`]).
 pub fn nn_chain_hac(dist: &Matrix, sizes: &[f64], linkage: Linkage) -> Vec<Merge> {
     let m = dist.rows;
-    assert_eq!(dist.cols, m);
-    assert_eq!(sizes.len(), m);
-    if m <= 1 {
+    // Shape misuse returns an incomplete merge list instead of panicking;
+    // dbht_dendrogram's completeness check turns that into a typed
+    // InvariantViolation.
+    debug_assert_eq!(dist.cols, m);
+    debug_assert_eq!(sizes.len(), m);
+    if m <= 1 || dist.cols != m || sizes.len() != m {
         return Vec::new();
     }
     // Working distance matrix (f64 to keep Lance-Williams updates stable).
@@ -44,13 +53,16 @@ pub fn nn_chain_hac(dist: &Matrix, sizes: &[f64], linkage: Linkage) -> Vec<Merge
     let mut chain: Vec<usize> = Vec::with_capacity(m);
     let mut merges: Vec<Merge> = Vec::with_capacity(m - 1);
 
-    while n_active > 1 {
+    'outer: while n_active > 1 {
         if chain.is_empty() {
-            let first = (0..m).find(|&i| active[i]).unwrap();
+            // n_active > 1 guarantees an active slot; bail out (instead of
+            // panicking) if the bookkeeping is ever inconsistent — the
+            // short merge list surfaces as a typed error downstream.
+            let Some(first) = (0..m).find(|&i| active[i]) else { break 'outer };
             chain.push(first);
         }
         loop {
-            let c = *chain.last().unwrap();
+            let Some(&c) = chain.last() else { break 'outer };
             // nearest active neighbour of c (tie-break: previous chain
             // element first — guarantees termination — then lowest index)
             let prev = if chain.len() >= 2 { Some(chain[chain.len() - 2]) } else { None };
@@ -64,6 +76,10 @@ pub fn nn_chain_hac(dist: &Matrix, sizes: &[f64], linkage: Linkage) -> Vec<Merge
                         who = x;
                     }
                 }
+            }
+            if who == usize::MAX {
+                // no active neighbour found — inconsistent state; bail
+                break 'outer;
             }
             if Some(who) == prev {
                 // reciprocal nearest neighbours → merge c and who

@@ -1,0 +1,132 @@
+//! The crate-wide unified error type (re-exported as
+//! [`crate::api::TmfgError`]).
+//!
+//! It lives below every other module so the algorithm layers (tmfg,
+//! dbht, stream, util) depend downward only; every fallible operation —
+//! TMFG construction, DBHT, the similarity engine, the streaming
+//! session, the wire protocol — reports failures through [`TmfgError`]
+//! instead of panicking or returning `Result<_, String>`.
+//! Each variant maps to a stable machine-readable [`TmfgError::code`]
+//! that the TCP service echoes in error responses, so clients can match
+//! on codes while humans read the `Display` form.
+
+use std::fmt;
+
+/// Unified error for the `tmfg` library surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TmfgError {
+    /// A caller-supplied parameter, matrix shape, or value is unusable
+    /// (non-square similarity, n < 4, label/matrix length mismatch,
+    /// out-of-range `k`, non-finite data, ...).
+    InvalidInput(String),
+    /// The named dataset is not in the registry (and is not a readable
+    /// CSV path).
+    DatasetNotFound(String),
+    /// The similarity engine failed (XLA runtime / artifact errors).
+    SimilarityFailed(String),
+    /// An internal structural invariant did not hold — a bug in the
+    /// library, surfaced as an error instead of a panic.
+    InvariantViolation(String),
+    /// A streaming command was issued against a connection with no open
+    /// session.
+    StreamClosed,
+    /// A malformed wire request (bad field type, wrong payload length,
+    /// unknown command or algorithm, unsupported protocol version).
+    Protocol(String),
+    /// Filesystem or socket failure.
+    Io(String),
+}
+
+impl TmfgError {
+    /// Shorthand constructor for [`TmfgError::InvalidInput`].
+    pub fn invalid(msg: impl Into<String>) -> TmfgError {
+        TmfgError::InvalidInput(msg.into())
+    }
+
+    /// Shorthand constructor for [`TmfgError::InvariantViolation`].
+    pub fn invariant(msg: impl Into<String>) -> TmfgError {
+        TmfgError::InvariantViolation(msg.into())
+    }
+
+    /// Shorthand constructor for [`TmfgError::Protocol`].
+    pub fn protocol(msg: impl Into<String>) -> TmfgError {
+        TmfgError::Protocol(msg.into())
+    }
+
+    /// Stable machine-readable error code (the `code` field of service
+    /// error responses). These strings are part of the wire contract —
+    /// never change them for an existing variant.
+    pub fn code(&self) -> &'static str {
+        match self {
+            TmfgError::InvalidInput(_) => "invalid_input",
+            TmfgError::DatasetNotFound(_) => "dataset_not_found",
+            TmfgError::SimilarityFailed(_) => "similarity_failed",
+            TmfgError::InvariantViolation(_) => "invariant_violation",
+            TmfgError::StreamClosed => "stream_closed",
+            TmfgError::Protocol(_) => "protocol",
+            TmfgError::Io(_) => "io",
+        }
+    }
+}
+
+impl fmt::Display for TmfgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TmfgError::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            TmfgError::DatasetNotFound(name) => write!(f, "unknown dataset {name}"),
+            TmfgError::SimilarityFailed(m) => {
+                write!(f, "similarity computation failed: {m}")
+            }
+            TmfgError::InvariantViolation(m) => write!(f, "invariant violation: {m}"),
+            TmfgError::StreamClosed => write!(f, "no open stream on this connection"),
+            TmfgError::Protocol(m) => write!(f, "protocol error: {m}"),
+            TmfgError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for TmfgError {}
+
+impl From<std::io::Error> for TmfgError {
+    fn from(e: std::io::Error) -> TmfgError {
+        TmfgError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable() {
+        let cases = [
+            (TmfgError::invalid("x"), "invalid_input"),
+            (TmfgError::DatasetNotFound("Nope".into()), "dataset_not_found"),
+            (TmfgError::SimilarityFailed("x".into()), "similarity_failed"),
+            (TmfgError::invariant("x"), "invariant_violation"),
+            (TmfgError::StreamClosed, "stream_closed"),
+            (TmfgError::protocol("x"), "protocol"),
+            (TmfgError::Io("x".into()), "io"),
+        ];
+        for (e, code) in cases {
+            assert_eq!(e.code(), code);
+        }
+    }
+
+    #[test]
+    fn display_keeps_wire_compatible_phrases() {
+        // Clients and tests match on these substrings.
+        assert!(TmfgError::DatasetNotFound("Nope".into())
+            .to_string()
+            .contains("unknown dataset"));
+        assert!(TmfgError::StreamClosed.to_string().contains("no open stream"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let e: TmfgError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert_eq!(e.code(), "io");
+        assert!(e.to_string().contains("gone"));
+    }
+}

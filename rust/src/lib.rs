@@ -13,25 +13,48 @@
 //! traffic with O(n²) per-tick incremental correlation updates and
 //! drift-gated topology reuse.
 //!
+//! The public surface is the typed staged API in [`api`]: a
+//! [`api::ClusterRequest`] builder over every input shape, a staged
+//! [`api::Plan`] executor (Similarity → Tmfg → Apsp → Dbht → Cut, each
+//! individually runnable with inspectable artifacts and timings), the
+//! unified [`api::TmfgError`], and the versioned [`api::wire`] types of
+//! the TCP service.
+//!
 //! The top-level `README.md` documents the three-layer architecture, the
 //! streaming subsystem and its wire protocol, and how to run the
 //! examples, benches, and experiments.
 //!
 //! Quick start:
 //! ```no_run
+//! use tmfg::api::{ClusterRequest, TmfgAlgo};
+//!
+//! let out = ClusterRequest::dataset("CBF")
+//!     .scale(0.05)
+//!     .algo(TmfgAlgo::Heap)
+//!     .run()?;
+//! println!("ARI = {:.3}", out.ari.unwrap_or(f64::NAN));
+//! # Ok::<(), tmfg::api::TmfgError>(())
+//! ```
+//!
+//! The original `Pipeline` remains as a thin compatibility facade
+//! (legacy; prefer [`api::ClusterRequest`] in new code):
+//! ```no_run
 //! use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig, TmfgAlgo};
 //! use tmfg::data::synth::SynthSpec;
 //!
 //! let ds = SynthSpec::new("demo", 200, 64, 4).generate(42);
 //! let cfg = PipelineConfig { algo: TmfgAlgo::Heap, ..Default::default() };
-//! let out = Pipeline::new(cfg).run_dataset(&ds);
-//! println!("ARI = {:.3}", out.ari.unwrap());
+//! let out = Pipeline::new(cfg).run_dataset(&ds)?;
+//! println!("ARI = {:.3}", out.ari.unwrap_or(f64::NAN));
+//! # Ok::<(), tmfg::api::TmfgError>(())
 //! ```
 
+pub mod api;
 pub mod apsp;
 pub mod coordinator;
 pub mod data;
 pub mod dbht;
+pub mod error;
 pub mod metrics;
 pub mod parlay;
 pub mod runtime;

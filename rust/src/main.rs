@@ -10,6 +10,7 @@
 //!               streaming session (sliding-window TMFG-DBHT)
 //!   info        print artifact/runtime/pool information
 
+use tmfg::api::TmfgError;
 use tmfg::coordinator::experiments::{self, ExpOpts};
 use tmfg::coordinator::pipeline::{ApspMode, Pipeline, PipelineConfig, TmfgAlgo};
 use tmfg::coordinator::registry;
@@ -23,6 +24,7 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
   tmfg run --dataset <name|csv> [--algo par1|par10|par200|corr|heap|opt]
            [--scale 0.1] [--seed N] [--threads N] [--apsp exact|approx]
            [--linkage complete|average|single] [--no-xla] [--check]
+           [--newick out.nwk] [--json-out out.json]
   tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|ablation|all>
            [--scale 0.1] [--seed N] [--datasets a,b,c] [--threads 1,2,4]
            [--out-dir results]
@@ -53,6 +55,13 @@ fn main() {
             std::process::exit(2);
         }
     }
+}
+
+/// CLI boundary: the library reports `TmfgError`; the binary prints it
+/// and exits (the one place where exiting is the right response).
+fn fail(e: TmfgError) -> ! {
+    eprintln!("error: {e}");
+    std::process::exit(1);
 }
 
 fn parse_algo(args: &Args) -> TmfgAlgo {
@@ -101,7 +110,7 @@ fn cmd_run(args: &Args) {
         cfg.algo.name(),
         parlay::num_threads()
     );
-    let out = Pipeline::new(cfg).run_dataset(&ds);
+    let out = Pipeline::new(cfg).run_dataset(&ds).unwrap_or_else(|e| fail(e));
     println!("\nstage breakdown:\n{}", out.breakdown.table());
     if let Some(p) = out.corr_path {
         println!("similarity path: {p:?}");
@@ -112,11 +121,13 @@ fn cmd_run(args: &Args) {
         println!("ARI @ k={}: {ari:.4}", ds.n_classes);
     }
     if let Some(path) = args.opt_str("newick") {
-        std::fs::write(path, out.dbht.dendrogram.to_newick(None)).expect("write newick");
+        std::fs::write(path, out.dbht.dendrogram.to_newick(None))
+            .unwrap_or_else(|e| fail(e.into()));
         println!("wrote dendrogram (Newick) to {path}");
     }
     if let Some(path) = args.opt_str("json-out") {
-        std::fs::write(path, out.dbht.dendrogram.to_json().to_string()).expect("write json");
+        std::fs::write(path, out.dbht.dendrogram.to_json().to_string())
+            .unwrap_or_else(|e| fail(e.into()));
         println!("wrote dendrogram (JSON) to {path}");
     }
 }
@@ -133,7 +144,7 @@ fn cmd_experiment(args: &Args) {
             .unwrap_or_default(),
         out_dir: args.get_str("out-dir", "results"),
     };
-    match which.as_str() {
+    let result = match which.as_str() {
         "table1" => experiments::table1(&opts),
         "fig2" => experiments::fig2(&opts),
         "fig3" => experiments::fig3(&opts),
@@ -148,6 +159,9 @@ fn cmd_experiment(args: &Args) {
             eprintln!("unknown experiment {other}\n{USAGE}");
             std::process::exit(2);
         }
+    };
+    if let Err(e) = result {
+        fail(e);
     }
 }
 
@@ -159,7 +173,8 @@ fn cmd_gen(args: &Args) {
             eprintln!("unknown dataset {name}");
             std::process::exit(2);
         });
-    tmfg::data::loader::save_ucr_csv(&ds, std::path::Path::new(&out)).expect("write csv");
+    tmfg::data::loader::save_ucr_csv(&ds, std::path::Path::new(&out))
+        .unwrap_or_else(|e| fail(e.into()));
     println!("wrote {} (n={}, L={}, k={})", out, ds.n(), ds.len(), ds.n_classes);
 }
 
@@ -170,12 +185,13 @@ fn cmd_serve(args: &Args) {
         default_algo: parse_algo(args),
         ..Default::default()
     };
-    let h = serve(cfg).expect("bind service");
+    let h = serve(cfg).unwrap_or_else(|e| fail(e.into()));
     println!("tmfg clustering service listening on {}", h.addr);
-    println!("protocol: one JSON request per line; see coordinator/service.rs");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    println!("protocol: one JSON request per line; see api::wire + coordinator/service.rs");
+    // Block on the service itself: when a client sends {"cmd":"shutdown"}
+    // the acceptor and dispatcher wind down and wait() returns.
+    h.wait();
+    println!("tmfg clustering service shut down cleanly");
 }
 
 fn cmd_stream(args: &Args) {
@@ -209,10 +225,7 @@ fn cmd_stream(args: &Args) {
         scfg.policy.drift_threshold,
         parlay::num_threads()
     );
-    let (session, outputs) = pipeline.run_stream(&ds.data, scfg).unwrap_or_else(|e| {
-        eprintln!("stream failed: {e}");
-        std::process::exit(2);
-    });
+    let (session, outputs) = pipeline.run_stream(&ds.data, scfg).unwrap_or_else(|e| fail(e));
     let st = session.stats();
     println!(
         "ticks {}  emissions {}  rebuilds {}  refreshes {}  (final generation {})",

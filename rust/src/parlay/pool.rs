@@ -138,17 +138,25 @@ impl Pool {
             slot: Mutex::new(None),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            active: AtomicUsize::new(n_workers + 1),
+            active: AtomicUsize::new(1),
             run_lock: Mutex::new(()),
         });
+        // Degrade gracefully if the OS refuses a thread: stop spawning
+        // (worker ids must stay contiguous for `worker_limit`) and run
+        // with whatever came up — never panic from pool initialization.
+        let mut spawned = 0usize;
         for id in 0..n_workers {
             let sh = shared.clone();
-            std::thread::Builder::new()
+            let spawn = std::thread::Builder::new()
                 .name(format!("parlay-{id}"))
-                .spawn(move || worker_loop(sh, id))
-                .expect("spawn pool worker");
+                .spawn(move || worker_loop(sh, id));
+            match spawn {
+                Ok(_) => spawned += 1,
+                Err(_) => break,
+            }
         }
-        Pool { shared, n_workers }
+        shared.active.store(spawned + 1, Ordering::Relaxed);
+        Pool { shared, n_workers: spawned }
     }
 
     fn global() -> &'static Pool {

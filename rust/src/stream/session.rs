@@ -10,8 +10,9 @@
 //! generation counter; a bounded snapshot history keeps recent labelings
 //! for clients that poll.
 
+use crate::api::{build_tmfg_for, ApspMode, TmfgAlgo};
+use crate::error::TmfgError;
 use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
-use crate::coordinator::pipeline::{build_tmfg_for, ApspMode, TmfgAlgo};
 use crate::data::matrix::Matrix;
 use crate::dbht::hierarchy::dbht_dendrogram;
 use crate::dbht::Linkage;
@@ -129,15 +130,21 @@ pub struct StreamSession {
 }
 
 impl StreamSession {
-    pub fn new(config: StreamConfig) -> Result<StreamSession, String> {
+    pub fn new(config: StreamConfig) -> Result<StreamSession, TmfgError> {
         if config.n < 4 {
-            return Err(format!("streaming needs n >= 4 series for TMFG, got {}", config.n));
+            return Err(TmfgError::invalid(format!(
+                "streaming needs n >= 4 series for TMFG, got {}",
+                config.n
+            )));
         }
         if config.window < 2 {
-            return Err("window must hold at least 2 samples".into());
+            return Err(TmfgError::invalid("window must hold at least 2 samples"));
         }
         if config.k < 1 || config.k > config.n {
-            return Err(format!("k must be in 1..={}, got {}", config.n, config.k));
+            return Err(TmfgError::invalid(format!(
+                "k must be in 1..={}, got {}",
+                config.n, config.k
+            )));
         }
         let window = SlidingWindow::new(config.n, config.window, config.refresh_stats_every);
         Ok(StreamSession {
@@ -157,10 +164,7 @@ impl StreamSession {
     }
 
     fn effective_apsp(&self) -> ApspMode {
-        self.config.apsp.unwrap_or(match self.config.algo {
-            TmfgAlgo::Opt => ApspMode::Approx,
-            _ => ApspMode::Exact,
-        })
+        self.config.apsp.unwrap_or_else(|| self.config.algo.default_apsp())
     }
 
     /// Generation of the latest emission (0 until the first one).
@@ -187,22 +191,22 @@ impl StreamSession {
     }
 
     /// Ingest one observation per series; returns what happened.
-    pub fn tick(&mut self, sample: &[f32]) -> Result<TickOutput, String> {
+    pub fn tick(&mut self, sample: &[f32]) -> Result<TickOutput, TmfgError> {
         if sample.len() != self.config.n {
-            return Err(format!(
+            return Err(TmfgError::invalid(format!(
                 "sample length {} != n = {}",
                 sample.len(),
                 self.config.n
-            ));
+            )));
         }
         // A single NaN/inf would poison the incremental cross-products —
         // and keep poisoning them after eviction (NaN − NaN = NaN) until
         // the next exact stats rebuild — so reject it before it enters.
         if let Some(pos) = sample.iter().position(|v| !v.is_finite()) {
-            return Err(format!(
+            return Err(TmfgError::invalid(format!(
                 "non-finite sample value {} for series {pos}",
                 sample[pos]
-            ));
+            )));
         }
         let t = Timer::start();
         self.window.push(sample);
@@ -231,9 +235,11 @@ impl StreamSession {
             _ => (TickDecision::Rebuilt, None),
         };
         let labels = match decision {
-            TickDecision::Rebuilt => self.rebuild(s),
-            TickDecision::Refreshed => self.refresh(&s),
-            TickDecision::Warming => unreachable!("warming handled above"),
+            TickDecision::Rebuilt => self.rebuild(s)?,
+            TickDecision::Refreshed => self.refresh(&s)?,
+            TickDecision::Warming => {
+                return Err(TmfgError::invariant("warming decision past the warmup gate"))
+            }
         };
         self.generation += 1;
         self.stats.emissions += 1;
@@ -258,36 +264,36 @@ impl StreamSession {
         })
     }
 
-    fn rebuild(&mut self, s: Matrix) -> Vec<usize> {
-        let tmfg = build_tmfg_for(self.config.algo, &s);
-        let labels = self.cluster(&tmfg, &s);
+    fn rebuild(&mut self, s: Matrix) -> Result<Vec<usize>, TmfgError> {
+        let tmfg = build_tmfg_for(self.config.algo, &s)?;
+        let labels = self.cluster(&tmfg, &s)?;
         self.tmfg = Some(tmfg);
         self.tmfg_corr = Some(s);
         self.refreshes_since_rebuild = 0;
         self.stats.rebuilds += 1;
-        labels
+        Ok(labels)
     }
 
-    fn refresh(&mut self, s: &Matrix) -> Vec<usize> {
-        let labels = {
-            let tmfg = self.tmfg.as_ref().expect("refresh without a standing topology");
-            self.cluster(tmfg, s)
+    fn refresh(&mut self, s: &Matrix) -> Result<Vec<usize>, TmfgError> {
+        let Some(tmfg) = self.tmfg.as_ref() else {
+            return Err(TmfgError::invariant("refresh without a standing topology"));
         };
+        let labels = self.cluster(tmfg, s)?;
         self.refreshes_since_rebuild += 1;
         self.stats.refreshes += 1;
-        labels
+        Ok(labels)
     }
 
     /// The downstream stages shared by both paths: edge weights from the
     /// current matrix → APSP → DBHT dendrogram → cut at k.
-    fn cluster(&self, tmfg: &TmfgResult, s: &Matrix) -> Vec<usize> {
+    fn cluster(&self, tmfg: &TmfgResult, s: &Matrix) -> Result<Vec<usize>, TmfgError> {
         let g = CsrGraph::from_tmfg(tmfg, s);
         let apsp = match self.effective_apsp() {
             ApspMode::Exact => apsp_exact(&g),
             ApspMode::Approx => apsp_hub(&g, &self.config.hub),
         };
-        let dbht = dbht_dendrogram(s, tmfg, &apsp, self.config.linkage);
-        dbht.dendrogram.cut(self.config.k)
+        let dbht = dbht_dendrogram(s, tmfg, &apsp, self.config.linkage)?;
+        Ok(dbht.dendrogram.cut(self.config.k))
     }
 }
 
@@ -430,7 +436,7 @@ mod tests {
         for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
             let mut sample = gaussian_sample(&mut rng, 8);
             sample[3] = bad;
-            let err = s.tick(&sample).unwrap_err();
+            let err = s.tick(&sample).unwrap_err().to_string();
             assert!(err.contains("non-finite"), "{err}");
             assert!(err.contains("series 3"), "{err}");
         }

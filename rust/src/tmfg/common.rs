@@ -1,6 +1,7 @@
 //! Shared TMFG machinery: gains, the initial 4-clique, face bookkeeping
 //! with bubble-tree tracking, and the result type.
 
+use crate::error::TmfgError;
 use crate::data::matrix::Matrix;
 use crate::parlay;
 
@@ -105,11 +106,31 @@ pub fn gain(s: &Matrix, f: &[u32; 3], v: u32) -> f32 {
     s.at(r, f[0] as usize) + s.at(r, f[1] as usize) + s.at(r, f[2] as usize)
 }
 
+/// Validate a similarity matrix for TMFG construction: square with
+/// n ≥ 4. Returns n. All construction entry points call this before any
+/// work, so the deeper machinery can assume a usable shape.
+pub fn validate_similarity(s: &Matrix) -> Result<usize, TmfgError> {
+    if s.rows != s.cols {
+        return Err(TmfgError::invalid(format!(
+            "similarity matrix must be square, got {}x{}",
+            s.rows, s.cols
+        )));
+    }
+    if s.rows < 4 {
+        return Err(TmfgError::invalid(format!(
+            "TMFG needs at least 4 vertices, got {}",
+            s.rows
+        )));
+    }
+    Ok(s.rows)
+}
+
 /// The four seed vertices: largest total similarity row sums (Alg. 1/2,
-/// line 1). Row sums are computed in parallel.
+/// line 1). Row sums are computed in parallel. Callers have validated
+/// n ≥ 4 via [`validate_similarity`].
 pub fn initial_clique(s: &Matrix) -> [u32; 4] {
     let n = s.rows;
-    assert!(n >= 4, "TMFG needs at least 4 vertices");
+    debug_assert!(n >= 4, "TMFG needs at least 4 vertices");
     let sums = parlay::par_map(n, 8, |i| {
         let mut acc = 0.0f64;
         for &v in s.row(i) {
@@ -121,7 +142,7 @@ pub fn initial_clique(s: &Matrix) -> [u32; 4] {
     let mut best: Vec<(f64, u32)> = Vec::with_capacity(5);
     for (i, &v) in sums.iter().enumerate() {
         best.push((v, i as u32));
-        best.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        best.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         best.truncate(4);
     }
     [best[0].1, best[1].1, best[2].1, best[3].1]
@@ -257,35 +278,48 @@ impl Builder {
     }
 }
 
-/// Structural invariant checks used by tests and (in debug builds) by the
+/// Structural invariant checks used by tests and (on request) by the
 /// pipeline: maximal-planar edge/face counts, single insertion, parent
 /// validity, and that every clique is a genuine 4-clique of the edge set.
-pub fn check_invariants(r: &TmfgResult) -> Result<(), String> {
+/// Violations surface as [`TmfgError::InvariantViolation`], never a panic.
+pub fn check_invariants(r: &TmfgResult) -> Result<(), TmfgError> {
     let n = r.n;
     if n < 4 {
-        return Err("n < 4".into());
+        return Err(TmfgError::invariant("n < 4"));
     }
     if r.edges.len() != 3 * n - 6 {
-        return Err(format!("edge count {} != 3n-6 = {}", r.edges.len(), 3 * n - 6));
+        return Err(TmfgError::invariant(format!(
+            "edge count {} != 3n-6 = {}",
+            r.edges.len(),
+            3 * n - 6
+        )));
     }
     if r.faces.len() != 2 * n - 4 {
-        return Err(format!("face count {} != 2n-4 = {}", r.faces.len(), 2 * n - 4));
+        return Err(TmfgError::invariant(format!(
+            "face count {} != 2n-4 = {}",
+            r.faces.len(),
+            2 * n - 4
+        )));
     }
     if r.cliques.len() != n - 3 {
-        return Err(format!("clique count {} != n-3 = {}", r.cliques.len(), n - 3));
+        return Err(TmfgError::invariant(format!(
+            "clique count {} != n-3 = {}",
+            r.cliques.len(),
+            n - 3
+        )));
     }
     if r.order.len() != n {
-        return Err("order must contain every vertex".into());
+        return Err(TmfgError::invariant("order must contain every vertex"));
     }
     let mut seen = vec![false; n];
     for &v in &r.order {
         if seen[v as usize] {
-            return Err(format!("vertex {v} inserted twice"));
+            return Err(TmfgError::invariant(format!("vertex {v} inserted twice")));
         }
         seen[v as usize] = true;
     }
     if !seen.iter().all(|&b| b) {
-        return Err("some vertex never inserted".into());
+        return Err(TmfgError::invariant("some vertex never inserted"));
     }
     // no duplicate / self edges
     let mut es: Vec<(u32, u32)> = r
@@ -296,11 +330,11 @@ pub fn check_invariants(r: &TmfgResult) -> Result<(), String> {
     es.sort_unstable();
     for w in es.windows(2) {
         if w[0] == w[1] {
-            return Err(format!("duplicate edge {:?}", w[0]));
+            return Err(TmfgError::invariant(format!("duplicate edge {:?}", w[0])));
         }
     }
     if es.iter().any(|&(u, v)| u == v) {
-        return Err("self edge".into());
+        return Err(TmfgError::invariant("self edge"));
     }
     let has_edge = |a: u32, b: u32| es.binary_search(&(a.min(b), a.max(b))).is_ok();
     // cliques are 4-cliques; parent links valid
@@ -308,25 +342,33 @@ pub fn check_invariants(r: &TmfgResult) -> Result<(), String> {
         for i in 0..4 {
             for j in (i + 1)..4 {
                 if !has_edge(c[i], c[j]) {
-                    return Err(format!("clique {b} not a 4-clique: missing ({},{})", c[i], c[j]));
+                    return Err(TmfgError::invariant(format!(
+                        "clique {b} not a 4-clique: missing ({},{})",
+                        c[i], c[j]
+                    )));
                 }
             }
         }
         let p = r.parent[b];
         if b == 0 {
             if p != -1 {
-                return Err("root parent must be -1".into());
+                return Err(TmfgError::invariant("root parent must be -1"));
             }
         } else {
             if p < 0 || p as usize >= b {
-                return Err(format!("parent[{b}] = {p} invalid (must precede child)"));
+                return Err(TmfgError::invariant(format!(
+                    "parent[{b}] = {p} invalid (must precede child)"
+                )));
             }
             // shared face: first three vertices of clique b must all belong
             // to the parent clique
             let pc = r.cliques[p as usize];
             for k in 0..3 {
                 if !pc.contains(&c[k]) {
-                    return Err(format!("clique {b} face vertex {} not in parent", c[k]));
+                    return Err(TmfgError::invariant(format!(
+                        "clique {b} face vertex {} not in parent",
+                        c[k]
+                    )));
                 }
             }
         }
@@ -334,7 +376,7 @@ pub fn check_invariants(r: &TmfgResult) -> Result<(), String> {
     // faces are triangles of the edge set
     for f in &r.faces {
         if !(has_edge(f[0], f[1]) && has_edge(f[1], f[2]) && has_edge(f[0], f[2])) {
-            return Err(format!("face {f:?} is not a triangle of E"));
+            return Err(TmfgError::invariant(format!("face {f:?} is not a triangle of E")));
         }
     }
     Ok(())

@@ -9,9 +9,11 @@
 //! inserted (plus the three new faces) are recomputed per round.
 
 use super::common::{
-    gain, initial_clique, Builder, Faces, ScanKind, SortKind, TmfgConfig, TmfgResult,
+    gain, initial_clique, validate_similarity, Builder, Faces, ScanKind, SortKind, TmfgConfig,
+    TmfgResult,
 };
 use super::scan::scan;
+use crate::error::TmfgError;
 use crate::data::matrix::Matrix;
 use crate::parlay::{self, SendPtr};
 
@@ -129,10 +131,11 @@ impl CorrState {
 
 /// Run CORR-TMFG. `cfg.prefix` ≥ 1 vertices are inserted per round
 /// (1 is the paper's best-performing configuration).
-pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
-    let n = s.rows;
-    assert!(n >= 4, "TMFG needs n >= 4");
-    assert!(cfg.prefix >= 1);
+pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> Result<TmfgResult, TmfgError> {
+    let n = validate_similarity(s)?;
+    if cfg.prefix < 1 {
+        return Err(TmfgError::invalid("prefix must be >= 1"));
+    }
     let mut timer = crate::util::timer::Timer::start();
     let mut timings = super::common::TmfgTimings::default();
     let seed = initial_clique(s);
@@ -149,14 +152,16 @@ pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
     if n == 4 {
         let mut r = builder.finish(n, faces.alive_faces());
         r.timings = timings;
-        return r;
+        return Ok(r);
     }
 
     // gains[f] = best (gain, vertex) pair for face f; f indexes `faces`.
     let mut gains: Vec<(f32, u32)> = Vec::with_capacity(6 * n);
     for fid in 0..4 {
         let fv = faces.verts[fid];
-        let p = state.best_pair(s, &fv).expect("n >= 5 has candidates");
+        let p = state
+            .best_pair(s, &fv)
+            .ok_or_else(|| TmfgError::invariant("n >= 5 seed face has no candidate"))?;
         gains.push(p);
     }
 
@@ -168,7 +173,7 @@ pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
             let ids = faces.alive_ids();
             let g = &gains;
             let best = parlay::par_argmax(ids.len(), 256, |k| g[ids[k] as usize].0)
-                .expect("alive faces exist");
+                .ok_or_else(|| TmfgError::invariant("no alive faces while vertices remain"))?;
             let fid = ids[best];
             let (gg, v) = gains[fid as usize];
             vec![(gg, fid, v)]
@@ -193,6 +198,11 @@ pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
             }
             sel
         };
+        if selected.is_empty() {
+            return Err(TmfgError::invariant(
+                "no insertable face-vertex pair while vertices remain",
+            ));
+        }
 
         // ---- insertion (lines 15–18) ---------------------------------------
         let mut new_faces: Vec<u32> = Vec::with_capacity(3 * selected.len());
@@ -232,7 +242,7 @@ pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
             let fv = faces.verts[f as usize];
             let p = state
                 .best_pair(s, &fv)
-                .expect("candidates exist while n_rem > 0");
+                .ok_or_else(|| TmfgError::invariant("no candidate pair while vertices remain"))?;
             gains[f as usize] = p;
         }
     }
@@ -241,7 +251,7 @@ pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
     let mut r = builder.finish(n, faces.alive_faces());
     r.timings = timings;
     debug_assert!(super::common::check_invariants(&r).is_ok());
-    r
+    Ok(r)
 }
 
 #[cfg(test)]
@@ -307,7 +317,7 @@ mod tests {
     fn builds_valid_tmfg() {
         for n in [4usize, 5, 6, 10, 50, 200] {
             let s = random_corr(n, n as u64);
-            let r = corr_tmfg(&s, &TmfgConfig::default());
+            let r = corr_tmfg(&s, &TmfgConfig::default()).unwrap();
             check_invariants(&r).unwrap_or_else(|e| panic!("n={n}: {e}"));
         }
     }
@@ -317,7 +327,7 @@ mod tests {
         let s = random_corr(100, 9);
         for p in [1usize, 5, 10, 50] {
             let cfg = TmfgConfig { prefix: p, ..Default::default() };
-            let r = corr_tmfg(&s, &cfg);
+            let r = corr_tmfg(&s, &cfg).unwrap();
             check_invariants(&r).unwrap_or_else(|e| panic!("prefix={p}: {e}"));
         }
     }
@@ -325,13 +335,13 @@ mod tests {
     #[test]
     fn scan_and_sort_variants_give_same_graph() {
         let s = random_corr(80, 4);
-        let base = corr_tmfg(&s, &TmfgConfig::default());
+        let base = corr_tmfg(&s, &TmfgConfig::default()).unwrap();
         for (scan, sort) in [
             (ScanKind::Chunked, SortKind::Comparison),
             (ScanKind::Scalar, SortKind::Radix),
             (ScanKind::Chunked, SortKind::Radix),
         ] {
-            let r = corr_tmfg(&s, &TmfgConfig { prefix: 1, scan, sort });
+            let r = corr_tmfg(&s, &TmfgConfig { prefix: 1, scan, sort }).unwrap();
             assert_eq!(r.edges, base.edges, "scan={scan:?} sort={sort:?}");
         }
     }
@@ -339,8 +349,8 @@ mod tests {
     #[test]
     fn deterministic() {
         let s = random_corr(60, 5);
-        let a = corr_tmfg(&s, &TmfgConfig::default());
-        let b = corr_tmfg(&s, &TmfgConfig::default());
+        let a = corr_tmfg(&s, &TmfgConfig::default()).unwrap();
+        let b = corr_tmfg(&s, &TmfgConfig::default()).unwrap();
         assert_eq!(a.edges, b.edges);
         assert_eq!(a.cliques, b.cliques);
     }
@@ -350,8 +360,12 @@ mod tests {
         // A bigger prefix inserts greedier batches → edge sum should not
         // improve (paper: large prefixes reduce quality).
         let s = random_corr(150, 6);
-        let e1 = corr_tmfg(&s, &TmfgConfig { prefix: 1, ..Default::default() }).edge_sum(&s);
-        let e50 = corr_tmfg(&s, &TmfgConfig { prefix: 50, ..Default::default() }).edge_sum(&s);
+        let e1 = corr_tmfg(&s, &TmfgConfig { prefix: 1, ..Default::default() })
+            .unwrap()
+            .edge_sum(&s);
+        let e50 = corr_tmfg(&s, &TmfgConfig { prefix: 50, ..Default::default() })
+            .unwrap()
+            .edge_sum(&s);
         assert!(
             e50 <= e1 + 1e-3,
             "prefix-50 edge sum {e50} unexpectedly beats prefix-1 {e1}"

@@ -13,8 +13,9 @@
 //! remaining candidate, rare in practice) — we quantify the edge-sum gap
 //! in tests and in the Fig. 7 experiment.
 
-use super::common::{initial_clique, Builder, Faces, TmfgConfig, TmfgResult};
+use super::common::{initial_clique, validate_similarity, Builder, Faces, TmfgConfig, TmfgResult};
 use super::corrbased::CorrState;
+use crate::error::TmfgError;
 use crate::data::matrix::Matrix;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -47,9 +48,8 @@ impl PartialOrd for Pair {
 
 /// Run HEAP-TMFG. Inserts exactly one vertex per round (the algorithm
 /// does not support prefix > 1); `cfg.prefix` is ignored.
-pub fn heap_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
-    let n = s.rows;
-    assert!(n >= 4, "TMFG needs n >= 4");
+pub fn heap_tmfg(s: &Matrix, cfg: &TmfgConfig) -> Result<TmfgResult, TmfgError> {
+    let n = validate_similarity(s)?;
     let mut timer = crate::util::timer::Timer::start();
     let mut timings = super::common::TmfgTimings::default();
     let seed = initial_clique(s);
@@ -68,13 +68,19 @@ pub fn heap_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
     if n > 4 {
         for fid in 0..4u32 {
             let fv = faces.verts[fid as usize];
-            let (g, v) = state.best_pair(s, &fv).expect("n > 4 has candidates");
+            let (g, v) = state
+                .best_pair(s, &fv)
+                .ok_or_else(|| TmfgError::invariant("n > 4 seed face has no candidate"))?;
             heap.push(Pair { gain: g, face: fid, vertex: v });
         }
     }
 
     while state.n_rem > 0 {
-        let top = heap.pop().expect("heap invariant: alive faces have entries");
+        let Some(top) = heap.pop() else {
+            return Err(TmfgError::invariant(
+                "heap exhausted while vertices remain uninserted",
+            ));
+        };
         if !faces.alive[top.face as usize] {
             // Face died since this pair was pushed — its successors carry
             // the candidates now.
@@ -84,9 +90,9 @@ pub fn heap_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
             // Stale vertex: recompute this face's best pair and re-insert
             // (Alg. 2 lines 26–31).
             let fv = faces.verts[top.face as usize];
-            let (g, v) = state
-                .best_pair(s, &fv)
-                .expect("candidates exist while n_rem > 0");
+            let (g, v) = state.best_pair(s, &fv).ok_or_else(|| {
+                TmfgError::invariant("no candidate pair while vertices remain")
+            })?;
             heap.push(Pair { gain: g, face: top.face, vertex: v });
             continue;
         }
@@ -100,9 +106,9 @@ pub fn heap_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
         }
         for nf in new_faces {
             let nfv = faces.verts[nf as usize];
-            let (g, v) = state
-                .best_pair(s, &nfv)
-                .expect("candidates exist while n_rem > 0");
+            let (g, v) = state.best_pair(s, &nfv).ok_or_else(|| {
+                TmfgError::invariant("no candidate pair while vertices remain")
+            })?;
             heap.push(Pair { gain: g, face: nf, vertex: v });
         }
     }
@@ -111,7 +117,7 @@ pub fn heap_tmfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
     let mut r = builder.finish(n, faces.alive_faces());
     r.timings = timings;
     debug_assert!(super::common::check_invariants(&r).is_ok());
-    r
+    Ok(r)
 }
 
 #[cfg(test)]
@@ -140,7 +146,7 @@ mod tests {
     fn builds_valid_tmfg() {
         for n in [4usize, 5, 6, 10, 50, 200] {
             let s = random_corr(n, 100 + n as u64);
-            let r = heap_tmfg(&s, &TmfgConfig::default());
+            let r = heap_tmfg(&s, &TmfgConfig::default()).unwrap();
             check_invariants(&r).unwrap_or_else(|e| panic!("n={n}: {e}"));
         }
     }
@@ -148,8 +154,8 @@ mod tests {
     #[test]
     fn deterministic() {
         let s = random_corr(70, 11);
-        let a = heap_tmfg(&s, &TmfgConfig::default());
-        let b = heap_tmfg(&s, &TmfgConfig::default());
+        let a = heap_tmfg(&s, &TmfgConfig::default()).unwrap();
+        let b = heap_tmfg(&s, &TmfgConfig::default()).unwrap();
         assert_eq!(a.edges, b.edges);
     }
 
@@ -159,8 +165,8 @@ mod tests {
         // different" from CORR-TMFG; Fig. 7 shows <1% differences.
         for seed in [1u64, 2, 3] {
             let s = random_corr(120, seed);
-            let ec = corr_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
-            let eh = heap_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
+            let ec = corr_tmfg(&s, &TmfgConfig::default()).unwrap().edge_sum(&s);
+            let eh = heap_tmfg(&s, &TmfgConfig::default()).unwrap().edge_sum(&s);
             let rel = (ec - eh).abs() / ec.abs().max(1e-9);
             assert!(rel < 0.02, "seed {seed}: corr {ec} vs heap {eh} (rel {rel})");
         }
@@ -169,8 +175,25 @@ mod tests {
     #[test]
     fn tiny_n() {
         let s = random_corr(4, 1);
-        let r = heap_tmfg(&s, &TmfgConfig::default());
+        let r = heap_tmfg(&s, &TmfgConfig::default()).unwrap();
         assert_eq!(r.edges.len(), 6);
         assert_eq!(r.cliques.len(), 1);
+    }
+
+    #[test]
+    fn too_small_or_non_square_is_err_not_panic() {
+        let s = random_corr(4, 2);
+        let mut rect = s.clone();
+        rect.rows = 2;
+        rect.data.truncate(8);
+        assert!(heap_tmfg(&rect, &TmfgConfig::default()).is_err());
+        let tiny = random_corr(4, 3);
+        let mut tiny3 = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                tiny3.set(i, j, tiny.at(i, j));
+            }
+        }
+        assert!(heap_tmfg(&tiny3, &TmfgConfig::default()).is_err());
     }
 }

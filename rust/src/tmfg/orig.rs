@@ -11,7 +11,10 @@
 //! paper's Fig. 5 shows dominating the runtime, especially with small
 //! prefixes where only 3·P sorts are available to parallelize per round.
 
-use super::common::{gain, initial_clique, Builder, Faces, TmfgConfig, TmfgResult};
+use super::common::{
+    gain, initial_clique, validate_similarity, Builder, Faces, TmfgConfig, TmfgResult,
+};
+use crate::error::TmfgError;
 use crate::data::matrix::Matrix;
 use crate::parlay;
 use std::sync::Mutex;
@@ -53,14 +56,13 @@ impl FaceArr {
 /// Run PAR-TMFG with the given prefix size (1, 10, and 200 in the paper's
 /// experiments). With prefix 1 this reproduces the serial algorithm of
 /// Massara et al. exactly (always the globally best pair).
-pub fn orig_tmfg(s: &Matrix, prefix: usize) -> TmfgResult {
+pub fn orig_tmfg(s: &Matrix, prefix: usize) -> Result<TmfgResult, TmfgError> {
     let cfg = TmfgConfig { prefix, ..Default::default() };
     orig_tmfg_cfg(s, &cfg)
 }
 
-pub fn orig_tmfg_cfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
-    let n = s.rows;
-    assert!(n >= 4, "TMFG needs n >= 4");
+pub fn orig_tmfg_cfg(s: &Matrix, cfg: &TmfgConfig) -> Result<TmfgResult, TmfgError> {
+    let n = validate_similarity(s)?;
     let prefix = cfg.prefix.max(1);
     let mut timer = crate::util::timer::Timer::start();
     let mut timings = super::common::TmfgTimings::default();
@@ -91,7 +93,17 @@ pub fn orig_tmfg_cfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
         let arrs_ref = &arrs;
         let best: Vec<(f32, u32, u32)> = parlay::par_map(ids.len(), 64, |k| {
             let f = ids[k];
-            let mut arr = arrs_ref[f as usize].as_ref().expect("alive face has arr").lock().unwrap();
+            // A missing array for an alive face is an internal bug; report
+            // it as an unpeekable face (NEG_INFINITY) so selection skips it
+            // and the empty-selection check below surfaces the error —
+            // closures on the parallel pool must not panic.
+            let Some(m) = arrs_ref[f as usize].as_ref() else {
+                return (f32::NEG_INFINITY, f, u32::MAX);
+            };
+            let mut arr = match m.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
             match arr.peek(ins) {
                 Some((g, v)) => (g, f, v),
                 None => (f32::NEG_INFINITY, f, u32::MAX),
@@ -117,7 +129,11 @@ pub fn orig_tmfg_cfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
                 }
             }
         }
-        debug_assert!(!selected.is_empty(), "no insertable pair found");
+        if selected.is_empty() {
+            return Err(TmfgError::invariant(
+                "no insertable face-vertex pair while vertices remain",
+            ));
+        }
 
         // ---- insert the batch ----------------------------------------------
         let mut new_faces: Vec<u32> = Vec::with_capacity(3 * selected.len());
@@ -153,7 +169,7 @@ pub fn orig_tmfg_cfg(s: &Matrix, cfg: &TmfgConfig) -> TmfgResult {
     let mut r = builder.finish(n, faces.alive_faces());
     r.timings = timings;
     debug_assert!(super::common::check_invariants(&r).is_ok());
-    r
+    Ok(r)
 }
 
 #[cfg(test)]
@@ -172,7 +188,7 @@ mod tests {
     fn builds_valid_tmfg() {
         for n in [4usize, 5, 10, 60, 150] {
             let s = random_corr(n, n as u64);
-            let r = orig_tmfg(&s, 1);
+            let r = orig_tmfg(&s, 1).unwrap();
             check_invariants(&r).unwrap_or_else(|e| panic!("n={n}: {e}"));
         }
     }
@@ -181,7 +197,7 @@ mod tests {
     fn prefix_sizes_valid() {
         let s = random_corr(120, 3);
         for p in [1usize, 10, 200] {
-            let r = orig_tmfg(&s, p);
+            let r = orig_tmfg(&s, p).unwrap();
             check_invariants(&r).unwrap_or_else(|e| panic!("p={p}: {e}"));
         }
     }
@@ -192,9 +208,9 @@ mod tests {
         // its edge sum must be >= the prefix-10 and prefix-200 runs
         // (greedy dominance on the same instance, as in the paper's Fig 7).
         let s = random_corr(150, 7);
-        let e1 = orig_tmfg(&s, 1).edge_sum(&s);
-        let e10 = orig_tmfg(&s, 10).edge_sum(&s);
-        let e200 = orig_tmfg(&s, 200).edge_sum(&s);
+        let e1 = orig_tmfg(&s, 1).unwrap().edge_sum(&s);
+        let e10 = orig_tmfg(&s, 10).unwrap().edge_sum(&s);
+        let e200 = orig_tmfg(&s, 200).unwrap().edge_sum(&s);
         assert!(e1 >= e10 - 1e-3, "e1={e1} e10={e10}");
         assert!(e10 >= e200 - 1e-3, "e10={e10} e200={e200}");
     }
@@ -204,9 +220,9 @@ mod tests {
         // Fig. 7: CORR/HEAP edge sums are within ~1% of PAR-TDBHT-1.
         for seed in [4u64, 5] {
             let s = random_corr(150, seed);
-            let e1 = orig_tmfg(&s, 1).edge_sum(&s);
-            let ec = corr_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
-            let eh = heap_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
+            let e1 = orig_tmfg(&s, 1).unwrap().edge_sum(&s);
+            let ec = corr_tmfg(&s, &TmfgConfig::default()).unwrap().edge_sum(&s);
+            let eh = heap_tmfg(&s, &TmfgConfig::default()).unwrap().edge_sum(&s);
             assert!((e1 - ec) / e1.abs().max(1e-9) < 0.03, "corr too far: {e1} vs {ec}");
             assert!((e1 - eh) / e1.abs().max(1e-9) < 0.03, "heap too far: {e1} vs {eh}");
             // and greedy prefix-1 dominates the approximations
@@ -218,6 +234,6 @@ mod tests {
     #[test]
     fn deterministic() {
         let s = random_corr(80, 9);
-        assert_eq!(orig_tmfg(&s, 10).edges, orig_tmfg(&s, 10).edges);
+        assert_eq!(orig_tmfg(&s, 10).unwrap().edges, orig_tmfg(&s, 10).unwrap().edges);
     }
 }

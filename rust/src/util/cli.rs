@@ -4,6 +4,7 @@
 //! arguments, with typed accessors and defaults. Each binary declares its
 //! own usage string; unknown flags are an error so typos fail fast.
 
+use crate::error::TmfgError;
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
@@ -19,7 +20,7 @@ impl Args {
     pub fn parse_from<I: IntoIterator<Item = String>>(
         tokens: I,
         known: &[&str],
-    ) -> Result<Args, String> {
+    ) -> Result<Args, TmfgError> {
         let mut a = Args {
             known: known.iter().map(|s| s.to_string()).collect(),
             ..Default::default()
@@ -32,7 +33,7 @@ impl Args {
                     None => (stripped.to_string(), None),
                 };
                 if !a.known.is_empty() && !a.known.contains(&key) {
-                    return Err(format!("unknown flag --{key}"));
+                    return Err(TmfgError::invalid(format!("unknown flag --{key}")));
                 }
                 let val = match inline_val {
                     Some(v) => v,
@@ -54,7 +55,7 @@ impl Args {
     }
 
     /// Parse from `std::env::args()` (skipping argv[0]).
-    pub fn parse(known: &[&str]) -> Result<Args, String> {
+    pub fn parse(known: &[&str]) -> Result<Args, TmfgError> {
         Self::parse_from(std::env::args().skip(1), known)
     }
 

@@ -61,6 +61,13 @@ impl Breakdown {
         self.entries.iter().find(|(s, _)| s == stage).map(|(_, t)| *t)
     }
 
+    /// Drop a stage's accumulated time — used when a stage artifact is
+    /// invalidated and will be re-run, so the breakdown never
+    /// double-counts.
+    pub fn remove(&mut self, stage: &str) {
+        self.entries.retain(|(s, _)| s != stage);
+    }
+
     pub fn total(&self) -> f64 {
         self.entries.iter().map(|(_, t)| t).sum()
     }

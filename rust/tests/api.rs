@@ -1,0 +1,223 @@
+//! Integration tests for the typed staged API (`tmfg::api`): builder
+//! validation, every `TmfgError` path the issue calls out, staged
+//! execution with artifact reuse, and panic-free invariant reporting.
+
+use tmfg::api::{ApspMode, ClusterRequest, Stage, TmfgAlgo, TmfgError};
+use tmfg::data::corr::pearson_correlation;
+use tmfg::data::matrix::Matrix;
+use tmfg::data::synth::SynthSpec;
+use tmfg::tmfg::common::check_invariants;
+
+fn sim(n: usize, seed: u64) -> Matrix {
+    let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
+    pearson_correlation(&ds.data)
+}
+
+#[test]
+fn unknown_dataset_is_dataset_not_found() {
+    let e = ClusterRequest::dataset("NoSuchDataset").run().unwrap_err();
+    assert_eq!(e.code(), "dataset_not_found");
+    assert!(e.to_string().contains("unknown dataset"), "{e}");
+}
+
+#[test]
+fn small_matrix_is_invalid_input_not_panic() {
+    let s = Matrix::from_vec(3, 3, vec![1.0, 0.5, 0.2, 0.5, 1.0, 0.1, 0.2, 0.1, 1.0]);
+    let e = ClusterRequest::similarity(s).run().unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+    assert!(e.to_string().contains("4"), "{e}");
+}
+
+#[test]
+fn non_square_similarity_rejected() {
+    let s = Matrix::zeros(6, 5);
+    let e = ClusterRequest::similarity(s).run().unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+    assert!(e.to_string().contains("square"), "{e}");
+}
+
+#[test]
+fn labels_length_mismatch_rejected() {
+    let s = sim(20, 1);
+    let e = ClusterRequest::similarity(s)
+        .labels(vec![0; 7])
+        .k(2)
+        .run()
+        .unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+    assert!(e.to_string().contains("labels length"), "{e}");
+}
+
+#[test]
+fn k_out_of_range_rejected() {
+    let s = sim(12, 2);
+    for k in [0usize, 13] {
+        let e = ClusterRequest::similarity(s.clone()).k(k).run().unwrap_err();
+        assert_eq!(e.code(), "invalid_input", "k={k}");
+    }
+}
+
+#[test]
+fn non_finite_inputs_rejected() {
+    let mut s = sim(10, 3);
+    s.set(2, 7, f32::NAN);
+    let e = ClusterRequest::similarity(s).run().unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+    assert!(e.to_string().contains("non-finite"), "{e}");
+
+    let ds = SynthSpec::new("t", 10, 32, 2).generate(4);
+    let mut panel = ds.data.clone();
+    panel.set(0, 0, f32::INFINITY);
+    let e = ClusterRequest::panel(panel).k(2).run().unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+}
+
+#[test]
+fn invariant_failure_is_err_not_panic() {
+    // Build a valid TMFG through the staged API, corrupt it, and check
+    // the invariant checker reports a typed error instead of panicking.
+    let mut plan = ClusterRequest::similarity(sim(30, 5))
+        .algo(TmfgAlgo::Heap)
+        .build()
+        .unwrap();
+    let mut tmfg = plan.run_tmfg().unwrap().clone();
+    check_invariants(&tmfg).unwrap();
+    tmfg.edges.pop();
+    let e = check_invariants(&tmfg).unwrap_err();
+    assert_eq!(e.code(), "invariant_violation");
+    assert!(matches!(e, TmfgError::InvariantViolation(_)));
+}
+
+#[test]
+fn dataset_request_end_to_end() {
+    let out = ClusterRequest::dataset("CBF")
+        .scale(0.05)
+        .seed(1)
+        .algo(TmfgAlgo::Heap)
+        .use_xla(false)
+        .check_invariants(true)
+        .run()
+        .unwrap();
+    assert_eq!(out.algo, TmfgAlgo::Heap);
+    assert_eq!(out.apsp_mode, ApspMode::Exact);
+    assert!(out.dbht.dendrogram.is_complete());
+    let ari = out.ari.unwrap();
+    assert!((-1.0..=1.0).contains(&ari));
+    // dataset sources cut at their class count by default
+    assert!(out.labels.is_some());
+    assert!(out.corr_path.is_some());
+    assert!(out.breakdown.get("similarity").is_some());
+}
+
+#[test]
+fn panel_request_matches_legacy_pipeline_facade() {
+    use tmfg::coordinator::pipeline::{Pipeline, PipelineConfig};
+    let ds = SynthSpec::new("t", 60, 48, 3).generate(8);
+    let api_out = ClusterRequest::panel(ds.data.clone())
+        .algo(TmfgAlgo::Heap)
+        .use_xla(false)
+        .labels(ds.labels.clone())
+        .k(3)
+        .run()
+        .unwrap();
+    let cfg = PipelineConfig { algo: TmfgAlgo::Heap, use_xla: false, ..Default::default() };
+    let facade_out = Pipeline::new(cfg).run_dataset(&ds).unwrap();
+    assert_eq!(api_out.tmfg.edges, facade_out.tmfg.edges);
+    assert_eq!(api_out.labels, facade_out.labels);
+    assert_eq!(api_out.ari, facade_out.ari);
+}
+
+#[test]
+fn staged_plan_reuses_tmfg_across_apsp_modes() {
+    let mut plan = ClusterRequest::similarity(sim(50, 9))
+        .algo(TmfgAlgo::Heap)
+        .k(3)
+        .build()
+        .unwrap();
+    assert!(plan.tmfg().is_none());
+    let edges = plan.run_tmfg().unwrap().edges.clone();
+    assert_eq!(edges.len(), 3 * 50 - 6);
+
+    let exact = plan.run_cut(3).unwrap().to_vec();
+    assert!(plan.apsp().is_some());
+
+    // Switching APSP mode drops APSP/DBHT/cut but keeps the TMFG.
+    plan.set_apsp_mode(ApspMode::Approx);
+    assert!(plan.apsp().is_none());
+    assert!(plan.dbht().is_none());
+    assert_eq!(plan.tmfg().unwrap().edges, edges, "TMFG artifact must survive");
+    let approx = plan.run_cut(3).unwrap().to_vec();
+    assert_eq!(exact.len(), approx.len());
+    assert!(plan.timings.get("apsp").is_some());
+}
+
+#[test]
+fn stage_enum_runs_prerequisites() {
+    let mut plan = ClusterRequest::similarity(sim(24, 10))
+        .algo(TmfgAlgo::Corr)
+        .k(2)
+        .build()
+        .unwrap();
+    plan.run_stage(Stage::Dbht).unwrap();
+    assert!(plan.similarity().is_some());
+    assert!(plan.tmfg().is_some());
+    assert!(plan.apsp().is_some());
+    assert!(plan.dbht().is_some());
+    plan.run_stage(Stage::Cut).unwrap();
+    assert_eq!(plan.labels().unwrap().len(), 24);
+}
+
+#[test]
+fn stop_after_tmfg_without_running_downstream() {
+    let mut plan = ClusterRequest::similarity(sim(40, 11))
+        .algo(TmfgAlgo::Opt)
+        .build()
+        .unwrap();
+    let t = plan.run_tmfg().unwrap();
+    assert_eq!(t.edges.len(), 3 * 40 - 6);
+    // Downstream stages were never run.
+    assert!(plan.apsp().is_none());
+    assert!(plan.dbht().is_none());
+    assert!(plan.labels().is_none());
+}
+
+#[test]
+fn finish_recuts_when_manual_cut_used_different_k() {
+    // A manual run_cut at k=5 must not leak into finish() when the
+    // request asked for k=3.
+    let mut plan = ClusterRequest::similarity(sim(30, 14))
+        .algo(TmfgAlgo::Heap)
+        .k(3)
+        .build()
+        .unwrap();
+    plan.run_cut(5).unwrap();
+    let out = plan.finish().unwrap();
+    let labels = out.labels.unwrap();
+    let uniq: std::collections::HashSet<_> = labels.iter().collect();
+    assert_eq!(uniq.len(), 3, "finish must cut at the request's k");
+}
+
+#[test]
+fn finish_without_k_skips_cut() {
+    let out = ClusterRequest::similarity(sim(20, 12)).run().unwrap();
+    assert!(out.labels.is_none());
+    assert!(out.ari.is_none());
+    assert!(out.dbht.dendrogram.is_complete());
+}
+
+#[test]
+fn cut_stage_without_k_is_invalid() {
+    let mut plan = ClusterRequest::similarity(sim(20, 13)).build().unwrap();
+    let e = plan.run_stage(Stage::Cut).unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+}
+
+#[test]
+fn streaming_errors_are_typed() {
+    use tmfg::stream::{StreamConfig, StreamSession};
+    let e = StreamSession::new(StreamConfig::new(3, 8, 1)).unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+    let mut s = StreamSession::new(StreamConfig::new(8, 8, 2)).unwrap();
+    let e = s.tick(&[1.0; 5]).unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+}

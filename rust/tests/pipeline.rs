@@ -23,7 +23,9 @@ fn full_matrix_of_methods_on_registry_dataset() {
         TmfgAlgo::Heap,
         TmfgAlgo::Opt,
     ] {
-        let out = Pipeline::new(cfg(algo)).run_similarity(&s, Some(&ds.labels), ds.n_classes);
+        let out = Pipeline::new(cfg(algo))
+            .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+            .unwrap();
         assert_eq!(out.tmfg.edges.len(), 3 * ds.n() - 6, "{algo:?}");
         assert!(out.dbht.dendrogram.is_complete(), "{algo:?}");
         let ari = out.ari.unwrap();
@@ -40,6 +42,7 @@ fn edge_sum_ordering_matches_fig7() {
     let es = |algo| {
         Pipeline::new(cfg(algo))
             .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+            .unwrap()
             .edge_sum
     };
     let e1 = es(TmfgAlgo::Par(1));
@@ -66,6 +69,7 @@ fn approx_apsp_preserves_ari_ballpark() {
         c.apsp = Some(mode);
         Pipeline::new(c)
             .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+            .unwrap()
             .ari
             .unwrap()
     };
@@ -86,7 +90,7 @@ fn csv_roundtrip_through_pipeline() {
     tmfg::data::loader::save_ucr_csv(&ds, &path).unwrap();
     let loaded = registry::get_dataset(path.to_str().unwrap(), 1.0, 0).unwrap();
     assert_eq!(loaded.n(), 60);
-    let out = Pipeline::new(cfg(TmfgAlgo::Opt)).run_dataset(&loaded);
+    let out = Pipeline::new(cfg(TmfgAlgo::Opt)).run_dataset(&loaded).unwrap();
     assert!(out.dbht.dendrogram.is_complete());
 }
 
@@ -97,8 +101,9 @@ fn thread_count_does_not_change_results() {
     let s = pearson_correlation(&ds.data);
     let run = |threads| {
         tmfg::parlay::with_threads(threads, || {
-            let out =
-                Pipeline::new(cfg(TmfgAlgo::Opt)).run_similarity(&s, Some(&ds.labels), ds.n_classes);
+            let out = Pipeline::new(cfg(TmfgAlgo::Opt))
+                .run_similarity(&s, Some(&ds.labels), ds.n_classes)
+                .unwrap();
             (out.tmfg.edges.clone(), out.labels.unwrap(), out.ari.unwrap())
         })
     };
@@ -112,7 +117,7 @@ fn thread_count_does_not_change_results() {
 #[test]
 fn breakdown_covers_all_stages() {
     let ds = SynthSpec::new("t", 80, 32, 3).generate(13);
-    let out = Pipeline::new(cfg(TmfgAlgo::Opt)).run_dataset(&ds);
+    let out = Pipeline::new(cfg(TmfgAlgo::Opt)).run_dataset(&ds).unwrap();
     for stage in ["similarity", "tmfg:init-faces", "tmfg:sort", "tmfg:add-vertices", "apsp", "dbht"] {
         assert!(out.breakdown.get(stage).is_some(), "missing stage {stage}");
     }

@@ -36,10 +36,10 @@ fn prop_tmfg_invariants_on_adversarial_matrices() {
         let n = 4 + rng.next_below(120);
         let s = random_similarity(n, seed);
         for (name, r) in [
-            ("corr", corr_tmfg(&s, &TmfgConfig::default())),
-            ("heap", heap_tmfg(&s, &TmfgConfig::default())),
-            ("orig-1", orig_tmfg(&s, 1)),
-            ("orig-7", orig_tmfg(&s, 7)),
+            ("corr", corr_tmfg(&s, &TmfgConfig::default()).unwrap()),
+            ("heap", heap_tmfg(&s, &TmfgConfig::default()).unwrap()),
+            ("orig-1", orig_tmfg(&s, 1).unwrap()),
+            ("orig-7", orig_tmfg(&s, 7).unwrap()),
         ] {
             check_invariants(&r).unwrap_or_else(|e| panic!("{name} n={n} seed={seed}: {e}"));
         }
@@ -53,8 +53,8 @@ fn prop_heap_matches_corr_edge_sum_closely() {
     for seed in 0..10u64 {
         let ds = SynthSpec::new("p", 100, 48, 4).generate(seed + 100);
         let s = pearson_correlation(&ds.data);
-        let ec = corr_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
-        let eh = heap_tmfg(&s, &TmfgConfig::default()).edge_sum(&s);
+        let ec = corr_tmfg(&s, &TmfgConfig::default()).unwrap().edge_sum(&s);
+        let eh = heap_tmfg(&s, &TmfgConfig::default()).unwrap().edge_sum(&s);
         worst = worst.max(((ec - eh) / ec.abs().max(1e-9)).abs());
     }
     assert!(worst < 0.02, "max relative edge-sum gap {worst}");
@@ -65,7 +65,7 @@ fn prop_hub_apsp_upper_bounds_exact() {
     for seed in 0..8u64 {
         let ds = SynthSpec::new("p", 80, 32, 3).generate(seed + 500);
         let s = pearson_correlation(&ds.data);
-        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()), &s);
+        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()).unwrap(), &s);
         let exact = apsp_exact(&g);
         let approx = apsp_hub(&g, &HubConfig::default());
         for i in 0..g.n {
@@ -143,7 +143,7 @@ fn prop_sssp_triangle_inequality() {
     for seed in 0..5u64 {
         let ds = SynthSpec::new("p", 60, 32, 3).generate(seed + 900);
         let s = pearson_correlation(&ds.data);
-        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()), &s);
+        let g = CsrGraph::from_tmfg(&heap_tmfg(&s, &Default::default()).unwrap(), &s);
         let d = apsp_exact(&g);
         let mut rng = Rng::new(seed);
         for _ in 0..200 {

@@ -40,8 +40,8 @@ fn pipeline_same_clusters_with_and_without_xla() {
     }
     let ds = SynthSpec::new("t", 120, 46, 3).generate(7);
     let mk = |use_xla| PipelineConfig { algo: TmfgAlgo::Heap, use_xla, ..Default::default() };
-    let with = Pipeline::new(mk(true)).run_dataset(&ds);
-    let without = Pipeline::new(mk(false)).run_dataset(&ds);
+    let with = Pipeline::new(mk(true)).run_dataset(&ds).unwrap();
+    let without = Pipeline::new(mk(false)).run_dataset(&ds).unwrap();
     assert_eq!(with.corr_path, Some(CorrPath::Xla));
     assert_eq!(without.corr_path, Some(CorrPath::Native));
     // Correlations agree to ~1e-5; the discrete pipeline may only diverge

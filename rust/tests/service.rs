@@ -106,6 +106,99 @@ fn error_paths() {
     h.stop();
 }
 
+/// Send one raw JSON line and read one response line (bypasses the
+/// typed client so malformed payloads can be exercised verbatim).
+fn raw_call(addr: &str, line: &str) -> Json {
+    use std::io::{BufRead, BufReader, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    writeln!(s, "{line}").unwrap();
+    let mut resp = String::new();
+    BufReader::new(s.try_clone().unwrap()).read_line(&mut resp).unwrap();
+    Json::parse(&resp).unwrap()
+}
+
+fn assert_rejected(resp: &Json, code: &str, needle: &str) {
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.get("code").as_str(), Some(code), "{resp:?}");
+    assert!(
+        resp.get("error").as_str().unwrap_or("").contains(needle),
+        "{resp:?}"
+    );
+}
+
+#[test]
+fn malformed_non_numeric_k_rejected_with_code() {
+    let h = start();
+    let resp = raw_call(&h.addr, r#"{"id": 1, "dataset": "CBF", "k": "three"}"#);
+    assert_rejected(&resp, "protocol", "'k'");
+    assert_eq!(resp.get("id").as_usize(), Some(1), "id echoed on errors");
+    h.stop();
+}
+
+#[test]
+fn malformed_wrong_data_length_rejected_with_code() {
+    let h = start();
+    let resp = raw_call(&h.addr, r#"{"id": 2, "n": 4, "l": 4, "data": [1, 2, 3], "k": 2}"#);
+    assert_rejected(&resp, "protocol", "data length");
+    h.stop();
+}
+
+#[test]
+fn malformed_non_finite_data_rejected_with_code() {
+    let h = start();
+    // 1e999 parses to +inf; null is non-numeric — both must be rejected
+    // instead of silently becoming NaN.
+    let resp = raw_call(
+        &h.addr,
+        r#"{"id": 3, "n": 4, "l": 1, "data": [1.0, 1e999, 3.0, 4.0], "k": 2}"#,
+    );
+    assert_rejected(&resp, "protocol", "non-finite");
+    let resp = raw_call(
+        &h.addr,
+        r#"{"id": 4, "n": 4, "l": 1, "data": [null, 2.0, 3.0, 4.0], "k": 2}"#,
+    );
+    assert_rejected(&resp, "protocol", "non-finite");
+    h.stop();
+}
+
+#[test]
+fn malformed_unknown_algo_and_cmd_rejected_with_code() {
+    let h = start();
+    let resp = raw_call(&h.addr, r#"{"id": 5, "dataset": "CBF", "algo": "quantum"}"#);
+    assert_rejected(&resp, "protocol", "unknown algo");
+    let resp = raw_call(&h.addr, r#"{"id": 6, "cmd": "frobnicate"}"#);
+    assert_rejected(&resp, "protocol", "unknown cmd");
+    h.stop();
+}
+
+#[test]
+fn unsupported_protocol_version_rejected() {
+    let h = start();
+    let resp = raw_call(&h.addr, r#"{"id": 7, "v": 99, "cmd": "ping"}"#);
+    assert_rejected(&resp, "protocol", "version");
+    // pinning the current version still works
+    let resp = raw_call(&h.addr, r#"{"v": 1, "cmd": "ping"}"#);
+    assert_eq!(resp.get("ok").as_bool(), Some(true));
+    h.stop();
+}
+
+#[test]
+fn tick_without_stream_reports_stream_closed_code() {
+    let h = start();
+    let resp = raw_call(&h.addr, r#"{"cmd": "tick", "data": [1.0, 2.0, 3.0, 4.0]}"#);
+    assert_rejected(&resp, "stream_closed", "no open stream");
+    h.stop();
+}
+
+#[test]
+fn inline_n_below_tmfg_minimum_is_clean_error() {
+    let h = start();
+    // n < 4 used to reach the TMFG assert; now it is a typed error.
+    let resp = raw_call(&h.addr, r#"{"n": 2, "l": 2, "data": [1, 2, 3, 4], "k": 2}"#);
+    assert_rejected(&resp, "invalid_input", "4");
+    h.stop();
+}
+
 #[test]
 fn concurrent_clients_batching() {
     let h = start();
