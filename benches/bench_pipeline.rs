@@ -1,18 +1,22 @@
 //! End-to-end pipeline benchmark (Fig. 2 in criterion-style form) plus a
-//! thread-scaling mini-sweep (Figs. 3/4 shape check). Drives the typed
-//! staged API with a shared `Arc` similarity matrix, so each timed
-//! iteration measures one full request — build/validation (a single
-//! O(n²) finiteness scan, no payload copies) plus the pipeline stages.
-//! For stage-only timings see `tmfg experiment fig2`, which builds the
-//! plan before starting the stopwatch.
+//! thread-scaling mini-sweep (Figs. 3/4 shape check), a concurrent-
+//! clients serving scenario (single dispatcher vs the sharded worker
+//! pool), and an artifact-cache hit-path scenario. The pipeline cases
+//! drive the typed staged API with a shared `Arc` similarity matrix, so
+//! each timed iteration measures one full request — build/validation (a
+//! single O(n²) finiteness scan, no payload copies) plus the pipeline
+//! stages. For stage-only timings see `tmfg experiment fig2`, which
+//! builds the plan before starting the stopwatch.
 
 use std::sync::Arc;
 use tmfg::api::{ClusterRequest, TmfgAlgo};
 use tmfg::coordinator::registry;
+use tmfg::coordinator::service::{serve, Client, ServiceConfig};
 use tmfg::data::corr::pearson_correlation;
 use tmfg::data::matrix::Matrix;
 use tmfg::parlay;
 use tmfg::util::bench::BenchSuite;
+use tmfg::util::json::Json;
 
 fn run_once(algo: TmfgAlgo, s: &Arc<Matrix>, labels: &[usize], k: usize) {
     let out = ClusterRequest::similarity(s.clone())
@@ -78,5 +82,80 @@ fn main() {
                 });
         }
     }
+    // Concurrent-clients serving scenario: 4 clients fire named-dataset
+    // requests at the TCP service with 1 dispatch worker (the old
+    // single-dispatcher architecture) vs 4. Distinct seeds defeat the
+    // artifact cache, so the comparison isolates dispatch concurrency;
+    // the acceptance bar is >1.5x aggregate throughput at 4 workers on a
+    // 4-core host.
+    for workers in [1usize, 4] {
+        let h = serve(ServiceConfig {
+            addr: "127.0.0.1:0".into(),
+            dispatch_workers: workers,
+            cache_entries: 0,
+            ..Default::default()
+        })
+        .expect("start service");
+        let addr = h.addr.clone();
+        suite
+            .meta("dataset", "CBF")
+            .meta("workers", &workers.to_string())
+            .meta("clients", "4")
+            .run(&format!("service/4clients@{workers}w"), |rep| {
+                let joins: Vec<_> = (0..4)
+                    .map(|c| {
+                        let addr = addr.clone();
+                        std::thread::spawn(move || {
+                            let mut client = Client::connect(&addr).expect("connect");
+                            for r in 0..2 {
+                                let req = Json::obj(vec![
+                                    ("dataset", Json::str("CBF")),
+                                    ("scale", Json::Num(scale)),
+                                    ("seed", Json::Num((1 + rep * 100 + c * 10 + r) as f64)),
+                                    ("algo", Json::str("opt")),
+                                ]);
+                                let resp = client.call(&req).expect("call");
+                                assert_eq!(
+                                    resp.get("ok").as_bool(),
+                                    Some(true),
+                                    "{resp:?}"
+                                );
+                            }
+                        })
+                    })
+                    .collect();
+                for j in joins {
+                    j.join().unwrap();
+                }
+            });
+        h.stop();
+    }
+
+    // Artifact-cache hit path: repeated identical requests skip the
+    // similarity + TMFG stages entirely.
+    {
+        let h = serve(ServiceConfig {
+            addr: "127.0.0.1:0".into(),
+            dispatch_workers: 4,
+            ..Default::default()
+        })
+        .expect("start service");
+        let mut client = Client::connect(&h.addr).expect("connect");
+        let req = Json::obj(vec![
+            ("dataset", Json::str("CBF")),
+            ("scale", Json::Num(scale)),
+            ("seed", Json::Num(1.0)),
+            ("algo", Json::str("opt")),
+        ]);
+        // warm the cache, then time pure hits
+        let warm = client.call(&req).expect("warm");
+        assert_eq!(warm.get("ok").as_bool(), Some(true), "{warm:?}");
+        suite.meta("dataset", "CBF").meta("workers", "4").run("service/cache_hit", |_| {
+            let resp = client.call(&req).expect("call");
+            assert_eq!(resp.get("cache").as_str(), Some("hit"), "{resp:?}");
+        });
+        h.stop();
+    }
+
     suite.write_csv().unwrap();
 }

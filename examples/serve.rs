@@ -3,6 +3,7 @@
 //! batch sizes.
 //!
 //!     cargo run --release --example serve -- [--requests 24] [--clients 6]
+//!         [--workers 0]   (0 = auto: min(4, cores/2) dispatch workers)
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -12,18 +13,23 @@ use tmfg::util::json::Json;
 use tmfg::util::timer::Timer;
 
 fn main() {
-    let args = Args::parse(&["requests", "clients", "scale"]).unwrap();
+    let args = Args::parse(&["requests", "clients", "scale", "workers"]).unwrap();
     let n_requests = args.get_usize("requests", 24);
     let n_clients = args.get_usize("clients", 6);
     let scale = args.get_f64("scale", 0.03);
 
-    let handle = serve(ServiceConfig {
+    let cfg = ServiceConfig {
         addr: "127.0.0.1:0".into(), // ephemeral port
+        dispatch_workers: args.get_usize("workers", 0),
         ..Default::default()
-    })
-    .expect("start service");
+    };
+    let workers = cfg.resolved_workers();
+    let handle = serve(cfg).expect("start service");
     let addr = handle.addr.clone();
-    println!("service on {addr}; {n_clients} clients × {} requests", n_requests / n_clients);
+    println!(
+        "service on {addr} ({workers} dispatch workers); {n_clients} clients × {} requests",
+        n_requests / n_clients
+    );
 
     let datasets = ["CBF", "ECG5000", "SonyAIBORobotSurface2", "Mallat"];
     let done = Arc::new(AtomicUsize::new(0));
@@ -83,5 +89,19 @@ fn main() {
         lats[n - 1]
     );
     println!("mean observed batch size: {mean_batch:.2}");
+
+    // live observability: worker pool + artifact-cache effectiveness
+    let mut client = Client::connect(&addr).expect("connect");
+    let stats = client
+        .call(&Json::obj(vec![("cmd", Json::str("stats"))]))
+        .expect("stats");
+    println!(
+        "stats: workers {}  jobs {}  cache hits {}  misses {}  hit ratio {:.2}",
+        stats.get("workers").as_usize().unwrap_or(0),
+        stats.get("jobs").as_usize().unwrap_or(0),
+        stats.get("cache_hits").as_usize().unwrap_or(0),
+        stats.get("cache_misses").as_usize().unwrap_or(0),
+        stats.get("cache_hit_ratio").as_f64().unwrap_or(0.0),
+    );
     handle.stop();
 }

@@ -1,0 +1,354 @@
+//! Cross-request artifact cache: memoizes the expensive Similarity→TMFG
+//! prefix of the pipeline across requests.
+//!
+//! For repeated or batch traffic on the same dataset, the dominant cost
+//! of a clustering request is recomputing the O(n²·l) correlation matrix
+//! and the O(n²) TMFG construction. Both artifacts depend only on the
+//! input content (dataset identity or raw panel/similarity bytes) and
+//! the construction algorithm — **not** on the APSP mode, linkage, hub
+//! parameters, or `k`, which the downstream stages recompute cheaply per
+//! request. [`ArtifactCache`] is a bounded, byte-budgeted LRU keyed by a
+//! stable content fingerprint ([`CacheKey`], produced by
+//! [`crate::api::ClusterRequest::fingerprint`]).
+//!
+//! Attach a cache with [`crate::api::ClusterRequest::cache`]; on a hit
+//! the plan is seeded with the shared artifacts (zero copies — they are
+//! `Arc`s) so the similarity and TMFG stages are skipped entirely, and
+//! [`crate::api::ClusterOutput::cache`] reports [`CacheStatus::Hit`].
+//! Because every downstream stage is deterministic (see
+//! `rust/tests/determinism.rs`), a hit produces a payload bit-identical
+//! to the miss that populated the entry.
+//!
+//! Sharing one cache across engines with *different* similarity compute
+//! paths (XLA vs native) can mix path-specific float rounding into
+//! served artifacts; the `use_xla` preference is folded into panel keys
+//! as a discriminator, and the TCP service uses a single engine for its
+//! whole lifetime, so served traffic never mixes paths.
+
+use crate::data::matrix::Matrix;
+use crate::tmfg::TmfgResult;
+use std::collections::hash_map::RandomState;
+use std::hash::{BuildHasher, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// How a request interacted with the artifact cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheStatus {
+    /// Served from cached artifacts (similarity + TMFG skipped).
+    Hit,
+    /// Computed fresh; the artifacts were published to the cache.
+    Miss,
+    /// No cache attached, or the source has no stable fingerprint
+    /// (e.g. a CSV file path, whose bytes can change underneath us).
+    Bypass,
+}
+
+/// Stable content fingerprint of a request's Similarity→TMFG inputs.
+///
+/// `desc` pins the structural identity (source kind, shape, dataset
+/// name/scale/seed, algorithm); `content` is a 128-bit *keyed* hash
+/// (two independently-seeded per-process SipHash halves) of the raw f32
+/// bytes for inline panel/similarity sources (0 for named datasets,
+/// which are deterministic functions of `desc` already). Keys are
+/// stable only within one process — exactly the cache's lifetime.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    desc: String,
+    content: (u64, u64),
+}
+
+/// Two independently-seeded keyed hashers (std SipHash via
+/// `RandomState`, randomly keyed once per process). Content keys must be
+/// *keyed*: the cache is shared across tenants, and with a public
+/// unkeyed hash a client could construct a same-shape panel colliding
+/// with another tenant's and poison their results with a bogus "hit".
+/// Per-process keys are fine — the cache is in-memory only.
+fn hashers() -> &'static (RandomState, RandomState) {
+    static H: OnceLock<(RandomState, RandomState)> = OnceLock::new();
+    H.get_or_init(|| (RandomState::new(), RandomState::new()))
+}
+
+/// 128-bit keyed content hash of a matrix's raw f32 bits (two
+/// independently-keyed 64-bit halves must both collide).
+fn matrix_hash(m: &Matrix) -> (u64, u64) {
+    let (s1, s2) = hashers();
+    let (mut h1, mut h2) = (s1.build_hasher(), s2.build_hasher());
+    for v in &m.data {
+        let bits = v.to_bits();
+        h1.write_u32(bits);
+        h2.write_u32(bits);
+    }
+    (h1.finish(), h2.finish())
+}
+
+impl CacheKey {
+    /// Key for a registry dataset request. `canonical` must be the
+    /// registry's canonical spelling so case variants share an entry.
+    /// `use_xla` discriminates because named datasets resolve to a panel
+    /// whose similarity is computed by the engine.
+    pub fn named(canonical: &str, scale: f64, seed: u64, algo: &str, use_xla: bool) -> CacheKey {
+        CacheKey {
+            desc: format!(
+                "dataset:{canonical}:scale={scale}:seed={seed}:algo={algo}:xla={use_xla}"
+            ),
+            content: (0, 0),
+        }
+    }
+
+    /// Key for an inline n×l time-series panel (hashes the panel bytes).
+    pub fn panel(m: &Matrix, algo: &str, use_xla: bool) -> CacheKey {
+        CacheKey {
+            desc: format!("panel:{}x{}:algo={algo}:xla={use_xla}", m.rows, m.cols),
+            content: matrix_hash(m),
+        }
+    }
+
+    /// Key for a precomputed similarity matrix (hashes the matrix bytes).
+    pub fn similarity(s: &Matrix, algo: &str) -> CacheKey {
+        CacheKey {
+            desc: format!("similarity:{}:algo={algo}", s.rows),
+            content: matrix_hash(s),
+        }
+    }
+}
+
+/// The cached Similarity→TMFG artifacts (plus the dataset-intrinsic
+/// metadata needed to serve a named-dataset hit without regenerating the
+/// dataset at all).
+#[derive(Clone)]
+pub struct CachedArtifacts {
+    pub similarity: Arc<Matrix>,
+    pub tmfg: Arc<TmfgResult>,
+    /// Ground-truth labels carried by named-dataset sources (None for
+    /// panel/similarity sources, which have no intrinsic labels).
+    pub truth: Option<Vec<usize>>,
+    /// The dataset's own class count (the `k` a named request defaults
+    /// to when it does not set one).
+    pub default_k: Option<usize>,
+}
+
+impl CachedArtifacts {
+    /// Approximate resident size, used for the byte budget.
+    pub fn bytes(&self) -> usize {
+        let t = &self.tmfg;
+        self.similarity.data.len() * 4
+            + t.edges.len() * 8
+            + t.faces.len() * 12
+            + t.cliques.len() * 16
+            + t.parent.len() * 4
+            + t.order.len() * 4
+            + self.truth.as_ref().map(|l| l.len() * 8).unwrap_or(0)
+    }
+}
+
+struct Entry {
+    key: CacheKey,
+    artifacts: CachedArtifacts,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    entries: Vec<Entry>,
+    bytes_total: usize,
+    tick: u64,
+}
+
+/// Observability snapshot (the service's `stats` command reports this).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+/// Bounded, byte-budgeted LRU over [`CachedArtifacts`]. All methods take
+/// `&self`; the cache is shared across service workers behind an `Arc`.
+pub struct ArtifactCache {
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    max_entries: usize,
+    max_bytes: usize,
+}
+
+impl ArtifactCache {
+    /// Default entry cap (the `--cache-entries` default).
+    pub const DEFAULT_ENTRIES: usize = 32;
+    /// Default byte budget: 256 MiB of artifacts.
+    pub const DEFAULT_BYTES: usize = 256 << 20;
+
+    pub fn new(max_entries: usize, max_bytes: usize) -> ArtifactCache {
+        ArtifactCache {
+            inner: Mutex::new(Inner { entries: Vec::new(), bytes_total: 0, tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            max_entries: max_entries.max(1),
+            max_bytes: max_bytes.max(1),
+        }
+    }
+
+    /// Look up artifacts, bumping recency and the hit/miss counters.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedArtifacts> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.entries.iter_mut().find(|e| &e.key == key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.artifacts.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting least-recently-used entries
+    /// until both the entry cap and the byte budget hold. An artifact
+    /// larger than the whole budget is not cached at all.
+    pub fn put(&self, key: CacheKey, artifacts: CachedArtifacts) {
+        let bytes = artifacts.bytes();
+        if bytes > self.max_bytes {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(pos) = inner.entries.iter().position(|e| e.key == key) {
+            let old = inner.entries.remove(pos);
+            inner.bytes_total -= old.bytes;
+        }
+        inner.entries.push(Entry { key, artifacts, bytes, last_used: tick });
+        inner.bytes_total += bytes;
+        while inner.entries.len() > self.max_entries || inner.bytes_total > self.max_bytes {
+            let lru = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            match lru {
+                Some(i) => {
+                    let gone = inner.entries.remove(i);
+                    inner.bytes_total -= gone.bytes;
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: inner.entries.len(),
+            bytes: inner.bytes_total,
+        }
+    }
+}
+
+impl Default for ArtifactCache {
+    fn default() -> Self {
+        ArtifactCache::new(Self::DEFAULT_ENTRIES, Self::DEFAULT_BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tmfg::{heap_tmfg, TmfgConfig};
+
+    fn artifacts(n: usize, seed: u64) -> CachedArtifacts {
+        let ds = crate::data::synth::SynthSpec::new("t", n, 32, 2).generate(seed);
+        let s = Arc::new(crate::data::corr::pearson_correlation(&ds.data));
+        let tmfg = Arc::new(heap_tmfg(&s, &TmfgConfig::default()).unwrap());
+        CachedArtifacts { similarity: s, tmfg, truth: Some(ds.labels), default_k: Some(2) }
+    }
+
+    fn key(tag: u64) -> CacheKey {
+        CacheKey::named(&format!("ds{tag}"), 1.0, tag, "heap", true)
+    }
+
+    #[test]
+    fn get_put_roundtrip_and_counters() {
+        let c = ArtifactCache::new(4, usize::MAX >> 1);
+        assert!(c.get(&key(1)).is_none());
+        let a = artifacts(16, 1);
+        c.put(key(1), a.clone());
+        let got = c.get(&key(1)).expect("hit");
+        assert!(Arc::ptr_eq(&got.similarity, &a.similarity), "no copies");
+        assert!(Arc::ptr_eq(&got.tmfg, &a.tmfg));
+        assert_eq!(got.truth, a.truth);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+        assert_eq!(st.bytes, a.bytes());
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let c = ArtifactCache::new(2, usize::MAX >> 1);
+        c.put(key(1), artifacts(16, 1));
+        c.put(key(2), artifacts(16, 2));
+        assert!(c.get(&key(1)).is_some()); // 1 is now most recent
+        c.put(key(3), artifacts(16, 3)); // evicts 2
+        assert!(c.get(&key(2)).is_none());
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(3)).is_some());
+        assert_eq!(c.stats().entries, 2);
+    }
+
+    #[test]
+    fn byte_budget_evicts_and_rejects_oversize() {
+        let a = artifacts(16, 1);
+        let unit = a.bytes();
+        // Budget for ~1.5 entries: inserting a second evicts the first.
+        let c = ArtifactCache::new(10, unit + unit / 2);
+        c.put(key(1), a);
+        c.put(key(2), artifacts(16, 2));
+        assert!(c.get(&key(1)).is_none());
+        assert!(c.get(&key(2)).is_some());
+        assert!(c.stats().bytes <= unit + unit / 2);
+        // An artifact bigger than the whole budget is skipped entirely.
+        let tiny = ArtifactCache::new(10, 8);
+        tiny.put(key(3), artifacts(16, 3));
+        assert_eq!(tiny.stats().entries, 0);
+    }
+
+    #[test]
+    fn replace_same_key_keeps_one_entry() {
+        let c = ArtifactCache::new(4, usize::MAX >> 1);
+        c.put(key(1), artifacts(16, 1));
+        c.put(key(1), artifacts(16, 9));
+        let st = c.stats();
+        assert_eq!(st.entries, 1);
+        let got = c.get(&key(1)).unwrap();
+        // latest insert wins
+        assert_eq!(got.truth, artifacts(16, 9).truth);
+    }
+
+    #[test]
+    fn keys_discriminate_sources() {
+        let ds = crate::data::synth::SynthSpec::new("t", 12, 16, 2).generate(4);
+        let m = ds.data;
+        let k1 = CacheKey::panel(&m, "heap", true);
+        let k2 = CacheKey::panel(&m, "opt", true);
+        let k3 = CacheKey::panel(&m, "heap", false);
+        assert_ne!(k1, k2, "algo is part of the key");
+        assert_ne!(k1, k3, "xla preference is part of the key");
+        assert_eq!(k1, CacheKey::panel(&m.clone(), "heap", true), "content-addressed");
+        let mut m2 = m.clone();
+        m2.data[5] += 1.0;
+        assert_ne!(k1, CacheKey::panel(&m2, "heap", true), "bytes are hashed");
+        assert_ne!(
+            CacheKey::named("CBF", 0.05, 1, "heap", true),
+            CacheKey::named("CBF", 0.05, 2, "heap", true),
+            "seed is part of the key"
+        );
+    }
+}

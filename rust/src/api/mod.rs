@@ -13,6 +13,9 @@
 //!   TMFG across APSP modes or stop after construction;
 //! * [`TmfgError`] — the unified, typed error replacing every
 //!   library-path panic and stringly-typed result;
+//! * [`cache`] — the cross-request [`ArtifactCache`]: a bounded LRU over
+//!   Similarity→TMFG artifacts keyed by a stable content fingerprint, so
+//!   repeated traffic on the same input skips the expensive stages;
 //! * [`wire`] — the versioned request/response types of the TCP service.
 //!
 //! One-shot:
@@ -48,10 +51,12 @@
 //! # Ok::<(), tmfg::api::TmfgError>(())
 //! ```
 
+pub mod cache;
 pub mod plan;
 pub mod request;
 pub mod wire;
 
 pub use crate::error::TmfgError;
+pub use cache::{ArtifactCache, CacheKey, CacheStatus};
 pub use plan::{build_tmfg_for, ApspMode, ClusterOutput, Plan, Stage, TmfgAlgo};
 pub use request::ClusterRequest;

@@ -12,6 +12,7 @@
 //! artifacts, so one TMFG construction can be measured under both exact
 //! and approximate APSP (see `coordinator::experiments::apsp_speedup`).
 
+use super::cache::{ArtifactCache, CacheKey, CacheStatus, CachedArtifacts};
 use crate::error::TmfgError;
 use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
 use crate::data::matrix::Matrix;
@@ -114,9 +115,11 @@ pub enum Stage {
 pub struct ClusterOutput {
     pub algo: TmfgAlgo,
     pub apsp_mode: ApspMode,
-    /// Per-stage wall-clock seconds (the Fig. 5 decomposition).
+    /// Per-stage wall-clock seconds (the Fig. 5 decomposition). Stages
+    /// served from the artifact cache contribute no entry.
     pub breakdown: Breakdown,
-    pub tmfg: TmfgResult,
+    /// Shared when served from (or published to) an artifact cache.
+    pub tmfg: Arc<TmfgResult>,
     pub dbht: DbhtResult,
     /// Predicted labels from cutting the dendrogram at `k` (None when no
     /// `k` was requested and none could be inferred).
@@ -127,8 +130,24 @@ pub struct ClusterOutput {
     /// Sum of similarity over the TMFG edges (the Fig. 7 quality metric).
     pub edge_sum: f64,
     /// Which compute path produced the similarity matrix (None when it
-    /// was supplied precomputed).
+    /// was supplied precomputed or served from the artifact cache).
     pub corr_path: Option<CorrPath>,
+    /// How this run interacted with the artifact cache
+    /// ([`CacheStatus::Bypass`] when none was attached).
+    pub cache: CacheStatus,
+}
+
+/// A plan's attachment to an [`ArtifactCache`]: where to publish freshly
+/// computed artifacts (on a miss) and what to report.
+pub(crate) struct CacheCtx {
+    pub cache: Arc<ArtifactCache>,
+    pub key: CacheKey,
+    pub status: CacheStatus,
+    /// Dataset-intrinsic labels/class-count to store alongside the
+    /// artifacts so a future hit can serve a named dataset without
+    /// regenerating it.
+    pub truth: Option<Vec<usize>>,
+    pub default_k: Option<usize>,
 }
 
 /// A resolved staged clustering request. See the module docs.
@@ -151,7 +170,8 @@ pub struct Plan {
     // ---- per-stage artifacts -------------------------------------------
     similarity: Option<Arc<Matrix>>,
     corr_path: Option<CorrPath>,
-    tmfg: Option<TmfgResult>,
+    /// `Arc` so cached constructions are shared across plans zero-copy.
+    tmfg: Option<Arc<TmfgResult>>,
     apsp: Option<Matrix>,
     dbht: Option<DbhtResult>,
     cut: Option<Vec<usize>>,
@@ -159,6 +179,8 @@ pub struct Plan {
     cut_k: Option<usize>,
     /// Per-stage wall-clock seconds, filled as stages run.
     pub timings: Breakdown,
+    /// Artifact-cache attachment (None = no cache on the request).
+    cache_ctx: Option<CacheCtx>,
 }
 
 impl Plan {
@@ -197,7 +219,26 @@ impl Plan {
             cut: None,
             cut_k: None,
             timings: Breakdown::new(),
+            cache_ctx: None,
         }
+    }
+
+    /// Attach an artifact-cache context (set by `ClusterRequest::build`).
+    pub(crate) fn set_cache_ctx(&mut self, ctx: CacheCtx) {
+        self.cache_ctx = Some(ctx);
+    }
+
+    /// Seed the similarity + TMFG artifacts from a cache hit: the
+    /// similarity and tmfg stages become no-ops (and contribute no
+    /// timing entries, since no work ran).
+    pub(crate) fn seed_artifacts(&mut self, similarity: Arc<Matrix>, tmfg: Arc<TmfgResult>) {
+        self.similarity = Some(similarity);
+        self.tmfg = Some(tmfg);
+    }
+
+    /// How this plan interacted with the artifact cache.
+    pub fn cache_status(&self) -> CacheStatus {
+        self.cache_ctx.as_ref().map(|c| c.status).unwrap_or(CacheStatus::Bypass)
     }
 
     /// Number of items being clustered.
@@ -237,7 +278,7 @@ impl Plan {
     }
 
     pub fn tmfg(&self) -> Option<&TmfgResult> {
-        self.tmfg.as_ref()
+        self.tmfg.as_deref()
     }
 
     pub fn apsp(&self) -> Option<&Matrix> {
@@ -278,7 +319,10 @@ impl Plan {
             .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))
     }
 
-    /// Stage 2: TMFG construction with the plan's algorithm.
+    /// Stage 2: TMFG construction with the plan's algorithm. On a cache
+    /// hit the artifact was seeded at build time and this is a no-op; on
+    /// a miss the freshly built Similarity→TMFG pair is published to the
+    /// attached cache for future requests.
     pub fn run_tmfg(&mut self) -> Result<&TmfgResult, TmfgError> {
         if self.tmfg.is_none() {
             self.run_similarity()?;
@@ -286,17 +330,30 @@ impl Plan {
                 .similarity
                 .as_deref()
                 .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))?;
-            let tmfg = build_tmfg_for(self.algo, s)?;
+            let tmfg = Arc::new(build_tmfg_for(self.algo, s)?);
             if self.check_invariants {
                 crate::tmfg::common::check_invariants(&tmfg)?;
             }
             self.timings.add("tmfg:init-faces", tmfg.timings.init);
             self.timings.add("tmfg:sort", tmfg.timings.sort);
             self.timings.add("tmfg:add-vertices", tmfg.timings.insert);
+            if let (Some(ctx), Some(sim)) = (&self.cache_ctx, &self.similarity) {
+                if ctx.status == CacheStatus::Miss {
+                    ctx.cache.put(
+                        ctx.key.clone(),
+                        CachedArtifacts {
+                            similarity: sim.clone(),
+                            tmfg: tmfg.clone(),
+                            truth: ctx.truth.clone(),
+                            default_k: ctx.default_k,
+                        },
+                    );
+                }
+            }
             self.tmfg = Some(tmfg);
         }
         self.tmfg
-            .as_ref()
+            .as_deref()
             .ok_or_else(|| TmfgError::invariant("tmfg artifact missing"))
     }
 
@@ -416,6 +473,7 @@ impl Plan {
             (Some(truth), Some(pred)) => Some(adjusted_rand_index(truth, pred)),
             _ => None,
         };
+        let cache = self.cache_status();
         Ok(ClusterOutput {
             algo: self.algo,
             apsp_mode: self.apsp_mode,
@@ -426,6 +484,7 @@ impl Plan {
             ari,
             edge_sum,
             corr_path: self.corr_path,
+            cache,
         })
     }
 }

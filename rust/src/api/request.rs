@@ -14,7 +14,8 @@
 //! staged [`Plan`]; [`ClusterRequest::run`] is the one-shot convenience.
 
 use crate::error::TmfgError;
-use super::plan::{ApspMode, ClusterOutput, Plan, TmfgAlgo};
+use super::cache::{ArtifactCache, CacheKey, CacheStatus, CachedArtifacts};
+use super::plan::{ApspMode, CacheCtx, ClusterOutput, Plan, TmfgAlgo};
 use crate::apsp::HubConfig;
 use crate::coordinator::registry;
 use crate::data::matrix::Matrix;
@@ -52,6 +53,7 @@ pub struct ClusterRequest {
     check_invariants: bool,
     artifacts_dir: PathBuf,
     engine: Option<Arc<CorrEngine>>,
+    cache: Option<Arc<ArtifactCache>>,
 }
 
 impl ClusterRequest {
@@ -70,6 +72,7 @@ impl ClusterRequest {
             check_invariants: false,
             artifacts_dir: PathBuf::from("artifacts"),
             engine: None,
+            cache: None,
         }
     }
 
@@ -166,10 +169,50 @@ impl ClusterRequest {
         self
     }
 
+    /// Attach a cross-request artifact cache: if this request's
+    /// [`fingerprint`](ClusterRequest::fingerprint) matches an entry, the
+    /// plan is seeded with the cached Similarity→TMFG artifacts and the
+    /// expensive stages are skipped; on a miss the freshly built
+    /// artifacts are published for future requests.
+    pub fn cache(mut self, cache: Arc<ArtifactCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The stable content fingerprint of this request's Similarity→TMFG
+    /// inputs, or `None` when the source has no stable identity (CSV
+    /// file paths and unknown dataset names — their content can change
+    /// between requests). Two requests with equal fingerprints produce
+    /// byte-identical similarity and TMFG artifacts; the APSP mode,
+    /// linkage, hub parameters, `k`, and labels are deliberately
+    /// excluded (they only affect the cheap downstream stages).
+    pub fn fingerprint(&self) -> Option<CacheKey> {
+        let algo = self.algo.name();
+        match &self.source {
+            Source::Dataset(name) => {
+                let canonical = registry::canonical_name(name)?;
+                Some(CacheKey::named(&canonical, self.scale, self.seed, &algo, self.use_xla))
+            }
+            Source::Panel(m) => Some(CacheKey::panel(m, &algo, self.use_xla)),
+            Source::Similarity(s) => Some(CacheKey::similarity(s, &algo)),
+        }
+    }
+
     // ---- resolution ----------------------------------------------------
 
-    /// Validate the request and resolve it into a staged [`Plan`].
+    /// Validate the request and resolve it into a staged [`Plan`]. With a
+    /// cache attached, a fingerprint hit seeds the plan with the shared
+    /// Similarity→TMFG artifacts (skipping dataset generation, the
+    /// finiteness scan, the similarity computation, and the TMFG build);
+    /// a miss resolves normally and arranges publication of the fresh
+    /// artifacts.
     pub fn build(self) -> Result<Plan, TmfgError> {
+        let fingerprint = if self.cache.is_some() { self.fingerprint() } else { None };
+        if let (Some(cache), Some(key)) = (self.cache.clone(), fingerprint.clone()) {
+            if let Some(art) = cache.get(&key) {
+                return self.build_from_cached(cache, key, art);
+            }
+        }
         let (panel, similarity, mut truth, mut k) = match self.source {
             Source::Dataset(name) => {
                 let ds = registry::get_dataset(&name, self.scale, self.seed)
@@ -207,6 +250,11 @@ impl ClusterRequest {
                 (None, Some(s), None, None)
             }
         };
+        // Dataset-intrinsic metadata (pre-override) rides along with the
+        // cached artifacts so a future hit can serve the dataset without
+        // regenerating it.
+        let ds_truth = truth.clone();
+        let ds_k = k;
         // Explicit options override what the dataset provided.
         if self.labels.is_some() {
             truth = self.labels;
@@ -219,19 +267,7 @@ impl ClusterRequest {
             .map(|m| m.rows)
             .or_else(|| similarity.as_ref().map(|s| s.rows))
             .ok_or_else(|| TmfgError::invariant("request resolved to no input"))?;
-        if let Some(t) = &truth {
-            if t.len() != n {
-                return Err(TmfgError::invalid(format!(
-                    "labels length {} != n = {n}",
-                    t.len()
-                )));
-            }
-        }
-        if let Some(k) = k {
-            if k < 1 || k > n {
-                return Err(TmfgError::invalid(format!("k must be in 1..={n}, got {k}")));
-            }
-        }
+        validate_truth_k(&truth, k, n)?;
         // An engine is only needed when a panel must be reduced.
         let engine = match (&panel, self.engine) {
             (_, Some(e)) => Some(e),
@@ -242,7 +278,7 @@ impl ClusterRequest {
             (None, None) => None,
         };
         let apsp_mode = self.apsp.unwrap_or_else(|| self.algo.default_apsp());
-        Ok(Plan::new(
+        let mut plan = Plan::new(
             self.algo,
             apsp_mode,
             self.linkage,
@@ -254,13 +290,92 @@ impl ClusterRequest {
             panel,
             similarity,
             engine,
-        ))
+        );
+        if let (Some(cache), Some(key)) = (self.cache, fingerprint) {
+            plan.set_cache_ctx(CacheCtx {
+                cache,
+                key,
+                status: CacheStatus::Miss,
+                truth: ds_truth,
+                default_k: ds_k,
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Resolve a cache hit into a plan seeded with the shared artifacts.
+    /// Request-level validation (labels length, `k` range) still runs
+    /// against the cached dimensions.
+    fn build_from_cached(
+        self,
+        cache: Arc<ArtifactCache>,
+        key: CacheKey,
+        art: CachedArtifacts,
+    ) -> Result<Plan, TmfgError> {
+        let n = art.similarity.rows;
+        let truth = self.labels.or_else(|| art.truth.clone());
+        let k = self.k.or(art.default_k);
+        validate_truth_k(&truth, k, n)?;
+        // A hit skips run_tmfg entirely, so honor the request's explicit
+        // validation ask here (the entry may have been populated by a
+        // request that never checked).
+        if self.check_invariants {
+            crate::tmfg::common::check_invariants(&art.tmfg)?;
+        }
+        let apsp_mode = self.apsp.unwrap_or_else(|| self.algo.default_apsp());
+        // No panel and no engine: the similarity stage is pre-seeded, so
+        // nothing downstream ever needs them.
+        let mut plan = Plan::new(
+            self.algo,
+            apsp_mode,
+            self.linkage,
+            self.hub,
+            self.check_invariants,
+            k,
+            truth,
+            n,
+            None,
+            None,
+            None,
+        );
+        plan.seed_artifacts(art.similarity, art.tmfg);
+        plan.set_cache_ctx(CacheCtx {
+            cache,
+            key,
+            status: CacheStatus::Hit,
+            truth: None,
+            default_k: None,
+        });
+        Ok(plan)
     }
 
     /// Build the plan and run it to completion.
     pub fn run(self) -> Result<ClusterOutput, TmfgError> {
         self.build()?.finish()
     }
+}
+
+/// The request-level invariants shared by the fresh and cache-hit build
+/// paths: labels must cover every item, `k` must be a valid cut size.
+fn validate_truth_k(
+    truth: &Option<Vec<usize>>,
+    k: Option<usize>,
+    n: usize,
+) -> Result<(), TmfgError> {
+    if let Some(t) = truth {
+        if t.len() != n {
+            return Err(TmfgError::invalid(format!(
+                "labels length {} != n = {n}",
+                t.len()
+            )));
+        }
+    }
+    if let Some(k) = k {
+        if k < 1 || k > n {
+            return Err(TmfgError::invalid(format!("k must be in 1..={n}, got {k}")));
+        }
+    }
+    Ok(())
 }
 
 fn check_finite(m: &Matrix, what: &str) -> Result<(), TmfgError> {

@@ -51,6 +51,9 @@ pub struct Request {
 pub enum Command {
     Ping,
     Shutdown,
+    /// Service observability: worker count, queue depth, cache hit
+    /// ratio, cumulative per-stage timings.
+    Stats,
     /// A batch clustering request (no `cmd` field).
     Cluster(ClusterSpec),
     OpenStream(StreamOpen),
@@ -190,6 +193,7 @@ impl Request {
                 match name {
                     "ping" => Command::Ping,
                     "shutdown" => Command::Shutdown,
+                    "stats" => Command::Stats,
                     "open_stream" => Command::OpenStream(decode_open_stream(j)?),
                     "tick" => Command::Tick(finite_data(j, "data")?),
                     "close_stream" => Command::CloseStream,
@@ -419,6 +423,13 @@ mod tests {
         let e2 = Request::decode(&parse(r#"{"dataset": "CBF", "algo": "quantum"}"#))
             .unwrap_err();
         assert!(e2.to_string().contains("unknown algo"), "{e2}");
+    }
+
+    #[test]
+    fn decodes_stats_command() {
+        let r = Request::decode(&parse(r#"{"id": 9, "cmd": "stats"}"#)).unwrap();
+        assert!(matches!(r.body, Command::Stats));
+        assert_eq!(r.id.as_usize(), Some(9));
     }
 
     #[test]

@@ -17,39 +17,72 @@ pub fn largest3_names() -> [&'static str; 3] {
     ["Crop", "ElectricDevices", "StarLightCurves"]
 }
 
+/// Is this name a filesystem path rather than a registry name? One
+/// definition shared by resolution, size prediction, and fingerprinting
+/// so the three can never disagree.
+fn is_path(name: &str) -> bool {
+    name.ends_with(".csv") || name.contains('/') || name.contains('\\')
+}
+
+/// The series count a `demo[-N]` name encodes (`demo` and unparsable
+/// suffixes mean 200, the historic default). `None` when the name is not
+/// a demo name **or** encodes n < 4 — below the TMFG/generator minimum,
+/// so such names resolve to no dataset instead of panicking inside the
+/// generator (`SynthSpec::generate` asserts n ≥ k).
+fn demo_size(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix("demo")?;
+    let n = rest.strip_prefix('-').and_then(|v| v.parse().ok()).unwrap_or(200);
+    (n >= 4).then_some(n)
+}
+
 /// Resolve a dataset: a Table-1 name (at the given n-scale), `demo[-N]`,
 /// or a path to a UCR-style CSV file.
 pub fn get_dataset(name: &str, scale: f64, seed: u64) -> Option<Dataset> {
-    if let Some(rest) = name.strip_prefix("demo") {
-        let n = rest
-            .strip_prefix('-')
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(200);
+    if name.starts_with("demo") {
+        let n = demo_size(name)?;
         return Some(SynthSpec::new(name, n, 64, 4).generate(seed));
     }
-    if name.ends_with(".csv") || name.contains('/') {
+    if is_path(name) {
         return load_ucr_csv(Path::new(name)).ok();
     }
     let spec = table1_specs(scale)
         .into_iter()
         .find(|s| s.name.eq_ignore_ascii_case(name))?;
-    // Per-dataset deterministic seed so different datasets differ.
-    let ds_seed = seed ^ fxhash(name);
+    // Per-dataset deterministic seed so different datasets differ. Hash
+    // the spec's canonical spelling (not the caller's): the lookup is
+    // case-insensitive, so "cbf" and "CBF" must be the same dataset.
+    let ds_seed = seed ^ fxhash(&spec.name);
     Some(spec.generate(ds_seed))
+}
+
+/// The canonical spelling of a dataset name — the one identity under
+/// which `get_dataset` resolves it, whatever the caller's casing. `None`
+/// for unknown names and CSV/file paths (whose content has no stable
+/// identity). Used by the artifact cache so case variants of one dataset
+/// share a fingerprint.
+pub fn canonical_name(name: &str) -> Option<String> {
+    if name.starts_with("demo") {
+        // the generator ignores the name itself, so demo variants
+        // canonicalize by size
+        return demo_size(name).map(|n| format!("demo-{n}"));
+    }
+    if is_path(name) {
+        return None;
+    }
+    table1_specs(1.0)
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+        .map(|s| s.name)
 }
 
 /// The series count `get_dataset` would produce for a name, *without*
 /// generating anything — lets the service reject oversized requests
 /// before any allocation. None for unknown names and CSV paths.
 pub fn dataset_size(name: &str, scale: f64) -> Option<usize> {
-    if let Some(rest) = name.strip_prefix("demo") {
-        let n = rest
-            .strip_prefix('-')
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(200);
-        return Some(n);
+    if name.starts_with("demo") {
+        return demo_size(name);
     }
-    if name.ends_with(".csv") || name.contains('/') {
+    if is_path(name) {
         return None;
     }
     table1_specs(scale)
@@ -107,6 +140,19 @@ mod tests {
     }
 
     #[test]
+    fn sub_minimum_demo_is_unknown_not_panic() {
+        // demo-{0..3} would trip the generator's n >= k assert; a remote
+        // request must get a clean dataset_not_found, never a panic in a
+        // dispatch worker.
+        for name in ["demo-0", "demo-1", "demo-2", "demo-3"] {
+            assert!(get_dataset(name, 1.0, 1).is_none(), "{name}");
+            assert_eq!(dataset_size(name, 1.0), None, "{name}");
+            assert_eq!(canonical_name(name), None, "{name}");
+        }
+        assert!(get_dataset("demo-4", 1.0, 1).is_some());
+    }
+
+    #[test]
     fn dataset_size_predicts_without_generating() {
         assert_eq!(dataset_size("demo-50", 1.0), Some(50));
         assert_eq!(dataset_size("demo-100000000", 1.0), Some(100_000_000));
@@ -122,6 +168,27 @@ mod tests {
         let b = get_dataset("ECG5000", 0.05, DEFAULT_SEED).unwrap();
         assert_ne!(a.data.data.len(), 0);
         assert_ne!(a.labels, b.labels[..a.n().min(b.n())].to_vec());
+    }
+
+    #[test]
+    fn canonical_name_folds_case_and_rejects_paths() {
+        assert_eq!(canonical_name("CBF").as_deref(), Some("CBF"));
+        assert_eq!(canonical_name("cbf").as_deref(), Some("CBF"));
+        assert_eq!(canonical_name("demo").as_deref(), Some("demo-200"));
+        assert_eq!(canonical_name("demo-50").as_deref(), Some("demo-50"));
+        assert_eq!(canonical_name("NoSuchDataset"), None);
+        assert_eq!(canonical_name("some/path.csv"), None);
+        assert_eq!(canonical_name("x.csv"), None);
+    }
+
+    #[test]
+    fn case_variants_are_the_same_dataset() {
+        // The lookup is case-insensitive, so the generated content must
+        // not depend on the caller's casing either.
+        let a = get_dataset("CBF", 0.05, 7).unwrap();
+        let b = get_dataset("cbf", 0.05, 7).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.labels, b.labels);
     }
 
     #[test]

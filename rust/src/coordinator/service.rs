@@ -1,59 +1,84 @@
-//! A batched TCP clustering service — the "deployment" face of the
-//! coordinator. Wire protocol: one JSON object per line per request;
-//! one JSON object per line back. Requests are decoded through the
-//! single validated parse path in [`crate::api::wire`] (versioned typed
-//! requests; malformed fields are rejected with a stable error `code`
-//! instead of being silently defaulted).
+//! A batched, concurrent multi-tenant TCP clustering service — the
+//! "deployment" face of the coordinator. Wire protocol: one JSON object
+//! per line per request; one JSON object per line back. Requests are
+//! decoded through the single validated parse path in
+//! [`crate::api::wire`] (versioned typed requests; malformed fields are
+//! rejected with a stable error `code` instead of being silently
+//! defaulted).
 //!
 //! Request fields:
 //!   {"id": 7, "dataset": "CBF", "scale": 0.05, "seed": 1,
 //!    "algo": "opt", "k": 3}
 //! or inline data:
 //!   {"id": 7, "n": 16, "l": 8, "data": [ ... n*l floats ... ], "k": 2}
-//! Special: {"cmd": "ping"} → {"ok": true}, {"cmd": "shutdown"}.
+//! Special: {"cmd": "ping"} → {"ok": true}, {"cmd": "shutdown"},
+//! {"cmd": "stats"} → {"ok": true, "workers": ..., "queue_depth": ...,
+//! "jobs": ..., "open_streams": ..., "cache_hits": ..., "cache_misses":
+//! ..., "cache_hit_ratio": ..., "stages": {...}}.
 //! Optional: {"v": 1, ...} pins the protocol version.
 //!
 //! Response: {"id": 7, "ok": true, "labels": [...], "ari": 0.4,
-//!            "secs": 0.01, "algo": "opt-tdbht", "batch": 3}
+//!            "secs": 0.01, "algo": "opt-tdbht", "batch": 3,
+//!            "cache": "hit"|"miss"}
+//!   (`cache` is present when the artifact cache is enabled: "hit" means
+//!   the Similarity→TMFG artifacts were served from the cross-request
+//!   cache and only the cheap downstream stages ran.)
 //! Errors:   {"id": 7, "ok": false, "error": "...", "code": "protocol"}
 //!
-//! Streaming (one session per connection, state lives in the dispatcher):
+//! Streaming (one session per connection, pinned to one dispatch worker):
 //!   {"cmd": "open_stream", "n": 16, "k": 2, "window": 64, "algo": "opt",
 //!    "drift": 0.1, "warmup": 8, "max_refreshes": 64}
-//!     → {"ok": true, "stream": true, ...}
+//!     → {"ok": true, "stream": true, "session": 3, ...}
 //!   {"cmd": "tick", "data": [ ... n floats, one per series ... ]}
-//!     → {"ok": true, "generation": 12, "decision": "refresh"|"rebuild"|
-//!        "warming", "labels": [...], "drift": 0.03, "secs": ..., ...}
+//!     → {"ok": true, "session": 3, "generation": 12, "decision":
+//!        "refresh"|"rebuild"|"warming", "labels": [...], "drift": 0.03,
+//!        "secs": ..., ...}
 //!       (labels/drift absent while warming; generation increases
-//!        monotonically, stepping on every emitted clustering)
+//!        monotonically, stepping on every emitted clustering; `session`
+//!        echoes the id of the session this connection owns)
 //!   {"cmd": "close_stream"} → {"ok": true, "closed": true, "ticks": ...,
 //!        "emissions": ..., "rebuilds": ..., "refreshes": ...}
 //!   Sessions are freed automatically when the connection drops.
 //!
-//! Architecture: acceptor threads parse + decode requests into a shared
-//! queue; a single dispatcher drains the queue in small batches (batching
-//! window), runs each batch's similarity computations through one shared
-//! engine (amortizing executable-cache hits), then the graph stages per
-//! request on the parallel pool, and replies. The batch size a request
-//! rode in on is reported so clients/tests can observe batching. Stream
-//! sessions are owned by the same dispatcher (keyed by connection), so
-//! per-tick state never needs locking and rides the same batching queue.
+//! Architecture: acceptor threads parse + decode requests and route them
+//! into a **sharded dispatcher worker pool**
+//! ([`ServiceConfig::dispatch_workers`] OS threads, default
+//! `min(4, cores/2)`). Batch clustering jobs land in one shared MPMC
+//! queue that any worker drains in small batches (batching window), so
+//! concurrent clients no longer serialize behind a single dispatcher.
+//! Stream sessions are *pinned*: a connection's `open_stream` / `tick` /
+//! `close_stream` always route to shard `conn % workers`, and each
+//! worker owns the session map for its shard — per-tick state never
+//! needs locking and never crosses workers. The pinning tradeoff: a tick
+//! can stall behind at most one in-flight batch clustering job on its
+//! own shard (ticks are drained between batch items, but sessions cannot
+//! migrate to idle workers); `dispatch_workers` and `max_batch` bound
+//! that tail. All workers share one
+//! similarity engine (compiled-executable reuse) and one cross-request
+//! [`ArtifactCache`] memoizing Similarity→TMFG artifacts, so repeated
+//! traffic on the same dataset skips the O(n²·l) correlation and the
+//! O(n²) TMFG entirely. Workers may run the parallel pool concurrently —
+//! `parlay::pool` partitions its workers across the concurrent jobs.
+//! The batch size a request rode in on is reported so clients/tests can
+//! observe batching.
 
+use crate::api::cache::{ArtifactCache, CacheStatus};
 use crate::api::wire::{self, ClusterSource, ClusterSpec, Command};
-use crate::api::{ClusterRequest, TmfgAlgo, TmfgError};
+use crate::api::{ClusterOutput, ClusterRequest, TmfgAlgo, TmfgError};
 use crate::data::matrix::Matrix;
 use crate::runtime::engine::CorrEngine;
 use crate::stream::{StreamConfig, StreamSession};
 use crate::util::json::Json;
-use std::collections::HashMap;
+use crate::util::timer::Breakdown;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-/// Distinguishes connections so the dispatcher can key stream sessions.
+/// Distinguishes connections so stream sessions can be keyed and pinned.
 static CONN_SEQ: AtomicU64 = AtomicU64::new(1);
 
 pub struct ServiceConfig {
@@ -63,6 +88,14 @@ pub struct ServiceConfig {
     /// Batching window: wait this long for more requests after the first.
     pub batch_window: Duration,
     pub default_algo: TmfgAlgo,
+    /// Dispatcher worker (shard) count. 0 = auto: `min(4, cores/2)`, at
+    /// least 1. Batch jobs are pulled from a shared queue by any worker;
+    /// stream sessions are pinned to shard `conn % workers`.
+    pub dispatch_workers: usize,
+    /// Cross-request artifact cache capacity in entries (0 disables it).
+    pub cache_entries: usize,
+    /// Artifact cache byte budget.
+    pub cache_bytes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -72,7 +105,21 @@ impl Default for ServiceConfig {
             max_batch: 8,
             batch_window: Duration::from_millis(5),
             default_algo: TmfgAlgo::Opt,
+            dispatch_workers: 0,
+            cache_entries: ArtifactCache::DEFAULT_ENTRIES,
+            cache_bytes: ArtifactCache::DEFAULT_BYTES,
         }
+    }
+}
+
+impl ServiceConfig {
+    /// The worker count `serve` will actually start.
+    pub fn resolved_workers(&self) -> usize {
+        if self.dispatch_workers > 0 {
+            return self.dispatch_workers;
+        }
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (cores / 2).clamp(1, 4)
     }
 }
 
@@ -81,6 +128,172 @@ struct Job {
     reply: Sender<String>,
     /// Originating connection (stream sessions are per-connection).
     conn: u64,
+    /// Synthetic housekeeping job (disconnect cleanup) — processed like
+    /// any other but excluded from the `stats` request counter.
+    internal: bool,
+}
+
+/// Result of a timed pop from a [`JobQueue`].
+enum Pop {
+    Job(Job),
+    /// Timed out with no job (queue still open).
+    Empty,
+    /// Queue closed and fully drained.
+    Closed,
+}
+
+/// MPMC job queue: connection handlers push, dispatch workers pop.
+/// Closing wakes every waiter, but pops keep returning queued jobs until
+/// the queue is empty — shutdown never drops accepted work. A worker's
+/// *pinned* queue doubles as its parking spot: `poke` marks shared-queue
+/// activity so [`JobQueue::wait_work`] wakes without polling.
+struct JobQueue {
+    /// (jobs, closed, poked)
+    q: Mutex<(VecDeque<Job>, bool, bool)>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue { q: Mutex::new((VecDeque::new(), false, false)), cv: Condvar::new() }
+    }
+
+    /// Enqueue; false if the queue is closed (service shutting down).
+    fn push(&self, job: Job) -> bool {
+        let mut g = self.q.lock().unwrap();
+        if g.1 {
+            return false;
+        }
+        g.0.push_back(job);
+        self.cv.notify_one();
+        true
+    }
+
+    fn try_pop(&self) -> Option<Job> {
+        self.q.lock().unwrap().0.pop_front()
+    }
+
+    fn pop_timeout(&self, d: Duration) -> Pop {
+        let deadline = Instant::now() + d;
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(j) = g.0.pop_front() {
+                return Pop::Job(j);
+            }
+            if g.1 {
+                return Pop::Closed;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Pop::Empty;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Flag external activity (a shared-queue push) and wake any waiter.
+    /// Setting the flag under this queue's lock closes the check-then-
+    /// sleep race in [`JobQueue::wait_work`].
+    fn poke(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.2 = true;
+        self.cv.notify_all();
+    }
+
+    /// Park until this queue has work, is poked, or closes — with a
+    /// fallback timeout bounding any wakeup this protocol might miss.
+    /// Clears the poked flag on return.
+    fn wait_work(&self, d: Duration) {
+        let deadline = Instant::now() + d;
+        let mut g = self.q.lock().unwrap();
+        while g.0.is_empty() && !g.1 && !g.2 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, left).unwrap();
+            g = g2;
+        }
+        g.2 = false;
+    }
+
+    fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.1 = true;
+        self.cv.notify_all();
+    }
+
+    fn len(&self) -> usize {
+        self.q.lock().unwrap().0.len()
+    }
+}
+
+/// Shared live state: the queues, the artifact cache, and the counters
+/// the `stats` command reports.
+struct ServiceState {
+    workers: usize,
+    /// Shared queue for batch clustering jobs (any worker pulls).
+    global: Arc<JobQueue>,
+    /// Per-shard queues for session-pinned stream jobs.
+    pinned: Vec<Arc<JobQueue>>,
+    cache: Option<Arc<ArtifactCache>>,
+    /// Requests fully processed by the workers.
+    jobs_done: AtomicU64,
+    open_streams: AtomicUsize,
+    /// Cumulative per-stage wall-clock across every request.
+    stages: Mutex<Breakdown>,
+}
+
+impl ServiceState {
+    fn queue_depth(&self) -> usize {
+        self.global.len() + self.pinned.iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    /// Route a job: stream commands to their connection's pinned shard
+    /// (its own queue wakes its worker), batch work to the shared queue
+    /// (poking every parked worker so one picks it up without polling).
+    fn submit(&self, is_stream: bool, shard: usize, job: Job) -> bool {
+        if is_stream {
+            self.pinned[shard].push(job)
+        } else {
+            let ok = self.global.push(job);
+            if ok {
+                for q in &self.pinned {
+                    q.poke();
+                }
+            }
+            ok
+        }
+    }
+
+    fn stats_response(&self, id: &Json) -> Json {
+        let mut fields = vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("queue_depth", Json::Num(self.queue_depth() as f64)),
+            ("jobs", Json::Num(self.jobs_done.load(Ordering::Relaxed) as f64)),
+            (
+                "open_streams",
+                Json::Num(self.open_streams.load(Ordering::Relaxed) as f64),
+            ),
+        ];
+        if let Some(cache) = &self.cache {
+            let st = cache.stats();
+            let total = st.hits + st.misses;
+            let ratio = if total > 0 { st.hits as f64 / total as f64 } else { 0.0 };
+            fields.push(("cache_hits", Json::Num(st.hits as f64)));
+            fields.push(("cache_misses", Json::Num(st.misses as f64)));
+            fields.push(("cache_hit_ratio", Json::Num(ratio)));
+            fields.push(("cache_entries", Json::Num(st.entries as f64)));
+            fields.push(("cache_bytes", Json::Num(st.bytes as f64)));
+        }
+        let stages_json = {
+            let g = self.stages.lock().unwrap();
+            Json::obj(g.stages().iter().map(|(s, t)| (s.as_str(), Json::Num(*t))).collect())
+        };
+        fields.push(("stages", stages_json));
+        wire::ok_response(id, fields)
+    }
 }
 
 /// Handle to a running service (for tests, the `serve` example, and the
@@ -92,7 +305,7 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Request shutdown and join the service threads.
+    /// Request shutdown and join the service threads (drains queued work).
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Release);
         // poke the acceptor so it notices
@@ -114,12 +327,13 @@ impl ServiceHandle {
 
 /// Run one batch clustering request through the shared-engine API. Takes
 /// the spec by value so inline payloads move straight into the panel
-/// matrix (no second copy on the dispatcher hot path).
+/// matrix (no second copy on the worker hot path).
 fn run_cluster(
     spec: ClusterSpec,
     engine: &Arc<CorrEngine>,
+    cache: Option<&Arc<ArtifactCache>>,
     default_algo: TmfgAlgo,
-) -> Result<(Vec<usize>, Option<f64>, TmfgAlgo), TmfgError> {
+) -> Result<ClusterOutput, TmfgError> {
     let algo = spec.algo.unwrap_or(default_algo);
     let req = match spec.source {
         ClusterSource::Named { name, scale, seed } => {
@@ -135,9 +349,11 @@ fn run_cluster(
             ClusterRequest::panel(panel).k(spec.k)
         }
     };
-    let out = req.algo(algo).engine(engine.clone()).run()?;
-    let labels = out.labels.ok_or_else(|| TmfgError::invariant("run produced no labels"))?;
-    Ok((labels, out.ari, algo))
+    let mut req = req.algo(algo).engine(engine.clone());
+    if let Some(c) = cache {
+        req = req.cache(c.clone());
+    }
+    req.run()
 }
 
 fn process(
@@ -146,24 +362,37 @@ fn process(
     engine: &Arc<CorrEngine>,
     default_algo: TmfgAlgo,
     batch_size: usize,
+    state: &ServiceState,
 ) -> Json {
     let t = crate::util::timer::Timer::start();
-    match run_cluster(spec, engine, default_algo) {
-        Ok((labels, ari, algo)) => wire::ok_response(
-            id,
-            vec![
+    match run_cluster(spec, engine, state.cache.as_ref(), default_algo) {
+        Ok(out) => {
+            let Some(labels) = out.labels else {
+                return wire::error_response(
+                    id,
+                    &TmfgError::invariant("run produced no labels"),
+                );
+            };
+            state.stages.lock().unwrap().merge(&out.breakdown);
+            let mut fields = vec![
                 ("labels", Json::arr_usize(&labels)),
-                ("ari", ari.map(Json::Num).unwrap_or(Json::Null)),
+                ("ari", out.ari.map(Json::Num).unwrap_or(Json::Null)),
                 ("secs", Json::Num(t.elapsed())),
-                ("algo", Json::str(&algo.name())),
+                ("algo", Json::str(&out.algo.name())),
                 ("batch", Json::Num(batch_size as f64)),
-            ],
-        ),
+            ];
+            match out.cache {
+                CacheStatus::Hit => fields.push(("cache", Json::str("hit"))),
+                CacheStatus::Miss => fields.push(("cache", Json::str("miss"))),
+                CacheStatus::Bypass => {}
+            }
+            wire::ok_response(id, fields)
+        }
         Err(e) => wire::error_response(id, &e),
     }
 }
 
-/// Handle one streaming command against the dispatcher-owned session map.
+/// Handle one streaming command against this worker's session map.
 fn stream_cmd(
     id: &Json,
     body: &Command,
@@ -171,6 +400,7 @@ fn stream_cmd(
     conn: u64,
     default_algo: TmfgAlgo,
     batch: usize,
+    state: &ServiceState,
 ) -> Json {
     match body {
         Command::OpenStream(open) => {
@@ -188,12 +418,16 @@ fn stream_cmd(
             }
             match StreamSession::new(scfg) {
                 Ok(session) => {
+                    let sid = session.id();
                     // replacing an existing session is allowed (re-open)
-                    streams.insert(conn, session);
+                    if streams.insert(conn, session).is_none() {
+                        state.open_streams.fetch_add(1, Ordering::Relaxed);
+                    }
                     wire::ok_response(
                         id,
                         vec![
                             ("stream", Json::Bool(true)),
+                            ("session", Json::Num(sid as f64)),
                             ("n", Json::Num(open.n as f64)),
                             ("window", Json::Num(open.window as f64)),
                             ("k", Json::Num(open.k as f64)),
@@ -210,7 +444,9 @@ fn stream_cmd(
             };
             match session.tick(sample) {
                 Ok(out) => {
+                    state.stages.lock().unwrap().add("stream_tick", out.secs);
                     let mut pairs = vec![
+                        ("session", Json::Num(session.id() as f64)),
                         ("generation", Json::Num(out.generation as f64)),
                         ("tick", Json::Num(out.tick as f64)),
                         ("decision", Json::str(out.decision.name())),
@@ -231,11 +467,13 @@ fn stream_cmd(
         // CloseStream; also issued internally on disconnect (idempotent).
         _ => match streams.remove(&conn) {
             Some(session) => {
+                state.open_streams.fetch_sub(1, Ordering::Relaxed);
                 let st = session.stats();
                 wire::ok_response(
                     id,
                     vec![
                         ("closed", Json::Bool(true)),
+                        ("session", Json::Num(session.id() as f64)),
                         ("ticks", Json::Num(st.ticks as f64)),
                         ("emissions", Json::Num(st.emissions as f64)),
                         ("rebuilds", Json::Num(st.rebuilds as f64)),
@@ -249,54 +487,107 @@ fn stream_cmd(
     }
 }
 
-fn dispatcher(rx: Receiver<Job>, cfg: &ServiceConfig, shutdown: Arc<AtomicBool>) {
-    // One similarity engine for the whole service lifetime: compiled XLA
-    // executables are cached inside and shared across every request and
-    // algorithm.
-    let engine = Arc::new(CorrEngine::auto(std::path::Path::new("artifacts")));
-    // Per-connection streaming sessions, owned here so tick state needs
-    // no locking.
-    let mut streams: HashMap<u64, StreamSession> = Default::default();
-    loop {
-        let first = match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(j) => j,
-            Err(RecvTimeoutError::Timeout) => {
-                if shutdown.load(Ordering::Acquire) {
-                    return;
-                }
-                continue;
-            }
-            Err(RecvTimeoutError::Disconnected) => return,
-        };
-        // batching window: gather more requests
-        let mut batch = vec![first];
-        let deadline = std::time::Instant::now() + cfg.batch_window;
-        while batch.len() < cfg.max_batch {
-            let left = deadline.saturating_duration_since(std::time::Instant::now());
-            if left.is_zero() {
-                break;
-            }
-            match rx.recv_timeout(left) {
-                Ok(j) => batch.push(j),
-                Err(_) => break,
-            }
+/// Process one job on a worker. `streams` is the worker's own shard of
+/// the session map; stream jobs only ever arrive on their pinned shard.
+fn run_job(
+    job: Job,
+    streams: &mut HashMap<u64, StreamSession>,
+    cfg: &ServiceConfig,
+    engine: &Arc<CorrEngine>,
+    state: &ServiceState,
+    batch_size: usize,
+) {
+    let Job { request, reply, conn, internal } = job;
+    let wire::Request { id, body, .. } = request;
+    // Contain panics to the one request: an unwinding worker thread would
+    // otherwise die silently and permanently wedge its pinned shard
+    // (queued jobs never drained, handlers blocked in recv forever). The
+    // library paths are de-panicked, so this only guards regressions.
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match body {
+        Command::Cluster(spec) => {
+            process(&id, spec, engine, cfg.default_algo, batch_size, state)
         }
-        let bsize = batch.len();
-        for job in batch {
-            let Job { request, reply, conn } = job;
-            let wire::Request { id, body, .. } = request;
-            let resp = match body {
-                Command::Cluster(spec) => {
-                    process(&id, spec, &engine, cfg.default_algo, bsize)
+        body @ (Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream) => {
+            stream_cmd(&id, &body, streams, conn, cfg.default_algo, batch_size, state)
+        }
+        // Ping/Shutdown/Stats are answered in the connection handler and
+        // never enqueued; answer defensively anyway.
+        Command::Ping | Command::Shutdown | Command::Stats => wire::ok_response(&id, vec![]),
+    }));
+    let resp = result.unwrap_or_else(|_| {
+        wire::error_response(
+            &id,
+            &TmfgError::invariant("internal panic while processing request"),
+        )
+    });
+    if !internal {
+        state.jobs_done.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = reply.send(resp.to_string());
+}
+
+/// One dispatch worker: drains its pinned (stream) queue eagerly, then
+/// pulls batches of clustering jobs from the shared queue. Exits when
+/// both queues are closed and drained.
+fn dispatch_worker(
+    w: usize,
+    cfg: Arc<ServiceConfig>,
+    state: Arc<ServiceState>,
+    engine: Arc<CorrEngine>,
+) {
+    let pinned = state.pinned[w].clone();
+    let global = state.global.clone();
+    let mut streams: HashMap<u64, StreamSession> = HashMap::new();
+    loop {
+        // Session-pinned jobs first: ticks are latency-sensitive and
+        // cheap relative to batch clustering.
+        while let Some(job) = pinned.try_pop() {
+            run_job(job, &mut streams, &cfg, &engine, &state, 1);
+        }
+        // One batch from the shared queue, gathered over the batching
+        // window (non-blocking first pop: idle waiting happens on the
+        // pinned queue below, which shared-queue pushes poke).
+        match global.pop_timeout(Duration::ZERO) {
+            Pop::Job(first) => {
+                let mut batch = vec![first];
+                let deadline = Instant::now() + cfg.batch_window;
+                while batch.len() < cfg.max_batch {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        break;
+                    }
+                    match global.pop_timeout(left) {
+                        Pop::Job(j) => batch.push(j),
+                        _ => break,
+                    }
                 }
-                body @ (Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream) => {
-                    stream_cmd(&id, &body, &mut streams, conn, cfg.default_algo, bsize)
+                let bsize = batch.len();
+                for job in batch {
+                    // Between heavy clustering jobs, serve this shard's
+                    // ticks — only this worker can, and a full batch of
+                    // multi-hundred-ms runs would otherwise head-of-line
+                    // block a session for the whole batch.
+                    while let Some(tick) = pinned.try_pop() {
+                        run_job(tick, &mut streams, &cfg, &engine, &state, 1);
+                    }
+                    run_job(job, &mut streams, &cfg, &engine, &state, bsize);
                 }
-                // Ping/Shutdown are answered in the connection handler and
-                // never enqueued; answer defensively anyway.
-                Command::Ping | Command::Shutdown => wire::ok_response(&id, vec![]),
-            };
-            let _ = reply.send(resp.to_string());
+            }
+            Pop::Empty => {
+                // Nothing anywhere: park on the pinned queue. Its own
+                // pushes notify it directly; shared-queue pushes poke it;
+                // close wakes it; the timeout bounds a missed wakeup.
+                pinned.wait_work(Duration::from_millis(100));
+            }
+            Pop::Closed => {
+                // Shared queue drained + closed: finish any pinned work,
+                // then exit. Pinned queues were closed first, so nothing
+                // new can arrive after this drain.
+                while let Some(job) = pinned.try_pop() {
+                    run_job(job, &mut streams, &cfg, &engine, &state, 1);
+                }
+                return;
+            }
         }
     }
 }
@@ -306,29 +597,60 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?.to_string();
     let shutdown = Arc::new(AtomicBool::new(false));
-    let (tx, rx) = channel::<Job>();
+    let workers = cfg.resolved_workers();
+    let cache = if cfg.cache_entries > 0 {
+        Some(Arc::new(ArtifactCache::new(cfg.cache_entries, cfg.cache_bytes)))
+    } else {
+        None
+    };
+    let state = Arc::new(ServiceState {
+        workers,
+        global: Arc::new(JobQueue::new()),
+        pinned: (0..workers).map(|_| Arc::new(JobQueue::new())).collect(),
+        cache,
+        jobs_done: AtomicU64::new(0),
+        open_streams: AtomicUsize::new(0),
+        stages: Mutex::new(Breakdown::new()),
+    });
+    let cfg = Arc::new(ServiceConfig { addr: addr.clone(), ..cfg });
     let sd = shutdown.clone();
-    let cfg2 = ServiceConfig { addr: addr.clone(), ..cfg };
+    let st = state.clone();
     let join = std::thread::spawn(move || {
-        let sd_dispatch = sd.clone();
-        let dispatch = std::thread::spawn(move || dispatcher(rx, &cfg2, sd_dispatch));
+        // One similarity engine for the whole service lifetime: compiled
+        // XLA executables are cached inside and shared across every
+        // worker, request, and algorithm.
+        let engine = Arc::new(CorrEngine::auto(std::path::Path::new("artifacts")));
+        let mut worker_joins = Vec::with_capacity(st.workers);
+        for w in 0..st.workers {
+            let (cfg, st2, engine) = (cfg.clone(), st.clone(), engine.clone());
+            worker_joins.push(std::thread::spawn(move || dispatch_worker(w, cfg, st2, engine)));
+        }
         for stream in listener.incoming() {
             if sd.load(Ordering::Acquire) {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            let tx = tx.clone();
+            let st_conn = st.clone();
             let sd_conn = sd.clone();
-            std::thread::spawn(move || handle_conn(stream, tx, sd_conn));
+            std::thread::spawn(move || handle_conn(stream, st_conn, sd_conn));
         }
-        drop(tx);
-        let _ = dispatch.join();
+        // Close pinned queues before the shared one: workers only exit on
+        // shared-queue Closed, at which point the pinned drain sees a
+        // queue that can no longer grow.
+        for q in &st.pinned {
+            q.close();
+        }
+        st.global.close();
+        for j in worker_joins {
+            let _ = j.join();
+        }
     });
     Ok(ServiceHandle { addr, shutdown, join: Some(join) })
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
+fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, shutdown: Arc<AtomicBool>) {
     let conn = CONN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let shard = (conn as usize) % state.workers;
     let peer = stream.try_clone();
     let reader = BufReader::new(stream);
     let Ok(mut writer) = peer else { return };
@@ -365,6 +687,10 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
                 let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
                 continue;
             }
+            Command::Stats => {
+                let _ = writeln!(writer, "{}", state.stats_response(&req.id).to_string());
+                continue;
+            }
             Command::Shutdown => {
                 shutdown.store(true, Ordering::Release);
                 let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
@@ -377,9 +703,17 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
             }
             _ => {}
         }
+        // Stream commands are pinned to this connection's shard so the
+        // owning worker's session map serves every tick; batch work goes
+        // through the shared queue.
+        let is_stream = matches!(
+            req.body,
+            Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream
+        );
         let (rtx, rrx) = channel();
-        if tx.send(Job { request: req, reply: rtx, conn }).is_err() {
-            break;
+        let job = Job { request: req, reply: rtx, conn, internal: false };
+        if !state.submit(is_stream, shard, job) {
+            break; // queues closed: service is shutting down
         }
         match rrx.recv() {
             Ok(resp) => {
@@ -393,15 +727,20 @@ fn handle_conn(stream: TcpStream, tx: Sender<Job>, shutdown: Arc<AtomicBool>) {
     // Connection gone: free any stream session it owned (idempotent; the
     // reply channel's receiver is dropped, so the response is discarded).
     let (rtx, _rrx) = channel();
-    let _ = tx.send(Job {
-        request: wire::Request {
-            id: Json::Null,
-            v: wire::PROTOCOL_VERSION,
-            body: Command::CloseStream,
+    let _ = state.submit(
+        true,
+        shard,
+        Job {
+            request: wire::Request {
+                id: Json::Null,
+                v: wire::PROTOCOL_VERSION,
+                body: Command::CloseStream,
+            },
+            reply: rtx,
+            conn,
+            internal: true,
         },
-        reply: rtx,
-        conn,
-    });
+    );
 }
 
 /// Minimal blocking client used by tests and the serve example.

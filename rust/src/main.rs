@@ -30,6 +30,7 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
            [--out-dir results]
   tmfg gen --dataset <name> --out <file.csv> [--scale 0.1] [--seed N]
   tmfg serve [--addr 127.0.0.1:7401] [--algo opt] [--max-batch 8]
+           [--dispatch-workers N] [--cache-entries 32]
   tmfg stream --dataset <name|csv> [--window 64] [--k N] [--algo opt]
            [--drift 0.1] [--scale 0.1] [--seed N] [--threads N]
   tmfg info
@@ -183,10 +184,20 @@ fn cmd_serve(args: &Args) {
         addr: args.get_str("addr", "127.0.0.1:7401"),
         max_batch: args.get_usize("max-batch", 8),
         default_algo: parse_algo(args),
+        // 0 = auto (min(4, cores/2)); sharded dispatcher worker pool
+        dispatch_workers: args.get_usize("dispatch-workers", 0),
+        // 0 disables the cross-request artifact cache
+        cache_entries: args.get_usize("cache-entries", 32),
         ..Default::default()
     };
+    let workers = cfg.resolved_workers();
+    let cache_entries = cfg.cache_entries;
     let h = serve(cfg).unwrap_or_else(|e| fail(e.into()));
     println!("tmfg clustering service listening on {}", h.addr);
+    println!(
+        "dispatch workers: {workers}; artifact cache: {}",
+        if cache_entries > 0 { format!("{cache_entries} entries") } else { "disabled".into() }
+    );
     println!("protocol: one JSON request per line; see api::wire + coordinator/service.rs");
     // Block on the service itself: when a client sends {"cmd":"shutdown"}
     // the acceptor and dispatcher wind down and wait() returns.

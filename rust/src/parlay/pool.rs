@@ -1,20 +1,28 @@
 //! Persistent fork-join thread pool.
 //!
-//! Design: one global pool of `P-1` workers (plus the calling thread).
+//! Design: one global pool of `P-1` workers (plus each calling thread).
 //! A parallel-for posts a `Job` — a lifetime-erased chunk function plus an
-//! atomic chunk cursor — under a mutex, bumps an epoch, and wakes workers.
-//! Workers (and the caller) grab chunks with `fetch_add` until exhausted;
-//! the last finisher signals completion. Workers spin briefly before
-//! parking so back-to-back parallel loops (the TMFG insertion loop!) pay
+//! atomic chunk cursor — into a shared job list, bumps an epoch, and wakes
+//! workers. **Multiple OS threads may post jobs concurrently** (the
+//! clustering service's dispatcher workers do exactly this): every active
+//! job sits in the list and the pool's workers partition themselves
+//! across the concurrent jobs, each picking the unfinished job with the
+//! fewest participants. A posting thread always executes its own job too,
+//! so every job makes progress even when it is granted zero workers — the
+//! pool is deadlock-free by construction. Workers (and callers) grab
+//! chunks with `fetch_add` until the cursor is exhausted; the last
+//! finisher signals completion. Workers spin briefly before parking so
+//! back-to-back parallel loops (the TMFG insertion loop!) pay
 //! sub-microsecond dispatch instead of a futex round-trip.
 //!
 //! The *active thread count* is adjustable at runtime (`set_num_threads`)
 //! — only workers with id < active-1 participate — which is how the
 //! experiment harness reproduces the paper's core-count sweeps (Figs 3/4).
 //!
-//! Nested parallel calls from inside a worker run sequentially (ParlayLib
-//! would fork; our algorithms only use flat outer-level parallelism, and
-//! sequential nesting keeps the pool deadlock-free by construction).
+//! Nested parallel calls from inside a worker (or from a chunk the caller
+//! runs itself) execute sequentially (ParlayLib would fork; our
+//! algorithms only use flat outer-level parallelism, and sequential
+//! nesting keeps the chunk closures panic- and deadlock-free).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -32,6 +40,9 @@ struct Job {
     completed: AtomicUsize,
     /// Number of pool workers allowed to participate (callers always do).
     worker_limit: usize,
+    /// Threads currently working this job — used to spread workers across
+    /// concurrent jobs (least-loaded job first). Purely advisory.
+    participants: AtomicUsize,
     done_lock: Mutex<bool>,
     done_cv: Condvar,
 }
@@ -50,7 +61,9 @@ impl Job {
             let start = c * self.chunk;
             let end = (start + self.chunk).min(self.n);
             // SAFETY: the posting thread keeps the closure alive until all
-            // chunks complete; we only run chunks we claimed.
+            // chunks complete; we only run chunks we claimed (and claiming
+            // a chunk forbids `completed` from reaching `nchunks` before we
+            // finish it, so the poster cannot have returned yet).
             unsafe { (*self.func)(start, end) };
             let fin = self.completed.fetch_add(1, Ordering::AcqRel) + 1;
             if fin == self.nchunks {
@@ -60,18 +73,22 @@ impl Job {
             }
         }
     }
+
+    /// Does this job still have unclaimed chunks?
+    fn has_work(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.nchunks
+    }
 }
 
 struct Shared {
     /// Epoch counter; bumped on every post. Workers spin on this.
     epoch: AtomicU64,
-    slot: Mutex<Option<Arc<Job>>>,
+    /// Active jobs from (possibly concurrent) posting threads. Posters
+    /// push on post and remove their own entry after completion.
+    jobs: Mutex<Vec<Arc<Job>>>,
     cv: Condvar,
     shutdown: AtomicBool,
     active: AtomicUsize,
-    /// Serializes top-level parallel sections from different OS threads
-    /// (e.g. the clustering service); held for the duration of one job.
-    run_lock: Mutex<()>,
 }
 
 pub struct Pool {
@@ -90,7 +107,31 @@ const SPIN_ROUNDS: u32 = 20_000;
 fn worker_loop(shared: Arc<Shared>, id: usize) {
     let mut seen_epoch: u64 = 0;
     loop {
-        // Spin briefly waiting for a new epoch, then park.
+        // Work phase: keep helping jobs until none we are eligible for
+        // remain. `seen_epoch` is read under the jobs lock, so a job
+        // posted after our scan is guaranteed to have bumped the epoch
+        // past it (posters bump while holding the lock) — no lost wakeup.
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let job = {
+                let guard = shared.jobs.lock().unwrap();
+                seen_epoch = shared.epoch.load(Ordering::Acquire);
+                guard
+                    .iter()
+                    .filter(|j| id < j.worker_limit && j.has_work())
+                    .min_by_key(|j| j.participants.load(Ordering::Relaxed))
+                    .cloned()
+            };
+            let Some(job) = job else { break };
+            job.participants.fetch_add(1, Ordering::Relaxed);
+            IN_PARALLEL.with(|f| f.set(true));
+            job.work();
+            IN_PARALLEL.with(|f| f.set(false));
+            job.participants.fetch_sub(1, Ordering::Relaxed);
+        }
+        // Idle phase: spin briefly waiting for a new epoch, then park.
         let mut spins = 0u32;
         loop {
             if shared.shutdown.load(Ordering::Acquire) {
@@ -103,29 +144,13 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
             if spins < SPIN_ROUNDS {
                 std::hint::spin_loop();
             } else {
-                let mut guard = shared.slot.lock().unwrap();
+                let mut guard = shared.jobs.lock().unwrap();
                 while shared.epoch.load(Ordering::Acquire) == seen_epoch
                     && !shared.shutdown.load(Ordering::Acquire)
                 {
                     guard = shared.cv.wait(guard).unwrap();
                 }
                 break;
-            }
-        }
-        if shared.shutdown.load(Ordering::Acquire) {
-            return;
-        }
-        // Fetch the current job (if any) and participate if within limit.
-        let job = {
-            let guard = shared.slot.lock().unwrap();
-            seen_epoch = shared.epoch.load(Ordering::Acquire);
-            guard.clone()
-        };
-        if let Some(job) = job {
-            if id < job.worker_limit {
-                IN_PARALLEL.with(|f| f.set(true));
-                job.work();
-                IN_PARALLEL.with(|f| f.set(false));
             }
         }
     }
@@ -135,11 +160,10 @@ impl Pool {
     fn new(n_workers: usize) -> Pool {
         let shared = Arc::new(Shared {
             epoch: AtomicU64::new(0),
-            slot: Mutex::new(None),
+            jobs: Mutex::new(Vec::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             active: AtomicUsize::new(1),
-            run_lock: Mutex::new(()),
         });
         // Degrade gracefully if the OS refuses a thread: stop spawning
         // (worker ids must stay contiguous for `worker_limit`) and run
@@ -173,6 +197,9 @@ impl Pool {
     }
 
     /// Run `f(start, end)` over chunks of `[0, n)` on the active threads.
+    /// Safe to call from multiple OS threads at once: each call posts its
+    /// own job, executes it itself (guaranteed progress), and workers
+    /// spread across whatever jobs are in flight.
     fn run_chunked<F: Fn(usize, usize) + Sync>(&self, n: usize, grain: usize, f: F) {
         if n == 0 {
             return;
@@ -191,7 +218,6 @@ impl Pool {
             return;
         }
 
-        let _serial = self.shared.run_lock.lock().unwrap();
         // Erase the closure's lifetime: we guarantee below that we do not
         // return until every chunk has completed.
         let func: &(dyn Fn(usize, usize) + Sync) = &f;
@@ -205,16 +231,17 @@ impl Pool {
             next: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
             worker_limit: active - 1,
+            participants: AtomicUsize::new(1), // the caller
             done_lock: Mutex::new(false),
             done_cv: Condvar::new(),
         });
         {
-            let mut slot = self.shared.slot.lock().unwrap();
-            *slot = Some(job.clone());
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            jobs.push(job.clone());
             self.shared.epoch.fetch_add(1, Ordering::Release);
             self.shared.cv.notify_all();
         }
-        // The caller participates too.
+        // The caller participates too (and alone suffices for progress).
         IN_PARALLEL.with(|fl| fl.set(true));
         job.work();
         IN_PARALLEL.with(|fl| fl.set(false));
@@ -232,12 +259,10 @@ impl Pool {
                 break;
             }
         }
-        // Clear the slot so late-waking workers don't redundantly scan it.
-        let mut slot = self.shared.slot.lock().unwrap();
-        if let Some(cur) = slot.as_ref() {
-            if Arc::ptr_eq(cur, &job) {
-                *slot = None;
-            }
+        // Retire the job so workers stop scanning it.
+        let mut jobs = self.shared.jobs.lock().unwrap();
+        if let Some(pos) = jobs.iter().position(|j| Arc::ptr_eq(j, &job)) {
+            jobs.remove(pos);
         }
     }
 }
@@ -245,7 +270,7 @@ impl Pool {
 impl Drop for Pool {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
-        let _g = self.shared.slot.lock().unwrap();
+        let _g = self.shared.jobs.lock().unwrap();
         self.shared.cv.notify_all();
     }
 }
@@ -325,10 +350,10 @@ mod tests {
 
     #[test]
     fn nested_runs_sequentially() {
+        // Regression: nested parallel calls must run inline, not deadlock.
         let n = 1000;
         let c = TestAtomic::new(0);
         parallel_for(n, 1, |_| {
-            // nested call must not deadlock
             parallel_for(10, 1, |_| {
                 c.fetch_add(1, Ordering::Relaxed);
             });
@@ -369,9 +394,9 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_posters_serialize() {
-        // Multiple OS threads issuing parallel sections must not interleave
-        // incorrectly (the run_lock serializes them).
+    fn concurrent_posters_all_complete() {
+        // Multiple OS threads issuing parallel sections simultaneously:
+        // every poster's job must cover its full range exactly once.
         let handles: Vec<_> = (0..4)
             .map(|_| {
                 std::thread::spawn(|| {
@@ -386,5 +411,65 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), 50_000);
         }
+    }
+
+    #[test]
+    fn overlapping_posters_observe_full_chunk_coverage() {
+        // Two OS threads posting overlapping parallel_fors (a barrier
+        // forces the overlap): both must complete, and each must observe
+        // every index of its own range exactly once — the concurrent-
+        // caller contract the service's dispatcher workers rely on.
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(2));
+        let handles: Vec<_> = (0..2)
+            .map(|t| {
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let n = 80_000 + t * 1000; // distinct ranges
+                    let hits: Vec<TestAtomic> = (0..n).map(|_| TestAtomic::new(0)).collect();
+                    for round in 0..20u64 {
+                        barrier.wait();
+                        parallel_for(n, 32, |i| {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        });
+                        for (i, h) in hits.iter().enumerate() {
+                            assert_eq!(
+                                h.load(Ordering::Relaxed),
+                                round + 1,
+                                "thread {t} round {round} index {i}"
+                            );
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn concurrent_posters_progress_with_few_active_workers() {
+        // With the active count pinned to 2 (at most 1 pool worker
+        // participates), three simultaneous posters can each be granted
+        // zero workers — self-execution must still complete all of them.
+        with_threads(2, || {
+            let barrier = std::sync::Arc::new(std::sync::Barrier::new(3));
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    let barrier = barrier.clone();
+                    std::thread::spawn(move || {
+                        barrier.wait();
+                        let c = TestAtomic::new(0);
+                        parallel_for(30_000, 16, |_| {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                        c.load(Ordering::Relaxed)
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), 30_000);
+            }
+        });
     }
 }

@@ -21,6 +21,13 @@ use crate::stream::window::SlidingWindow;
 use crate::tmfg::TmfgResult;
 use crate::util::timer::Timer;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide unique session ids. The service echoes the id in every
+/// `open_stream`/`tick`/`close_stream` response so multi-tenant clients
+/// (and the concurrency test suite) can verify that a tick was served by
+/// the session their own connection opened — never a neighbor's.
+static SESSION_SEQ: AtomicU64 = AtomicU64::new(1);
 
 #[derive(Debug, Clone)]
 pub struct StreamConfig {
@@ -118,6 +125,8 @@ pub struct Snapshot {
 
 pub struct StreamSession {
     pub config: StreamConfig,
+    /// Process-wide unique id (see [`StreamSession::id`]).
+    id: u64,
     window: SlidingWindow,
     tmfg: Option<TmfgResult>,
     /// Correlation matrix backing the current TMFG topology (drift is
@@ -148,6 +157,7 @@ impl StreamSession {
         }
         let window = SlidingWindow::new(config.n, config.window, config.refresh_stats_every);
         Ok(StreamSession {
+            id: SESSION_SEQ.fetch_add(1, Ordering::Relaxed),
             window,
             tmfg: None,
             tmfg_corr: None,
@@ -165,6 +175,11 @@ impl StreamSession {
 
     fn effective_apsp(&self) -> ApspMode {
         self.config.apsp.unwrap_or_else(|| self.config.algo.default_apsp())
+    }
+
+    /// Unique id of this session (process-wide, never reused).
+    pub fn id(&self) -> u64 {
+        self.id
     }
 
     /// Generation of the latest emission (0 until the first one).
@@ -311,6 +326,14 @@ mod tests {
 
     fn gaussian_sample(rng: &mut Rng, n: usize) -> Vec<f32> {
         (0..n).map(|_| rng.next_gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn session_ids_are_unique() {
+        let a = StreamSession::new(cfg(8, 16, 2)).unwrap();
+        let b = StreamSession::new(cfg(8, 16, 2)).unwrap();
+        assert_ne!(a.id(), b.id());
+        assert!(a.id() > 0 && b.id() > 0);
     }
 
     #[test]

@@ -221,3 +221,128 @@ fn streaming_errors_are_typed() {
     let e = s.tick(&[1.0; 5]).unwrap_err();
     assert_eq!(e.code(), "invalid_input");
 }
+
+// ---- artifact cache (api::cache) ------------------------------------------
+
+#[test]
+fn cache_hit_skips_stages_and_matches_miss_exactly() {
+    use std::sync::Arc;
+    use tmfg::api::{ArtifactCache, CacheStatus};
+    let cache = Arc::new(ArtifactCache::default());
+    let ds = SynthSpec::new("t", 40, 48, 3).generate(21);
+    let panel = Arc::new(ds.data);
+    let run = |cache: Arc<ArtifactCache>| {
+        ClusterRequest::panel(panel.clone())
+            .algo(TmfgAlgo::Heap)
+            .use_xla(false)
+            .labels(ds.labels.clone())
+            .k(3)
+            .cache(cache)
+            .run()
+            .unwrap()
+    };
+    let miss = run(cache.clone());
+    assert_eq!(miss.cache, CacheStatus::Miss);
+    assert!(miss.breakdown.get("similarity").is_some());
+    let hit = run(cache.clone());
+    assert_eq!(hit.cache, CacheStatus::Hit);
+    // the expensive stages never ran on the hit…
+    assert!(hit.breakdown.get("similarity").is_none());
+    assert!(hit.breakdown.get("tmfg:add-vertices").is_none());
+    // …the TMFG artifact is the very same allocation…
+    assert!(Arc::ptr_eq(&hit.tmfg, &miss.tmfg));
+    // …and the payload is bit-identical.
+    assert_eq!(hit.labels, miss.labels);
+    assert_eq!(hit.ari.map(f64::to_bits), miss.ari.map(f64::to_bits));
+    assert_eq!(hit.edge_sum.to_bits(), miss.edge_sum.to_bits());
+    let st = cache.stats();
+    assert_eq!((st.hits, st.misses), (1, 1));
+}
+
+#[test]
+fn cache_named_dataset_hit_serves_labels_and_default_k() {
+    use std::sync::Arc;
+    use tmfg::api::{ArtifactCache, CacheStatus};
+    let cache = Arc::new(ArtifactCache::default());
+    let run = || {
+        ClusterRequest::dataset("CBF")
+            .scale(0.05)
+            .seed(1)
+            .algo(TmfgAlgo::Heap)
+            .use_xla(false)
+            .cache(cache.clone())
+            .run()
+            .unwrap()
+    };
+    let miss = run();
+    let hit = run();
+    assert_eq!(hit.cache, CacheStatus::Hit);
+    // the dataset was not regenerated, yet ARI (needs ground truth) and
+    // the default-k cut both survive via the cached metadata
+    assert_eq!(hit.labels, miss.labels);
+    assert_eq!(hit.ari.map(f64::to_bits), miss.ari.map(f64::to_bits));
+    // case variants share the entry (canonical fingerprint)
+    let case_hit = ClusterRequest::dataset("cbf")
+        .scale(0.05)
+        .seed(1)
+        .algo(TmfgAlgo::Heap)
+        .use_xla(false)
+        .cache(cache.clone())
+        .run()
+        .unwrap();
+    assert_eq!(case_hit.cache, CacheStatus::Hit);
+    assert_eq!(case_hit.labels, miss.labels);
+}
+
+#[test]
+fn cache_discriminates_algo_and_respects_overrides() {
+    use std::sync::Arc;
+    use tmfg::api::{ArtifactCache, CacheStatus};
+    let cache = Arc::new(ArtifactCache::default());
+    let base = ClusterRequest::dataset("CBF")
+        .scale(0.05)
+        .use_xla(false)
+        .cache(cache.clone())
+        .run()
+        .unwrap();
+    assert_eq!(base.cache, CacheStatus::Miss);
+    // different algorithm → different TMFG → different fingerprint
+    let other = ClusterRequest::dataset("CBF")
+        .scale(0.05)
+        .use_xla(false)
+        .algo(TmfgAlgo::Heap)
+        .cache(cache.clone())
+        .run()
+        .unwrap();
+    assert_eq!(other.cache, CacheStatus::Miss);
+    // a hit still honors request-level k overrides (downstream stages
+    // are recomputed per request)
+    let hit = ClusterRequest::dataset("CBF")
+        .scale(0.05)
+        .use_xla(false)
+        .cache(cache.clone())
+        .k(2)
+        .run()
+        .unwrap();
+    assert_eq!(hit.cache, CacheStatus::Hit);
+    let uniq: std::collections::HashSet<_> = hit.labels.unwrap().into_iter().collect();
+    assert_eq!(uniq.len(), 2);
+    // out-of-range k on a hit is still a typed error
+    let e = ClusterRequest::dataset("CBF")
+        .scale(0.05)
+        .use_xla(false)
+        .cache(cache)
+        .k(100_000)
+        .run()
+        .unwrap_err();
+    assert_eq!(e.code(), "invalid_input");
+}
+
+#[test]
+fn no_cache_is_bypass_and_csv_paths_have_no_fingerprint() {
+    use tmfg::api::CacheStatus;
+    let out = ClusterRequest::similarity(sim(20, 30)).run().unwrap();
+    assert_eq!(out.cache, CacheStatus::Bypass);
+    assert!(ClusterRequest::dataset("some/path.csv").fingerprint().is_none());
+    assert!(ClusterRequest::dataset("CBF").fingerprint().is_some());
+}

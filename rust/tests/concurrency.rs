@@ -1,0 +1,365 @@
+//! Multi-tenant service stress suite: 4 dispatch workers, 16 concurrent
+//! client threads issuing mixed batch / stream / malformed traffic.
+//! Asserts every response is well-formed, stream-session isolation holds
+//! (interleaved ticks from different connections never cross), cache
+//! hits equal misses' payloads bit-for-bit, and `{"cmd":"shutdown"}`
+//! drains cleanly with no deadlock or orphaned worker.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+use tmfg::coordinator::service::{serve, Client, ServiceConfig, ServiceHandle};
+use tmfg::util::json::Json;
+
+const WORKERS: usize = 4;
+
+fn start() -> ServiceHandle {
+    serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: WORKERS,
+        ..Default::default()
+    })
+    .expect("bind")
+}
+
+fn named_req(id: usize, dataset: &str, seed: u64, algo: &str) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("dataset", Json::str(dataset)),
+        ("scale", Json::Num(0.03)),
+        ("seed", Json::Num(seed as f64)),
+        ("algo", Json::str(algo)),
+    ])
+}
+
+/// Two-group inline panel whose clustering is unambiguous.
+fn inline_req(id: usize, n: usize) -> Json {
+    let l = 16;
+    let mut data = Vec::with_capacity(n * l);
+    for i in 0..n {
+        for t in 0..l {
+            let base =
+                if i < n / 2 { (t as f64 / 2.0).sin() } else { (t as f64 / 2.0).cos() };
+            data.push(base + 0.01 * ((i * 31 + t * 7) % 13) as f64);
+        }
+    }
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("n", Json::Num(n as f64)),
+        ("l", Json::Num(l as f64)),
+        ("data", Json::arr_f64(&data)),
+        ("k", Json::Num(2.0)),
+    ])
+}
+
+#[test]
+fn cache_hit_matches_miss_bit_for_bit() {
+    let h = start();
+    let mut a = Client::connect(&h.addr).unwrap();
+    let miss = a.call(&named_req(1, "CBF", 5, "heap")).unwrap();
+    assert_eq!(miss.get("ok").as_bool(), Some(true), "{miss:?}");
+    assert_eq!(miss.get("cache").as_str(), Some("miss"), "{miss:?}");
+    // A second, concurrent-client identical request must be served from
+    // the artifact cache with an identical clustering payload.
+    let mut b = Client::connect(&h.addr).unwrap();
+    let hit = b.call(&named_req(2, "CBF", 5, "heap")).unwrap();
+    assert_eq!(hit.get("ok").as_bool(), Some(true), "{hit:?}");
+    assert_eq!(hit.get("cache").as_str(), Some("hit"), "{hit:?}");
+    assert_eq!(hit.get("labels"), miss.get("labels"), "labels must be bit-identical");
+    assert_eq!(hit.get("ari"), miss.get("ari"), "ari must be bit-identical");
+    assert_eq!(hit.get("algo"), miss.get("algo"));
+    // a different seed is a different fingerprint → miss
+    let other = b.call(&named_req(3, "CBF", 6, "heap")).unwrap();
+    assert_eq!(other.get("cache").as_str(), Some("miss"), "{other:?}");
+    h.stop();
+}
+
+#[test]
+fn interleaved_stream_sessions_never_cross() {
+    let h = start();
+    let mut a = Client::connect(&h.addr).unwrap();
+    let mut b = Client::connect(&h.addr).unwrap();
+    let open = |c: &mut Client, n: usize| {
+        let resp = c
+            .call(&Json::obj(vec![
+                ("cmd", Json::str("open_stream")),
+                ("n", Json::Num(n as f64)),
+                ("k", Json::Num(2.0)),
+                ("window", Json::Num(16.0)),
+                ("warmup", Json::Num(4.0)),
+                ("algo", Json::str("heap")),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        resp.get("session").as_usize().expect("open echoes session id")
+    };
+    let sid_a = open(&mut a, 8);
+    let sid_b = open(&mut b, 12);
+    assert_ne!(sid_a, sid_b);
+    let tick = |c: &mut Client, n: usize, t: usize| {
+        let data: Vec<f64> =
+            (0..n).map(|i| (((i * 37 + t * 17 + n) % 101) as f64) / 101.0 - 0.5).collect();
+        c.call(&Json::obj(vec![
+            ("cmd", Json::str("tick")),
+            ("data", Json::arr_f64(&data)),
+        ]))
+        .unwrap()
+    };
+    let mut gen_a = 0;
+    let mut gen_b = 0;
+    for t in 0..10 {
+        // strictly interleaved ticks from the two connections
+        for (resp, n, sid, gen) in [
+            (tick(&mut a, 8, t), 8usize, sid_a, &mut gen_a),
+            (tick(&mut b, 12, t), 12, sid_b, &mut gen_b),
+        ] {
+            assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+            assert_eq!(
+                resp.get("session").as_usize(),
+                Some(sid),
+                "tick must be served by this connection's own session"
+            );
+            let g = resp.get("generation").as_usize().unwrap();
+            if let Some(labels) = resp.get("labels").as_arr() {
+                assert_eq!(labels.len(), n, "labels sized for this session's n");
+                assert_eq!(g, *gen + 1, "generation steps by exactly 1 per emission");
+            } else {
+                assert_eq!(g, *gen, "warming ticks keep the generation");
+            }
+            *gen = g;
+        }
+    }
+    for (c, sid, expect_ticks) in [(&mut a, sid_a, 10), (&mut b, sid_b, 10)] {
+        let resp = c.call(&Json::obj(vec![("cmd", Json::str("close_stream"))])).unwrap();
+        assert_eq!(resp.get("closed").as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("session").as_usize(), Some(sid));
+        assert_eq!(resp.get("ticks").as_usize(), Some(expect_ticks));
+    }
+    h.stop();
+}
+
+/// One raw connection that writes arbitrary lines and reads one response
+/// line per request — for malformed payloads the typed client can't send.
+struct RawConn {
+    stream: std::net::TcpStream,
+    reader: BufReader<std::net::TcpStream>,
+}
+
+impl RawConn {
+    fn connect(addr: &str) -> RawConn {
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        RawConn { stream, reader }
+    }
+
+    fn call(&mut self, line: &str) -> Json {
+        writeln!(self.stream, "{line}").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        Json::parse(&resp).unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"))
+    }
+}
+
+fn batch_client(c: usize, addr: &str, per: usize, seen: &Mutex<HashMap<String, Json>>) {
+    let mut client = Client::connect(addr).unwrap();
+    // a small request pool so identical requests recur across clients —
+    // the cache must serve every recurrence bit-identically
+    let datasets = ["CBF", "SonyAIBORobotSurface2"];
+    let algos = ["heap", "opt"];
+    for r in 0..per {
+        if r % 5 == 4 {
+            let n = 8;
+            let resp = client.call(&inline_req(c * 1000 + r, n)).unwrap();
+            assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+            assert_eq!(resp.get("labels").as_arr().unwrap().len(), n);
+            continue;
+        }
+        let dataset = datasets[(c + r) % datasets.len()];
+        let seed = 1 + ((c + r) % 2) as u64;
+        let algo = algos[r % algos.len()];
+        let resp = client.call(&named_req(c * 1000 + r, dataset, seed, algo)).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("id").as_usize(), Some(c * 1000 + r), "id echoed");
+        assert!(resp.get("batch").as_usize().unwrap() >= 1);
+        let cache = resp.get("cache").as_str().expect("cache status reported");
+        assert!(cache == "hit" || cache == "miss", "{resp:?}");
+        // identical requests must yield identical payloads, hit or miss
+        let key = format!("{dataset}/{seed}/{algo}");
+        let payload = Json::obj(vec![
+            ("labels", resp.get("labels").clone()),
+            ("ari", resp.get("ari").clone()),
+        ]);
+        let mut map = seen.lock().unwrap();
+        match map.get(&key) {
+            Some(prev) => assert_eq!(
+                prev, &payload,
+                "{key}: payload diverged (cache={cache})"
+            ),
+            None => {
+                map.insert(key, payload);
+            }
+        }
+    }
+}
+
+fn stream_client(c: usize, addr: &str, ticks: usize) {
+    let mut client = Client::connect(addr).unwrap();
+    let n = 8 + (c % 3) * 4; // 8 / 12 / 16 — distinct shapes across clients
+    let open = client
+        .call(&Json::obj(vec![
+            ("cmd", Json::str("open_stream")),
+            ("n", Json::Num(n as f64)),
+            ("k", Json::Num(2.0)),
+            ("window", Json::Num(16.0)),
+            ("warmup", Json::Num(4.0)),
+            ("algo", Json::str("heap")),
+        ]))
+        .unwrap();
+    assert_eq!(open.get("ok").as_bool(), Some(true), "{open:?}");
+    let sid = open.get("session").as_usize().unwrap();
+    let mut last_gen = 0usize;
+    for t in 0..ticks {
+        let data: Vec<f64> =
+            (0..n).map(|i| (((i * 13 + t * 29 + c * 7) % 103) as f64) / 103.0 - 0.5).collect();
+        let resp = client
+            .call(&Json::obj(vec![
+                ("cmd", Json::str("tick")),
+                ("data", Json::arr_f64(&data)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("session").as_usize(), Some(sid), "session pinned");
+        let g = resp.get("generation").as_usize().unwrap();
+        if let Some(labels) = resp.get("labels").as_arr() {
+            assert_eq!(labels.len(), n, "labels sized for this session");
+            assert_eq!(g, last_gen + 1);
+        } else {
+            assert_eq!(g, last_gen);
+        }
+        last_gen = g;
+    }
+    let close = client.call(&Json::obj(vec![("cmd", Json::str("close_stream"))])).unwrap();
+    assert_eq!(close.get("closed").as_bool(), Some(true), "{close:?}");
+    assert_eq!(close.get("ticks").as_usize(), Some(ticks));
+}
+
+fn malformed_client(c: usize, addr: &str, per: usize) {
+    let mut raw = RawConn::connect(addr);
+    let cases: [(&str, &str); 5] = [
+        ("this is not json", "protocol"),
+        (r#"{"cmd": "frobnicate"}"#, "protocol"),
+        (r#"{"n": 4, "l": 2, "data": [1, 2, 3], "k": 2}"#, "protocol"),
+        (r#"{"cmd": "tick", "data": [1.0, 2.0, 3.0, 4.0]}"#, "stream_closed"),
+        (r#"{"dataset": "Nope"}"#, "dataset_not_found"),
+    ];
+    for r in 0..per {
+        let (line, code) = cases[(c + r) % cases.len()];
+        let resp = raw.call(line);
+        assert_eq!(resp.get("ok").as_bool(), Some(false), "{line} → {resp:?}");
+        assert_eq!(resp.get("code").as_str(), Some(code), "{line} → {resp:?}");
+        assert!(!resp.get("error").as_str().unwrap_or("").is_empty());
+    }
+}
+
+#[test]
+fn stress_16_clients_mixed_traffic_then_clean_shutdown() {
+    let h = start();
+    let addr = h.addr.clone();
+    let n_clients = 16;
+    let per = 14; // 16 × 14 = 224 requests total
+    let seen: Arc<Mutex<HashMap<String, Json>>> = Arc::new(Mutex::new(HashMap::new()));
+    let joins: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let seen = seen.clone();
+            std::thread::spawn(move || match c % 4 {
+                0 | 1 => batch_client(c, &addr, per, &seen),
+                2 => stream_client(c, &addr, per),
+                _ => malformed_client(c, &addr, per),
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("client thread must not panic");
+    }
+    // stats reflects the configured pool and a drained queue (disconnect
+    // cleanup jobs may still be in flight right after the joins — poll)
+    let mut sc = Client::connect(&addr).unwrap();
+    let stats_req = Json::obj(vec![("id", Json::Num(9.0)), ("cmd", Json::str("stats"))]);
+    let mut stats = sc.call(&stats_req).unwrap();
+    for _ in 0..100 {
+        if stats.get("queue_depth").as_usize() == Some(0) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        stats = sc.call(&stats_req).unwrap();
+    }
+    assert_eq!(stats.get("ok").as_bool(), Some(true), "{stats:?}");
+    assert_eq!(stats.get("workers").as_usize(), Some(WORKERS));
+    assert_eq!(stats.get("queue_depth").as_usize(), Some(0), "queue must drain");
+    assert_eq!(stats.get("open_streams").as_usize(), Some(0), "all streams closed");
+    // batch + stream jobs flow through the workers (malformed decode
+    // errors are answered at the connection boundary)
+    assert!(stats.get("jobs").as_usize().unwrap() >= 150, "{stats:?}");
+    let hits = stats.get("cache_hits").as_usize().unwrap();
+    let misses = stats.get("cache_misses").as_usize().unwrap();
+    assert!(hits > 0, "repeated identical requests must hit: {stats:?}");
+    assert!(misses > 0);
+    let ratio = stats.get("cache_hit_ratio").as_f64().unwrap();
+    assert!((ratio - hits as f64 / (hits + misses) as f64).abs() < 1e-9);
+    // per-stage cumulative timings accumulated across workers
+    let stages = stats.get("stages").as_obj().unwrap();
+    assert!(stages.contains_key("dbht"), "{stats:?}");
+    assert!(stages.contains_key("stream_tick"), "{stats:?}");
+    // clean shutdown: drains and joins without deadlock or orphaned worker
+    let bye = sc.call(&Json::obj(vec![("cmd", Json::str("shutdown"))])).unwrap();
+    assert_eq!(bye.get("ok").as_bool(), Some(true));
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        h.wait();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(Duration::from_secs(120))
+        .expect("service failed to drain and shut down (deadlock or orphaned worker)");
+}
+
+#[test]
+fn shutdown_is_idempotent_with_concurrent_clients() {
+    // Several clients racing requests against a shutdown must each get
+    // either a well-formed response or a clean disconnect — never a hang.
+    let h = start();
+    let addr = h.addr.clone();
+    let joins: Vec<_> = (0..6)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                for r in 0..4 {
+                    let Ok(mut client) = Client::connect(&addr) else { return };
+                    let req = if c == 0 && r == 2 {
+                        Json::obj(vec![("cmd", Json::str("shutdown"))])
+                    } else {
+                        named_req(c * 10 + r, "CBF", 1, "heap")
+                    };
+                    match client.call(&req) {
+                        Ok(resp) => {
+                            // well-formed: ok is always present
+                            assert!(resp.get("ok").as_bool().is_some(), "{resp:?}");
+                        }
+                        Err(_) => return, // clean disconnect mid-shutdown
+                    }
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("client thread must not panic");
+    }
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        h.stop();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(Duration::from_secs(60)).expect("stop() hung");
+}

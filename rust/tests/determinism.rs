@@ -1,0 +1,151 @@
+//! Determinism suite: the paper's implicit "parallelism does not change
+//! the answer" contract, asserted explicitly.
+//!
+//! Yu & Shun's Parallel Filtered Graphs work (arXiv:2303.05009) stresses
+//! that filtered-graph pipelines must give identical clusterings
+//! regardless of core count. Every stage here is deterministic by
+//! construction — stable parallel sorts, per-index parallel maps,
+//! fixed-block `par_reduce` folds — and this suite pins the end-to-end
+//! result: TMFG edge sets, DBHT dendrogram merges, and final cluster
+//! assignments must be **byte-identical** across `set_num_threads`
+//! ∈ {1, 2, 4, 8} (clamped to the host's core count) for all three
+//! algorithm families (orig/heap/corr, plus the opt variant) under both
+//! APSP modes, on several seeded synthetic panels.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use tmfg::api::{ApspMode, ClusterOutput, ClusterRequest, TmfgAlgo};
+use tmfg::data::corr::pearson_correlation;
+use tmfg::data::matrix::Matrix;
+use tmfg::data::synth::SynthSpec;
+use tmfg::parlay;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// `set_num_threads` mutates one process-global count, and libtest runs
+/// the `#[test]`s here on concurrent threads — serialize every sweep so
+/// each run really executes at its pinned thread count (otherwise a
+/// genuine regression could be masked or flake instead of failing
+/// cleanly).
+fn thread_count_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Three seeded synthetic panels of different sizes/hardness, plus the
+/// cluster count to cut at.
+fn panels() -> Vec<(Arc<Matrix>, Arc<Matrix>, usize)> {
+    [
+        (48usize, 3usize, 11u64, 0.4f64),
+        (64, 4, 29, 0.6),
+        (72, 2, 47, 0.8),
+    ]
+    .iter()
+    .map(|&(n, k, seed, noise)| {
+        let ds = SynthSpec::new("det", n, 48, k).with_noise(noise).generate(seed);
+        let sim = Arc::new(pearson_correlation(&ds.data));
+        (Arc::new(ds.data), sim, k)
+    })
+    .collect()
+}
+
+fn run(s: &Arc<Matrix>, algo: TmfgAlgo, apsp: ApspMode, k: usize) -> ClusterOutput {
+    ClusterRequest::similarity(s.clone())
+        .algo(algo)
+        .apsp(apsp)
+        .k(k)
+        .run()
+        .expect("clustering run")
+}
+
+/// Assert that `out` is byte-identical to the single-thread baseline at
+/// every pipeline layer the paper's contract covers.
+fn assert_identical(base: &ClusterOutput, out: &ClusterOutput, ctx: &str) {
+    assert_eq!(out.tmfg.edges, base.tmfg.edges, "{ctx}: TMFG edge set");
+    assert_eq!(out.tmfg.cliques, base.tmfg.cliques, "{ctx}: TMFG cliques");
+    assert_eq!(out.tmfg.order, base.tmfg.order, "{ctx}: insertion order");
+    assert_eq!(
+        out.dbht.dendrogram.nodes, base.dbht.dendrogram.nodes,
+        "{ctx}: dendrogram merges"
+    );
+    assert_eq!(out.labels, base.labels, "{ctx}: cluster assignment");
+    // edge_sum is a fixed-order fold over identical edges: exact too
+    assert_eq!(
+        out.edge_sum.to_bits(),
+        base.edge_sum.to_bits(),
+        "{ctx}: edge sum bits"
+    );
+}
+
+fn sweep(algos: &[TmfgAlgo]) {
+    let _serial = thread_count_lock();
+    for (pi, (_, s, k)) in panels().iter().enumerate() {
+        for &algo in algos {
+            for apsp in [ApspMode::Exact, ApspMode::Approx] {
+                let base = parlay::with_threads(1, || run(s, algo, apsp, *k));
+                for &t in &THREADS[1..] {
+                    let out = parlay::with_threads(t, || run(s, algo, apsp, *k));
+                    let ctx =
+                        format!("panel {pi}, {} apsp {apsp:?}, {t} threads", algo.name());
+                    assert_identical(&base, &out, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn orig_tmfg_identical_across_thread_counts() {
+    sweep(&[TmfgAlgo::Par(1), TmfgAlgo::Par(10)]);
+}
+
+#[test]
+fn heap_tmfg_identical_across_thread_counts() {
+    sweep(&[TmfgAlgo::Heap]);
+}
+
+#[test]
+fn corr_tmfg_identical_across_thread_counts() {
+    sweep(&[TmfgAlgo::Corr]);
+}
+
+#[test]
+fn opt_tmfg_identical_across_thread_counts() {
+    sweep(&[TmfgAlgo::Opt]);
+}
+
+#[test]
+fn full_pipeline_from_panel_identical_across_thread_counts() {
+    // The sweeps above start from a precomputed similarity matrix (the
+    // paper's setting); this covers the similarity stage itself — the
+    // native correlation path must also be thread-count independent.
+    let _serial = thread_count_lock();
+    let (panel, _, k) = panels().remove(0);
+    let run_panel = || {
+        ClusterRequest::panel(panel.clone())
+            .algo(TmfgAlgo::Heap)
+            .use_xla(false)
+            .k(k)
+            .run()
+            .expect("panel run")
+    };
+    let base = parlay::with_threads(1, &run_panel);
+    for &t in &THREADS[1..] {
+        let out = parlay::with_threads(t, &run_panel);
+        assert_identical(&base, &out, &format!("panel source, {t} threads"));
+        // the similarity matrix itself must match bit-for-bit; compare
+        // through the ARI (a deterministic function of labels) and the
+        // edge sum already pinned above
+        assert_eq!(out.ari.map(f64::to_bits), base.ari.map(f64::to_bits));
+    }
+}
+
+#[test]
+fn repeated_runs_identical_at_fixed_thread_count() {
+    // Same-thread-count reruns must also agree (guards against
+    // completion-order nondeterminism inside reductions).
+    let _serial = thread_count_lock();
+    let (_, s, k) = panels().remove(1);
+    let a = run(&s, TmfgAlgo::Opt, ApspMode::Approx, k);
+    let b = run(&s, TmfgAlgo::Opt, ApspMode::Approx, k);
+    assert_identical(&a, &b, "rerun");
+}

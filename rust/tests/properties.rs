@@ -177,3 +177,37 @@ fn prop_parallel_sorts_match_std() {
         assert_eq!(pairs, expect);
     }
 }
+
+#[test]
+fn prop_scan_chunked_equals_scalar() {
+    // The 8-wide masked scan (§4.3 manual vectorization) must agree with
+    // the scalar scan for every start pointer — including the p + 8 > n
+    // tail, rows shorter than one chunk, all-inserted (exhausted) rows,
+    // and all-clear rows — and both must return the first uninserted
+    // entry at or after the start.
+    use tmfg::tmfg::scan::{scan_chunked, scan_scalar};
+    let mut rng = Rng::new(77);
+    for case in 0..400 {
+        let n = 1 + rng.next_below(80); // plenty of sub-8 and tail shapes
+        let mut row: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut row);
+        // density sweep: 0 = all-clear, high = mostly/fully inserted
+        let density = case % 5;
+        let mut inserted: Vec<u8> = (0..n)
+            .map(|_| (rng.next_below(5) < density) as u8)
+            .collect();
+        if case % 7 == 0 {
+            inserted.iter_mut().for_each(|f| *f = 1); // fully exhausted row
+        }
+        for start in 0..=n {
+            let a = scan_scalar(&row, &inserted, start);
+            let b = scan_chunked(&row, &inserted, start);
+            assert_eq!(a, b, "case {case}: n={n} start={start}");
+            // semantic check against a brute-force reference
+            let expect = (start..n)
+                .find(|&p| inserted[row[p] as usize] == 0)
+                .unwrap_or(n);
+            assert_eq!(a, expect, "case {case}: n={n} start={start}");
+        }
+    }
+}
