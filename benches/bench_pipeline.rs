@@ -158,4 +158,7 @@ fn main() {
     }
 
     suite.write_csv().unwrap();
+    // Machine-readable perf trajectory (results/BENCH_bench_pipeline.json):
+    // scenario → median ns plus the n/threads metadata, smoke-run in CI.
+    suite.write_json().unwrap();
 }

@@ -1,0 +1,108 @@
+//! Sparse large-n pipeline benchmarks: k-NN candidate construction
+//! (exact and prefiltered), sparse-gain TMFG, and the end-to-end sparse
+//! request vs the dense pipeline at the same n — the headline numbers
+//! for the O(n·k)-memory path. `BENCH_SPARSE_N` scales the large case.
+
+use std::sync::Arc;
+use tmfg::api::{ApspMode, ClusterRequest, TmfgAlgo};
+use tmfg::data::synth::SynthSpec;
+use tmfg::parlay;
+use tmfg::sparse::{knn_candidates, sparse_tmfg, KnnConfig, SparseSimilarity};
+use tmfg::util::bench::BenchSuite;
+
+fn main() {
+    let big_n: usize = std::env::var("BENCH_SPARSE_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4096);
+    let k = 32usize;
+    let mut suite = BenchSuite::new("bench_sparse");
+    let threads = parlay::num_threads().to_string();
+
+    // Candidate construction: exact vs prefiltered at the same n.
+    let ds = SynthSpec::new("bench", big_n, 48, 16).generate(1);
+    let panel = Arc::new(ds.data);
+    suite
+        .meta("n", &big_n.to_string())
+        .meta("k", &k.to_string())
+        .meta("threads", &threads)
+        .run(&format!("knn_exact/n{big_n}"), |_| {
+            let mut cfg = KnnConfig::new(k, 1);
+            cfg.prefilter_above = usize::MAX; // force the exact path
+            let sp = knn_candidates(&panel, &cfg).unwrap();
+            assert!(sp.nnz() >= big_n * k);
+        });
+    suite
+        .meta("n", &big_n.to_string())
+        .meta("k", &k.to_string())
+        .meta("threads", &threads)
+        .run(&format!("knn_prefiltered/n{big_n}"), |_| {
+            let mut cfg = KnnConfig::new(k, 1);
+            cfg.prefilter_above = 0; // force the prefilter path
+            let sp = knn_candidates(&panel, &cfg).unwrap();
+            assert!(sp.nnz() >= big_n * k);
+        });
+
+    // Sparse-gain TMFG over a prebuilt candidate graph.
+    let cand = knn_candidates(&panel, &KnnConfig::new(k, 1)).unwrap();
+    suite
+        .meta("n", &big_n.to_string())
+        .meta("k", &k.to_string())
+        .meta("threads", &threads)
+        .run(&format!("sparse_tmfg/n{big_n}"), |_| {
+            let (r, _) = sparse_tmfg(&cand).unwrap();
+            assert_eq!(r.edges.len(), 3 * big_n - 6);
+        });
+    // Dense CORR-TMFG baseline at a size the dense path still handles.
+    let small_n = big_n.min(2048);
+    let small = SynthSpec::new("bench", small_n, 48, 16).generate(1);
+    let dense_s = tmfg::data::corr::pearson_correlation(&small.data);
+    let dense_cand = SparseSimilarity::from_dense(&dense_s, k).unwrap();
+    suite
+        .meta("n", &small_n.to_string())
+        .meta("k", &k.to_string())
+        .meta("threads", &threads)
+        .run(&format!("sparse_tmfg_vs_dense/sparse_n{small_n}"), |_| {
+            sparse_tmfg(&dense_cand).unwrap();
+        });
+    suite
+        .meta("n", &small_n.to_string())
+        .meta("algo", "corr-tdbht")
+        .meta("threads", &threads)
+        .run(&format!("sparse_tmfg_vs_dense/dense_n{small_n}"), |_| {
+            tmfg::tmfg::corr_tmfg(&dense_s, &Default::default()).unwrap();
+        });
+
+    // End-to-end requests through the typed API.
+    let small_panel = Arc::new(small.data);
+    suite
+        .meta("n", &small_n.to_string())
+        .meta("k", &k.to_string())
+        .meta("threads", &threads)
+        .run(&format!("pipeline_sparse/n{small_n}"), |_| {
+            let out = ClusterRequest::panel(small_panel.clone())
+                .algo(TmfgAlgo::Opt)
+                .apsp(ApspMode::Approx)
+                .sparse_knn(k, 1)
+                .k(16)
+                .run()
+                .unwrap();
+            assert!(out.sparse.is_some());
+        });
+    suite
+        .meta("n", &small_n.to_string())
+        .meta("threads", &threads)
+        .run(&format!("pipeline_dense/n{small_n}"), |_| {
+            let out = ClusterRequest::panel(small_panel.clone())
+                .algo(TmfgAlgo::Opt)
+                .apsp(ApspMode::Approx)
+                .use_xla(false)
+                .k(16)
+                .run()
+                .unwrap();
+            assert!(out.sparse.is_none());
+        });
+
+    suite.write_csv().unwrap();
+    suite.write_json().unwrap();
+}

@@ -6,7 +6,8 @@
 //!
 //! * [`ClusterRequest`] — a builder over the three input shapes (dataset
 //!   by name, inline time-series panel, precomputed similarity matrix)
-//!   plus every knob (`algo`, `apsp`, `linkage`, `hub`, `k`, ...);
+//!   plus every knob (`algo`, `apsp`, `linkage`, `hub`, `k`, and the
+//!   [`SimilaritySpec`] — dense n×n or sparse k-NN candidates — ...);
 //! * [`Plan`] — a staged executor where Similarity → Tmfg → Apsp → Dbht
 //!   → Cut are individually runnable, memoized, and inspectable (per
 //!   stage artifacts and wall-clock timings), so callers can reuse a
@@ -58,5 +59,7 @@ pub mod wire;
 
 pub use crate::error::TmfgError;
 pub use cache::{ArtifactCache, CacheKey, CacheStatus};
-pub use plan::{build_tmfg_for, ApspMode, ClusterOutput, Plan, Stage, TmfgAlgo};
+pub use plan::{
+    build_tmfg_for, ApspMode, ClusterOutput, Plan, SimilaritySpec, SparseReport, Stage, TmfgAlgo,
+};
 pub use request::ClusterRequest;

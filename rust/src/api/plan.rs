@@ -13,16 +13,46 @@
 //! and approximate APSP (see `coordinator::experiments::apsp_speedup`).
 
 use super::cache::{ArtifactCache, CacheKey, CacheStatus, CachedArtifacts};
-use crate::error::TmfgError;
 use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
-use crate::data::matrix::Matrix;
+use crate::data::matrix::{Matrix, SimilarityLookup};
 use crate::dbht::hierarchy::{dbht_dendrogram, DbhtResult};
 use crate::dbht::Linkage;
+use crate::error::TmfgError;
 use crate::metrics::adjusted_rand_index;
 use crate::runtime::engine::{CorrEngine, CorrPath};
+use crate::sparse::{knn_candidates, sparse_tmfg, KnnConfig, SparseSimilarity};
 use crate::tmfg::{corr_tmfg, heap_tmfg, orig_tmfg, ScanKind, SortKind, TmfgConfig, TmfgResult};
 use crate::util::timer::{Breakdown, Timer};
 use std::sync::Arc;
+
+/// How the similarity stage reduces the input panel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimilaritySpec {
+    /// The dense n×n Pearson matrix (the paper's setting). O(n²) memory.
+    Dense,
+    /// A sparse k-NN candidate graph over the standardized panel —
+    /// O(n·k) memory, deterministic for a fixed `seed` (which drives the
+    /// random-projection prefilter on very large inputs). TMFG
+    /// construction runs the sparse-gain path; APSP/DBHT run unchanged.
+    SparseKnn { k: usize, seed: u64 },
+}
+
+/// What the sparse similarity stage produced (reported on
+/// [`ClusterOutput`] and by the TCP service).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparseReport {
+    /// Requested neighbors per vertex.
+    pub k: usize,
+    /// Prefilter seed.
+    pub seed: u64,
+    /// Stored (directed) candidate entries after symmetrization.
+    pub nnz: usize,
+    /// Mean candidate degree.
+    pub mean_degree: f64,
+    /// TMFG rounds that fell back to a dense scan (candidates
+    /// exhausted); high counts mean `k` was too small.
+    pub fallbacks: usize,
+}
 
 /// Which TMFG construction algorithm to run — mirrors the paper's
 /// implementation list (§5 "Implementations").
@@ -130,11 +160,14 @@ pub struct ClusterOutput {
     /// Sum of similarity over the TMFG edges (the Fig. 7 quality metric).
     pub edge_sum: f64,
     /// Which compute path produced the similarity matrix (None when it
-    /// was supplied precomputed or served from the artifact cache).
+    /// was supplied precomputed, served from the artifact cache, or
+    /// built sparse — the sparse path is always native).
     pub corr_path: Option<CorrPath>,
     /// How this run interacted with the artifact cache
     /// ([`CacheStatus::Bypass`] when none was attached).
     pub cache: CacheStatus,
+    /// Sparse-mode statistics (None on the dense path).
+    pub sparse: Option<SparseReport>,
 }
 
 /// A plan's attachment to an [`ArtifactCache`]: where to publish freshly
@@ -156,6 +189,7 @@ pub struct Plan {
     pub linkage: Linkage,
     pub hub: HubConfig,
     pub check_invariants: bool,
+    spec: SimilaritySpec,
     apsp_mode: ApspMode,
     /// Cut size; None = no cut in [`Plan::finish`].
     k: Option<usize>,
@@ -169,6 +203,11 @@ pub struct Plan {
     engine: Option<Arc<CorrEngine>>,
     // ---- per-stage artifacts -------------------------------------------
     similarity: Option<Arc<Matrix>>,
+    /// Sparse candidate similarity (the [`SimilaritySpec::SparseKnn`]
+    /// analog of `similarity`).
+    sparse: Option<Arc<SparseSimilarity>>,
+    /// Fallback count from the sparse TMFG construction.
+    sparse_fallbacks: Option<usize>,
     corr_path: Option<CorrPath>,
     /// `Arc` so cached constructions are shared across plans zero-copy.
     tmfg: Option<Arc<TmfgResult>>,
@@ -189,6 +228,7 @@ impl Plan {
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         algo: TmfgAlgo,
+        spec: SimilaritySpec,
         apsp_mode: ApspMode,
         linkage: Linkage,
         hub: HubConfig,
@@ -205,6 +245,7 @@ impl Plan {
             linkage,
             hub,
             check_invariants,
+            spec,
             apsp_mode,
             k,
             truth,
@@ -212,6 +253,8 @@ impl Plan {
             panel,
             engine,
             similarity,
+            sparse: None,
+            sparse_fallbacks: None,
             corr_path: None,
             tmfg: None,
             apsp: None,
@@ -246,6 +289,11 @@ impl Plan {
         self.n
     }
 
+    /// How the similarity stage reduces the input.
+    pub fn similarity_spec(&self) -> SimilaritySpec {
+        self.spec
+    }
+
     /// The APSP mode the Apsp stage will run (or ran) with.
     pub fn apsp_mode(&self) -> ApspMode {
         self.apsp_mode
@@ -273,6 +321,11 @@ impl Plan {
         self.similarity.as_deref()
     }
 
+    /// The sparse candidate similarity artifact (sparse plans only).
+    pub fn sparse_similarity(&self) -> Option<&SparseSimilarity> {
+        self.sparse.as_deref()
+    }
+
     pub fn corr_path(&self) -> Option<CorrPath> {
         self.corr_path
     }
@@ -296,9 +349,17 @@ impl Plan {
 
     // ---- stages --------------------------------------------------------
 
-    /// Stage 1: the n×n similarity matrix (computed from the panel via
-    /// the engine, or supplied precomputed — the paper's setting).
+    /// Stage 1 (dense): the n×n similarity matrix (computed from the
+    /// panel via the engine, or supplied precomputed — the paper's
+    /// setting). Sparse plans have no dense matrix; use
+    /// [`Plan::run_sparse_similarity`] there.
     pub fn run_similarity(&mut self) -> Result<&Matrix, TmfgError> {
+        if let SimilaritySpec::SparseKnn { .. } = self.spec {
+            return Err(TmfgError::invalid(
+                "sparse plan never materializes a dense similarity matrix; \
+                 use run_sparse_similarity",
+            ));
+        }
         if self.similarity.is_none() {
             let panel = self.panel.as_ref().ok_or_else(|| {
                 TmfgError::invariant("plan has neither a panel nor a similarity matrix")
@@ -319,18 +380,77 @@ impl Plan {
             .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))
     }
 
-    /// Stage 2: TMFG construction with the plan's algorithm. On a cache
-    /// hit the artifact was seeded at build time and this is a no-op; on
-    /// a miss the freshly built Similarity→TMFG pair is published to the
-    /// attached cache for future requests.
+    /// Stage 1 (sparse): the k-NN candidate similarity graph, built from
+    /// the panel with the plan's `SparseKnn` spec. Deterministic for a
+    /// fixed seed, O(n·k) memory.
+    pub fn run_sparse_similarity(&mut self) -> Result<&SparseSimilarity, TmfgError> {
+        let SimilaritySpec::SparseKnn { k, seed } = self.spec else {
+            return Err(TmfgError::invalid(
+                "dense plan has no sparse similarity; use run_similarity",
+            ));
+        };
+        if self.sparse.is_none() {
+            let panel = self.panel.as_ref().ok_or_else(|| {
+                TmfgError::invariant("sparse plan has no panel to build candidates from")
+            })?;
+            let t = Timer::start();
+            let sp = knn_candidates(panel, &KnnConfig::new(k, seed))?;
+            self.timings.add("similarity", t.elapsed());
+            self.sparse = Some(Arc::new(sp));
+        }
+        self.sparse
+            .as_deref()
+            .ok_or_else(|| TmfgError::invariant("sparse similarity artifact missing"))
+    }
+
+    /// Run whichever similarity stage the spec calls for.
+    fn ensure_similarity(&mut self) -> Result<(), TmfgError> {
+        match self.spec {
+            SimilaritySpec::Dense => self.run_similarity().map(|_| ()),
+            SimilaritySpec::SparseKnn { .. } => self.run_sparse_similarity().map(|_| ()),
+        }
+    }
+
+    /// The similarity store backing this plan (dense matrix or sparse
+    /// candidate graph) — the one resolution point the downstream stages
+    /// share.
+    fn sim_store(&self) -> Result<&dyn SimilarityLookup, TmfgError> {
+        if let Some(s) = &self.similarity {
+            Ok(s.as_ref())
+        } else if let Some(sp) = &self.sparse {
+            Ok(sp.as_ref())
+        } else {
+            Err(TmfgError::invariant("similarity artifact missing"))
+        }
+    }
+
+    /// Stage 2: TMFG construction with the plan's algorithm (sparse
+    /// plans run the sparse-gain construction regardless of `algo`). On
+    /// a cache hit the artifact was seeded at build time and this is a
+    /// no-op; on a miss the freshly built Similarity→TMFG pair is
+    /// published to the attached cache for future requests (dense plans
+    /// only — sparse requests have no cache fingerprint).
     pub fn run_tmfg(&mut self) -> Result<&TmfgResult, TmfgError> {
         if self.tmfg.is_none() {
-            self.run_similarity()?;
-            let s = self
-                .similarity
-                .as_deref()
-                .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))?;
-            let tmfg = Arc::new(build_tmfg_for(self.algo, s)?);
+            self.ensure_similarity()?;
+            let tmfg = match self.spec {
+                SimilaritySpec::Dense => {
+                    let s = self
+                        .similarity
+                        .as_deref()
+                        .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))?;
+                    Arc::new(build_tmfg_for(self.algo, s)?)
+                }
+                SimilaritySpec::SparseKnn { .. } => {
+                    let sp = self
+                        .sparse
+                        .as_deref()
+                        .ok_or_else(|| TmfgError::invariant("sparse artifact missing"))?;
+                    let (r, report) = sparse_tmfg(sp)?;
+                    self.sparse_fallbacks = Some(report.fallbacks);
+                    Arc::new(r)
+                }
+            };
             if self.check_invariants {
                 crate::tmfg::common::check_invariants(&tmfg)?;
             }
@@ -357,16 +477,18 @@ impl Plan {
             .ok_or_else(|| TmfgError::invariant("tmfg artifact missing"))
     }
 
-    /// Stage 3: all-pairs shortest paths on the filtered graph.
+    /// Stage 3: all-pairs shortest paths on the filtered graph. The
+    /// TMFG is already sparse (3n−6 edges), so this stage is identical
+    /// for dense and sparse plans — only the edge-weight lookup differs.
     pub fn run_apsp(&mut self) -> Result<&Matrix, TmfgError> {
         if self.apsp.is_none() {
             self.run_tmfg()?;
-            let (tmfg, s) = match (&self.tmfg, &self.similarity) {
-                (Some(t), Some(s)) => (t, s.as_ref()),
-                _ => return Err(TmfgError::invariant("apsp stage missing inputs")),
-            };
+            let tmfg = self
+                .tmfg
+                .as_deref()
+                .ok_or_else(|| TmfgError::invariant("apsp stage missing inputs"))?;
             let t = Timer::start();
-            let g = CsrGraph::from_tmfg(tmfg, s);
+            let g = CsrGraph::from_tmfg(tmfg, self.sim_store()?);
             let apsp = match self.apsp_mode {
                 ApspMode::Exact => apsp_exact(&g),
                 ApspMode::Approx => apsp_hub(&g, &self.hub),
@@ -379,16 +501,18 @@ impl Plan {
             .ok_or_else(|| TmfgError::invariant("apsp artifact missing"))
     }
 
-    /// Stage 4: the DBHT dendrogram.
+    /// Stage 4: the DBHT dendrogram. DBHT reads similarities only at
+    /// TMFG-edge pairs, so the sparse candidate store serves it exactly
+    /// as the dense matrix does.
     pub fn run_dbht(&mut self) -> Result<&DbhtResult, TmfgError> {
         if self.dbht.is_none() {
             self.run_apsp()?;
-            let (tmfg, s, apsp) = match (&self.tmfg, &self.similarity, &self.apsp) {
-                (Some(t), Some(s), Some(a)) => (t, s.as_ref(), a),
+            let (tmfg, apsp) = match (&self.tmfg, &self.apsp) {
+                (Some(t), Some(a)) => (t, a),
                 _ => return Err(TmfgError::invariant("dbht stage missing inputs")),
             };
             let t = Timer::start();
-            let dbht = dbht_dendrogram(s, tmfg, apsp, self.linkage)?;
+            let dbht = dbht_dendrogram(self.sim_store()?, tmfg, apsp, self.linkage)?;
             self.timings.add("dbht", t.elapsed());
             self.dbht = Some(dbht);
         }
@@ -433,7 +557,7 @@ impl Plan {
     /// on the plan.
     pub fn run_stage(&mut self, stage: Stage) -> Result<(), TmfgError> {
         match stage {
-            Stage::Similarity => self.run_similarity().map(|_| ()),
+            Stage::Similarity => self.ensure_similarity(),
             Stage::Tmfg => self.run_tmfg().map(|_| ()),
             Stage::Apsp => self.run_apsp().map(|_| ()),
             Stage::Dbht => self.run_dbht().map(|_| ()),
@@ -464,11 +588,23 @@ impl Plan {
             .dbht
             .take()
             .ok_or_else(|| TmfgError::invariant("dbht artifact missing"))?;
-        let s = self
-            .similarity
-            .as_deref()
-            .ok_or_else(|| TmfgError::invariant("similarity artifact missing"))?;
-        let edge_sum = tmfg.edge_sum(s);
+        let edge_sum = tmfg.edge_sum(self.sim_store()?);
+        let sparse = match self.spec {
+            SimilaritySpec::Dense => None,
+            SimilaritySpec::SparseKnn { k, seed } => {
+                let sp = self
+                    .sparse
+                    .as_deref()
+                    .ok_or_else(|| TmfgError::invariant("sparse artifact missing"))?;
+                Some(SparseReport {
+                    k,
+                    seed,
+                    nnz: sp.nnz(),
+                    mean_degree: sp.mean_degree(),
+                    fallbacks: self.sparse_fallbacks.unwrap_or(0),
+                })
+            }
+        };
         let ari = match (&self.truth, &self.cut) {
             (Some(truth), Some(pred)) => Some(adjusted_rand_index(truth, pred)),
             _ => None,
@@ -485,6 +621,7 @@ impl Plan {
             edge_sum,
             corr_path: self.corr_path,
             cache,
+            sparse,
         })
     }
 }

@@ -15,7 +15,7 @@
 
 use crate::error::TmfgError;
 use super::cache::{ArtifactCache, CacheKey, CacheStatus, CachedArtifacts};
-use super::plan::{ApspMode, CacheCtx, ClusterOutput, Plan, TmfgAlgo};
+use super::plan::{ApspMode, CacheCtx, ClusterOutput, Plan, SimilaritySpec, TmfgAlgo};
 use crate::apsp::HubConfig;
 use crate::coordinator::registry;
 use crate::data::matrix::Matrix;
@@ -42,6 +42,7 @@ enum Source {
 pub struct ClusterRequest {
     source: Source,
     algo: TmfgAlgo,
+    spec: SimilaritySpec,
     apsp: Option<ApspMode>,
     linkage: Linkage,
     hub: HubConfig,
@@ -61,6 +62,7 @@ impl ClusterRequest {
         ClusterRequest {
             source,
             algo: TmfgAlgo::Opt,
+            spec: SimilaritySpec::Dense,
             apsp: None,
             linkage: Linkage::Complete,
             hub: HubConfig::default(),
@@ -99,6 +101,21 @@ impl ClusterRequest {
     pub fn algo(mut self, algo: TmfgAlgo) -> Self {
         self.algo = algo;
         self
+    }
+
+    /// How the similarity stage reduces the panel (default:
+    /// [`SimilaritySpec::Dense`]). Sparse mode requires a panel-bearing
+    /// source (dataset or inline panel).
+    pub fn similarity_spec(mut self, spec: SimilaritySpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Shorthand for [`SimilaritySpec::SparseKnn`]: build a k-NN
+    /// candidate graph (k neighbors per series, `seed` driving the
+    /// large-n projection prefilter) instead of the dense O(n²) matrix.
+    pub fn sparse_knn(self, k: usize, seed: u64) -> Self {
+        self.similarity_spec(SimilaritySpec::SparseKnn { k, seed })
     }
 
     /// Override the APSP mode (default: the algorithm's own default).
@@ -187,6 +204,11 @@ impl ClusterRequest {
     /// linkage, hub parameters, `k`, and labels are deliberately
     /// excluded (they only affect the cheap downstream stages).
     pub fn fingerprint(&self) -> Option<CacheKey> {
+        // Sparse requests produce CSR-shaped artifacts the dense-artifact
+        // cache cannot hold; they bypass it (CacheStatus::Bypass).
+        if !matches!(self.spec, SimilaritySpec::Dense) {
+            return None;
+        }
         let algo = self.algo.name();
         match &self.source {
             Source::Dataset(name) => {
@@ -207,6 +229,17 @@ impl ClusterRequest {
     /// a miss resolves normally and arranges publication of the fresh
     /// artifacts.
     pub fn build(self) -> Result<Plan, TmfgError> {
+        if let SimilaritySpec::SparseKnn { k, .. } = self.spec {
+            if k < 1 {
+                return Err(TmfgError::invalid("sparse k must be >= 1"));
+            }
+            if matches!(self.source, Source::Similarity(_)) {
+                return Err(TmfgError::invalid(
+                    "sparse k-NN mode needs a panel to build candidates from; \
+                     it cannot apply to a precomputed similarity matrix",
+                ));
+            }
+        }
         let fingerprint = if self.cache.is_some() { self.fingerprint() } else { None };
         if let (Some(cache), Some(key)) = (self.cache.clone(), fingerprint.clone()) {
             if let Some(art) = cache.get(&key) {
@@ -268,8 +301,11 @@ impl ClusterRequest {
             .or_else(|| similarity.as_ref().map(|s| s.rows))
             .ok_or_else(|| TmfgError::invariant("request resolved to no input"))?;
         validate_truth_k(&truth, k, n)?;
-        // An engine is only needed when a panel must be reduced.
+        // An engine is only needed when a panel must be reduced to the
+        // dense matrix; the sparse k-NN stage is always native.
+        let sparse_mode = !matches!(self.spec, SimilaritySpec::Dense);
         let engine = match (&panel, self.engine) {
+            _ if sparse_mode => None,
             (_, Some(e)) => Some(e),
             (Some(_), None) if self.use_xla => {
                 Some(Arc::new(CorrEngine::auto(&self.artifacts_dir)))
@@ -280,6 +316,7 @@ impl ClusterRequest {
         let apsp_mode = self.apsp.unwrap_or_else(|| self.algo.default_apsp());
         let mut plan = Plan::new(
             self.algo,
+            self.spec,
             apsp_mode,
             self.linkage,
             self.hub,
@@ -324,9 +361,11 @@ impl ClusterRequest {
         }
         let apsp_mode = self.apsp.unwrap_or_else(|| self.algo.default_apsp());
         // No panel and no engine: the similarity stage is pre-seeded, so
-        // nothing downstream ever needs them.
+        // nothing downstream ever needs them. (Only dense requests carry
+        // a fingerprint, so a hit is always a dense plan.)
         let mut plan = Plan::new(
             self.algo,
+            SimilaritySpec::Dense,
             apsp_mode,
             self.linkage,
             self.hub,

@@ -37,6 +37,19 @@ pub const MAX_STREAM_WINDOW: usize = 65_536;
 /// CLI or the library API.
 pub const MAX_BATCH_SERIES: usize = MAX_STREAM_SERIES;
 
+/// Upper bound on batch series count for **sparse** requests
+/// (`sparse_k` present): the similarity stage is O(n·k) memory instead
+/// of O(n²), so the cap is 16× the dense one. The dense n×n APSP
+/// distance matrix remains the footprint to budget for (~16 GiB at the
+/// cap in f32) — run very large n with the approximate APSP mode and
+/// adequate RAM.
+pub const MAX_SPARSE_BATCH_SERIES: usize = 65_536;
+
+/// Upper bound on the `sparse_k` neighbors-per-vertex knob (candidate
+/// storage is O(n·k); 512 neighbors is already far past the quality
+/// plateau).
+pub const MAX_SPARSE_K: usize = 512;
+
 /// A decoded wire request: the echoed `id`, the (validated) protocol
 /// version, and the typed command body.
 #[derive(Debug, Clone)]
@@ -78,6 +91,11 @@ pub struct ClusterSpec {
     pub algo: Option<TmfgAlgo>,
     /// 0 = the dataset's own class count (named sources only).
     pub k: usize,
+    /// Sparse k-NN mode: neighbors per vertex (None = dense pipeline).
+    /// Raises the batch cap to [`MAX_SPARSE_BATCH_SERIES`].
+    pub sparse_k: Option<usize>,
+    /// Seed of the sparse prefilter (requires `sparse_k`).
+    pub sparse_seed: Option<u64>,
 }
 
 #[derive(Debug, Clone)]
@@ -210,13 +228,30 @@ impl Request {
 fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
     let algo = opt_algo(j)?;
     let k = opt_usize(j, "k")?.unwrap_or(0);
+    // Sparse mode is opted into with sparse_k; it carries its own
+    // resource caps (candidate storage is O(n·k), not O(n²)).
+    let sparse_k = match opt_usize(j, "sparse_k")? {
+        Some(0) => return Err(TmfgError::protocol("sparse_k must be >= 1")),
+        Some(sk) if sk > MAX_SPARSE_K => {
+            return Err(TmfgError::protocol(format!(
+                "sparse_k must be <= {MAX_SPARSE_K}, got {sk}"
+            )))
+        }
+        sk => sk,
+    };
+    let sparse_seed = opt_usize(j, "sparse_seed")?.map(|s| s as u64);
+    if sparse_seed.is_some() && sparse_k.is_none() {
+        return Err(TmfgError::protocol("sparse_seed requires sparse_k"));
+    }
+    let max_series = if sparse_k.is_some() { MAX_SPARSE_BATCH_SERIES } else { MAX_BATCH_SERIES };
     let source = match j.get("dataset") {
         Json::Null => {
             let n = opt_usize(j, "n")?
                 .ok_or_else(|| TmfgError::protocol("missing n (or dataset name)"))?;
-            if n > MAX_BATCH_SERIES {
+            if n > max_series {
                 return Err(TmfgError::protocol(format!(
-                    "n must be <= {MAX_BATCH_SERIES} for inline data, got {n}"
+                    "n must be <= {max_series} for inline data \
+                     ({MAX_SPARSE_BATCH_SERIES} with sparse_k), got {n}"
                 )));
             }
             let l = opt_usize(j, "l")?.ok_or_else(|| TmfgError::protocol("missing l"))?;
@@ -263,10 +298,11 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
             // budget even under the scale cap. Unknown names fall through
             // to a dataset_not_found error at run time.
             if let Some(n) = crate::coordinator::registry::dataset_size(name, scale) {
-                if n > MAX_BATCH_SERIES {
+                if n > max_series {
                     return Err(TmfgError::protocol(format!(
-                        "dataset '{name}' resolves to n={n} > {MAX_BATCH_SERIES}; \
-                         reduce scale or use the CLI/library for large runs"
+                        "dataset '{name}' resolves to n={n} > {max_series}; \
+                         reduce scale, request sparse mode (sparse_k, cap \
+                         {MAX_SPARSE_BATCH_SERIES}), or use the CLI/library"
                     )));
                 }
             }
@@ -277,7 +313,7 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
             }
         }
     };
-    Ok(ClusterSpec { source, algo, k })
+    Ok(ClusterSpec { source, algo, k, sparse_k, sparse_seed })
 }
 
 fn decode_open_stream(j: &Json) -> Result<StreamOpen, TmfgError> {
@@ -522,6 +558,54 @@ mod tests {
         ))
         .unwrap_err();
         assert!(e.to_string().contains("non-finite"), "{e}");
+    }
+
+    #[test]
+    fn sparse_fields_decode() {
+        let r = Request::decode(&parse(
+            r#"{"dataset": "CBF", "sparse_k": 32, "sparse_seed": 7, "k": 3}"#,
+        ))
+        .unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert_eq!(spec.sparse_k, Some(32));
+        assert_eq!(spec.sparse_seed, Some(7));
+        // absent means dense
+        let r = Request::decode(&parse(r#"{"dataset": "CBF"}"#)).unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert_eq!(spec.sparse_k, None);
+        assert_eq!(spec.sparse_seed, None);
+    }
+
+    #[test]
+    fn sparse_field_validation() {
+        for line in [
+            r#"{"dataset": "CBF", "sparse_k": 0}"#,
+            r#"{"dataset": "CBF", "sparse_k": 100000}"#,
+            r#"{"dataset": "CBF", "sparse_seed": 1}"#,
+            r#"{"dataset": "CBF", "sparse_k": "many"}"#,
+        ] {
+            let e = Request::decode(&parse(line)).unwrap_err();
+            assert_eq!(e.code(), "protocol", "{line}");
+            assert!(e.to_string().contains("sparse"), "{line}: {e}");
+        }
+    }
+
+    #[test]
+    fn sparse_mode_raises_batch_cap() {
+        // demo-16384 resolves past the dense cap but inside the sparse one
+        let dense = Request::decode(&parse(r#"{"dataset": "demo-16384"}"#)).unwrap_err();
+        assert_eq!(dense.code(), "protocol");
+        assert!(dense.to_string().contains("sparse"), "{dense}");
+        assert!(Request::decode(&parse(
+            r#"{"dataset": "demo-16384", "sparse_k": 32}"#
+        ))
+        .is_ok());
+        // and the sparse cap itself still binds
+        let huge = Request::decode(&parse(
+            r#"{"dataset": "demo-100000", "sparse_k": 32}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(huge.code(), "protocol");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! CSR adjacency for the (sparse, planar) TMFG.
 
 use crate::data::corr::corr_to_distance;
-use crate::data::matrix::Matrix;
+use crate::data::matrix::SimilarityLookup;
 use crate::tmfg::TmfgResult;
 
 /// Compressed sparse row graph with f32 edge lengths.
@@ -43,11 +43,15 @@ impl CsrGraph {
     }
 
     /// Build from a TMFG result, with edge lengths d = √(2(1−S[u,v])).
-    pub fn from_tmfg(r: &TmfgResult, s: &Matrix) -> CsrGraph {
+    /// Generic over the similarity store: with a sparse candidate graph,
+    /// an edge the construction inserted via dense fallback (no stored
+    /// similarity) gets the missing-entry weight √2 — finite, so APSP
+    /// runs unchanged.
+    pub fn from_tmfg<S: SimilarityLookup + ?Sized>(r: &TmfgResult, s: &S) -> CsrGraph {
         let edges: Vec<(u32, u32, f32)> = r
             .edges
             .iter()
-            .map(|&(u, v)| (u, v, corr_to_distance(s.at(u as usize, v as usize))))
+            .map(|&(u, v)| (u, v, corr_to_distance(s.sim(u as usize, v as usize))))
             .collect();
         Self::from_edges(r.n, &edges)
     }

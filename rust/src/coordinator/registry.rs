@@ -35,12 +35,36 @@ fn demo_size(name: &str) -> Option<usize> {
     (n >= 4).then_some(n)
 }
 
+/// Class count of the `synth-large-N` family.
+const SYNTH_LARGE_CLASSES: usize = 16;
+
+/// Series length of the `synth-large-N` family — short on purpose: the
+/// family exists to exercise large *n* (the sparse pipeline's axis), and
+/// both the generator and the k-NN stage cost O(n·L) / O(n²·d).
+const SYNTH_LARGE_LEN: usize = 48;
+
+/// The series count a `synth-large-N` name encodes — the large-n family
+/// served by the sparse k-NN pipeline (`sparse_k` on the wire). `None`
+/// for non-family names, n below the class minimum, or n past 2²⁰
+/// (names are attacker-supplied over TCP; the generator is O(n·L) so an
+/// absurd n must not reach it).
+fn synth_large_size(name: &str) -> Option<usize> {
+    let n: usize = name.strip_prefix("synth-large-")?.parse().ok()?;
+    (SYNTH_LARGE_CLASSES * 4..=1 << 20).contains(&n).then_some(n)
+}
+
 /// Resolve a dataset: a Table-1 name (at the given n-scale), `demo[-N]`,
 /// or a path to a UCR-style CSV file.
 pub fn get_dataset(name: &str, scale: f64, seed: u64) -> Option<Dataset> {
     if name.starts_with("demo") {
         let n = demo_size(name)?;
         return Some(SynthSpec::new(name, n, 64, 4).generate(seed));
+    }
+    if name.starts_with("synth-large-") {
+        let n = synth_large_size(name)?;
+        return Some(
+            SynthSpec::new(name, n, SYNTH_LARGE_LEN, SYNTH_LARGE_CLASSES).generate(seed),
+        );
     }
     if is_path(name) {
         return load_ucr_csv(Path::new(name)).ok();
@@ -66,6 +90,9 @@ pub fn canonical_name(name: &str) -> Option<String> {
         // canonicalize by size
         return demo_size(name).map(|n| format!("demo-{n}"));
     }
+    if name.starts_with("synth-large-") {
+        return synth_large_size(name).map(|n| format!("synth-large-{n}"));
+    }
     if is_path(name) {
         return None;
     }
@@ -81,6 +108,9 @@ pub fn canonical_name(name: &str) -> Option<String> {
 pub fn dataset_size(name: &str, scale: f64) -> Option<usize> {
     if name.starts_with("demo") {
         return demo_size(name);
+    }
+    if name.starts_with("synth-large-") {
+        return synth_large_size(name);
     }
     if is_path(name) {
         return None;
@@ -160,6 +190,25 @@ mod tests {
         assert_eq!(predicted, get_dataset("CBF", 0.1, 1).unwrap().n());
         assert_eq!(dataset_size("NoSuchDataset", 1.0), None);
         assert_eq!(dataset_size("some/path.csv", 1.0), None);
+    }
+
+    #[test]
+    fn synth_large_family() {
+        let ds = get_dataset("synth-large-256", 1.0, 3).unwrap();
+        assert_eq!(ds.n(), 256);
+        assert_eq!(ds.n_classes, 16);
+        assert_eq!(dataset_size("synth-large-16384", 1.0), Some(16384));
+        assert_eq!(
+            canonical_name("synth-large-256").as_deref(),
+            Some("synth-large-256")
+        );
+        // deterministic per seed
+        let again = get_dataset("synth-large-256", 1.0, 3).unwrap();
+        assert_eq!(ds.data, again.data);
+        // below the class minimum or absurdly large → unknown
+        assert!(get_dataset("synth-large-10", 1.0, 1).is_none());
+        assert!(get_dataset("synth-large-9999999999", 1.0, 1).is_none());
+        assert_eq!(dataset_size("synth-large-x", 1.0), None);
     }
 
     #[test]

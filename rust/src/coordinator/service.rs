@@ -11,10 +11,15 @@
 //!    "algo": "opt", "k": 3}
 //! or inline data:
 //!   {"id": 7, "n": 16, "l": 8, "data": [ ... n*l floats ... ], "k": 2}
+//! Sparse k-NN mode (raises the batch cap from 4096 to 65536 series;
+//! responses gain "sparse_k"/"sparse_nnz"/"sparse_fallbacks"):
+//!   {"id": 7, "dataset": "synth-large-16384", "sparse_k": 32,
+//!    "sparse_seed": 1, "k": 16}
 //! Special: {"cmd": "ping"} → {"ok": true}, {"cmd": "shutdown"},
 //! {"cmd": "stats"} → {"ok": true, "workers": ..., "queue_depth": ...,
-//! "jobs": ..., "open_streams": ..., "cache_hits": ..., "cache_misses":
-//! ..., "cache_hit_ratio": ..., "stages": {...}}.
+//! "jobs": ..., "open_streams": ..., "sparse_requests": ...,
+//! "dense_requests": ..., "cache_hits": ..., "cache_misses":
+//! ..., "cache_hit_ratio": ..., "cache_bytes": ..., "stages": {...}}.
 //! Optional: {"v": 1, ...} pins the protocol version.
 //!
 //! Response: {"id": 7, "ok": true, "labels": [...], "ari": 0.4,
@@ -241,6 +246,10 @@ struct ServiceState {
     /// Requests fully processed by the workers.
     jobs_done: AtomicU64,
     open_streams: AtomicUsize,
+    /// Batch clustering requests that ran the sparse k-NN pipeline.
+    sparse_requests: AtomicU64,
+    /// Batch clustering requests that ran the dense pipeline.
+    dense_requests: AtomicU64,
     /// Cumulative per-stage wall-clock across every request.
     stages: Mutex<Breakdown>,
 }
@@ -275,6 +284,14 @@ impl ServiceState {
             (
                 "open_streams",
                 Json::Num(self.open_streams.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "sparse_requests",
+                Json::Num(self.sparse_requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "dense_requests",
+                Json::Num(self.dense_requests.load(Ordering::Relaxed) as f64),
             ),
         ];
         if let Some(cache) = &self.cache {
@@ -350,6 +367,10 @@ fn run_cluster(
         }
     };
     let mut req = req.algo(algo).engine(engine.clone());
+    if let Some(sk) = spec.sparse_k {
+        // decode() validated 1 <= sparse_k <= MAX_SPARSE_K.
+        req = req.sparse_knn(sk, spec.sparse_seed.unwrap_or(crate::sparse::DEFAULT_KNN_SEED));
+    }
     if let Some(c) = cache {
         req = req.cache(c.clone());
     }
@@ -365,6 +386,11 @@ fn process(
     state: &ServiceState,
 ) -> Json {
     let t = crate::util::timer::Timer::start();
+    if spec.sparse_k.is_some() {
+        state.sparse_requests.fetch_add(1, Ordering::Relaxed);
+    } else {
+        state.dense_requests.fetch_add(1, Ordering::Relaxed);
+    }
     match run_cluster(spec, engine, state.cache.as_ref(), default_algo) {
         Ok(out) => {
             let Some(labels) = out.labels else {
@@ -381,6 +407,11 @@ fn process(
                 ("algo", Json::str(&out.algo.name())),
                 ("batch", Json::Num(batch_size as f64)),
             ];
+            if let Some(sp) = out.sparse {
+                fields.push(("sparse_k", Json::Num(sp.k as f64)));
+                fields.push(("sparse_nnz", Json::Num(sp.nnz as f64)));
+                fields.push(("sparse_fallbacks", Json::Num(sp.fallbacks as f64)));
+            }
             match out.cache {
                 CacheStatus::Hit => fields.push(("cache", Json::str("hit"))),
                 CacheStatus::Miss => fields.push(("cache", Json::str("miss"))),
@@ -610,6 +641,8 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
         cache,
         jobs_done: AtomicU64::new(0),
         open_streams: AtomicUsize::new(0),
+        sparse_requests: AtomicU64::new(0),
+        dense_requests: AtomicU64::new(0),
         stages: Mutex::new(Breakdown::new()),
     });
     let cfg = Arc::new(ServiceConfig { addr: addr.clone(), ..cfg });

@@ -9,118 +9,171 @@
 use super::matrix::Matrix;
 use crate::parlay::{self, SendPtr};
 
-/// Standardize each row to zero mean and unit ℓ2 norm. Rows with ~zero
-/// variance become all-zero (their correlations are defined as 0).
-pub fn standardize_rows(x: &Matrix) -> Matrix {
+/// Precision policy of the shared Pearson core: the element type the
+/// standardized rows are stored at and the width the dot products are
+/// accumulated at. The f32 and f64 correlation paths are the same
+/// algorithm — standardize every row to zero mean / unit ℓ2 norm, then
+/// S = Ẑ Ẑᵀ over the symmetric upper triangle — differing only in this
+/// policy, so both run through one generic core
+/// (property-tested to agree within 1e-5 in `rust/tests/properties.rs`).
+pub trait CorrScalar: Copy + Send + Sync + 'static {
+    const ONE: Self;
+    fn from_f64(v: f64) -> Self;
+    /// Dot product of two equal-length standardized rows, accumulated at
+    /// the scalar's native width.
+    fn dot(a: &[Self], b: &[Self]) -> Self;
+    fn clamp_unit(self) -> Self;
+    /// Is a row with this sum of squared deviations degenerate (treated
+    /// as constant, correlations defined as 0)? Each precision keeps its
+    /// historical cutoff: the f32 path tests the ℓ2 norm against 1e-12,
+    /// the f64 reference tests the squared norm against 1e-12 — the same
+    /// statistic and threshold as the streaming window's `VAR_EPS`, so
+    /// the 1e-10 agreement contract with `stream::window` holds on
+    /// near-constant series too.
+    fn degenerate_row(ss: f64) -> bool;
+}
+
+impl CorrScalar for f32 {
+    const ONE: f32 = 1.0;
+
+    #[inline]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    /// 4-accumulator blocked dot that LLVM auto-vectorizes (the dense
+    /// L1/L2 hot-spot kernel).
+    #[inline]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let l = a.len();
+        let mut acc = 0.0f32;
+        let mut acc4 = [0.0f32; 4];
+        let mut k = 0;
+        while k + 4 <= l {
+            acc4[0] += a[k] * b[k];
+            acc4[1] += a[k + 1] * b[k + 1];
+            acc4[2] += a[k + 2] * b[k + 2];
+            acc4[3] += a[k + 3] * b[k + 3];
+            k += 4;
+        }
+        while k < l {
+            acc += a[k] * b[k];
+            k += 1;
+        }
+        acc + acc4[0] + acc4[1] + acc4[2] + acc4[3]
+    }
+
+    #[inline]
+    fn clamp_unit(self) -> f32 {
+        self.clamp(-1.0, 1.0)
+    }
+
+    #[inline]
+    fn degenerate_row(ss: f64) -> bool {
+        ss.sqrt() <= 1e-12
+    }
+}
+
+impl CorrScalar for f64 {
+    const ONE: f64 = 1.0;
+
+    #[inline]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    /// Plain sequential f64 fold — the reference accumulation the
+    /// streaming property tests compare against at 1e-10.
+    #[inline]
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[inline]
+    fn clamp_unit(self) -> f64 {
+        self.clamp(-1.0, 1.0)
+    }
+
+    #[inline]
+    fn degenerate_row(ss: f64) -> bool {
+        ss <= 1e-12
+    }
+}
+
+/// The shared standardization core: each row to zero mean and unit ℓ2
+/// norm (means/norms always computed in f64, stored at `T`). Rows with
+/// ~zero variance become all-zero — their correlations are defined as 0.
+pub fn standardize_rows_generic<T: CorrScalar>(x: &Matrix) -> Vec<T> {
     let (n, l) = (x.rows, x.cols);
-    let mut z = Matrix::zeros(n, l);
-    let zp = SendPtr(z.data.as_mut_ptr());
+    let mut z: Vec<T> = Vec::with_capacity(n * l);
+    let zp = SendPtr(z.as_mut_ptr());
     parlay::parallel_for(n, 1, |i| {
         let row = x.row(i);
-        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / l as f64;
+        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / l.max(1) as f64;
         let mut ss = 0.0f64;
         for &v in row {
             let d = v as f64 - mean;
             ss += d * d;
         }
-        let norm = ss.sqrt();
-        let inv = if norm > 1e-12 { 1.0 / norm } else { 0.0 };
+        let inv = if T::degenerate_row(ss) { 0.0 } else { 1.0 / ss.sqrt() };
         for (j, &v) in row.iter().enumerate() {
             // SAFETY: row i is written only by iteration i.
-            unsafe { zp.write(i * l + j, ((v as f64 - mean) * inv) as f32) };
+            unsafe { zp.write(i * l + j, T::from_f64((v as f64 - mean) * inv)) };
         }
     });
+    unsafe { z.set_len(n * l) };
     z
 }
 
-/// Pearson correlation matrix: S = Ẑ Ẑᵀ with Ẑ = standardized rows.
-/// Exploits symmetry (computes the upper triangle, mirrors it) and
-/// parallelizes across rows. Inner kernel is a blocked dot product that
-/// LLVM auto-vectorizes.
-pub fn pearson_correlation(x: &Matrix) -> Matrix {
-    let n = x.rows;
-    let z = standardize_rows(x);
-    let l = z.cols;
-    let mut s = Matrix::zeros(n, n);
-    let sp = SendPtr(s.data.as_mut_ptr());
-    let zref = &z;
-    // Row-parallel upper triangle. Chunked so each task does similar work:
-    // pair row i with row n-1-i (triangle balancing).
-    parlay::parallel_for(n.div_ceil(2), 1, |half| {
-        for &i in &[half, n - 1 - half] {
-            if half == n - 1 - half && i != half {
-                continue;
-            }
-            let zi = zref.row(i);
-            for j in i..n {
-                let zj = zref.row(j);
-                let mut acc = 0.0f32;
-                // simple blocked dot; LLVM vectorizes this loop
-                let mut k = 0;
-                let mut acc4 = [0.0f32; 4];
-                while k + 4 <= l {
-                    acc4[0] += zi[k] * zj[k];
-                    acc4[1] += zi[k + 1] * zj[k + 1];
-                    acc4[2] += zi[k + 2] * zj[k + 2];
-                    acc4[3] += zi[k + 3] * zj[k + 3];
-                    k += 4;
-                }
-                while k < l {
-                    acc += zi[k] * zj[k];
-                    k += 1;
-                }
-                let v = (acc + acc4[0] + acc4[1] + acc4[2] + acc4[3]).clamp(-1.0, 1.0);
-                let v = if i == j { 1.0 } else { v };
-                // SAFETY: (i,j) and (j,i) are written only by index pair (i,j),
-                // which belongs to exactly one `half` iteration.
-                unsafe {
-                    sp.write(i * n + j, v);
-                    sp.write(j * n + i, v);
-                }
-            }
-        }
-    });
-    s
-}
-
-/// Two-pass f64 Pearson reference: the row-major n×n correlation matrix
-/// with f64 accumulation end to end (centered rows, then normalized dot
-/// products). The f32 output of [`pearson_correlation`] carries ~1e-5
-/// rounding, which is too coarse to validate the streaming subsystem's
-/// incremental sufficient-statistics path — that property test compares
-/// against this function at 1e-10 instead.
-pub fn pearson_correlation_f64(x: &Matrix) -> Vec<f64> {
-    let (n, l) = (x.rows, x.cols);
-    let centered: Vec<Vec<f64>> = parlay::par_map(n, 1, |i| {
-        let row = x.row(i);
-        let mean = row.iter().map(|&v| v as f64).sum::<f64>() / l.max(1) as f64;
-        row.iter().map(|&v| v as f64 - mean).collect()
-    });
-    let sqnorms: Vec<f64> = parlay::par_map(n, 8, |i| centered[i].iter().map(|d| d * d).sum());
-    let mut s = vec![0.0f64; n * n];
+/// The shared accumulation core: the row-major n×n Gram matrix of the
+/// standardized rows, symmetric (upper triangle computed, mirrored) with
+/// a forced unit diagonal, parallelized with triangle balancing.
+fn correlation_from_standardized<T: CorrScalar>(z: &[T], n: usize, l: usize) -> Vec<T> {
+    let mut s: Vec<T> = Vec::with_capacity(n * n);
     let sp = SendPtr(s.as_mut_ptr());
-    let (cref, nref) = (&centered, &sqnorms);
     parlay::par_symmetric_rows(n, |i| {
+        let zi = &z[i * l..(i + 1) * l];
         for j in i..n {
             let v = if i == j {
-                1.0
-            } else if nref[i] <= 1e-12 || nref[j] <= 1e-12 {
-                0.0
+                T::ONE
             } else {
-                let dot: f64 = cref[i].iter().zip(&cref[j]).map(|(a, b)| a * b).sum();
-                (dot / (nref[i] * nref[j]).sqrt()).clamp(-1.0, 1.0)
+                T::dot(zi, &z[j * l..(j + 1) * l]).clamp_unit()
             };
             // SAFETY: par_symmetric_rows visits each row i exactly once,
             // so the (i,j≥i)/(j,i) cell pairs are written by one task.
             unsafe {
                 sp.write(i * n + j, v);
-                if j != i {
-                    sp.write(j * n + i, v);
-                }
+                sp.write(j * n + i, v);
             }
         }
     });
+    unsafe { s.set_len(n * n) };
     s
+}
+
+/// Standardize each row to zero mean and unit ℓ2 norm (f32 storage).
+/// Rows with ~zero variance become all-zero (their correlations are
+/// defined as 0).
+pub fn standardize_rows(x: &Matrix) -> Matrix {
+    Matrix { rows: x.rows, cols: x.cols, data: standardize_rows_generic::<f32>(x) }
+}
+
+/// Pearson correlation matrix: S = Ẑ Ẑᵀ with Ẑ = standardized rows, f32
+/// storage and accumulation throughout (the production path).
+pub fn pearson_correlation(x: &Matrix) -> Matrix {
+    let n = x.rows;
+    let z = standardize_rows_generic::<f32>(x);
+    Matrix { rows: n, cols: n, data: correlation_from_standardized(&z, n, x.cols) }
+}
+
+/// f64 Pearson reference: the same standardize→Gram core as
+/// [`pearson_correlation`] run entirely at f64. The f32 path carries
+/// ~1e-5 rounding, which is too coarse to validate the streaming
+/// subsystem's incremental sufficient-statistics path — that property
+/// test compares against this function at 1e-10 instead.
+pub fn pearson_correlation_f64(x: &Matrix) -> Vec<f64> {
+    let z = standardize_rows_generic::<f64>(x);
+    correlation_from_standardized(&z, x.rows, x.cols)
 }
 
 /// The standard correlation→metric transform used throughout the
@@ -245,6 +298,21 @@ mod tests {
         let c = Matrix::from_vec(2, 8, vec![3.0; 8].into_iter().chain((0..8).map(|t| t as f32)).collect());
         let sc = pearson_correlation_f64(&c);
         assert_eq!(sc, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn f64_near_constant_row_uses_stream_var_eps_cutoff() {
+        // Sum of squared deviations ≈ 4e-14 — under the 1e-12 cutoff the
+        // streaming window's VAR_EPS uses on the same statistic, so the
+        // f64 reference must treat the row as constant (correlations 0),
+        // keeping the 1e-10 stream-vs-reference contract on
+        // near-constant series.
+        let mut data = vec![1.0f32; 16];
+        data[0] = 1.0 + 2e-7;
+        let other: Vec<f32> = (0..16).map(|t| (t as f32).sin()).collect();
+        let m = Matrix::from_vec(2, 16, data.into_iter().chain(other).collect());
+        let s = pearson_correlation_f64(&m);
+        assert_eq!(s, vec![1.0, 0.0, 0.0, 1.0]);
     }
 
     #[test]

@@ -1,5 +1,23 @@
 //! Dense row-major f32 matrix — the storage for time-series panels
-//! (n series × L samples) and n×n similarity matrices.
+//! (n series × L samples) and n×n similarity matrices — plus the
+//! [`SimilarityLookup`] abstraction that lets the graph stages read
+//! pairwise similarities without caring whether the backing store is a
+//! dense matrix or a sparse candidate graph.
+
+/// Read access to an n×n similarity. The DBHT stages (edge directioning,
+/// basin assignment) and the edge-sum metric only ever query pairs that
+/// are TMFG edges or clique co-members, so a sparse store with a
+/// missing-entry convention (similarity 0) serves them exactly as well
+/// as a dense matrix — which is what makes the large-n sparse pipeline
+/// possible without materializing O(n²) floats.
+pub trait SimilarityLookup: Sync {
+    /// Number of items (the similarity is `n_items` × `n_items`).
+    fn n_items(&self) -> usize;
+    /// S[i,j]. Implementations define their own missing-entry semantic
+    /// (a sparse store returns 0.0 for absent pairs, 1.0 on the
+    /// diagonal).
+    fn sim(&self, i: usize, j: usize) -> f32;
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
@@ -63,6 +81,17 @@ impl Matrix {
             }
         }
         true
+    }
+}
+
+impl SimilarityLookup for Matrix {
+    fn n_items(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    fn sim(&self, i: usize, j: usize) -> f32 {
+        self.at(i, j)
     }
 }
 

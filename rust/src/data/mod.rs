@@ -7,5 +7,5 @@ pub mod loader;
 pub mod matrix;
 pub mod synth;
 
-pub use matrix::Matrix;
+pub use matrix::{Matrix, SimilarityLookup};
 pub use synth::Dataset;

@@ -13,8 +13,8 @@
 
 use super::bubble::BubbleTree;
 use super::direction::Directions;
+use crate::data::matrix::{Matrix, SimilarityLookup};
 use crate::error::TmfgError;
-use crate::data::matrix::Matrix;
 use crate::parlay;
 
 #[derive(Debug, Clone)]
@@ -81,11 +81,13 @@ fn compute_basins(bt: &BubbleTree, dir: &Directions) -> Result<Vec<u32>, TmfgErr
 }
 
 /// Full assignment: basins, vertex→basin, vertex→bubble.
-/// `apsp` is the (exact or approximate) shortest-path distance matrix.
-pub fn assign(
+/// `apsp` is the (exact or approximate) shortest-path distance matrix;
+/// `s` any similarity store — only clique-co-member pairs (TMFG edges)
+/// are read, so a sparse candidate graph serves without densification.
+pub fn assign<S: SimilarityLookup + ?Sized>(
     bt: &BubbleTree,
     dir: &Directions,
-    s: &Matrix,
+    s: &S,
     apsp: &Matrix,
 ) -> Result<Assignment, TmfgError> {
     let bubble_basin = compute_basins(bt, dir)?;
@@ -102,7 +104,7 @@ pub fn assign(
             let e = strength.entry(cb).or_insert(0.0);
             for &u in &bt.cliques[b as usize] {
                 if u as usize != v {
-                    *e += s.at(v, u as usize) as f64;
+                    *e += s.sim(v, u as usize) as f64;
                 }
             }
         }

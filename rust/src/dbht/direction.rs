@@ -9,7 +9,7 @@
 //! at the root).
 
 use super::bubble::BubbleTree;
-use crate::data::matrix::Matrix;
+use crate::data::matrix::SimilarityLookup;
 use crate::parlay;
 
 /// Directions for every non-root bubble's parent edge.
@@ -25,8 +25,14 @@ pub struct Directions {
 }
 
 /// Compute edge directions. `adj` is the TMFG adjacency (from
-/// [`crate::tmfg::TmfgResult::adjacency`]); `s` the similarity matrix.
-pub fn direct_edges(bt: &BubbleTree, adj: &[Vec<u32>], s: &Matrix) -> Directions {
+/// [`crate::tmfg::TmfgResult::adjacency`]); `s` any similarity store —
+/// only TMFG-edge pairs are ever read, so a sparse candidate graph
+/// serves here without densification.
+pub fn direct_edges<S: SimilarityLookup + ?Sized>(
+    bt: &BubbleTree,
+    adj: &[Vec<u32>],
+    s: &S,
+) -> Directions {
     let nb = bt.n_bubbles;
     let mut to_child = vec![false; nb];
     let mut strength_child = vec![0.0f64; nb];
@@ -42,7 +48,7 @@ pub fn direct_edges(bt: &BubbleTree, adj: &[Vec<u32>], s: &Matrix) -> Directions
                     if t.contains(&u) {
                         continue;
                     }
-                    let w = s.at(v as usize, u as usize) as f64;
+                    let w = s.sim(v as usize, u as usize) as f64;
                     if bt.vertex_in_subtree(u, b) {
                         chi_child += w;
                     } else {
@@ -84,6 +90,7 @@ impl Directions {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::Matrix;
     use crate::data::synth::SynthSpec;
     use crate::tmfg::TmfgResult;
 

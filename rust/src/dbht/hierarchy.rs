@@ -8,8 +8,8 @@ use super::converging::{assign, Assignment};
 use super::dendrogram::{DendroBuilder, Dendrogram};
 use super::direction::direct_edges;
 use super::linkage::{nn_chain_hac, Linkage};
+use crate::data::matrix::{Matrix, SimilarityLookup};
 use crate::error::TmfgError;
-use crate::data::matrix::Matrix;
 use crate::parlay;
 use crate::tmfg::TmfgResult;
 use std::collections::HashMap;
@@ -78,11 +78,13 @@ pub struct DbhtResult {
     pub n_converging: usize,
 }
 
-/// Run DBHT on a constructed TMFG with a precomputed APSP matrix.
+/// Run DBHT on a constructed TMFG with a precomputed APSP matrix. `s`
+/// is any similarity store (dense matrix or sparse candidate graph —
+/// DBHT only reads pairs that are TMFG edges, which both hold).
 /// Internal structural failures (an incomplete dendrogram, a dangling
 /// basin) surface as [`TmfgError::InvariantViolation`], never a panic.
-pub fn dbht_dendrogram(
-    s: &Matrix,
+pub fn dbht_dendrogram<S: SimilarityLookup + ?Sized>(
+    s: &S,
     tmfg: &TmfgResult,
     apsp: &Matrix,
     linkage: Linkage,

@@ -11,7 +11,9 @@
 //! on a from-scratch parallel-primitives substrate (`parlay`). On top of
 //! the batch pipeline, the [`stream`] subsystem serves live time-series
 //! traffic with O(n²) per-tick incremental correlation updates and
-//! drift-gated topology reuse.
+//! drift-gated topology reuse, and the [`sparse`] subsystem opens the
+//! large-n workload with deterministic k-NN candidate graphs and
+//! sparse-gain TMFG construction (O(n·k) memory instead of O(n²)).
 //!
 //! The public surface is the typed staged API in [`api`]: a
 //! [`api::ClusterRequest`] builder over every input shape, a staged
@@ -58,6 +60,7 @@ pub mod error;
 pub mod metrics;
 pub mod parlay;
 pub mod runtime;
+pub mod sparse;
 pub mod stream;
 pub mod tmfg;
 pub mod util;

@@ -24,7 +24,11 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
   tmfg run --dataset <name|csv> [--algo par1|par10|par200|corr|heap|opt]
            [--scale 0.1] [--seed N] [--threads N] [--apsp exact|approx]
            [--linkage complete|average|single] [--no-xla] [--check]
+           [--sparse-k K] [--sparse-seed N]
            [--newick out.nwk] [--json-out out.json]
+           (--sparse-k runs the sparse k-NN pipeline: O(n*K) candidate
+            memory instead of the dense O(n^2) similarity matrix; try
+            --dataset synth-large-16384 --sparse-k 32 --apsp approx)
   tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|ablation|all>
            [--scale 0.1] [--seed N] [--datasets a,b,c] [--threads 1,2,4]
            [--out-dir results]
@@ -103,16 +107,46 @@ fn cmd_run(args: &Args) {
         ..Default::default()
     };
     println!(
-        "dataset {} (n={}, L={}, k={}), algo {}, {} threads",
+        "dataset {} (n={}, L={}, k={}), algo {}, {} threads{}",
         ds.name,
         ds.n(),
         ds.len(),
         ds.n_classes,
         cfg.algo.name(),
-        parlay::num_threads()
+        parlay::num_threads(),
+        if args.has("sparse-k") {
+            format!(", sparse k-NN k={}", args.get_usize("sparse-k", 32))
+        } else {
+            String::new()
+        }
     );
-    let out = Pipeline::new(cfg).run_dataset(&ds).unwrap_or_else(|e| fail(e));
+    let out = if args.has("sparse-k") {
+        // Sparse mode goes through the typed API directly: the legacy
+        // Pipeline facade is dense-only.
+        let mut req = tmfg::api::ClusterRequest::panel(ds.data.clone())
+            .labels(ds.labels.clone())
+            .k(ds.n_classes)
+            .algo(cfg.algo)
+            .linkage(cfg.linkage)
+            .check_invariants(cfg.check_invariants)
+            .sparse_knn(
+                args.get_usize("sparse-k", 32),
+                args.get_u64("sparse-seed", tmfg::sparse::DEFAULT_KNN_SEED),
+            );
+        if let Some(mode) = apsp {
+            req = req.apsp(mode);
+        }
+        req.run().unwrap_or_else(|e| fail(e))
+    } else {
+        Pipeline::new(cfg).run_dataset(&ds).unwrap_or_else(|e| fail(e))
+    };
     println!("\nstage breakdown:\n{}", out.breakdown.table());
+    if let Some(sp) = &out.sparse {
+        println!(
+            "sparse candidates: k={} nnz={} mean degree {:.1}, {} dense-fallback rounds",
+            sp.k, sp.nnz, sp.mean_degree, sp.fallbacks
+        );
+    }
     if let Some(p) = out.corr_path {
         println!("similarity path: {p:?}");
     }

@@ -3,13 +3,14 @@
 //! is to (approximately) maximize this; the paper reports each parallel
 //! method's percent *reduction* relative to PAR-TDBHT-1.
 
-use crate::data::matrix::Matrix;
+use crate::data::matrix::SimilarityLookup;
 
-/// Sum of S[u,v] over the given undirected edge list.
-pub fn edge_sum(s: &Matrix, edges: &[(u32, u32)]) -> f64 {
+/// Sum of S[u,v] over the given undirected edge list. Generic over the
+/// similarity store (dense matrix or sparse candidate graph).
+pub fn edge_sum<S: SimilarityLookup + ?Sized>(s: &S, edges: &[(u32, u32)]) -> f64 {
     edges
         .iter()
-        .map(|&(u, v)| s.at(u as usize, v as usize) as f64)
+        .map(|&(u, v)| s.sim(u as usize, v as usize) as f64)
         .sum()
 }
 
@@ -25,6 +26,7 @@ pub fn edge_sum_reduction_pct(baseline_sum: f64, sum: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::Matrix;
 
     #[test]
     fn sums_edges() {

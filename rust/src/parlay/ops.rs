@@ -19,6 +19,30 @@ pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, grain: usize, f: F) 
     out
 }
 
+/// Parallel map with per-chunk scratch: `out[i] = f(i, &mut scratch)`,
+/// where `scratch` is default-constructed once per chunk and reused
+/// across that chunk's iterations (no per-item allocation — the k-NN
+/// builder's candidate buffers are the motivating user). Deterministic:
+/// each slot is a pure function of its index, written exactly once.
+pub fn par_map_scratch<T, S, F>(n: usize, grain: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    S: Default,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks(n, grain, |s, e| {
+        let mut scratch = S::default();
+        for i in s..e {
+            // SAFETY: each index written exactly once, buffer has capacity n.
+            unsafe { ptr.write(i, f(i, &mut scratch)) };
+        }
+    });
+    unsafe { out.set_len(n) };
+    out
+}
+
 /// Triangle-balanced parallel iteration over the rows of an n×n symmetric
 /// matrix: `f(i)` runs exactly once for every `i in 0..n`, with task h
 /// covering rows h and n−1−h so long (early) and short (late)
@@ -208,6 +232,17 @@ mod tests {
         let v = par_map(10_000, 64, |i| i * 2);
         assert_eq!(v.len(), 10_000);
         assert!(v.iter().enumerate().all(|(i, &x)| x == i * 2));
+    }
+
+    #[test]
+    fn map_scratch_matches_map() {
+        let v = par_map_scratch(5_000, 16, |i, scratch: &mut Vec<usize>| {
+            scratch.clear();
+            scratch.extend(0..i % 7);
+            i * 2 + scratch.len()
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i * 2 + i % 7));
+        assert!(par_map_scratch(0, 1, |i, _: &mut Vec<u8>| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! [`SparseSimilarity`] — CSR storage for a sparse candidate similarity
+//! graph with per-vertex sorted neighbor lists.
+//!
+//! Missing-entry semantic: a pair (i, j) that is not a stored candidate
+//! has **similarity 0** (equivalently: gain contribution 0 in TMFG
+//! construction) and **distance ∞** under the correlation metric — the
+//! two views of "we never measured this pair, assume uncorrelated". The
+//! diagonal is implicit: `sim(v, v) = 1`, `distance(v, v) = 0`.
+
+use crate::data::corr::corr_to_distance;
+use crate::data::matrix::{Matrix, SimilarityLookup};
+use crate::error::TmfgError;
+use crate::parlay;
+
+/// The one candidate total order of the sparse subsystem: similarity
+/// descending, index ascending — exactly the comparator dense
+/// `CorrState::build` sorts its rows with. Every sparse site (k-NN
+/// top-k selection, `from_dense`, the sparse TMFG's candidate rows)
+/// must use this helper, or the k = n−1 byte-identity with the dense
+/// construction (pinned in `rust/tests/determinism.rs`) silently breaks.
+pub(crate) fn sort_by_sim_desc(pairs: &mut [(f32, u32)]) {
+    pairs.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+}
+
+/// Keep the top k pairs under [`sort_by_sim_desc`]'s order.
+pub(crate) fn top_k(pairs: &mut Vec<(f32, u32)>, k: usize) {
+    sort_by_sim_desc(pairs);
+    pairs.truncate(k);
+}
+
+/// Symmetric n×n sparse similarity in CSR form. Each row's columns are
+/// sorted ascending (binary-searchable); the matrix is structurally
+/// symmetric (entry (i,j) present ⇔ (j,i) present, with equal values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseSimilarity {
+    n: usize,
+    /// Row start offsets, length n+1.
+    row_ptr: Vec<usize>,
+    /// Column indices, sorted ascending within each row.
+    cols: Vec<u32>,
+    /// Similarity values, parallel to `cols`.
+    vals: Vec<f32>,
+}
+
+impl SparseSimilarity {
+    /// Build from an undirected edge list `(u, v, sim)` with `u != v`.
+    /// Duplicate pairs (in either orientation) are rejected — the k-NN
+    /// builder dedupes before constructing, so a duplicate here is a
+    /// logic error upstream.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f32)]) -> Result<SparseSimilarity, TmfgError> {
+        let mut deg = vec![0usize; n];
+        for &(u, v, _) in edges {
+            if u == v || u as usize >= n || v as usize >= n {
+                return Err(TmfgError::invalid(format!(
+                    "sparse edge ({u},{v}) invalid for n={n}"
+                )));
+            }
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut row_ptr = vec![0usize; n + 1];
+        for i in 0..n {
+            row_ptr[i + 1] = row_ptr[i] + deg[i];
+        }
+        let nnz = row_ptr[n];
+        let mut cols = vec![0u32; nnz];
+        let mut vals = vec![0f32; nnz];
+        let mut cursor = row_ptr[..n].to_vec();
+        for &(u, v, w) in edges {
+            let cu = cursor[u as usize];
+            cols[cu] = v;
+            vals[cu] = w;
+            cursor[u as usize] += 1;
+            let cv = cursor[v as usize];
+            cols[cv] = u;
+            vals[cv] = w;
+            cursor[v as usize] += 1;
+        }
+        // Sort each row by column (parallel over rows; key order is a
+        // function of the input alone, so this is thread-count
+        // deterministic).
+        {
+            use crate::parlay::SendPtr;
+            let cp = SendPtr(cols.as_mut_ptr());
+            let vp = SendPtr(vals.as_mut_ptr());
+            let rp = &row_ptr;
+            parlay::parallel_for_chunks(n, 4, |lo, hi| {
+                let mut scratch: Vec<(u32, f32)> = Vec::new();
+                for r in lo..hi {
+                    let (a, b) = (rp[r], rp[r + 1]);
+                    scratch.clear();
+                    for i in a..b {
+                        // SAFETY: row r's [a, b) segment is touched only
+                        // by iteration r.
+                        unsafe { scratch.push((cp.read(i), vp.read(i))) };
+                    }
+                    scratch.sort_unstable_by_key(|&(c, _)| c);
+                    for (off, &(c, v)) in scratch.iter().enumerate() {
+                        unsafe {
+                            cp.write(a + off, c);
+                            vp.write(a + off, v);
+                        }
+                    }
+                }
+            });
+        }
+        let s = SparseSimilarity { n, row_ptr, cols, vals };
+        for v in 0..n {
+            let (c, _) = s.row(v);
+            if c.windows(2).any(|w| w[0] == w[1]) {
+                return Err(TmfgError::invalid(format!(
+                    "duplicate sparse entry in row {v}"
+                )));
+            }
+        }
+        Ok(s)
+    }
+
+    /// The top-k sparsification of a dense similarity matrix: for every
+    /// vertex keep its k most similar partners (ties → lower index),
+    /// then symmetrize by union. With `k >= n - 1` this keeps every
+    /// off-diagonal entry, which is how the equivalence tests reduce
+    /// `sparse_tmfg` to the dense construction.
+    pub fn from_dense(s: &Matrix, k: usize) -> Result<SparseSimilarity, TmfgError> {
+        let n = crate::tmfg::common::validate_similarity(s)?;
+        let k = k.clamp(1, n - 1);
+        let picks: Vec<Vec<(u32, f32)>> = parlay::par_map(n, 4, |v| {
+            let row = s.row(v);
+            let mut pairs: Vec<(f32, u32)> = (0..n)
+                .filter(|&u| u != v)
+                .map(|u| (row[u], u as u32))
+                .collect();
+            top_k(&mut pairs, k);
+            pairs.into_iter().map(|(w, u)| (u, w)).collect()
+        });
+        Self::from_directed_picks(n, &picks)
+    }
+
+    /// Symmetrize per-vertex directed candidate picks into the CSR form:
+    /// the undirected union, one value per pair. Values for (u,v) and
+    /// (v,u) are assumed equal when both directions picked the pair (the
+    /// builders compute them with the same commutative kernel).
+    pub(crate) fn from_directed_picks(
+        n: usize,
+        picks: &[Vec<(u32, f32)>],
+    ) -> Result<SparseSimilarity, TmfgError> {
+        let mut edges: Vec<(u32, u32, f32)> = Vec::with_capacity(picks.iter().map(Vec::len).sum());
+        for (v, list) in picks.iter().enumerate() {
+            for &(u, w) in list {
+                let (a, b) = (u.min(v as u32), u.max(v as u32));
+                edges.push((a, b, w));
+            }
+        }
+        edges.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        edges.dedup_by_key(|e| (e.0, e.1));
+        Self::from_edges(n, &edges)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored (directed) entry count — twice the undirected pair count.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Approximate resident bytes (for resource reporting).
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 8 + self.cols.len() * 4 + self.vals.len() * 4
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.row_ptr[v + 1] - self.row_ptr[v]
+    }
+
+    pub fn mean_degree(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.n as f64
+    }
+
+    /// Row v's neighbor columns (sorted ascending) and values.
+    pub fn row(&self, v: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.row_ptr[v], self.row_ptr[v + 1]);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    /// The stored similarity for (i, j), `None` when the pair is not a
+    /// candidate. The diagonal is implicit (`Some(1.0)`).
+    #[inline]
+    pub fn lookup(&self, i: usize, j: usize) -> Option<f32> {
+        if i == j {
+            return Some(1.0);
+        }
+        let (c, v) = self.row(i);
+        c.binary_search(&(j as u32)).ok().map(|p| v[p])
+    }
+
+    /// Correlation distance d = √(2(1−ρ)); ∞ for missing pairs.
+    #[inline]
+    pub fn distance(&self, i: usize, j: usize) -> f32 {
+        match self.lookup(i, j) {
+            Some(rho) => corr_to_distance(rho),
+            None => f32::INFINITY,
+        }
+    }
+
+    /// Row sum Σ_u S[v,u] including the implicit unit diagonal, with the
+    /// terms added in ascending column order — exactly the fold order of
+    /// the dense `initial_clique` row sums, so a complete candidate set
+    /// reproduces the dense seed selection bit-for-bit.
+    pub fn row_sum_with_diag(&self, v: usize) -> f64 {
+        let (c, w) = self.row(v);
+        let mut acc = 0.0f64;
+        let mut diag_added = false;
+        for (i, &u) in c.iter().enumerate() {
+            if !diag_added && (u as usize) > v {
+                acc += 1.0;
+                diag_added = true;
+            }
+            acc += w[i] as f64;
+        }
+        if !diag_added {
+            acc += 1.0;
+        }
+        acc
+    }
+}
+
+impl SimilarityLookup for SparseSimilarity {
+    fn n_items(&self) -> usize {
+        self.n
+    }
+
+    /// Missing pairs read as similarity 0 (the gain-0 semantic).
+    #[inline]
+    fn sim(&self, i: usize, j: usize) -> f32 {
+        self.lookup(i, j).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense4() -> Matrix {
+        let w = [
+            [1.0, 0.9, 0.2, 0.4],
+            [0.9, 1.0, 0.3, 0.1],
+            [0.2, 0.3, 1.0, 0.8],
+            [0.4, 0.1, 0.8, 1.0],
+        ];
+        let mut m = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                m.set(i, j, w[i][j]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn from_edges_roundtrip() {
+        let s = SparseSimilarity::from_edges(4, &[(0, 1, 0.9), (2, 3, 0.8), (0, 3, 0.4)]).unwrap();
+        assert_eq!(s.n(), 4);
+        assert_eq!(s.nnz(), 6);
+        assert_eq!(s.lookup(0, 1), Some(0.9));
+        assert_eq!(s.lookup(1, 0), Some(0.9));
+        assert_eq!(s.lookup(0, 2), None);
+        assert_eq!(s.sim(0, 2), 0.0);
+        assert_eq!(s.sim(2, 2), 1.0);
+        assert_eq!(s.distance(0, 0), 0.0);
+        assert!(s.distance(0, 2).is_infinite());
+        let (c, _) = s.row(0);
+        assert_eq!(c, &[1, 3]);
+        assert_eq!(s.degree(0), 2);
+        assert_eq!(s.degree(1), 1);
+    }
+
+    #[test]
+    fn from_edges_rejects_bad_input() {
+        assert!(SparseSimilarity::from_edges(3, &[(0, 0, 1.0)]).is_err());
+        assert!(SparseSimilarity::from_edges(3, &[(0, 5, 1.0)]).is_err());
+        assert!(SparseSimilarity::from_edges(3, &[(0, 1, 0.5), (1, 0, 0.5)]).is_err());
+    }
+
+    #[test]
+    fn from_dense_complete_keeps_everything() {
+        let m = dense4();
+        let s = SparseSimilarity::from_dense(&m, 3).unwrap();
+        assert_eq!(s.nnz(), 12); // all off-diagonal pairs
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(s.sim(i, j), m.at(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn from_dense_topk_symmetrizes_by_union() {
+        let m = dense4();
+        let s = SparseSimilarity::from_dense(&m, 1).unwrap();
+        // vertex 0 picks 1 (0.9), vertex 2 picks 3 (0.8), and the
+        // reverse directions pick the same pairs; union = {01, 23}.
+        assert_eq!(s.lookup(0, 1), Some(0.9));
+        assert_eq!(s.lookup(2, 3), Some(0.8));
+        assert_eq!(s.lookup(0, 3), None);
+        assert_eq!(s.nnz(), 4);
+    }
+
+    #[test]
+    fn row_sum_with_diag_matches_dense_order() {
+        let m = dense4();
+        let s = SparseSimilarity::from_dense(&m, 3).unwrap();
+        for v in 0..4 {
+            // dense fold in ascending column order, diagonal included
+            let mut expect = 0.0f64;
+            for u in 0..4 {
+                expect += m.at(v, u) as f64;
+            }
+            assert_eq!(s.row_sum_with_diag(v), expect, "row {v}");
+        }
+    }
+
+    #[test]
+    fn bytes_and_mean_degree_sane() {
+        let s = SparseSimilarity::from_edges(4, &[(0, 1, 0.9), (2, 3, 0.8)]).unwrap();
+        assert!(s.bytes() > 0);
+        assert!((s.mean_degree() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,262 @@
+//! Deterministic parallel k-NN candidate-graph construction over a
+//! standardized time-series panel.
+//!
+//! For every series the k most-correlated partners are found and the
+//! per-vertex picks are symmetrized by union into a
+//! [`SparseSimilarity`]. Two regimes:
+//!
+//! * **Exact blocked top-k** (n ≤ `prefilter_above`): each vertex's
+//!   correlations against all others are computed with the shared f32
+//!   dot kernel and the top k kept — O(n²·L) work but only O(n·k)
+//!   memory, parallelized over vertices with `parlay` chunking.
+//! * **Random-projection prefilter** (n > `prefilter_above`): rows are
+//!   projected through a seeded Gaussian matrix to `projection_dims`
+//!   dimensions; each vertex shortlists `pool_factor · k` candidates by
+//!   projected dot product and only the shortlist is re-scored exactly.
+//!   Work drops to O(n²·d + n·pool·L) — the a-TMFG observation that
+//!   TMFG quality survives ANN candidate restriction.
+//!
+//! **Determinism**: every per-vertex computation is a pure function of
+//! the panel, `k`, and `seed` (the projection matrix is drawn from a
+//! sequential seeded RNG before any parallel work), and per-vertex
+//! results are written to disjoint slots — so the output is
+//! byte-identical for every thread count and across reruns.
+
+use super::csr::{top_k, SparseSimilarity};
+use crate::data::corr::{standardize_rows_generic, CorrScalar};
+use crate::data::matrix::Matrix;
+use crate::error::TmfgError;
+use crate::parlay;
+use crate::util::rng::Rng;
+
+/// Default seed for the projection prefilter when a request does not
+/// pick one.
+pub const DEFAULT_KNN_SEED: u64 = 0x5EED_CA2D;
+
+/// Configuration for [`knn_candidates`].
+#[derive(Debug, Clone)]
+pub struct KnnConfig {
+    /// Neighbors kept per vertex (clamped to n−1).
+    pub k: usize,
+    /// Seed for the random-projection prefilter. Changing it changes
+    /// which candidates survive the prefilter on large inputs; on the
+    /// exact path it has no effect.
+    pub seed: u64,
+    /// Projection dimensionality of the prefilter.
+    pub projection_dims: usize,
+    /// Inputs with more series than this use the prefilter; smaller
+    /// inputs are scored exactly.
+    pub prefilter_above: usize,
+    /// Shortlist size multiplier: the prefilter keeps `pool_factor · k`
+    /// candidates per vertex for exact re-scoring.
+    pub pool_factor: usize,
+}
+
+impl KnnConfig {
+    pub fn new(k: usize, seed: u64) -> KnnConfig {
+        KnnConfig { k, seed, projection_dims: 16, prefilter_above: 8192, pool_factor: 4 }
+    }
+}
+
+/// Build the symmetrized k-NN candidate similarity graph for a panel
+/// (one series per row, ≥ 4 rows). See the module docs for the two
+/// regimes and the determinism contract.
+pub fn knn_candidates(panel: &Matrix, cfg: &KnnConfig) -> Result<SparseSimilarity, TmfgError> {
+    let (n, l) = (panel.rows, panel.cols);
+    if n < 4 {
+        return Err(TmfgError::invalid(format!(
+            "sparse k-NN needs at least 4 series, got {n}"
+        )));
+    }
+    if l < 2 {
+        return Err(TmfgError::invalid(format!(
+            "sparse k-NN needs at least 2 samples per series, got {l}"
+        )));
+    }
+    if cfg.k == 0 {
+        return Err(TmfgError::invalid("sparse k must be >= 1"));
+    }
+    let k = cfg.k.min(n - 1);
+    let z = standardize_rows_generic::<f32>(panel);
+    let picks: Vec<Vec<(u32, f32)>> = if n <= cfg.prefilter_above {
+        exact_picks(&z, n, l, k)
+    } else {
+        prefiltered_picks(&z, n, l, k, cfg)
+    };
+    SparseSimilarity::from_directed_picks(n, &picks)
+}
+
+/// Exact regime: score every pair with the shared f32 dot kernel.
+///
+/// Each pair is scored twice (once per direction): per-vertex
+/// independence is what makes thread-count determinism free, and the
+/// values agree bit-for-bit (commutative products, same fold order), so
+/// symmetrization needs no value reconciliation. Halving the work with
+/// upper-triangle block scoring + a deterministic per-vertex merge is
+/// the known follow-up if this kernel shows up in `bench_sparse`.
+fn exact_picks(z: &[f32], n: usize, l: usize, k: usize) -> Vec<Vec<(u32, f32)>> {
+    parlay::par_map_scratch(n, 2, |v, scratch: &mut Vec<(f32, u32)>| {
+        let zv = &z[v * l..(v + 1) * l];
+        scratch.clear();
+        for u in 0..n {
+            if u != v {
+                let sim = f32::dot(zv, &z[u * l..(u + 1) * l]).clamp(-1.0, 1.0);
+                scratch.push((sim, u as u32));
+            }
+        }
+        top_k(scratch, k);
+        scratch.iter().map(|&(w, u)| (u, w)).collect()
+    })
+}
+
+/// Prefilter regime: shortlist by seeded random projection, re-score the
+/// shortlist exactly.
+fn prefiltered_picks(
+    z: &[f32],
+    n: usize,
+    l: usize,
+    k: usize,
+    cfg: &KnnConfig,
+) -> Vec<Vec<(u32, f32)>> {
+    let d = cfg.projection_dims.clamp(4, l.max(4));
+    let pool = (cfg.pool_factor.max(1) * k).clamp(k, n - 1);
+    // The projection matrix is drawn sequentially from the seed before
+    // any parallel work — the one place randomness enters, and it is
+    // identical for every thread count.
+    let mut rng = Rng::new(cfg.seed ^ 0x5A11_E27);
+    let proj: Vec<f32> = (0..l * d).map(|_| rng.next_gaussian() as f32).collect();
+    // p[v] = z[v] · P, parallel over vertices.
+    let p: Vec<f32> = {
+        let mut p: Vec<f32> = Vec::with_capacity(n * d);
+        let pp = parlay::SendPtr(p.as_mut_ptr());
+        let (zr, pr) = (&z, &proj);
+        parlay::parallel_for(n, 8, |v| {
+            let zv = &zr[v * l..(v + 1) * l];
+            for c in 0..d {
+                let mut acc = 0.0f32;
+                for t in 0..l {
+                    acc += zv[t] * pr[t * d + c];
+                }
+                // SAFETY: slot (v, c) written only by iteration v.
+                unsafe { pp.write(v * d + c, acc) };
+            }
+        });
+        unsafe { p.set_len(n * d) };
+        p
+    };
+    let pref = &p;
+    parlay::par_map_scratch(n, 1, |v, scratch: &mut Vec<(f32, u32)>| {
+        let pv = &pref[v * d..(v + 1) * d];
+        scratch.clear();
+        for u in 0..n {
+            if u != v {
+                let score = f32::dot(pv, &pref[u * d..(u + 1) * d]);
+                scratch.push((score, u as u32));
+            }
+        }
+        top_k(scratch, pool);
+        // exact re-scoring of the shortlist
+        let zv = &z[v * l..(v + 1) * l];
+        let mut exact: Vec<(f32, u32)> = scratch
+            .iter()
+            .map(|&(_, u)| {
+                let sim =
+                    f32::dot(zv, &z[u as usize * l..(u as usize + 1) * l]).clamp(-1.0, 1.0);
+                (sim, u)
+            })
+            .collect();
+        top_k(&mut exact, k);
+        exact.into_iter().map(|(w, u)| (u, w)).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corr::pearson_correlation;
+    use crate::data::synth::SynthSpec;
+
+    fn panel(n: usize, seed: u64) -> Matrix {
+        SynthSpec::new("t", n, 48, 4).generate(seed).data
+    }
+
+    #[test]
+    fn exact_matches_dense_topk() {
+        let x = panel(40, 1);
+        let sp = knn_candidates(&x, &KnnConfig::new(5, 7)).unwrap();
+        let dense = pearson_correlation(&x);
+        let from_dense = SparseSimilarity::from_dense(&dense, 5).unwrap();
+        // both pick the top 5 partners per vertex from the same
+        // standardized dot products, so the structures must agree
+        for v in 0..40 {
+            let (a, _) = sp.row(v);
+            let (b, _) = from_dense.row(v);
+            assert_eq!(a, b, "row {v}");
+            for &u in a {
+                let got = sp.lookup(v, u as usize).unwrap();
+                let want = dense.at(v, u as usize);
+                assert!((got - want).abs() < 1e-5, "({v},{u}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn complete_k_keeps_all_pairs() {
+        let x = panel(12, 2);
+        let sp = knn_candidates(&x, &KnnConfig::new(11, 1)).unwrap();
+        assert_eq!(sp.nnz(), 12 * 11);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts_and_reruns() {
+        let x = panel(60, 3);
+        let mut cfg = KnnConfig::new(8, 5);
+        // force the prefilter path so its determinism is covered too
+        cfg.prefilter_above = 16;
+        let base = crate::parlay::with_threads(1, || knn_candidates(&x, &cfg).unwrap());
+        for t in [2usize, 4] {
+            let got = crate::parlay::with_threads(t, || knn_candidates(&x, &cfg).unwrap());
+            assert_eq!(got, base, "threads={t}");
+        }
+        assert_eq!(knn_candidates(&x, &cfg).unwrap(), base, "rerun");
+    }
+
+    #[test]
+    fn prefilter_recall_reasonable() {
+        // The shortlist is approximate, but on class-structured panels
+        // most true top-k partners must survive it.
+        let x = panel(300, 4);
+        let exact = knn_candidates(&x, &KnnConfig::new(8, 9)).unwrap();
+        let mut cfg = KnnConfig::new(8, 9);
+        cfg.prefilter_above = 64;
+        let approx = knn_candidates(&x, &cfg).unwrap();
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for v in 0..300 {
+            let (a, _) = exact.row(v);
+            for &u in a {
+                total += 1;
+                if approx.lookup(v, u as usize).is_some() {
+                    hit += 1;
+                }
+            }
+        }
+        let recall = hit as f64 / total as f64;
+        assert!(recall > 0.5, "prefilter recall too low: {recall}");
+    }
+
+    #[test]
+    fn seed_changes_prefilter_not_exact() {
+        let x = panel(50, 6);
+        let a = knn_candidates(&x, &KnnConfig::new(6, 1)).unwrap();
+        let b = knn_candidates(&x, &KnnConfig::new(6, 2)).unwrap();
+        assert_eq!(a, b, "exact path ignores the seed");
+    }
+
+    #[test]
+    fn rejects_degenerate_inputs() {
+        assert!(knn_candidates(&Matrix::zeros(3, 8), &KnnConfig::new(2, 1)).is_err());
+        assert!(knn_candidates(&Matrix::zeros(8, 1), &KnnConfig::new(2, 1)).is_err());
+        assert!(knn_candidates(&Matrix::zeros(8, 8), &KnnConfig::new(0, 1)).is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! Sparse large-n subsystem: deterministic k-NN candidate graphs and
+//! sparse-gain TMFG construction.
+//!
+//! The dense pipeline materializes an O(n²) similarity matrix before the
+//! graph stages start, which caps practical inputs at a few thousand
+//! series. This subsystem opens the large-n workload:
+//!
+//! * [`knn::knn_candidates`] — a parallel, thread-count-deterministic
+//!   k-NN builder over the standardized panel (exact blocked top-k, with
+//!   a seeded random-projection prefilter for very large n);
+//! * [`csr::SparseSimilarity`] — CSR storage with per-vertex sorted
+//!   neighbor lists and an explicit missing-entry semantic (similarity
+//!   0 / distance ∞);
+//! * [`tmfg::sparse_tmfg`] — CORR-TMFG's lazy-gain machinery restricted
+//!   to candidate neighbors, with a counted dense-scan fallback, byte-
+//!   identical to the dense construction when the candidate set is
+//!   complete.
+//!
+//! Downstream, APSP and DBHT run unchanged: the TMFG is already sparse
+//! (3n−6 edges), and DBHT reads similarities only at TMFG-edge /
+//! clique-co-member pairs, which
+//! [`crate::data::matrix::SimilarityLookup`] serves straight from the
+//! CSR store. Memory over the whole sparse prefix is O(n·k) instead of
+//! O(n²); the dense n×n APSP distance matrix remains the large-n
+//! footprint to budget for (≈1 GiB at n = 16384 in f32).
+//!
+//! Entry points: `ClusterRequest::sparse_knn(k, seed)` in the typed API,
+//! `{"sparse_k": …}` on the wire, `--sparse-k` on the CLI.
+
+pub mod csr;
+pub mod knn;
+pub mod tmfg;
+
+pub use csr::SparseSimilarity;
+pub use knn::{knn_candidates, KnnConfig, DEFAULT_KNN_SEED};
+pub use tmfg::{sparse_tmfg, SparseTmfgReport};

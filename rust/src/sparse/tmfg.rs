@@ -1,0 +1,347 @@
+//! Sparse-gain TMFG construction over a k-NN candidate graph.
+//!
+//! Structurally this is CORR-TMFG (Alg. 1, prefix 1) with the paper's
+//! lazy-gain bookkeeping applied to sparse candidate lists: each
+//! vertex's pre-sorted row holds only its stored candidates (by
+//! similarity descending, index ascending — the dense row order), the
+//! per-vertex `MaxCorrs` pointer advances over that list, and a face's
+//! best pair is recomputed only when its chosen candidate was just
+//! inserted. Missing pairs contribute **gain 0** (the
+//! [`SparseSimilarity`] missing-entry semantic), so gains of candidate
+//! vertices remain exact sums over the stored entries.
+//!
+//! When every alive face has exhausted its candidates while vertices
+//! remain, one round falls back to a dense scan: the lowest-id alive
+//! face takes the uninserted vertex with the highest sparse gain (ties →
+//! lowest index). Fallbacks are counted and reported — a high count
+//! means `k` is too small for the panel's structure.
+//!
+//! **Equivalence**: with a complete candidate set (k = n−1) every
+//! decision point — seed-clique selection, row order, scan, gain fold
+//! order, argmax tie-breaking, face bookkeeping — reproduces the dense
+//! [`crate::tmfg::corr_tmfg`] byte-for-byte (pinned by the determinism
+//! suite).
+
+use super::csr::SparseSimilarity;
+use crate::data::matrix::SimilarityLookup;
+use crate::error::TmfgError;
+use crate::parlay;
+use crate::tmfg::common::{Builder, Faces, TmfgResult, TmfgTimings};
+
+/// Construction statistics specific to the sparse path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SparseTmfgReport {
+    /// Rounds that had to fall back to a dense scan because every alive
+    /// face had exhausted its candidate list.
+    pub fallbacks: usize,
+}
+
+/// Sentinel gain entry for a face whose candidate lists are exhausted.
+const EXHAUSTED: (f32, u32) = (f32::NEG_INFINITY, u32::MAX);
+
+/// Per-vertex candidate rows sorted by (similarity desc, index asc) with
+/// `MaxCorrs` pointers — the sparse analog of `CorrState`.
+struct SparseState {
+    offsets: Vec<usize>,
+    /// Concatenated candidate rows, each sorted by sim desc / idx asc.
+    sorted: Vec<u32>,
+    ptr: Vec<u32>,
+    inserted: Vec<u8>,
+    n_rem: usize,
+}
+
+impl SparseState {
+    fn build(s: &SparseSimilarity) -> SparseState {
+        let n = s.n();
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + s.degree(v);
+        }
+        let mut sorted: Vec<u32> = Vec::with_capacity(offsets[n]);
+        let sp = parlay::SendPtr(sorted.as_mut_ptr());
+        let offs = &offsets;
+        parlay::par_map_scratch(n, 4, |v, scratch: &mut Vec<(f32, u32)>| {
+            let (cols, vals) = s.row(v);
+            scratch.clear();
+            for (i, &u) in cols.iter().enumerate() {
+                scratch.push((vals[i], u));
+            }
+            // the dense CorrState row order (shared sparse comparator)
+            super::csr::sort_by_sim_desc(scratch);
+            for (i, &(_, u)) in scratch.iter().enumerate() {
+                // SAFETY: row v writes only its own [offsets[v], offsets[v+1])
+                // segment.
+                unsafe { sp.write(offs[v] + i, u) };
+            }
+        });
+        unsafe { sorted.set_len(offsets[n]) };
+        SparseState { offsets, sorted, ptr: vec![0; n], inserted: vec![0; n], n_rem: n }
+    }
+
+    #[inline]
+    fn mark_inserted(&mut self, v: u32) {
+        debug_assert_eq!(self.inserted[v as usize], 0, "double insertion of {v}");
+        self.inserted[v as usize] = 1;
+        self.n_rem -= 1;
+    }
+
+    /// First uninserted candidate of `v`'s sorted row (the scalar
+    /// `MaxCorrs` scan); `None` when the row is exhausted.
+    #[inline]
+    fn maxcorr(&mut self, v: u32) -> Option<u32> {
+        let row = &self.sorted[self.offsets[v as usize]..self.offsets[v as usize + 1]];
+        let mut p = self.ptr[v as usize] as usize;
+        while p < row.len() && self.inserted[row[p] as usize] != 0 {
+            p += 1;
+        }
+        self.ptr[v as usize] = p as u32;
+        row.get(p).copied()
+    }
+
+    /// Best (gain, vertex) pair for face `f` among the up-to-3 per-vertex
+    /// candidates — the dense `best_pair` with sparse gains. `None` when
+    /// all three candidate lists are exhausted.
+    fn best_pair(&mut self, s: &SparseSimilarity, f: &[u32; 3]) -> Option<(f32, u32)> {
+        let mut best: Option<(f32, u32)> = None;
+        for &w in f {
+            if let Some(cand) = self.maxcorr(w) {
+                let g = gain(s, f, cand);
+                match best {
+                    Some((bg, bv)) if bg > g || (bg == g && bv <= cand) => {}
+                    _ => best = Some((g, cand)),
+                }
+            }
+        }
+        best
+    }
+}
+
+/// Sparse gain: Σ_{u ∈ f} S[v,u], missing entries contributing 0, added
+/// in face-vertex order (the dense fold order).
+#[inline]
+fn gain(s: &SparseSimilarity, f: &[u32; 3], v: u32) -> f32 {
+    let r = v as usize;
+    s.sim(r, f[0] as usize) + s.sim(r, f[1] as usize) + s.sim(r, f[2] as usize)
+}
+
+/// Seed clique: top-4 vertices by candidate-row sum (implicit unit
+/// diagonal included, terms folded in ascending column order) — the
+/// dense `initial_clique` selection, bit-for-bit when the candidate set
+/// is complete.
+fn initial_clique_sparse(s: &SparseSimilarity) -> [u32; 4] {
+    let n = s.n();
+    let sums = parlay::par_map(n, 8, |v| s.row_sum_with_diag(v));
+    let mut best: Vec<(f64, u32)> = Vec::with_capacity(5);
+    for (i, &v) in sums.iter().enumerate() {
+        best.push((v, i as u32));
+        best.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        best.truncate(4);
+    }
+    [best[0].1, best[1].1, best[2].1, best[3].1]
+}
+
+/// Dense-scan fallback: the uninserted vertex with the highest sparse
+/// gain for face `f` (ties → lowest index). O(n · log k).
+fn fallback_vertex(s: &SparseSimilarity, state: &SparseState, f: &[u32; 3]) -> u32 {
+    let mut best = (f32::NEG_INFINITY, u32::MAX);
+    for u in 0..state.inserted.len() as u32 {
+        if state.inserted[u as usize] == 0 {
+            let g = gain(s, f, u);
+            if g > best.0 || (g == best.0 && u < best.1) {
+                best = (g, u);
+            }
+        }
+    }
+    debug_assert_ne!(best.1, u32::MAX, "fallback with no uninserted vertex");
+    best.1
+}
+
+/// Run sparse-gain TMFG construction (prefix 1) over a candidate graph.
+/// The result satisfies every structural TMFG invariant
+/// ([`crate::tmfg::common::check_invariants`]); quality depends on the
+/// candidate set's k.
+pub fn sparse_tmfg(
+    s: &SparseSimilarity,
+) -> Result<(TmfgResult, SparseTmfgReport), TmfgError> {
+    let n = s.n();
+    if n < 4 {
+        return Err(TmfgError::invalid(format!(
+            "TMFG needs at least 4 vertices, got {n}"
+        )));
+    }
+    let mut timer = crate::util::timer::Timer::start();
+    let mut timings = TmfgTimings::default();
+    let mut report = SparseTmfgReport::default();
+    let seed = initial_clique_sparse(s);
+    timings.init = timer.lap();
+    let mut builder = Builder::new(seed, n);
+    let mut faces = Faces::new(&seed);
+    let mut state = SparseState::build(s);
+    timings.sort = timer.lap();
+    for &v in &seed {
+        state.mark_inserted(v);
+    }
+
+    if n == 4 {
+        let mut r = builder.finish(n, faces.alive_faces());
+        r.timings = timings;
+        return Ok((r, report));
+    }
+
+    // gains[f] = best (gain, vertex) pair for face f (EXHAUSTED when the
+    // face's candidate lists have run dry).
+    let mut gains: Vec<(f32, u32)> = Vec::with_capacity(6 * n);
+    for fid in 0..4 {
+        let fv = faces.verts[fid];
+        gains.push(state.best_pair(s, &fv).unwrap_or(EXHAUSTED));
+    }
+
+    while state.n_rem > 0 {
+        // ---- selection: argmax gain over alive faces -----------------------
+        let ids = faces.alive_ids();
+        let g = &gains;
+        let best = parlay::par_argmax(ids.len(), 256, |k| g[ids[k] as usize].0)
+            .ok_or_else(|| TmfgError::invariant("no alive faces while vertices remain"))?;
+        let (fid, v) = {
+            let fid = ids[best];
+            let (_, v) = gains[fid as usize];
+            if v == u32::MAX {
+                // Every alive face is exhausted: dense-scan fallback on
+                // the lowest-id alive face.
+                report.fallbacks += 1;
+                let fb = ids[0];
+                (fb, fallback_vertex(s, &state, &faces.verts[fb as usize]))
+            } else {
+                (fid, v)
+            }
+        };
+
+        // ---- insertion -----------------------------------------------------
+        debug_assert!(faces.alive[fid as usize]);
+        debug_assert_eq!(state.inserted[v as usize], 0);
+        let fv = faces.verts[fid as usize];
+        let owner = builder.insert(v, fv, faces.owner[fid as usize]);
+        let new_faces = faces.split(fid, v, owner);
+        state.mark_inserted(v);
+
+        if state.n_rem == 0 {
+            break;
+        }
+
+        // ---- update: the three new faces, plus alive faces whose chosen
+        // candidate was just inserted -----------------------------------------
+        gains.resize(faces.len(), EXHAUSTED);
+        let mut to_update: Vec<u32> = new_faces.to_vec();
+        for f in faces.alive_ids() {
+            if gains.get(f as usize).map(|p| p.1 == v).unwrap_or(false) {
+                to_update.push(f);
+            }
+        }
+        to_update.sort_unstable();
+        to_update.dedup();
+        // Sequential: the maxcorr pointer advance mutates state; total
+        // scan work is amortized O(nnz) over the whole construction.
+        for f in to_update {
+            let fv = faces.verts[f as usize];
+            gains[f as usize] = state.best_pair(s, &fv).unwrap_or(EXHAUSTED);
+        }
+    }
+
+    timings.insert = timer.lap();
+    let mut r = builder.finish(n, faces.alive_faces());
+    r.timings = timings;
+    debug_assert!(crate::tmfg::common::check_invariants(&r).is_ok());
+    Ok((r, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::data::Matrix;
+    use crate::tmfg::common::check_invariants;
+    use crate::tmfg::{corr_tmfg, TmfgConfig};
+
+    fn random_corr(n: usize, seed: u64) -> Matrix {
+        let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
+        crate::data::corr::pearson_correlation(&ds.data)
+    }
+
+    #[test]
+    fn valid_tmfg_across_sizes_and_k() {
+        for (n, k) in [(4usize, 3usize), (5, 2), (10, 4), (50, 8), (200, 16), (120, 3)] {
+            let s = random_corr(n, n as u64);
+            let sp = SparseSimilarity::from_dense(&s, k).unwrap();
+            let (r, _) = sparse_tmfg(&sp).unwrap();
+            check_invariants(&r).unwrap_or_else(|e| panic!("n={n} k={k}: {e}"));
+        }
+    }
+
+    #[test]
+    fn complete_candidates_byte_identical_to_dense_corr() {
+        for seed in [1u64, 2, 3] {
+            let s = random_corr(60, seed);
+            let sp = SparseSimilarity::from_dense(&s, 59).unwrap();
+            let (sparse, report) = sparse_tmfg(&sp).unwrap();
+            let dense = corr_tmfg(&s, &TmfgConfig::default()).unwrap();
+            assert_eq!(sparse.edges, dense.edges, "seed {seed}");
+            assert_eq!(sparse.cliques, dense.cliques, "seed {seed}");
+            assert_eq!(sparse.faces, dense.faces, "seed {seed}");
+            assert_eq!(sparse.order, dense.order, "seed {seed}");
+            assert_eq!(report.fallbacks, 0, "complete set never falls back");
+        }
+    }
+
+    #[test]
+    fn small_k_falls_back_but_stays_valid() {
+        // k=1 starves the candidate lists quickly; the construction must
+        // complete via fallbacks and still be a structurally valid TMFG.
+        let s = random_corr(40, 9);
+        let sp = SparseSimilarity::from_dense(&s, 1).unwrap();
+        let (r, report) = sparse_tmfg(&sp).unwrap();
+        check_invariants(&r).unwrap();
+        assert!(report.fallbacks > 0, "k=1 should exhaust candidates");
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let s = random_corr(80, 4);
+        let sp = SparseSimilarity::from_dense(&s, 12).unwrap();
+        let base = crate::parlay::with_threads(1, || sparse_tmfg(&sp).unwrap());
+        for t in [2usize, 4] {
+            let got = crate::parlay::with_threads(t, || sparse_tmfg(&sp).unwrap());
+            assert_eq!(got.0.edges, base.0.edges, "threads={t}");
+            assert_eq!(got.0.cliques, base.0.cliques, "threads={t}");
+            assert_eq!(got.1, base.1, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn larger_k_no_worse_edge_sum() {
+        // More candidates ⇒ the greedy search sees a superset of options
+        // each round; quality (edge sum under the full similarity) should
+        // not degrade. Not a theorem for greedy, so allow slack.
+        let s = random_corr(150, 6);
+        let e_small = {
+            let sp = SparseSimilarity::from_dense(&s, 4).unwrap();
+            sparse_tmfg(&sp).unwrap().0.edge_sum(&s)
+        };
+        let e_full = {
+            let sp = SparseSimilarity::from_dense(&s, 149).unwrap();
+            sparse_tmfg(&sp).unwrap().0.edge_sum(&s)
+        };
+        assert!(
+            e_full >= e_small - 0.05 * e_small.abs(),
+            "complete-candidate edge sum {e_full} far below k=4 sum {e_small}"
+        );
+    }
+
+    #[test]
+    fn n4_early_return() {
+        let s = random_corr(4, 1);
+        let sp = SparseSimilarity::from_dense(&s, 3).unwrap();
+        let (r, _) = sparse_tmfg(&sp).unwrap();
+        check_invariants(&r).unwrap();
+        assert_eq!(r.edges.len(), 6);
+    }
+}

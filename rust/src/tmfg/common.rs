@@ -80,7 +80,8 @@ pub struct TmfgResult {
 
 impl TmfgResult {
     /// Sum of similarity over all edges (the Fig. 7 quality metric).
-    pub fn edge_sum(&self, s: &Matrix) -> f64 {
+    /// Generic over the similarity store (dense or sparse).
+    pub fn edge_sum<S: crate::data::matrix::SimilarityLookup + ?Sized>(&self, s: &S) -> f64 {
         crate::metrics::edge_sum(s, &self.edges)
     }
 

@@ -12,6 +12,9 @@ pub struct Stats {
     pub name: String,
     pub reps: usize,
     pub mean: f64,
+    /// Median of the timed samples (the robust central estimate the
+    /// machine-readable perf trajectory tracks).
+    pub median: f64,
     pub stddev: f64,
     pub min: f64,
     pub max: f64,
@@ -22,10 +25,20 @@ impl Stats {
         let n = samples.len().max(1) as f64;
         let mean = samples.iter().sum::<f64>() / n;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        let median = {
+            let mut sorted = samples.to_vec();
+            sorted.sort_by(f64::total_cmp);
+            match sorted.len() {
+                0 => 0.0,
+                m if m % 2 == 1 => sorted[m / 2],
+                m => (sorted[m / 2 - 1] + sorted[m / 2]) / 2.0,
+            }
+        };
         Stats {
             name: name.to_string(),
             reps: samples.len(),
             mean,
+            median,
             stddev: var.sqrt(),
             min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
             max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
@@ -123,6 +136,48 @@ impl BenchSuite {
         self.results.last().unwrap()
     }
 
+    /// Write all results as machine-readable JSON under
+    /// `results/BENCH_<suite>.json` — the perf-trajectory artifact CI
+    /// smoke-runs on every push. One entry per scenario: `name`,
+    /// `median_ns` (plus mean/min for context), `reps`, and every
+    /// metadata column (numeric where parseable, e.g. `n`, `threads`).
+    pub fn write_json(&self) -> std::io::Result<String> {
+        use crate::util::json::Json;
+        std::fs::create_dir_all("results")?;
+        let path = format!("results/BENCH_{}.json", self.suite);
+        let entries: Vec<Json> = self
+            .results
+            .iter()
+            .zip(&self.meta_rows)
+            .map(|(s, row)| {
+                let mut pairs = vec![
+                    ("name", Json::str(&s.name)),
+                    ("median_ns", Json::Num((s.median * 1e9).round())),
+                    ("mean_ns", Json::Num((s.mean * 1e9).round())),
+                    ("min_ns", Json::Num((s.min * 1e9).round())),
+                    ("reps", Json::Num(s.reps as f64)),
+                ];
+                for (k, v) in row {
+                    pairs.push((
+                        k.as_str(),
+                        match v.parse::<f64>() {
+                            Ok(num) if num.is_finite() => Json::Num(num),
+                            _ => Json::str(v),
+                        },
+                    ));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("suite", Json::str(&self.suite)),
+            ("results", Json::Arr(entries)),
+        ]);
+        std::fs::write(&path, doc.to_string())?;
+        println!("wrote {path}");
+        Ok(path)
+    }
+
     /// Write all results as CSV under `results/<suite>.csv`.
     pub fn write_csv(&self) -> std::io::Result<String> {
         std::fs::create_dir_all("results")?;
@@ -166,6 +221,14 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert!((s.stddev - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even_and_unsorted() {
+        assert_eq!(Stats::from_samples("x", &[3.0, 1.0, 2.0]).median, 2.0);
+        assert_eq!(Stats::from_samples("x", &[4.0, 1.0, 3.0, 2.0]).median, 2.5);
+        assert_eq!(Stats::from_samples("x", &[7.0]).median, 7.0);
+        assert_eq!(Stats::from_samples("x", &[]).median, 0.0);
     }
 
     #[test]

@@ -140,6 +140,34 @@ fn full_pipeline_from_panel_identical_across_thread_counts() {
 }
 
 #[test]
+fn sparse_complete_candidates_byte_identical_to_dense_corr() {
+    // With a complete candidate set (k = n−1) the sparse-gain
+    // construction must reproduce dense CORR-TMFG byte-for-byte —
+    // edges, cliques (the 4-clique/separator structure DBHT consumes),
+    // faces, and insertion order — across seeds and thread counts.
+    use tmfg::sparse::{sparse_tmfg, SparseSimilarity};
+    use tmfg::tmfg::{corr_tmfg, TmfgConfig};
+    let _serial = thread_count_lock();
+    for seed in [11u64, 29, 47] {
+        let ds = SynthSpec::new("det", 56, 48, 3).generate(seed);
+        let s = pearson_correlation(&ds.data);
+        let cand = SparseSimilarity::from_dense(&s, 55).expect("complete candidates");
+        let dense = corr_tmfg(&s, &TmfgConfig::default()).expect("dense corr");
+        for t in [1usize, 4] {
+            let (sp, report) =
+                parlay::with_threads(t, || sparse_tmfg(&cand).expect("sparse tmfg"));
+            let ctx = format!("seed {seed}, {t} threads");
+            assert_eq!(sp.edges, dense.edges, "{ctx}: edges");
+            assert_eq!(sp.cliques, dense.cliques, "{ctx}: cliques");
+            assert_eq!(sp.faces, dense.faces, "{ctx}: faces");
+            assert_eq!(sp.order, dense.order, "{ctx}: insertion order");
+            assert_eq!(sp.parent, dense.parent, "{ctx}: bubble parents");
+            assert_eq!(report.fallbacks, 0, "{ctx}: complete set never falls back");
+        }
+    }
+}
+
+#[test]
 fn repeated_runs_identical_at_fixed_thread_count() {
     // Same-thread-count reruns must also agree (guards against
     // completion-order nondeterminism inside reductions).

@@ -47,6 +47,48 @@ fn prop_tmfg_invariants_on_adversarial_matrices() {
 }
 
 #[test]
+fn prop_f32_and_f64_correlation_paths_agree() {
+    // The two Pearson paths share one generic standardize→Gram core and
+    // differ only in storage/accumulation width; over randomized panels
+    // (including near-constant and anti-correlated rows) every entry
+    // must agree within 1e-5.
+    use tmfg::data::corr::pearson_correlation_f64;
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed * 77 + 5);
+        let n = 4 + rng.next_below(40);
+        let l = 8 + rng.next_below(56);
+        let mut data: Vec<f32> = (0..n * l).map(|_| rng.next_gaussian() as f32).collect();
+        // a constant row (zero variance → correlations defined as 0)
+        for t in 0..l {
+            data[t] = 2.5;
+        }
+        // an exact anti-correlated copy of row 2, when there is one
+        if n >= 4 {
+            for t in 0..l {
+                data[3 * l + t] = -data[2 * l + t];
+            }
+        }
+        let x = Matrix::from_vec(n, l, data);
+        let s32 = pearson_correlation(&x);
+        let s64 = pearson_correlation_f64(&x);
+        for i in 0..n {
+            assert_eq!(s64[i * n + i], 1.0, "unit diagonal, seed {seed}");
+            for j in 0..n {
+                let (a, b) = (s32.at(i, j) as f64, s64[i * n + j]);
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "seed {seed} ({i},{j}): f32 {a} vs f64 {b}"
+                );
+            }
+        }
+        // the constant row correlates with nothing
+        for j in 1..n {
+            assert_eq!(s64[j], 0.0, "seed {seed}: constant row vs {j}");
+        }
+    }
+}
+
+#[test]
 fn prop_heap_matches_corr_edge_sum_closely() {
     // §4.2: the lazy heap's graph quality is "only slightly different".
     let mut worst: f64 = 0.0;

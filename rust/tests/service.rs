@@ -200,6 +200,39 @@ fn inline_n_below_tmfg_minimum_is_clean_error() {
 }
 
 #[test]
+fn stats_reports_cache_bytes_and_sparse_vs_dense_counts() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    // one dense, two sparse clustering requests
+    let dense = c
+        .call(&Json::obj(vec![
+            ("dataset", Json::str("CBF")),
+            ("scale", Json::Num(0.03)),
+        ]))
+        .unwrap();
+    assert_eq!(dense.get("ok").as_bool(), Some(true), "{dense:?}");
+    for seed in [1.0, 2.0] {
+        let sp = c
+            .call(&Json::obj(vec![
+                ("dataset", Json::str("demo-64")),
+                ("sparse_k", Json::Num(8.0)),
+                ("sparse_seed", Json::Num(seed)),
+            ]))
+            .unwrap();
+        assert_eq!(sp.get("ok").as_bool(), Some(true), "{sp:?}");
+    }
+    let stats = c.call(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("ok").as_bool(), Some(true), "{stats:?}");
+    assert_eq!(stats.get("dense_requests").as_usize(), Some(1), "{stats:?}");
+    assert_eq!(stats.get("sparse_requests").as_usize(), Some(2), "{stats:?}");
+    // the dense request populated the artifact cache, so its byte usage
+    // is visible and non-zero
+    assert!(stats.get("cache_bytes").as_usize().unwrap() > 0, "{stats:?}");
+    assert!(stats.get("cache_entries").as_usize().unwrap() >= 1, "{stats:?}");
+    h.stop();
+}
+
+#[test]
 fn concurrent_clients_batching() {
     let h = start();
     let addr = h.addr.clone();
