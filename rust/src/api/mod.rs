@@ -57,9 +57,11 @@ pub mod plan;
 pub mod request;
 pub mod wire;
 
+pub use crate::apsp::{ApspOracle, OracleKind};
 pub use crate::error::TmfgError;
 pub use cache::{ArtifactCache, CacheKey, CacheStatus};
 pub use plan::{
-    build_tmfg_for, ApspMode, ClusterOutput, Plan, SimilaritySpec, SparseReport, Stage, TmfgAlgo,
+    build_apsp_oracle, build_tmfg_for, ApspMode, ClusterOutput, Plan, SimilaritySpec,
+    SparseReport, Stage, TmfgAlgo, APSP_AUTO_DENSE_MAX,
 };
 pub use request::ClusterRequest;

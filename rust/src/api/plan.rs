@@ -13,7 +13,7 @@
 //! and approximate APSP (see `coordinator::experiments::apsp_speedup`).
 
 use super::cache::{ArtifactCache, CacheKey, CacheStatus, CachedArtifacts};
-use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
+use crate::apsp::{exact_oracle, ApspOracle, CsrGraph, HubConfig, HubOracle, OracleKind};
 use crate::data::matrix::{Matrix, SimilarityLookup};
 use crate::dbht::hierarchy::{dbht_dendrogram, DbhtResult};
 use crate::dbht::Linkage;
@@ -104,8 +104,62 @@ impl TmfgAlgo {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ApspMode {
+    /// Parallel Dijkstra from every source, materialized dense. O(n²)
+    /// memory — the reference answer.
     Exact,
+    /// The §4.3 hub scheme, served by a streaming [`HubOracle`] —
+    /// O(n·h) memory, same numbers as the dense hub matrix.
     Approx,
+    /// Exact below [`APSP_AUTO_DENSE_MAX`] vertices, hub oracle above —
+    /// the size-aware default for mixed workloads.
+    Auto,
+}
+
+impl ApspMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ApspMode::Exact => "exact",
+            ApspMode::Approx => "approx",
+            ApspMode::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ApspMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Some(ApspMode::Exact),
+            "approx" | "approximate" | "hub" => Some(ApspMode::Approx),
+            "auto" => Some(ApspMode::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// Largest n for which [`ApspMode::Auto`] still materializes the exact
+/// dense matrix (64 MiB of f32 at the threshold). Above it, Auto runs
+/// the O(n·h) [`HubOracle`] so DBHT memory scales with the sparse
+/// pipeline instead of quadratically.
+pub const APSP_AUTO_DENSE_MAX: usize = 4096;
+
+/// The one mode→backend resolution point, shared by the batch [`Plan`]
+/// and the streaming subsystem: Exact materializes the dense matrix,
+/// Approx builds the streaming hub oracle (never an n×n buffer), Auto
+/// picks by size.
+pub fn build_apsp_oracle(
+    mode: ApspMode,
+    g: &CsrGraph,
+    hub: &HubConfig,
+) -> Arc<dyn ApspOracle> {
+    match mode {
+        ApspMode::Exact => Arc::new(exact_oracle(g)),
+        ApspMode::Approx => Arc::new(HubOracle::build(g, hub)),
+        ApspMode::Auto => {
+            if g.n <= APSP_AUTO_DENSE_MAX {
+                Arc::new(exact_oracle(g))
+            } else {
+                Arc::new(HubOracle::build(g, hub))
+            }
+        }
+    }
 }
 
 /// Build a TMFG with the given algorithm's standard configuration — the
@@ -159,6 +213,10 @@ pub struct ClusterOutput {
     pub ari: Option<f64>,
     /// Sum of similarity over the TMFG edges (the Fig. 7 quality metric).
     pub edge_sum: f64,
+    /// Which APSP backend served DBHT: [`OracleKind::Dense`] (exact, or
+    /// Auto below the size threshold) or [`OracleKind::Hub`] (the
+    /// streaming O(n·h) oracle).
+    pub oracle: OracleKind,
     /// Which compute path produced the similarity matrix (None when it
     /// was supplied precomputed, served from the artifact cache, or
     /// built sparse — the sparse path is always native).
@@ -211,7 +269,7 @@ pub struct Plan {
     corr_path: Option<CorrPath>,
     /// `Arc` so cached constructions are shared across plans zero-copy.
     tmfg: Option<Arc<TmfgResult>>,
-    apsp: Option<Matrix>,
+    apsp: Option<Arc<dyn ApspOracle>>,
     dbht: Option<DbhtResult>,
     cut: Option<Vec<usize>>,
     /// The k the current `cut` artifact was made at.
@@ -334,8 +392,17 @@ impl Plan {
         self.tmfg.as_deref()
     }
 
+    /// The dense APSP distance matrix, for inspection — present only
+    /// when the stage ran on a dense backend (Exact mode, or Auto below
+    /// [`APSP_AUTO_DENSE_MAX`]). Hub-backed plans never materialize it;
+    /// read those through [`Plan::apsp_oracle`].
     pub fn apsp(&self) -> Option<&Matrix> {
-        self.apsp.as_ref()
+        self.apsp.as_deref().and_then(|o| o.as_dense())
+    }
+
+    /// The APSP oracle artifact (whatever the backend).
+    pub fn apsp_oracle(&self) -> Option<&dyn ApspOracle> {
+        self.apsp.as_deref()
     }
 
     pub fn dbht(&self) -> Option<&DbhtResult> {
@@ -477,10 +544,13 @@ impl Plan {
             .ok_or_else(|| TmfgError::invariant("tmfg artifact missing"))
     }
 
-    /// Stage 3: all-pairs shortest paths on the filtered graph. The
-    /// TMFG is already sparse (3n−6 edges), so this stage is identical
-    /// for dense and sparse plans — only the edge-weight lookup differs.
-    pub fn run_apsp(&mut self) -> Result<&Matrix, TmfgError> {
+    /// Stage 3: all-pairs shortest paths on the filtered graph, as an
+    /// [`ApspOracle`]. The TMFG is already sparse (3n−6 edges), so this
+    /// stage is identical for dense and sparse plans — only the
+    /// edge-weight lookup differs. Exact mode materializes the dense
+    /// matrix; Approx builds the streaming hub oracle (O(n·h) memory,
+    /// never an n×n buffer); Auto picks by size.
+    pub fn run_apsp(&mut self) -> Result<&dyn ApspOracle, TmfgError> {
         if self.apsp.is_none() {
             self.run_tmfg()?;
             let tmfg = self
@@ -489,15 +559,12 @@ impl Plan {
                 .ok_or_else(|| TmfgError::invariant("apsp stage missing inputs"))?;
             let t = Timer::start();
             let g = CsrGraph::from_tmfg(tmfg, self.sim_store()?);
-            let apsp = match self.apsp_mode {
-                ApspMode::Exact => apsp_exact(&g),
-                ApspMode::Approx => apsp_hub(&g, &self.hub),
-            };
+            let apsp = build_apsp_oracle(self.apsp_mode, &g, &self.hub);
             self.timings.add("apsp", t.elapsed());
             self.apsp = Some(apsp);
         }
         self.apsp
-            .as_ref()
+            .as_deref()
             .ok_or_else(|| TmfgError::invariant("apsp artifact missing"))
     }
 
@@ -508,11 +575,11 @@ impl Plan {
         if self.dbht.is_none() {
             self.run_apsp()?;
             let (tmfg, apsp) = match (&self.tmfg, &self.apsp) {
-                (Some(t), Some(a)) => (t, a),
+                (Some(t), Some(a)) => (t.clone(), a.clone()),
                 _ => return Err(TmfgError::invariant("dbht stage missing inputs")),
             };
             let t = Timer::start();
-            let dbht = dbht_dendrogram(self.sim_store()?, tmfg, apsp, self.linkage)?;
+            let dbht = dbht_dendrogram(self.sim_store()?, &tmfg, &*apsp, self.linkage)?;
             self.timings.add("dbht", t.elapsed());
             self.dbht = Some(dbht);
         }
@@ -609,6 +676,11 @@ impl Plan {
             (Some(truth), Some(pred)) => Some(adjusted_rand_index(truth, pred)),
             _ => None,
         };
+        let oracle = self
+            .apsp
+            .as_deref()
+            .map(|o| o.kind())
+            .ok_or_else(|| TmfgError::invariant("apsp artifact missing"))?;
         let cache = self.cache_status();
         Ok(ClusterOutput {
             algo: self.algo,
@@ -619,6 +691,7 @@ impl Plan {
             labels: self.cut,
             ari,
             edge_sum,
+            oracle,
             corr_path: self.corr_path,
             cache,
             sparse,

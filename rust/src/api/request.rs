@@ -229,6 +229,14 @@ impl ClusterRequest {
     /// a miss resolves normally and arranges publication of the fresh
     /// artifacts.
     pub fn build(self) -> Result<Plan, TmfgError> {
+        // Hub parameters feed radius arithmetic and comparisons; a NaN
+        // or negative multiplier would silently empty every ball.
+        if !self.hub.radius_mult.is_finite() || self.hub.radius_mult < 0.0 {
+            return Err(TmfgError::invalid(format!(
+                "hub radius_mult must be finite and >= 0, got {}",
+                self.hub.radius_mult
+            )));
+        }
         if let SimilaritySpec::SparseKnn { k, .. } = self.spec {
             if k < 1 {
                 return Err(TmfgError::invalid("sparse k must be >= 1"));

@@ -9,7 +9,8 @@
 //! [`TmfgError::code`].
 
 use crate::error::TmfgError;
-use super::plan::TmfgAlgo;
+use super::plan::{ApspMode, TmfgAlgo};
+use crate::apsp::HubConfig;
 use crate::util::json::Json;
 
 /// Highest protocol version this build speaks. Requests may pin a
@@ -49,6 +50,15 @@ pub const MAX_SPARSE_BATCH_SERIES: usize = 65_536;
 /// storage is O(n·k); 512 neighbors is already far past the quality
 /// plateau).
 pub const MAX_SPARSE_K: usize = 512;
+
+/// Upper bound on the `hub_n` hub-count knob (and on `hub_q`): the hub
+/// oracle keeps h exact rows resident, O(n·h) memory — 512 hubs at the
+/// sparse batch cap is already 128 MiB of hub rows.
+pub const MAX_HUBS: usize = 512;
+
+/// Upper bound on the `hub_radius` ball multiplier; balls grow with the
+/// radius, and a huge multiplier turns every ball into the whole graph.
+pub const MAX_HUB_RADIUS: f64 = 64.0;
 
 /// A decoded wire request: the echoed `id`, the (validated) protocol
 /// version, and the typed command body.
@@ -96,6 +106,12 @@ pub struct ClusterSpec {
     pub sparse_k: Option<usize>,
     /// Seed of the sparse prefilter (requires `sparse_k`).
     pub sparse_seed: Option<u64>,
+    /// APSP mode override ("exact" | "approx" | "auto"; None = the
+    /// algorithm's default).
+    pub apsp: Option<ApspMode>,
+    /// Hub-oracle overrides (None = [`HubConfig`] defaults): hub count
+    /// (0 = auto ⌈√n⌉), ball-radius multiplier, nearest hubs per vertex.
+    pub hub: Option<HubConfig>,
 }
 
 #[derive(Debug, Clone)]
@@ -243,6 +259,61 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
     if sparse_seed.is_some() && sparse_k.is_none() {
         return Err(TmfgError::protocol("sparse_seed requires sparse_k"));
     }
+    let apsp = match j.get("apsp") {
+        Json::Null => None,
+        v => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| TmfgError::protocol("field 'apsp' must be a string"))?;
+            Some(ApspMode::parse(s).ok_or_else(|| {
+                TmfgError::protocol(format!(
+                    "unknown apsp mode '{s}' (expected exact|approx|auto)"
+                ))
+            })?)
+        }
+    };
+    // Hub-oracle knobs; each is resource-capped like sparse_k (hub rows
+    // are O(n·hub_n) resident memory on the worker).
+    let hub_n = match opt_usize(j, "hub_n")? {
+        Some(h) if h > MAX_HUBS => {
+            return Err(TmfgError::protocol(format!(
+                "hub_n must be <= {MAX_HUBS}, got {h}"
+            )))
+        }
+        h => h,
+    };
+    let hub_q = match opt_usize(j, "hub_q")? {
+        Some(0) => return Err(TmfgError::protocol("hub_q must be >= 1")),
+        Some(q) if q > MAX_HUBS => {
+            return Err(TmfgError::protocol(format!(
+                "hub_q must be <= {MAX_HUBS}, got {q}"
+            )))
+        }
+        q => q,
+    };
+    let hub_radius = match opt_finite_f64(j, "hub_radius")? {
+        Some(r) if !(0.0..=MAX_HUB_RADIUS).contains(&r) => {
+            return Err(TmfgError::protocol(format!(
+                "hub_radius must be in 0..={MAX_HUB_RADIUS}, got {r}"
+            )))
+        }
+        r => r,
+    };
+    let hub = if hub_n.is_some() || hub_q.is_some() || hub_radius.is_some() {
+        let mut cfg = HubConfig::default();
+        if let Some(h) = hub_n {
+            cfg.n_hubs = h;
+        }
+        if let Some(r) = hub_radius {
+            cfg.radius_mult = r as f32;
+        }
+        if let Some(q) = hub_q {
+            cfg.hubs_per_vertex = q;
+        }
+        Some(cfg)
+    } else {
+        None
+    };
     let max_series = if sparse_k.is_some() { MAX_SPARSE_BATCH_SERIES } else { MAX_BATCH_SERIES };
     let source = match j.get("dataset") {
         Json::Null => {
@@ -313,7 +384,7 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
             }
         }
     };
-    Ok(ClusterSpec { source, algo, k, sparse_k, sparse_seed })
+    Ok(ClusterSpec { source, algo, k, sparse_k, sparse_seed, apsp, hub })
 }
 
 fn decode_open_stream(j: &Json) -> Result<StreamOpen, TmfgError> {
@@ -606,6 +677,48 @@ mod tests {
         ))
         .unwrap_err();
         assert_eq!(huge.code(), "protocol");
+    }
+
+    #[test]
+    fn apsp_and_hub_fields_decode() {
+        let r = Request::decode(&parse(
+            r#"{"dataset": "CBF", "apsp": "auto", "hub_n": 32, "hub_radius": 1.5, "hub_q": 8}"#,
+        ))
+        .unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert_eq!(spec.apsp, Some(ApspMode::Auto));
+        let hub = spec.hub.expect("hub config");
+        assert_eq!(hub.n_hubs, 32);
+        assert_eq!(hub.hubs_per_vertex, 8);
+        assert!((hub.radius_mult - 1.5).abs() < 1e-6);
+        // absent fields mean "no override"
+        let r = Request::decode(&parse(r#"{"dataset": "CBF"}"#)).unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert_eq!(spec.apsp, None);
+        assert!(spec.hub.is_none());
+        // partial hub overrides keep the other defaults
+        let r = Request::decode(&parse(r#"{"dataset": "CBF", "hub_n": 16}"#)).unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        let hub = spec.hub.expect("hub config");
+        assert_eq!(hub.n_hubs, 16);
+        assert_eq!(hub.hubs_per_vertex, HubConfig::default().hubs_per_vertex);
+    }
+
+    #[test]
+    fn apsp_and_hub_field_validation() {
+        for line in [
+            r#"{"dataset": "CBF", "apsp": "quantum"}"#,
+            r#"{"dataset": "CBF", "apsp": 3}"#,
+            r#"{"dataset": "CBF", "hub_n": 100000}"#,
+            r#"{"dataset": "CBF", "hub_q": 0}"#,
+            r#"{"dataset": "CBF", "hub_q": 100000}"#,
+            r#"{"dataset": "CBF", "hub_radius": -1.0}"#,
+            r#"{"dataset": "CBF", "hub_radius": 1e9}"#,
+            r#"{"dataset": "CBF", "hub_radius": 1e999}"#,
+        ] {
+            let e = Request::decode(&parse(line)).unwrap_err();
+            assert_eq!(e.code(), "protocol", "{line}");
+        }
     }
 
     #[test]

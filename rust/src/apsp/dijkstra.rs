@@ -9,7 +9,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 #[derive(PartialEq)]
-struct QItem {
+pub(crate) struct QItem {
     dist: f32,
     v: u32,
 }
@@ -40,8 +40,22 @@ pub fn sssp(g: &CsrGraph, src: u32) -> Vec<f32> {
 /// `dist` must be pre-filled with INFINITY; entries settled within the
 /// radius are written. Returns the number of settled vertices.
 pub fn sssp_into(g: &CsrGraph, src: u32, radius: f32, dist: &mut [f32]) -> usize {
-    debug_assert_eq!(dist.len(), g.n);
     let mut heap = BinaryHeap::with_capacity(64);
+    sssp_into_heap(g, src, radius, dist, &mut heap)
+}
+
+/// [`sssp_into`] with a caller-owned heap, so a loop over many sources
+/// reuses one allocation (§Perf L3 pattern: per-chunk scratch, not
+/// per-source). The heap is drained on return.
+pub(crate) fn sssp_into_heap(
+    g: &CsrGraph,
+    src: u32,
+    radius: f32,
+    dist: &mut [f32],
+    heap: &mut BinaryHeap<QItem>,
+) -> usize {
+    debug_assert_eq!(dist.len(), g.n);
+    heap.clear();
     dist[src as usize] = 0.0;
     heap.push(QItem { dist: 0.0, v: src });
     let mut settled = 0usize;
@@ -111,16 +125,21 @@ pub fn sssp_ball(
 
 /// Exact APSP as a dense n×n matrix: parallel over sources, each source
 /// settling distances directly into its output row (no per-source
-/// scratch allocation — §Perf L3 iteration 1).
+/// scratch allocation — §Perf L3 iteration 1). Sources run in chunks so
+/// the Dijkstra heap is allocated once per chunk and reused, mirroring
+/// the truncated-ball scratch reuse in `apsp_hub` (§Perf L3 iter. 3).
 pub fn apsp_exact(g: &CsrGraph) -> Matrix {
     let n = g.n;
     let mut out = Matrix::zeros(n, n);
     let op = SendPtr(out.data.as_mut_ptr());
-    parlay::parallel_for(n, 1, |src| {
-        // SAFETY: row `src` written only by this iteration.
-        let row = unsafe { std::slice::from_raw_parts_mut(op.ptr().add(src * n), n) };
-        row.fill(f32::INFINITY);
-        sssp_into(g, src as u32, f32::INFINITY, row);
+    parlay::parallel_for_chunks(n, 4, |lo, hi| {
+        let mut heap = BinaryHeap::with_capacity(256);
+        for src in lo..hi {
+            // SAFETY: row `src` written only by this iteration.
+            let row = unsafe { std::slice::from_raw_parts_mut(op.ptr().add(src * n), n) };
+            row.fill(f32::INFINITY);
+            sssp_into_heap(g, src as u32, f32::INFINITY, row, &mut heap);
+        }
     });
     out
 }

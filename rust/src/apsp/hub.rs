@@ -33,34 +33,75 @@ impl Default for HubConfig {
     }
 }
 
-fn pick_hubs(n: usize, h: usize) -> Vec<u32> {
+pub(crate) fn pick_hubs(n: usize, h: usize) -> Vec<u32> {
     // Deterministic stratified pick: evenly spaced vertex ids. Vertex ids
     // carry no geometric meaning, so this is a uniform sample.
     let h = h.min(n).max(1);
     (0..h).map(|i| ((i * n) / h) as u32).collect()
 }
 
-/// Approximate APSP as a dense n×n matrix.
-pub fn apsp_hub(g: &CsrGraph, cfg: &HubConfig) -> Matrix {
-    let n = g.n;
-    let h = if cfg.n_hubs == 0 {
+/// The hub count a config resolves to on an n-vertex graph.
+pub(crate) fn resolve_hub_count(n: usize, cfg: &HubConfig) -> usize {
+    if cfg.n_hubs == 0 {
         ((n as f64).sqrt().ceil() as usize).clamp(4, 64).min(n)
     } else {
         cfg.n_hubs.min(n)
-    };
-    let hubs = pick_hubs(n, h);
+    }
+}
 
-    // Exact distances from each hub (parallel over hubs): h × n.
-    let hub_rows: Vec<Vec<f32>> = parlay::par_map(h, 1, |k| sssp(g, hubs[k]));
+/// Exact distances from each hub (parallel over hubs), flattened h×n.
+pub(crate) fn compute_hub_rows(g: &CsrGraph, hubs: &[u32]) -> Vec<f32> {
+    let rows: Vec<Vec<f32>> = parlay::par_map(hubs.len(), 1, |k| sssp(g, hubs[k]));
+    rows.into_iter().flatten().collect()
+}
 
-    // Per vertex: its q nearest hubs (by hub distance).
-    let q = cfg.hubs_per_vertex.clamp(1, h);
-    let nearest: Vec<Vec<(f32, u32)>> = parlay::par_map(n, 64, |u| {
-        let mut hd: Vec<(f32, u32)> = (0..h).map(|k| (hub_rows[k][u], k as u32)).collect();
+/// Per vertex: its q nearest hubs (by hub distance, stable over hub
+/// index on ties), flattened n×q. Shared by the dense [`apsp_hub`] and
+/// the [`super::oracle::HubOracle`] so their estimates agree
+/// bit-for-bit.
+pub(crate) fn compute_nearest_hubs(
+    hub_rows: &[f32],
+    n: usize,
+    q: usize,
+) -> Vec<(f32, u32)> {
+    let h = if n == 0 { 0 } else { hub_rows.len() / n };
+    let per: Vec<Vec<(f32, u32)>> = parlay::par_map(n, 64, |u| {
+        let mut hd: Vec<(f32, u32)> =
+            (0..h).map(|k| (hub_rows[k * n + u], k as u32)).collect();
         hd.sort_by(|a, b| a.0.total_cmp(&b.0));
         hd.truncate(q);
         hd
     });
+    per.into_iter().flatten().collect()
+}
+
+/// The far-pair upper-bound row: `out[v] = min over near hubs H of
+/// d(·,H) + d(H,v)` — assign from the nearest hub, fold `min` over the
+/// rest. The one implementation behind both [`apsp_hub`]'s row pass and
+/// [`super::oracle::HubOracle::row_into`], so their bit-identity holds
+/// by construction rather than by manual sync.
+pub(crate) fn hub_bound_row(near: &[(f32, u32)], hub_rows: &[f32], n: usize, out: &mut [f32]) {
+    let (d0, k0) = near[0];
+    let h0 = &hub_rows[k0 as usize * n..(k0 as usize + 1) * n];
+    for v in 0..n {
+        out[v] = d0 + h0[v];
+    }
+    for &(d, k) in &near[1..] {
+        let hr = &hub_rows[k as usize * n..(k as usize + 1) * n];
+        for v in 0..n {
+            out[v] = out[v].min(d + hr[v]);
+        }
+    }
+}
+
+/// Approximate APSP as a dense n×n matrix.
+pub fn apsp_hub(g: &CsrGraph, cfg: &HubConfig) -> Matrix {
+    let n = g.n;
+    let h = resolve_hub_count(n, cfg);
+    let hubs = pick_hubs(n, h);
+    let hub_rows = compute_hub_rows(g, &hubs);
+    let q = cfg.hubs_per_vertex.clamp(1, h);
+    let nearest = compute_nearest_hubs(&hub_rows, n, q);
 
     let mut out = Matrix::zeros(n, n);
     let op = SendPtr(out.data.as_mut_ptr());
@@ -73,24 +114,12 @@ pub fn apsp_hub(g: &CsrGraph, cfg: &HubConfig) -> Matrix {
         let mut dist = vec![f32::INFINITY; n];
         let mut touched: Vec<u32> = Vec::with_capacity(256);
         for u in lo..hi {
-            let near = &nearest_ref[u];
+            let near = &nearest_ref[u * q..(u + 1) * q];
             let d_hub0 = near[0].0;
             // Far-pair estimate through the q nearest hubs: one unit-stride
             // pass per hub row (auto-vectorizable min).
             let row_out = unsafe { std::slice::from_raw_parts_mut(op.ptr().add(u * n), n) };
-            {
-                let (d0, k0) = near[0];
-                let h0 = &hub_rows_ref[k0 as usize];
-                for v in 0..n {
-                    row_out[v] = d0 + h0[v];
-                }
-            }
-            for &(du_h, k) in &near[1..] {
-                let hr = &hub_rows_ref[k as usize];
-                for v in 0..n {
-                    row_out[v] = row_out[v].min(du_h + hr[v]);
-                }
-            }
+            hub_bound_row(near, hub_rows_ref, n, row_out);
             // Exact ball overwrite (sparse reset).
             let radius = if d_hub0.is_finite() {
                 cfg.radius_mult * d_hub0
@@ -113,10 +142,14 @@ pub fn apsp_hub(g: &CsrGraph, cfg: &HubConfig) -> Matrix {
     // Symmetrize (the hub estimate is not perfectly symmetric because the
     // per-source hub subsets differ): take the elementwise min, which can
     // only tighten the upper bound. Tiled B×B so the transposed accesses
-    // stay cache-resident (§Perf L3 iter. 4).
+    // stay cache-resident (§Perf L3 iter. 4). All access goes through one
+    // raw pointer — a shared `&out.data` alongside `SendPtr` writes to
+    // the same buffer would be UB under the aliasing rules. Each
+    // unordered cell pair (i,j)/(j,i) belongs to exactly one (bi, bj)
+    // block pair with bi ≤ bj, handled by task bi alone, so no cell is
+    // read or written by two tasks.
     const B: usize = 64;
-    let odata = &out.data;
-    let op2 = SendPtr(out.data.as_ptr() as *mut f32);
+    let op2 = SendPtr(out.data.as_mut_ptr());
     let nblk = n.div_ceil(B);
     parlay::parallel_for(nblk, 1, |bi| {
         let i0 = bi * B;
@@ -127,8 +160,8 @@ pub fn apsp_hub(g: &CsrGraph, cfg: &HubConfig) -> Matrix {
             for i in i0..i1 {
                 let jstart = if bi == bj { i + 1 } else { j0 };
                 for j in jstart..j1 {
-                    let m = odata[i * n + j].min(odata[j * n + i]);
                     unsafe {
+                        let m = op2.read(i * n + j).min(op2.read(j * n + i));
                         op2.write(i * n + j, m);
                         op2.write(j * n + i, m);
                     }

@@ -1,17 +1,36 @@
-//! All-pairs shortest paths on the TMFG.
+//! All-pairs shortest paths on the TMFG, served through a streaming
+//! oracle.
 //!
 //! DBHT measures connection strength by shortest-path distance in the
-//! filtered graph (edge length = √(2(1−ρ))). The exact solver runs one
-//! Dijkstra per source in parallel (as in Yu & Shun); the approximate
-//! solver implements the paper's §4.3 hub scheme — exact distances from a
-//! small hub set plus exact truncated balls around every vertex, with
-//! far-pair distances approximated through hubs — which the paper reports
-//! speeds the APSP stage up 2–3× without hurting clustering accuracy.
+//! filtered graph (edge length = √(2(1−ρ))). Consumers never hold an
+//! n×n buffer by contract: they read distances through the
+//! [`ApspOracle`] trait (`at(u, v)` point lookups plus
+//! `row_into(u, &mut buf)` row streaming), and the backend decides what
+//! is actually resident:
+//!
+//! * **Exact** — one binary-heap Dijkstra per source in parallel (as in
+//!   Yu & Shun), materialized once into a dense matrix and wrapped in a
+//!   [`DenseOracle`]. O(n²) memory, the reference answer.
+//! * **Approximate (hub)** — the paper's §4.3 scheme: exact distances
+//!   from a small hub set plus exact truncated balls around every
+//!   vertex, far pairs approximated through hubs (reported to speed the
+//!   APSP stage 2–3× at unchanged clustering accuracy). Two forms:
+//!   [`apsp_hub`] materializes the dense matrix (small n, tests,
+//!   benches); [`HubOracle`] keeps only the O(n·(h + ball)) hub
+//!   structure and derives rows on demand — bit-identical numbers,
+//!   including the symmetrization pass, without the n² buffer. This is
+//!   what lets DBHT memory scale with the sparse large-n pipeline
+//!   (n = 2²⁰ would need a 4 TiB dense matrix).
+//!
+//! The mode→backend policy (exact / approx / auto-by-size) lives in
+//! [`crate::api::plan::build_apsp_oracle`].
 
 pub mod dijkstra;
 pub mod graph;
 pub mod hub;
+pub mod oracle;
 
 pub use dijkstra::{apsp_exact, sssp};
 pub use graph::CsrGraph;
 pub use hub::{apsp_hub, HubConfig};
+pub use oracle::{exact_oracle, ApspOracle, DenseOracle, HubOracle, OracleKind};

@@ -1,0 +1,499 @@
+//! [`ApspOracle`] — streaming access to the all-pairs shortest-path
+//! distances without committing to an n×n buffer.
+//!
+//! Every APSP consumer (DBHT basin assignment, the three HAC layers, the
+//! plan artifact) reads distances through this trait:
+//!
+//! * [`DenseOracle`] wraps a fully materialized [`Matrix`] (exact APSP,
+//!   or a precomputed hub matrix in tests) — `at` is one load, `row_into`
+//!   a row copy. Bit-for-bit the pre-oracle behavior.
+//! * [`HubOracle`] stores only the §4.3 hub structure — h exact hub
+//!   distance rows, each vertex's q nearest hubs, and the exact local
+//!   balls in a CSR side structure — and materializes any row or entry on
+//!   demand. Memory is O(n·(h + ball)) instead of O(n²); the numbers are
+//!   **bit-identical** to the dense [`super::apsp_hub`] matrix (pinned in
+//!   this module's tests and in `rust/tests/determinism.rs`), including
+//!   its elementwise-min symmetrization pass, which the oracle performs
+//!   on the fly per query.
+//!
+//! The memory win is what lets DBHT scale with the sparse large-n
+//! pipeline: at n = 2²⁰ the dense matrix would be 4 TiB; the hub
+//! structure is a few hundred MiB.
+
+use super::dijkstra::sssp_ball;
+use super::graph::CsrGraph;
+use super::hub::{
+    compute_hub_rows, compute_nearest_hubs, hub_bound_row, pick_hubs, resolve_hub_count, HubConfig,
+};
+use crate::data::matrix::Matrix;
+use crate::parlay;
+
+/// Which backend an oracle is (reported by the service's `stats`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OracleKind {
+    /// Fully materialized n×n matrix.
+    Dense,
+    /// Hub rows + exact balls, rows materialized on demand.
+    Hub,
+}
+
+impl OracleKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OracleKind::Dense => "dense",
+            OracleKind::Hub => "hub",
+        }
+    }
+}
+
+/// Read access to the APSP distance structure of the filtered graph.
+///
+/// Implementations are symmetric with a zero diagonal. `at` and
+/// `row_into` agree: `row_into(u, buf)` leaves `buf[v] == at(u, v)`
+/// bit-for-bit for every `v`.
+pub trait ApspOracle: Send + Sync {
+    /// Number of vertices.
+    fn n(&self) -> usize;
+
+    /// d(u, v).
+    fn at(&self, u: usize, v: usize) -> f32;
+
+    /// Materialize row u into `buf` (`buf.len() == n()`). O(n) output,
+    /// no allocation — the streaming primitive DBHT's row-block
+    /// consumers use.
+    fn row_into(&self, u: usize, buf: &mut [f32]);
+
+    /// Approximate resident bytes of the backing store (budget checks
+    /// and service reporting).
+    fn bytes(&self) -> usize;
+
+    fn kind(&self) -> OracleKind;
+
+    /// The dense matrix when this oracle is backed by one — consumers
+    /// use it to read rows zero-copy and to skip per-entry virtual
+    /// dispatch; `None` on streaming backends.
+    fn as_dense(&self) -> Option<&Matrix> {
+        None
+    }
+}
+
+/// An [`ApspOracle`] over a fully materialized distance matrix.
+#[derive(Debug, Clone)]
+pub struct DenseOracle {
+    m: Matrix,
+}
+
+impl DenseOracle {
+    pub fn new(m: Matrix) -> DenseOracle {
+        debug_assert_eq!(m.rows, m.cols);
+        DenseOracle { m }
+    }
+}
+
+impl ApspOracle for DenseOracle {
+    fn n(&self) -> usize {
+        self.m.rows
+    }
+
+    #[inline]
+    fn at(&self, u: usize, v: usize) -> f32 {
+        self.m.at(u, v)
+    }
+
+    fn row_into(&self, u: usize, buf: &mut [f32]) {
+        buf.copy_from_slice(self.m.row(u));
+    }
+
+    fn bytes(&self) -> usize {
+        self.m.data.len() * 4
+    }
+
+    fn kind(&self) -> OracleKind {
+        OracleKind::Dense
+    }
+
+    fn as_dense(&self) -> Option<&Matrix> {
+        Some(&self.m)
+    }
+}
+
+/// The §4.3 hub structure held resident, every distance derived on
+/// demand — the streaming analog of [`super::apsp_hub`].
+///
+/// Per query (s, t) the estimate is exactly the dense builder's:
+/// t ∈ ball(s) → the exact truncated-Dijkstra value; otherwise the
+/// minimum of d(s,H) + d(H,t) over s's q nearest hubs — and the final
+/// value is `est(s,t).min(est(t,s))`, the dense symmetrization pass
+/// applied per entry. The transpose ball index makes the symmetrized
+/// `row_into` a single merge scan instead of n binary searches.
+pub struct HubOracle {
+    n: usize,
+    /// Nearest-hub count per vertex (`near` is n×q, flattened).
+    q: usize,
+    /// h exact hub rows, flattened h×n.
+    hub_rows: Vec<f32>,
+    /// (distance to hub, hub slot) per vertex, q entries each, sorted by
+    /// distance — identical construction to the dense builder's.
+    near: Vec<(f32, u32)>,
+    /// Exact-ball CSR: for source u, the (target, distance) pairs with
+    /// distance ≤ u's radius, targets ascending, self excluded.
+    ball_ptr: Vec<usize>,
+    ball_cols: Vec<u32>,
+    ball_vals: Vec<f32>,
+    /// Transpose of the ball CSR: for target t, the (source, distance)
+    /// pairs with t ∈ ball(source), sources ascending.
+    tball_ptr: Vec<usize>,
+    tball_cols: Vec<u32>,
+    tball_vals: Vec<f32>,
+}
+
+impl HubOracle {
+    /// Build the hub structure for `g`. Deterministic: every component
+    /// (hub choice, hub rows, nearest lists, balls) is a pure function
+    /// of the graph and config, independent of the thread count.
+    pub fn build(g: &CsrGraph, cfg: &HubConfig) -> HubOracle {
+        let n = g.n;
+        let h = resolve_hub_count(n, cfg);
+        let hubs = pick_hubs(n, h);
+        let hub_rows = compute_hub_rows(g, &hubs);
+        let q = cfg.hubs_per_vertex.clamp(1, h);
+        let near = compute_nearest_hubs(&hub_rows, n, q);
+
+        // Exact local balls, radius α·d(u, nearest hub) — the same
+        // truncated Dijkstra the dense builder overwrites rows with,
+        // kept as a CSR side structure instead. Scratch (dist array +
+        // touched list) is reused per chunk and reset sparsely.
+        let near_ref = &near;
+        let radius_mult = cfg.radius_mult;
+        let balls: Vec<Vec<(u32, f32)>> = parlay::par_map_scratch(
+            n,
+            4,
+            |u, scratch: &mut (Vec<f32>, Vec<u32>)| {
+                let (dist, touched) = scratch;
+                if dist.len() != n {
+                    dist.clear();
+                    dist.resize(n, f32::INFINITY);
+                }
+                let d_hub0 = near_ref[u * q].0;
+                let radius = if d_hub0.is_finite() {
+                    radius_mult * d_hub0
+                } else {
+                    f32::INFINITY
+                };
+                sssp_ball(g, u as u32, radius, dist, touched);
+                let mut ball: Vec<(u32, f32)> = Vec::with_capacity(touched.len());
+                for &v in touched.iter() {
+                    let dv = dist[v as usize];
+                    if dv <= radius && v as usize != u {
+                        ball.push((v, dv));
+                    }
+                    dist[v as usize] = f32::INFINITY;
+                }
+                touched.clear();
+                ball.sort_unstable_by_key(|&(v, _)| v);
+                ball
+            },
+        );
+
+        // Assemble the ball CSR and its transpose (counting sort over
+        // targets; iterating sources in order keeps each transpose row
+        // sorted by source).
+        let mut ball_ptr = vec![0usize; n + 1];
+        for (u, b) in balls.iter().enumerate() {
+            ball_ptr[u + 1] = ball_ptr[u] + b.len();
+        }
+        let nnz = ball_ptr[n];
+        let mut ball_cols = vec![0u32; nnz];
+        let mut ball_vals = vec![0f32; nnz];
+        let mut tdeg = vec![0usize; n];
+        for (u, b) in balls.iter().enumerate() {
+            let base = ball_ptr[u];
+            for (i, &(v, d)) in b.iter().enumerate() {
+                ball_cols[base + i] = v;
+                ball_vals[base + i] = d;
+                tdeg[v as usize] += 1;
+            }
+        }
+        let mut tball_ptr = vec![0usize; n + 1];
+        for v in 0..n {
+            tball_ptr[v + 1] = tball_ptr[v] + tdeg[v];
+        }
+        let mut cursor = tball_ptr[..n].to_vec();
+        let mut tball_cols = vec![0u32; nnz];
+        let mut tball_vals = vec![0f32; nnz];
+        for (u, b) in balls.iter().enumerate() {
+            for &(v, d) in b {
+                let c = cursor[v as usize];
+                tball_cols[c] = u as u32;
+                tball_vals[c] = d;
+                cursor[v as usize] += 1;
+            }
+        }
+
+        HubOracle {
+            n,
+            q,
+            hub_rows,
+            near,
+            ball_ptr,
+            ball_cols,
+            ball_vals,
+            tball_ptr,
+            tball_cols,
+            tball_vals,
+        }
+    }
+
+    /// Number of hubs.
+    pub fn n_hubs(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            self.hub_rows.len() / self.n
+        }
+    }
+
+    /// Source u's exact ball: (targets ascending, distances). Exposed so
+    /// tests can pin the "exact within balls" property.
+    pub fn ball(&self, u: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.ball_ptr[u], self.ball_ptr[u + 1]);
+        (&self.ball_cols[a..b], &self.ball_vals[a..b])
+    }
+
+    fn tball(&self, t: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.tball_ptr[t], self.tball_ptr[t + 1]);
+        (&self.tball_cols[a..b], &self.tball_vals[a..b])
+    }
+
+    #[inline]
+    fn hub_row(&self, k: usize) -> &[f32] {
+        &self.hub_rows[k * self.n..(k + 1) * self.n]
+    }
+
+    #[inline]
+    fn near_of(&self, u: usize) -> &[(f32, u32)] {
+        &self.near[u * self.q..(u + 1) * self.q]
+    }
+
+    /// min over s's nearest hubs H of d(s,H) + d(H,t) — the far-pair
+    /// upper bound. `f32::min` is exact, so the fold order cannot change
+    /// the bits vs the dense builder's row pass.
+    #[inline]
+    fn hub_min(&self, s: usize, t: usize) -> f32 {
+        let near = self.near_of(s);
+        let mut best = near[0].0 + self.hub_row(near[0].1 as usize)[t];
+        for &(d, k) in &near[1..] {
+            best = best.min(d + self.hub_row(k as usize)[t]);
+        }
+        best
+    }
+
+    /// The pre-symmetrization estimate — exactly what the dense builder
+    /// holds at (s, t) before its min pass: the ball value when t is in
+    /// s's ball (an overwrite, not a min), the hub bound otherwise.
+    #[inline]
+    fn est(&self, s: usize, t: usize) -> f32 {
+        let (bc, bv) = self.ball(s);
+        match bc.binary_search(&(t as u32)) {
+            Ok(i) => bv[i],
+            Err(_) => self.hub_min(s, t),
+        }
+    }
+}
+
+impl ApspOracle for HubOracle {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn at(&self, u: usize, v: usize) -> f32 {
+        if u == v {
+            return 0.0;
+        }
+        self.est(u, v).min(self.est(v, u))
+    }
+
+    fn row_into(&self, u: usize, buf: &mut [f32]) {
+        let n = self.n;
+        debug_assert_eq!(buf.len(), n);
+        // Row estimate, the dense builder's own pass: the shared hub
+        // upper-bound fold, then the exact-ball overwrite and the zeroed
+        // diagonal.
+        hub_bound_row(self.near_of(u), &self.hub_rows, n, buf);
+        let (bc, bv) = self.ball(u);
+        for (i, &v) in bc.iter().enumerate() {
+            buf[v as usize] = bv[i];
+        }
+        buf[u] = 0.0;
+        // The dense builder's symmetrization, per entry: min with the
+        // (v, u) estimate. The transpose ball rows are sorted by source,
+        // so one merge pointer replaces n binary searches.
+        let (tc, tv) = self.tball(u);
+        let mut p = 0usize;
+        for v in 0..n {
+            if v == u {
+                continue;
+            }
+            let col = if p < tc.len() && tc[p] as usize == v {
+                let x = tv[p];
+                p += 1;
+                x
+            } else {
+                self.hub_min(v, u)
+            };
+            buf[v] = buf[v].min(col);
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        self.hub_rows.len() * 4
+            + self.near.len() * 8
+            + (self.ball_ptr.len() + self.tball_ptr.len()) * 8
+            + (self.ball_cols.len() + self.tball_cols.len()) * 4
+            + (self.ball_vals.len() + self.tball_vals.len()) * 4
+    }
+
+    fn kind(&self) -> OracleKind {
+        OracleKind::Hub
+    }
+}
+
+/// A [`DenseOracle`] holding the exact APSP of `g` — the Exact-mode
+/// backend, kept here so the mode→oracle mapping lives next to the
+/// implementations.
+pub fn exact_oracle(g: &CsrGraph) -> DenseOracle {
+    DenseOracle::new(super::dijkstra::apsp_exact(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::dijkstra::apsp_exact;
+    use super::super::hub::apsp_hub;
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn tmfg_graph(n: usize, seed: u64) -> CsrGraph {
+        let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = crate::tmfg::heap_tmfg(&s, &Default::default()).unwrap();
+        CsrGraph::from_tmfg(&r, &s)
+    }
+
+    fn assert_oracle_matches_matrix(o: &dyn ApspOracle, m: &Matrix, ctx: &str) {
+        let n = m.rows;
+        assert_eq!(o.n(), n, "{ctx}");
+        let mut buf = vec![0f32; n];
+        for u in 0..n {
+            o.row_into(u, &mut buf);
+            for v in 0..n {
+                assert_eq!(
+                    o.at(u, v).to_bits(),
+                    m.at(u, v).to_bits(),
+                    "{ctx}: at({u},{v}) {} vs {}",
+                    o.at(u, v),
+                    m.at(u, v)
+                );
+                assert_eq!(
+                    buf[v].to_bits(),
+                    m.at(u, v).to_bits(),
+                    "{ctx}: row_into({u})[{v}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_oracle_matches_matrix() {
+        let g = tmfg_graph(60, 3);
+        let m = apsp_exact(&g);
+        let o = DenseOracle::new(m.clone());
+        assert_oracle_matches_matrix(&o, &m, "dense");
+        assert_eq!(o.kind(), OracleKind::Dense);
+        assert!(o.as_dense().is_some());
+        assert_eq!(o.bytes(), 60 * 60 * 4);
+    }
+
+    #[test]
+    fn hub_oracle_bit_identical_to_hub_matrix() {
+        for (n, seed) in [(80usize, 5u64), (121, 9)] {
+            let g = tmfg_graph(n, seed);
+            for cfg in [
+                HubConfig::default(),
+                HubConfig { n_hubs: 7, radius_mult: 1.0, hubs_per_vertex: 2 },
+                HubConfig { n_hubs: 16, radius_mult: 0.0, hubs_per_vertex: 16 },
+            ] {
+                let m = apsp_hub(&g, &cfg);
+                let o = HubOracle::build(&g, &cfg);
+                assert_oracle_matches_matrix(&o, &m, &format!("n={n} seed={seed} {cfg:?}"));
+                assert_eq!(o.kind(), OracleKind::Hub);
+                assert!(o.as_dense().is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn hub_oracle_on_disconnected_graph() {
+        // Two components: distances across must be INF, within exact-ish.
+        let mut edges: Vec<(u32, u32, f32)> =
+            (0..9u32).map(|i| (i, i + 1, 1.0)).collect();
+        edges.extend((11..19u32).map(|i| (i, i + 1, 0.5)));
+        let g = CsrGraph::from_edges(20, &edges);
+        let m = apsp_hub(&g, &HubConfig::default());
+        let o = HubOracle::build(&g, &HubConfig::default());
+        assert_oracle_matches_matrix(&o, &m, "disconnected");
+    }
+
+    #[test]
+    fn hub_oracle_exact_when_every_vertex_is_a_hub() {
+        let g = tmfg_graph(40, 7);
+        let cfg = HubConfig { n_hubs: 40, hubs_per_vertex: 40, radius_mult: 0.0 };
+        let o = HubOracle::build(&g, &cfg);
+        let exact = apsp_exact(&g);
+        for u in 0..40 {
+            for v in 0..40 {
+                assert!(
+                    (o.at(u, v) - exact.at(u, v)).abs() < 1e-5,
+                    "({u},{v}): {} vs {}",
+                    o.at(u, v),
+                    exact.at(u, v)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hub_oracle_memory_beats_dense() {
+        // Ball sizes are data-dependent (radius is α·d to the nearest
+        // hub), so the bound is pinned at α = 1, where a ball holds only
+        // vertices closer than the nearest hub; the end-to-end budget
+        // pin lives in rust/tests/sparse.rs.
+        let g = tmfg_graph(512, 11);
+        let o = HubOracle::build(&g, &HubConfig { radius_mult: 1.0, ..Default::default() });
+        let dense_bytes = 512 * 512 * 4;
+        assert!(
+            o.bytes() * 2 < dense_bytes,
+            "hub oracle {} bytes vs dense {dense_bytes}",
+            o.bytes()
+        );
+        assert!(o.n_hubs() >= 4);
+    }
+
+    #[test]
+    fn ball_entries_are_exact() {
+        let g = tmfg_graph(100, 13);
+        let o = HubOracle::build(&g, &HubConfig::default());
+        let exact = apsp_exact(&g);
+        let mut total = 0usize;
+        for u in 0..100 {
+            let (bc, bv) = o.ball(u);
+            total += bc.len();
+            for (i, &v) in bc.iter().enumerate() {
+                assert!(
+                    (bv[i] - exact.at(u, v as usize)).abs() < 1e-5,
+                    "ball({u}) entry {v}"
+                );
+            }
+        }
+        assert!(total > 0, "balls must not be empty on a connected TMFG");
+    }
+}

@@ -15,16 +15,21 @@
 //! responses gain "sparse_k"/"sparse_nnz"/"sparse_fallbacks"):
 //!   {"id": 7, "dataset": "synth-large-16384", "sparse_k": 32,
 //!    "sparse_seed": 1, "k": 16}
+//! APSP control: {"apsp": "exact"|"approx"|"auto"} overrides the
+//! algorithm's default mode; {"hub_n": 32, "hub_radius": 2.0,
+//! "hub_q": 4} tune the streaming hub oracle (approx/auto modes run it
+//! with O(n·h) memory — no n×n distance matrix on the worker).
 //! Special: {"cmd": "ping"} → {"ok": true}, {"cmd": "shutdown"},
 //! {"cmd": "stats"} → {"ok": true, "workers": ..., "queue_depth": ...,
 //! "jobs": ..., "open_streams": ..., "sparse_requests": ...,
-//! "dense_requests": ..., "cache_hits": ..., "cache_misses":
+//! "dense_requests": ..., "oracle_dense": ..., "oracle_hub": ...,
+//! "cache_hits": ..., "cache_misses":
 //! ..., "cache_hit_ratio": ..., "cache_bytes": ..., "stages": {...}}.
 //! Optional: {"v": 1, ...} pins the protocol version.
 //!
 //! Response: {"id": 7, "ok": true, "labels": [...], "ari": 0.4,
-//!            "secs": 0.01, "algo": "opt-tdbht", "batch": 3,
-//!            "cache": "hit"|"miss"}
+//!            "secs": 0.01, "algo": "opt-tdbht", "oracle":
+//!            "dense"|"hub", "batch": 3, "cache": "hit"|"miss"}
 //!   (`cache` is present when the artifact cache is enabled: "hit" means
 //!   the Similarity→TMFG artifacts were served from the cross-request
 //!   cache and only the cheap downstream stages ran.)
@@ -250,6 +255,11 @@ struct ServiceState {
     sparse_requests: AtomicU64,
     /// Batch clustering requests that ran the dense pipeline.
     dense_requests: AtomicU64,
+    /// Completed batch requests whose APSP stage used the dense oracle.
+    oracle_dense: AtomicU64,
+    /// Completed batch requests whose APSP stage used the streaming hub
+    /// oracle (no n×n allocation).
+    oracle_hub: AtomicU64,
     /// Cumulative per-stage wall-clock across every request.
     stages: Mutex<Breakdown>,
 }
@@ -292,6 +302,14 @@ impl ServiceState {
             (
                 "dense_requests",
                 Json::Num(self.dense_requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "oracle_dense",
+                Json::Num(self.oracle_dense.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "oracle_hub",
+                Json::Num(self.oracle_hub.load(Ordering::Relaxed) as f64),
             ),
         ];
         if let Some(cache) = &self.cache {
@@ -371,6 +389,13 @@ fn run_cluster(
         // decode() validated 1 <= sparse_k <= MAX_SPARSE_K.
         req = req.sparse_knn(sk, spec.sparse_seed.unwrap_or(crate::sparse::DEFAULT_KNN_SEED));
     }
+    if let Some(mode) = spec.apsp {
+        req = req.apsp(mode);
+    }
+    if let Some(hub) = spec.hub {
+        // decode() capped hub_n/hub_q <= MAX_HUBS, hub_radius finite.
+        req = req.hub(hub);
+    }
     if let Some(c) = cache {
         req = req.cache(c.clone());
     }
@@ -399,12 +424,21 @@ fn process(
                     &TmfgError::invariant("run produced no labels"),
                 );
             };
+            match out.oracle {
+                crate::apsp::OracleKind::Dense => {
+                    state.oracle_dense.fetch_add(1, Ordering::Relaxed)
+                }
+                crate::apsp::OracleKind::Hub => {
+                    state.oracle_hub.fetch_add(1, Ordering::Relaxed)
+                }
+            };
             state.stages.lock().unwrap().merge(&out.breakdown);
             let mut fields = vec![
                 ("labels", Json::arr_usize(&labels)),
                 ("ari", out.ari.map(Json::Num).unwrap_or(Json::Null)),
                 ("secs", Json::Num(t.elapsed())),
                 ("algo", Json::str(&out.algo.name())),
+                ("oracle", Json::str(out.oracle.name())),
                 ("batch", Json::Num(batch_size as f64)),
             ];
             if let Some(sp) = out.sparse {
@@ -643,6 +677,8 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
         open_streams: AtomicUsize::new(0),
         sparse_requests: AtomicU64::new(0),
         dense_requests: AtomicU64::new(0),
+        oracle_dense: AtomicU64::new(0),
+        oracle_hub: AtomicU64::new(0),
         stages: Mutex::new(Breakdown::new()),
     });
     let cfg = Arc::new(ServiceConfig { addr: addr.clone(), ..cfg });

@@ -13,7 +13,8 @@
 
 use super::bubble::BubbleTree;
 use super::direction::Directions;
-use crate::data::matrix::{Matrix, SimilarityLookup};
+use crate::apsp::ApspOracle;
+use crate::data::matrix::SimilarityLookup;
 use crate::error::TmfgError;
 use crate::parlay;
 
@@ -81,14 +82,14 @@ fn compute_basins(bt: &BubbleTree, dir: &Directions) -> Result<Vec<u32>, TmfgErr
 }
 
 /// Full assignment: basins, vertex→basin, vertex→bubble.
-/// `apsp` is the (exact or approximate) shortest-path distance matrix;
-/// `s` any similarity store — only clique-co-member pairs (TMFG edges)
-/// are read, so a sparse candidate graph serves without densification.
+/// `apsp` is the (exact or approximate) shortest-path oracle; `s` any
+/// similarity store — only clique-co-member pairs (TMFG edges) are
+/// read, so a sparse candidate graph serves without densification.
 pub fn assign<S: SimilarityLookup + ?Sized>(
     bt: &BubbleTree,
     dir: &Directions,
     s: &S,
-    apsp: &Matrix,
+    apsp: &dyn ApspOracle,
 ) -> Result<Assignment, TmfgError> {
     let bubble_basin = compute_basins(bt, dir)?;
     let mut converging: Vec<u32> = dir.converging();
@@ -125,25 +126,45 @@ pub fn assign<S: SimilarityLookup + ?Sized>(
     }
 
     // vertex → bubble within its basin: min mean APSP distance to the
-    // bubble's clique vertices.
+    // bubble's clique vertices. Dense oracles are read in place; on a
+    // streaming oracle a vertex that must touch a large share of its
+    // APSP row (many candidate bubbles) materializes the row once into
+    // per-chunk O(n) scratch instead of paying a structured lookup per
+    // clique vertex. Either path reads identical values.
+    let n = apsp.n();
     let vb = &vertex_basin;
     let bbs = &basin_bubbles;
-    let vertex_bubble: Vec<u32> = parlay::par_map(bt.n_vertices, 16, |v| {
-        let basin = vb[v];
-        let candidates = &bbs[&basin];
-        let mut best = (f64::INFINITY, u32::MAX);
-        for &b in candidates {
-            let mut d = 0.0f64;
-            for &u in &bt.cliques[b as usize] {
-                d += apsp.at(v, u as usize) as f64;
+    let vertex_bubble: Vec<u32> =
+        parlay::par_map_scratch(bt.n_vertices, 16, |v, scratch: &mut Vec<f32>| {
+            let basin = vb[v];
+            let candidates = &bbs[&basin];
+            let row: Option<&[f32]> = if let Some(m) = apsp.as_dense() {
+                Some(m.row(v))
+            } else if candidates.len() * 4 * 2 >= n {
+                if scratch.len() != n {
+                    scratch.resize(n, 0.0);
+                }
+                apsp.row_into(v, scratch);
+                Some(scratch.as_slice())
+            } else {
+                None
+            };
+            let mut best = (f64::INFINITY, u32::MAX);
+            for &b in candidates {
+                let mut d = 0.0f64;
+                for &u in &bt.cliques[b as usize] {
+                    d += match row {
+                        Some(r) => r[u as usize] as f64,
+                        None => apsp.at(v, u as usize) as f64,
+                    };
+                }
+                d /= 4.0;
+                if d < best.0 || (d == best.0 && b < best.1) {
+                    best = (d, b);
+                }
             }
-            d /= 4.0;
-            if d < best.0 || (d == best.0 && b < best.1) {
-                best = (d, b);
-            }
-        }
-        best.1
-    });
+            best.1
+        });
 
     Ok(Assignment { converging, bubble_basin, vertex_basin, vertex_bubble })
 }
@@ -151,17 +172,18 @@ pub fn assign<S: SimilarityLookup + ?Sized>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apsp::{apsp_exact, CsrGraph};
+    use crate::apsp::{exact_oracle, CsrGraph, DenseOracle};
+    use crate::data::matrix::Matrix;
     use crate::data::synth::SynthSpec;
     use crate::dbht::direction::direct_edges;
 
-    fn setup(n: usize, seed: u64) -> (Matrix, BubbleTree, Directions, Matrix) {
+    fn setup(n: usize, seed: u64) -> (Matrix, BubbleTree, Directions, DenseOracle) {
         let ds = SynthSpec::new("t", n, 48, 3).generate(seed);
         let s = crate::data::corr::pearson_correlation(&ds.data);
         let r = crate::tmfg::heap_tmfg(&s, &Default::default()).unwrap();
         let bt = BubbleTree::new(&r);
         let dir = direct_edges(&bt, &r.adjacency(), &s);
-        let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
+        let apsp = exact_oracle(&CsrGraph::from_tmfg(&r, &s));
         (s, bt, dir, apsp)
     }
 

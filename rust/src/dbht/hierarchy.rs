@@ -2,71 +2,150 @@
 //! APSP distances at three layers — inside each bubble group, between the
 //! bubble groups of a converging basin, and between basins — combined into
 //! one dendrogram over all vertices.
+//!
+//! Distances come through the [`ApspOracle`], never an n×n matrix held
+//! by this module: the group-distance layers stream one APSP row at a
+//! time into O(n) per-chunk scratch (zero-copy on a dense oracle), and
+//! every basin's group-distance matrix is built in one parallel pass
+//! over (basin, row) tasks — the per-basin loop is only the cheap,
+//! deterministic NN-chain + merge application.
 
 use super::bubble::BubbleTree;
 use super::converging::{assign, Assignment};
 use super::dendrogram::{DendroBuilder, Dendrogram};
 use super::direction::direct_edges;
 use super::linkage::{nn_chain_hac, Linkage};
+use crate::apsp::ApspOracle;
 use crate::data::matrix::{Matrix, SimilarityLookup};
 use crate::error::TmfgError;
 use crate::parlay;
 use crate::tmfg::TmfgResult;
 use std::collections::HashMap;
 
-/// Group-level complete/single/average distance between two vertex sets
-/// under the pointwise APSP metric.
-fn group_distance(apsp: &Matrix, a: &[u32], b: &[u32], linkage: Linkage) -> f32 {
-    let mut agg: f64 = match linkage {
+/// Group-level distances from group `i` to every later group of one
+/// basin, under the pointwise APSP metric: returns d(i, j) for j > i.
+///
+/// Each member vertex's APSP row is visited once, x-major / y-minor —
+/// the same fold order (and therefore the same f64 accumulation bits)
+/// as a pairwise `at` loop. Dense oracles expose rows zero-copy; a
+/// streaming oracle materializes the row into `scratch` when the later
+/// groups will read a large share of it, and falls back to point
+/// lookups otherwise.
+fn group_row_distances(
+    apsp: &dyn ApspOracle,
+    groups: &[Vec<u32>],
+    i: usize,
+    linkage: Linkage,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    let m = groups.len();
+    let n = apsp.n();
+    let init = match linkage {
         Linkage::Single => f64::INFINITY,
         _ => 0.0,
     };
-    for &x in a {
-        for &y in b {
-            let d = apsp.at(x as usize, y as usize) as f64;
-            match linkage {
-                Linkage::Single => agg = agg.min(d),
-                Linkage::Complete => agg = agg.max(d),
-                Linkage::Average => agg += d,
+    let mut agg = vec![init; m - i - 1];
+    let dense = apsp.as_dense();
+    // Row entries the later groups will read (per member vertex).
+    let reads: usize = groups[i + 1..].iter().map(Vec::len).sum();
+    for &x in &groups[i] {
+        let row: Option<&[f32]> = if let Some(mat) = dense {
+            Some(mat.row(x as usize))
+        } else if reads * 2 >= n {
+            if scratch.len() != n {
+                scratch.resize(n, 0.0);
+            }
+            apsp.row_into(x as usize, scratch);
+            Some(&scratch[..])
+        } else {
+            None
+        };
+        for (jj, g) in groups[i + 1..].iter().enumerate() {
+            let a = &mut agg[jj];
+            for &y in g {
+                let d = match row {
+                    Some(r) => r[y as usize] as f64,
+                    None => apsp.at(x as usize, y as usize) as f64,
+                };
+                match linkage {
+                    Linkage::Single => *a = a.min(d),
+                    Linkage::Complete => *a = a.max(d),
+                    Linkage::Average => *a += d,
+                }
             }
         }
     }
     if linkage == Linkage::Average {
-        agg /= (a.len() * b.len()) as f64;
+        for (jj, g) in groups[i + 1..].iter().enumerate() {
+            agg[jj] /= (groups[i].len() * g.len()) as f64;
+        }
     }
-    agg as f32
+    agg.into_iter().map(|v| v as f32).collect()
 }
 
-/// HAC over pre-formed groups: builds the group-level distance matrix in
-/// parallel, runs NN-chain, and applies the merges to `builder` using
-/// each group's first vertex as representative.
-fn agglomerate_groups(
+/// HAC over pre-formed groups for a whole layer at once: every basin's
+/// group-level distance matrix is filled by one parallel pass over all
+/// (basin, row) tasks, then NN-chain merges are applied to `builder`
+/// sequentially in basin order (each group's first vertex is its
+/// representative) — deterministic regardless of thread count.
+fn agglomerate_layer(
     builder: &mut DendroBuilder,
-    apsp: &Matrix,
-    groups: &[Vec<u32>],
+    apsp: &dyn ApspOracle,
+    basins: &[Vec<Vec<u32>>],
     linkage: Linkage,
 ) {
-    let m = groups.len();
-    if m <= 1 {
-        return;
-    }
-    let mut d = Matrix::zeros(m, m);
+    let mut mats: Vec<Matrix> = basins
+        .iter()
+        .map(|groups| {
+            let m = groups.len();
+            if m >= 2 {
+                Matrix::zeros(m, m)
+            } else {
+                Matrix::zeros(0, 0)
+            }
+        })
+        .collect();
+    let tasks: Vec<(usize, usize)> = basins
+        .iter()
+        .enumerate()
+        .flat_map(|(b, groups)| {
+            let m = groups.len();
+            (0..m.saturating_sub(1)).map(move |i| (b, i))
+        })
+        .collect();
     {
         use crate::parlay::SendPtr;
-        let dp = SendPtr(d.data.as_mut_ptr());
-        parlay::parallel_for(m, 1, |i| {
-            for j in (i + 1)..m {
-                let v = group_distance(apsp, &groups[i], &groups[j], linkage);
-                unsafe {
-                    dp.write(i * m + j, v);
-                    dp.write(j * m + i, v);
+        let ptrs: Vec<SendPtr<f32>> =
+            mats.iter_mut().map(|m| SendPtr(m.data.as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        let tasks = &tasks;
+        parlay::parallel_for_chunks(tasks.len(), 1, |lo, hi| {
+            let mut scratch: Vec<f32> = Vec::new();
+            for t in lo..hi {
+                let (b, i) = tasks[t];
+                let groups = &basins[b];
+                let m = groups.len();
+                let row = group_row_distances(apsp, groups, i, linkage, &mut scratch);
+                for (jj, v) in row.into_iter().enumerate() {
+                    let j = i + 1 + jj;
+                    // SAFETY: cell pair (i,j)/(j,i) of basin b is written
+                    // only by task (b, i) — tasks are disjoint.
+                    unsafe {
+                        ptrs[b].write(i * m + j, v);
+                        ptrs[b].write(j * m + i, v);
+                    }
                 }
             }
         });
     }
-    let sizes: Vec<f64> = groups.iter().map(|g| g.len() as f64).collect();
-    for mg in nn_chain_hac(&d, &sizes, linkage) {
-        builder.merge(groups[mg.a as usize][0], groups[mg.b as usize][0], mg.height);
+    for (b, groups) in basins.iter().enumerate() {
+        if groups.len() <= 1 {
+            continue;
+        }
+        let sizes: Vec<f64> = groups.iter().map(|g| g.len() as f64).collect();
+        for mg in nn_chain_hac(&mats[b], &sizes, linkage) {
+            builder.merge(groups[mg.a as usize][0], groups[mg.b as usize][0], mg.height);
+        }
     }
 }
 
@@ -78,15 +157,18 @@ pub struct DbhtResult {
     pub n_converging: usize,
 }
 
-/// Run DBHT on a constructed TMFG with a precomputed APSP matrix. `s`
-/// is any similarity store (dense matrix or sparse candidate graph —
-/// DBHT only reads pairs that are TMFG edges, which both hold).
-/// Internal structural failures (an incomplete dendrogram, a dangling
-/// basin) surface as [`TmfgError::InvariantViolation`], never a panic.
+/// Run DBHT on a constructed TMFG with an APSP oracle. `s` is any
+/// similarity store (dense matrix or sparse candidate graph — DBHT only
+/// reads pairs that are TMFG edges, which both hold); `apsp` is either
+/// backend — this function allocates O(n) APSP scratch, so with a
+/// [`crate::apsp::HubOracle`] the whole DBHT stage runs in O(n·h)
+/// memory. Internal structural failures (an incomplete dendrogram, a
+/// dangling basin) surface as [`TmfgError::InvariantViolation`], never a
+/// panic.
 pub fn dbht_dendrogram<S: SimilarityLookup + ?Sized>(
     s: &S,
     tmfg: &TmfgResult,
-    apsp: &Matrix,
+    apsp: &dyn ApspOracle,
     linkage: Linkage,
 ) -> Result<DbhtResult, TmfgError> {
     let n = tmfg.n;
@@ -111,7 +193,8 @@ pub fn dbht_dendrogram<S: SimilarityLookup + ?Sized>(
     let mut keys: Vec<(u32, u32)> = groups.keys().copied().collect();
     keys.sort_unstable();
     // Precompute each group's intra merges in parallel, then apply in a
-    // deterministic order.
+    // deterministic order. Groups are small relative to n, so pointwise
+    // `at` beats materializing whole APSP rows here.
     let group_list: Vec<&Vec<u32>> = keys.iter().map(|k| &groups[k]).collect();
     let intra: Vec<Vec<super::linkage::Merge>> = parlay::par_map(group_list.len(), 1, |gi| {
         let g = group_list[gi];
@@ -137,23 +220,32 @@ pub fn dbht_dendrogram<S: SimilarityLookup + ?Sized>(
         basin_groups.entry(key.0).or_default().push(g.clone());
     }
 
-    // Layer 2: between bubble groups within each basin.
+    // Layer 2: between bubble groups within each basin — one parallel
+    // pass over every basin's group-distance rows. The group lists move
+    // out of the map (it is not read again).
     let mut basins: Vec<u32> = basin_groups.keys().copied().collect();
     basins.sort_unstable();
-    for b in &basins {
-        agglomerate_groups(&mut builder, apsp, &basin_groups[b], linkage);
-    }
+    let layer2: Vec<Vec<Vec<u32>>> = basins
+        .iter()
+        .map(|b| basin_groups.remove(b).unwrap_or_default())
+        .collect();
+    agglomerate_layer(&mut builder, apsp, &layer2, linkage);
 
     // Layer 3: between basins.
-    let basin_vertex_groups: Vec<Vec<u32>> = basins
+    let basin_vertex_groups: Vec<Vec<u32>> = layer2
         .iter()
-        .map(|b| {
-            let mut vs: Vec<u32> = basin_groups[b].iter().flatten().copied().collect();
+        .map(|groups| {
+            let mut vs: Vec<u32> = groups.iter().flatten().copied().collect();
             vs.sort_unstable();
             vs
         })
         .collect();
-    agglomerate_groups(&mut builder, apsp, &basin_vertex_groups, linkage);
+    agglomerate_layer(
+        &mut builder,
+        apsp,
+        std::slice::from_ref(&basin_vertex_groups),
+        linkage,
+    );
 
     if builder.n_merges() != n - 1 {
         return Err(TmfgError::invariant(format!(
@@ -171,7 +263,7 @@ pub fn dbht_dendrogram<S: SimilarityLookup + ?Sized>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apsp::{apsp_exact, CsrGraph};
+    use crate::apsp::{exact_oracle, CsrGraph, HubOracle};
     use crate::data::synth::SynthSpec;
     use crate::metrics::adjusted_rand_index;
     use crate::tmfg::heap_tmfg;
@@ -180,7 +272,7 @@ mod tests {
         let ds = SynthSpec::new("t", n, 64, k).with_noise(noise).generate(seed);
         let s = crate::data::corr::pearson_correlation(&ds.data);
         let r = heap_tmfg(&s, &Default::default()).unwrap();
-        let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
+        let apsp = exact_oracle(&CsrGraph::from_tmfg(&r, &s));
         let out = dbht_dendrogram(&s, &r, &apsp, Linkage::Complete).unwrap();
         (out, ds.labels, ds.n_classes)
     }
@@ -238,9 +330,34 @@ mod tests {
             let ds = SynthSpec::new("t", 40, 48, 3).generate(13);
             let s = crate::data::corr::pearson_correlation(&ds.data);
             let r = heap_tmfg(&s, &Default::default()).unwrap();
-            let apsp = apsp_exact(&CsrGraph::from_tmfg(&r, &s));
+            let apsp = exact_oracle(&CsrGraph::from_tmfg(&r, &s));
             let out = dbht_dendrogram(&s, &r, &apsp, linkage).unwrap();
             assert!(out.dendrogram.is_complete(), "{linkage:?}");
+        }
+    }
+
+    #[test]
+    fn hub_oracle_gives_same_dendrogram_as_hub_matrix_all_linkages() {
+        // The streaming backend must be indistinguishable from running
+        // DBHT on the materialized hub matrix — merge-for-merge, for
+        // every linkage (Average exercises the f64 accumulation-order
+        // contract of the row-streaming group distances).
+        use crate::apsp::{apsp_hub, DenseOracle, HubConfig};
+        let ds = SynthSpec::new("t", 90, 48, 3).generate(17);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = heap_tmfg(&s, &Default::default()).unwrap();
+        let g = CsrGraph::from_tmfg(&r, &s);
+        let cfg = HubConfig::default();
+        let dense = DenseOracle::new(apsp_hub(&g, &cfg));
+        let oracle = HubOracle::build(&g, &cfg);
+        for linkage in [Linkage::Single, Linkage::Average, Linkage::Complete] {
+            let a = dbht_dendrogram(&s, &r, &dense, linkage).unwrap();
+            let b = dbht_dendrogram(&s, &r, &oracle, linkage).unwrap();
+            assert_eq!(a.dendrogram.nodes, b.dendrogram.nodes, "{linkage:?}");
+            assert_eq!(
+                a.assignment.vertex_bubble, b.assignment.vertex_bubble,
+                "{linkage:?}"
+            );
         }
     }
 }

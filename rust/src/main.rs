@@ -22,12 +22,17 @@ use tmfg::util::cli::Args;
 const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
 
   tmfg run --dataset <name|csv> [--algo par1|par10|par200|corr|heap|opt]
-           [--scale 0.1] [--seed N] [--threads N] [--apsp exact|approx]
+           [--scale 0.1] [--seed N] [--threads N]
+           [--apsp exact|approx|auto]
+           [--hub-n H] [--hub-radius X] [--hub-q Q]
            [--linkage complete|average|single] [--no-xla] [--check]
            [--sparse-k K] [--sparse-seed N]
            [--newick out.nwk] [--json-out out.json]
            (--sparse-k runs the sparse k-NN pipeline: O(n*K) candidate
-            memory instead of the dense O(n^2) similarity matrix; try
+            memory instead of the dense O(n^2) similarity matrix.
+            --apsp approx|auto serves DBHT through the streaming hub
+            oracle -- O(n*H) memory, no n^2 distance matrix; --hub-n 0
+            means auto (~sqrt(n) hubs). Try
             --dataset synth-large-16384 --sparse-k 32 --apsp approx)
   tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|ablation|all>
            [--scale 0.1] [--seed N] [--datasets a,b,c] [--threads 1,2,4]
@@ -88,20 +93,23 @@ fn cmd_run(args: &Args) {
         eprintln!("unknown dataset {name}");
         std::process::exit(2);
     });
-    let apsp = match args.opt_str("apsp") {
-        Some("exact") => Some(ApspMode::Exact),
-        Some("approx") => Some(ApspMode::Approx),
-        _ => None,
-    };
+    let apsp = args.opt_str("apsp").and_then(ApspMode::parse);
     let linkage = match args.get_str("linkage", "complete").as_str() {
         "single" => Linkage::Single,
         "average" => Linkage::Average,
         _ => Linkage::Complete,
     };
+    let hub_default = tmfg::apsp::HubConfig::default();
+    let hub = tmfg::apsp::HubConfig {
+        n_hubs: args.get_usize("hub-n", hub_default.n_hubs),
+        radius_mult: args.get_f64("hub-radius", hub_default.radius_mult as f64) as f32,
+        hubs_per_vertex: args.get_usize("hub-q", hub_default.hubs_per_vertex),
+    };
     let cfg = PipelineConfig {
         algo: parse_algo(args),
         apsp,
         linkage,
+        hub: hub.clone(),
         use_xla: !args.get_bool("no-xla", false),
         check_invariants: args.get_bool("check", false),
         ..Default::default()
@@ -128,6 +136,7 @@ fn cmd_run(args: &Args) {
             .k(ds.n_classes)
             .algo(cfg.algo)
             .linkage(cfg.linkage)
+            .hub(hub.clone())
             .check_invariants(cfg.check_invariants)
             .sparse_knn(
                 args.get_usize("sparse-k", 32),
@@ -150,6 +159,7 @@ fn cmd_run(args: &Args) {
     if let Some(p) = out.corr_path {
         println!("similarity path: {p:?}");
     }
+    println!("apsp oracle: {}", out.oracle.name());
     println!("TMFG edges: {} (edge sum {:.3})", out.tmfg.edges.len(), out.edge_sum);
     println!("converging bubbles: {}", out.dbht.n_converging);
     if let Some(ari) = out.ari {

@@ -10,9 +10,9 @@
 //! generation counter; a bounded snapshot history keeps recent labelings
 //! for clients that poll.
 
-use crate::api::{build_tmfg_for, ApspMode, TmfgAlgo};
+use crate::api::{build_apsp_oracle, build_tmfg_for, ApspMode, TmfgAlgo};
 use crate::error::TmfgError;
-use crate::apsp::{apsp_exact, apsp_hub, CsrGraph, HubConfig};
+use crate::apsp::{CsrGraph, HubConfig};
 use crate::data::matrix::Matrix;
 use crate::dbht::hierarchy::dbht_dendrogram;
 use crate::dbht::Linkage;
@@ -300,14 +300,13 @@ impl StreamSession {
     }
 
     /// The downstream stages shared by both paths: edge weights from the
-    /// current matrix → APSP → DBHT dendrogram → cut at k.
+    /// current matrix → APSP oracle → DBHT dendrogram → cut at k. The
+    /// oracle backend follows the session's APSP mode, so approximate
+    /// sessions never allocate an n×n distance matrix per emission.
     fn cluster(&self, tmfg: &TmfgResult, s: &Matrix) -> Result<Vec<usize>, TmfgError> {
         let g = CsrGraph::from_tmfg(tmfg, s);
-        let apsp = match self.effective_apsp() {
-            ApspMode::Exact => apsp_exact(&g),
-            ApspMode::Approx => apsp_hub(&g, &self.config.hub),
-        };
-        let dbht = dbht_dendrogram(s, tmfg, &apsp, self.config.linkage)?;
+        let apsp = build_apsp_oracle(self.effective_apsp(), &g, &self.config.hub);
+        let dbht = dbht_dendrogram(s, tmfg, &*apsp, self.config.linkage)?;
         Ok(dbht.dendrogram.cut(self.config.k))
     }
 }

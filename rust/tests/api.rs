@@ -152,6 +152,69 @@ fn staged_plan_reuses_tmfg_across_apsp_modes() {
 }
 
 #[test]
+fn apsp_oracle_artifact_per_mode() {
+    use tmfg::api::OracleKind;
+    // Exact → dense oracle, inspectable as a matrix.
+    let mut plan = ClusterRequest::similarity(sim(40, 21))
+        .algo(TmfgAlgo::Heap)
+        .k(3)
+        .build()
+        .unwrap();
+    plan.run_apsp().unwrap();
+    assert!(plan.apsp().is_some(), "exact mode exposes the dense matrix");
+    assert_eq!(plan.apsp_oracle().unwrap().kind(), OracleKind::Dense);
+    let out = plan.finish().unwrap();
+    assert_eq!(out.oracle, OracleKind::Dense);
+
+    // Approx → streaming hub oracle; no dense matrix ever exists.
+    let mut plan = ClusterRequest::similarity(sim(40, 21))
+        .algo(TmfgAlgo::Heap)
+        .apsp(ApspMode::Approx)
+        .k(3)
+        .build()
+        .unwrap();
+    plan.run_apsp().unwrap();
+    assert!(plan.apsp().is_none(), "hub oracle never materializes n^2");
+    let oracle = plan.apsp_oracle().unwrap();
+    assert_eq!(oracle.kind(), OracleKind::Hub);
+    let out = plan.finish().unwrap();
+    assert_eq!(out.oracle, OracleKind::Hub);
+
+    // Auto at small n → exact dense (byte-identical to Exact mode).
+    let out_auto = ClusterRequest::similarity(sim(40, 21))
+        .algo(TmfgAlgo::Heap)
+        .apsp(ApspMode::Auto)
+        .k(3)
+        .run()
+        .unwrap();
+    assert_eq!(out_auto.oracle, OracleKind::Dense);
+    let out_exact = ClusterRequest::similarity(sim(40, 21))
+        .algo(TmfgAlgo::Heap)
+        .apsp(ApspMode::Exact)
+        .k(3)
+        .run()
+        .unwrap();
+    assert_eq!(out_auto.labels, out_exact.labels);
+    assert_eq!(
+        out_auto.dbht.dendrogram.nodes,
+        out_exact.dbht.dendrogram.nodes
+    );
+}
+
+#[test]
+fn hub_config_validated_at_build() {
+    use tmfg::apsp::HubConfig;
+    for radius in [f32::NAN, f32::INFINITY, -1.0] {
+        let e = ClusterRequest::similarity(sim(20, 22))
+            .hub(HubConfig { radius_mult: radius, ..Default::default() })
+            .build()
+            .unwrap_err();
+        assert_eq!(e.code(), "invalid_input", "radius {radius}");
+        assert!(e.to_string().contains("radius"), "{e}");
+    }
+}
+
+#[test]
 fn stage_enum_runs_prerequisites() {
     let mut plan = ClusterRequest::similarity(sim(24, 10))
         .algo(TmfgAlgo::Corr)

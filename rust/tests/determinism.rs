@@ -168,6 +168,57 @@ fn sparse_complete_candidates_byte_identical_to_dense_corr() {
 }
 
 #[test]
+fn hub_oracle_dendrograms_byte_identical_to_hub_matrix() {
+    // The acceptance pin for the streaming APSP oracle: on every seeded
+    // panel, DBHT driven by the O(n·h) `HubOracle` must produce
+    // byte-identical dendrograms and labels to DBHT driven by the dense
+    // `apsp_hub` matrix (the pre-oracle Approx behavior), across thread
+    // counts {1, 4} — including the matrix's symmetrization pass, which
+    // the oracle reproduces per query.
+    use tmfg::apsp::{apsp_hub, CsrGraph, DenseOracle, HubConfig, HubOracle};
+    use tmfg::dbht::hierarchy::dbht_dendrogram;
+    use tmfg::dbht::Linkage;
+    let _serial = thread_count_lock();
+    for (pi, (_, s, k)) in panels().iter().enumerate() {
+        let r = tmfg::tmfg::heap_tmfg(s, &Default::default()).expect("tmfg");
+        let g = CsrGraph::from_tmfg(&r, s.as_ref());
+        let cfg = HubConfig::default();
+        let base = parlay::with_threads(1, || {
+            let m = DenseOracle::new(apsp_hub(&g, &cfg));
+            dbht_dendrogram(s.as_ref(), &r, &m, Linkage::Complete).expect("matrix dbht")
+        });
+        for t in [1usize, 4] {
+            let (matrix_out, oracle_out) = parlay::with_threads(t, || {
+                let m = DenseOracle::new(apsp_hub(&g, &cfg));
+                let o = HubOracle::build(&g, &cfg);
+                (
+                    dbht_dendrogram(s.as_ref(), &r, &m, Linkage::Complete).expect("matrix"),
+                    dbht_dendrogram(s.as_ref(), &r, &o, Linkage::Complete).expect("oracle"),
+                )
+            });
+            let ctx = format!("panel {pi}, {t} threads");
+            assert_eq!(
+                oracle_out.dendrogram.nodes, base.dendrogram.nodes,
+                "{ctx}: oracle dendrogram vs 1-thread matrix baseline"
+            );
+            assert_eq!(
+                matrix_out.dendrogram.nodes, base.dendrogram.nodes,
+                "{ctx}: matrix dendrogram across threads"
+            );
+            assert_eq!(
+                oracle_out.dendrogram.cut(*k),
+                base.dendrogram.cut(*k),
+                "{ctx}: labels"
+            );
+            assert_eq!(
+                oracle_out.assignment.vertex_bubble, base.assignment.vertex_bubble,
+                "{ctx}: bubble assignment"
+            );
+        }
+    }
+}
+
+#[test]
 fn repeated_runs_identical_at_fixed_thread_count() {
     // Same-thread-count reruns must also agree (guards against
     // completion-order nondeterminism inside reductions).

@@ -229,6 +229,10 @@ fn stats_reports_cache_bytes_and_sparse_vs_dense_counts() {
     // is visible and non-zero
     assert!(stats.get("cache_bytes").as_usize().unwrap() > 0, "{stats:?}");
     assert!(stats.get("cache_entries").as_usize().unwrap() >= 1, "{stats:?}");
+    // every completed batch request is attributed to an APSP oracle kind
+    let dense_oracles = stats.get("oracle_dense").as_usize().unwrap();
+    let hub_oracles = stats.get("oracle_hub").as_usize().unwrap();
+    assert_eq!(dense_oracles + hub_oracles, 3, "{stats:?}");
     h.stop();
 }
 

@@ -138,6 +138,85 @@ fn sparse_labels_identical_across_thread_counts() {
 }
 
 #[test]
+fn hub_oracle_upper_bound_and_in_ball_exact_on_knn_tmfg() {
+    // The §4.3 contract, checked on the sparse pipeline's own graphs:
+    // on a sparse-kNN TMFG the streaming hub oracle must (a) never
+    // underestimate the exact APSP distance and (b) be exact for every
+    // pair inside a vertex's truncated-Dijkstra ball.
+    use tmfg::apsp::{apsp_exact, ApspOracle, CsrGraph, HubConfig, HubOracle};
+    let ds = SynthSpec::new("sp", 512, 48, 4).with_noise(0.3).generate(29);
+    let cand = tmfg::sparse::knn_candidates(&ds.data, &tmfg::sparse::KnnConfig::new(16, 1))
+        .unwrap();
+    let (r, _) = tmfg::sparse::sparse_tmfg(&cand).unwrap();
+    let g = CsrGraph::from_tmfg(&r, &cand);
+    let exact = apsp_exact(&g);
+    let oracle = HubOracle::build(&g, &HubConfig::default());
+    let n = g.n;
+    let mut row = vec![0f32; n];
+    for u in 0..n {
+        oracle.row_into(u, &mut row);
+        for v in 0..n {
+            let e = exact.at(u, v);
+            assert!(
+                row[v] >= e - 1e-4,
+                "({u},{v}): oracle {} underestimates exact {e}",
+                row[v]
+            );
+            assert_eq!(
+                row[v].to_bits(),
+                oracle.at(u, v).to_bits(),
+                "({u},{v}): row_into and at must agree"
+            );
+        }
+        let (bc, bv) = oracle.ball(u);
+        for (i, &v) in bc.iter().enumerate() {
+            let e = exact.at(u, v as usize);
+            assert!(
+                (bv[i] - e).abs() <= 1e-5,
+                "ball({u}) entry {v}: {} vs exact {e}",
+                bv[i]
+            );
+            // the served value min's in the symmetric estimate, which
+            // can only tighten toward (and never below) exact
+            assert!(
+                (oracle.at(u, v as usize) - e).abs() <= 1e-4,
+                "at({u},{v}) not exact inside the ball"
+            );
+        }
+    }
+}
+
+#[test]
+fn hub_oracle_memory_scales_with_n_h_not_n_squared() {
+    // The byte-budget acceptance check: at n = 2048 the resident hub
+    // structure must be a small fraction of the 16 MiB dense matrix it
+    // replaces (O(n·(h + ball)) vs O(n²)). Ball mass depends on the
+    // radius multiplier, so the tight 4× bound is pinned at α = 1 and
+    // the paper-default α = 2 gets the looser strictly-smaller bound.
+    use tmfg::apsp::{ApspOracle, CsrGraph, HubConfig, HubOracle};
+    let ds = SynthSpec::new("sp", 2048, 48, 4).generate(31);
+    let cand = tmfg::sparse::knn_candidates(&ds.data, &tmfg::sparse::KnnConfig::new(16, 1))
+        .unwrap();
+    let (r, _) = tmfg::sparse::sparse_tmfg(&cand).unwrap();
+    let g = CsrGraph::from_tmfg(&r, &cand);
+    let dense_bytes = 2048usize * 2048 * 4;
+    let tuned = HubOracle::build(&g, &HubConfig { radius_mult: 1.0, ..Default::default() });
+    assert!(
+        tuned.bytes() * 4 <= dense_bytes,
+        "hub oracle (alpha=1) {} bytes is not >=4x smaller than the {} byte dense matrix",
+        tuned.bytes(),
+        dense_bytes
+    );
+    let default = HubOracle::build(&g, &HubConfig::default());
+    assert!(
+        default.bytes() < dense_bytes,
+        "hub oracle (default) {} bytes vs dense {}",
+        default.bytes(),
+        dense_bytes
+    );
+}
+
+#[test]
 fn sparse_rejects_similarity_source_and_bad_k() {
     let s = {
         let ds = SynthSpec::new("sp", 16, 32, 2).generate(1);
@@ -202,10 +281,54 @@ fn service_sparse_request_reports_sparse_fields() {
         .unwrap();
     assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
     assert_eq!(resp.get("sparse_k"), &Json::Null);
-    // stats counted one of each
+    // stats counted one of each, and the oracle-kind counters cover
+    // both completed requests (default algo is Opt → hub oracle)
     let stats = c.call(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
     assert_eq!(stats.get("sparse_requests").as_usize(), Some(1), "{stats:?}");
     assert_eq!(stats.get("dense_requests").as_usize(), Some(1), "{stats:?}");
+    let dense_oracles = stats.get("oracle_dense").as_usize().unwrap();
+    let hub_oracles = stats.get("oracle_hub").as_usize().unwrap();
+    assert_eq!(dense_oracles + hub_oracles, 2, "{stats:?}");
+    assert!(hub_oracles >= 1, "{stats:?}");
+    h.stop();
+}
+
+#[test]
+fn service_apsp_and_hub_overrides_respected() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    // exact override → dense oracle reported
+    let resp = c
+        .call(&Json::obj(vec![
+            ("id", Json::Num(1.0)),
+            ("dataset", Json::str("demo-64")),
+            ("apsp", Json::str("exact")),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("oracle").as_str(), Some("dense"), "{resp:?}");
+    // approx + hub knobs → hub oracle reported
+    let resp = c
+        .call(&Json::obj(vec![
+            ("id", Json::Num(2.0)),
+            ("dataset", Json::str("demo-64")),
+            ("apsp", Json::str("approx")),
+            ("hub_n", Json::Num(8.0)),
+            ("hub_q", Json::Num(2.0)),
+            ("hub_radius", Json::Num(1.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("oracle").as_str(), Some("hub"), "{resp:?}");
+    // capped knob rejected at decode
+    let resp = c
+        .call(&Json::obj(vec![
+            ("dataset", Json::str("demo-64")),
+            ("hub_n", Json::Num(100000.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.get("code").as_str(), Some("protocol"));
     h.stop();
 }
 
@@ -238,7 +361,9 @@ fn service_dense_cap_still_rejects_large_n() {
 fn service_sparse_16k_request_succeeds_end_to_end() {
     // The large-n acceptance path: a sparse n=16384 request through the
     // TCP service (the dense pipeline physically cannot serve this —
-    // see service_dense_cap_still_rejects_large_n).
+    // see service_dense_cap_still_rejects_large_n). With the streaming
+    // hub oracle the whole run — k-NN candidates, sparse TMFG, APSP,
+    // DBHT — is sub-quadratic in memory: no 1 GiB distance matrix.
     let h = start();
     let mut c = Client::connect(&h.addr).unwrap();
     let resp = c
@@ -253,6 +378,10 @@ fn service_sparse_16k_request_succeeds_end_to_end() {
     assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
     assert_eq!(resp.get("labels").as_arr().unwrap().len(), 16384);
     assert_eq!(resp.get("sparse_k").as_usize(), Some(32));
+    // default algo (opt) → approx APSP → the streaming hub oracle
+    assert_eq!(resp.get("oracle").as_str(), Some("hub"), "{resp:?}");
+    let stats = c.call(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+    assert!(stats.get("oracle_hub").as_usize().unwrap() >= 1, "{stats:?}");
     let k_distinct: std::collections::HashSet<usize> = resp
         .get("labels")
         .as_arr()
