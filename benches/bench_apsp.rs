@@ -16,19 +16,10 @@ use tmfg::data::synth::SynthSpec;
 use tmfg::sparse::{knn_candidates, sparse_tmfg, KnnConfig};
 use tmfg::util::bench::BenchSuite;
 
-/// Peak resident set size of this process in KiB (Linux VmHWM), as a
-/// metadata string; "na" where /proc is unavailable.
+/// Peak resident set size (Linux VmHWM) as a metadata string; "na" where
+/// /proc is unavailable. Shared probe from the bench harness.
 fn peak_rss_kb() -> String {
-    std::fs::read_to_string("/proc/self/status")
-        .ok()
-        .and_then(|s| {
-            s.lines()
-                .find(|l| l.starts_with("VmHWM:"))?
-                .split_whitespace()
-                .nth(1)
-                .map(str::to_string)
-        })
-        .unwrap_or_else(|| "na".into())
+    tmfg::util::bench::peak_rss_kb().map(|kb| kb.to_string()).unwrap_or_else(|| "na".into())
 }
 
 /// A TMFG graph at size n built through the sparse pipeline (the dense

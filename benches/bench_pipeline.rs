@@ -131,6 +131,23 @@ fn main() {
         h.stop();
     }
 
+    // Observability disabled-path overhead pin: a burst of span! sites
+    // with no live trace session must cost ~one relaxed atomic load each
+    // (label closures never evaluated). Regressions here slow down every
+    // instrumented hot loop in the repo.
+    {
+        const SPANS_PER_REP: usize = 1_000_000;
+        assert!(!tmfg::obs::tracing_enabled(), "bench requires tracing disabled");
+        suite
+            .meta("spans", &SPANS_PER_REP.to_string())
+            .meta("mode", "disabled")
+            .run("obs/disabled_span_1M", |_| {
+                for i in 0..SPANS_PER_REP {
+                    let _g = tmfg::span!("stage", "never evaluated {i}");
+                }
+            });
+    }
+
     // Artifact-cache hit path: repeated identical requests skip the
     // similarity + TMFG stages entirely.
     {

@@ -70,4 +70,7 @@ fn main() {
         println!("n={n:5}: {s:.1}x");
     }
     suite.write_csv().unwrap();
+    // Machine-readable artifact (results/BENCH_bench_stream.json) with
+    // median/p50/p95/p99 + peak RSS, asserted by the CI smoke step.
+    suite.write_json().unwrap();
 }

@@ -103,5 +103,24 @@ fn main() {
         stats.get("cache_misses").as_usize().unwrap_or(0),
         stats.get("cache_hit_ratio").as_f64().unwrap_or(0.0),
     );
+    // Service-side latency percentiles (obs registry histograms) for the
+    // TMFG stage and the dispatcher queue wait, from the same stats call.
+    let lat = stats.get("latency");
+    let pct = |node: &Json| (node.get("p50").as_f64(), node.get("p99").as_f64());
+    if let (Some(p50), Some(p99)) = pct(lat.get("stages").get("tmfg")) {
+        println!("server stage tmfg: p50 {:.1}ms  p99 {:.1}ms", p50 * 1e3, p99 * 1e3);
+    }
+    if let (Some(p50), Some(p99)) = pct(lat.get("queue_wait")) {
+        println!("server queue wait: p50 {:.1}ms  p99 {:.1}ms", p50 * 1e3, p99 * 1e3);
+    }
+    // Prometheus scrape: `{"cmd": "metrics"}` returns the full text
+    // exposition; print it so `--example serve` output can be grepped
+    // for the per-stage histograms (CI does exactly that).
+    let metrics = client
+        .call(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+        .expect("metrics");
+    if let Some(text) = metrics.get("metrics").as_str() {
+        println!("\n--- metrics scrape ---\n{text}");
+    }
     handle.stop();
 }

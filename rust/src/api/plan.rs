@@ -162,6 +162,17 @@ pub fn build_apsp_oracle(
     }
 }
 
+/// Record one stage latency into the global obs registry — the source
+/// for the service's `stats` p50/p95/p99 and the Prometheus
+/// `{"cmd": "metrics"}` exposition.
+fn observe_stage(stage: &str, secs: f64) {
+    crate::obs::registry().observe_secs(
+        crate::obs::names::STAGE_SECONDS,
+        Some(("stage", stage)),
+        secs,
+    );
+}
+
 /// Build a TMFG with the given algorithm's standard configuration — the
 /// mapping shared by the batch [`Plan`] and the streaming subsystem
 /// (which constructs topologies outside a plan).
@@ -434,11 +445,14 @@ impl Plan {
             let engine = self.engine.as_ref().ok_or_else(|| {
                 TmfgError::invariant("plan with a panel input has no similarity engine")
             })?;
+            let _span = crate::span!("stage", "similarity dense n={}", self.n);
             let t = Timer::start();
             let (s, _rowsums, path) = engine
                 .similarity(panel)
                 .map_err(|e| TmfgError::SimilarityFailed(format!("{e:#}")))?;
-            self.timings.add("similarity", t.elapsed());
+            let secs = t.elapsed();
+            self.timings.add("similarity", secs);
+            observe_stage("similarity", secs);
             self.similarity = Some(Arc::new(s));
             self.corr_path = Some(path);
         }
@@ -460,9 +474,12 @@ impl Plan {
             let panel = self.panel.as_ref().ok_or_else(|| {
                 TmfgError::invariant("sparse plan has no panel to build candidates from")
             })?;
+            let _span = crate::span!("stage", "similarity sparse-knn n={} k={k}", self.n);
             let t = Timer::start();
             let sp = knn_candidates(panel, &KnnConfig::new(k, seed))?;
-            self.timings.add("similarity", t.elapsed());
+            let secs = t.elapsed();
+            self.timings.add("similarity", secs);
+            observe_stage("similarity", secs);
             self.sparse = Some(Arc::new(sp));
         }
         self.sparse
@@ -500,6 +517,8 @@ impl Plan {
     pub fn run_tmfg(&mut self) -> Result<&TmfgResult, TmfgError> {
         if self.tmfg.is_none() {
             self.ensure_similarity()?;
+            let _span = crate::span!("stage", "tmfg {} n={}", self.algo.name(), self.n);
+            let stage_timer = Timer::start();
             let tmfg = match self.spec {
                 SimilaritySpec::Dense => {
                     let s = self
@@ -521,6 +540,7 @@ impl Plan {
             if self.check_invariants {
                 crate::tmfg::common::check_invariants(&tmfg)?;
             }
+            observe_stage("tmfg", stage_timer.elapsed());
             self.timings.add("tmfg:init-faces", tmfg.timings.init);
             self.timings.add("tmfg:sort", tmfg.timings.sort);
             self.timings.add("tmfg:add-vertices", tmfg.timings.insert);
@@ -557,10 +577,13 @@ impl Plan {
                 .tmfg
                 .as_deref()
                 .ok_or_else(|| TmfgError::invariant("apsp stage missing inputs"))?;
+            let _span = crate::span!("stage", "apsp {} n={}", self.apsp_mode.name(), self.n);
             let t = Timer::start();
             let g = CsrGraph::from_tmfg(tmfg, self.sim_store()?);
             let apsp = build_apsp_oracle(self.apsp_mode, &g, &self.hub);
-            self.timings.add("apsp", t.elapsed());
+            let secs = t.elapsed();
+            self.timings.add("apsp", secs);
+            observe_stage("apsp", secs);
             self.apsp = Some(apsp);
         }
         self.apsp
@@ -578,9 +601,12 @@ impl Plan {
                 (Some(t), Some(a)) => (t.clone(), a.clone()),
                 _ => return Err(TmfgError::invariant("dbht stage missing inputs")),
             };
+            let _span = crate::span!("stage", "dbht n={}", self.n);
             let t = Timer::start();
             let dbht = dbht_dendrogram(self.sim_store()?, &tmfg, &*apsp, self.linkage)?;
-            self.timings.add("dbht", t.elapsed());
+            let secs = t.elapsed();
+            self.timings.add("dbht", secs);
+            observe_stage("dbht", secs);
             self.dbht = Some(dbht);
         }
         self.dbht
@@ -608,13 +634,16 @@ impl Plan {
             .dbht
             .as_ref()
             .ok_or_else(|| TmfgError::invariant("dbht artifact missing"))?;
+        let _span = crate::span!("stage", "cut k={k}");
         let t = Timer::start();
         self.cut = Some(dbht.dendrogram.cut(k));
         self.cut_k = Some(k);
+        let secs = t.elapsed();
         // replace rather than accumulate: a prior cut at another k was an
         // invalidated artifact, not part of this pipeline's cost
         self.timings.remove("cut");
-        self.timings.add("cut", t.elapsed());
+        self.timings.add("cut", secs);
+        observe_stage("cut", secs);
         self.cut
             .as_deref()
             .ok_or_else(|| TmfgError::invariant("cut artifact missing"))
@@ -682,6 +711,23 @@ impl Plan {
             .map(|o| o.kind())
             .ok_or_else(|| TmfgError::invariant("apsp artifact missing"))?;
         let cache = self.cache_status();
+        match cache {
+            CacheStatus::Hit => {
+                crate::obs::registry()
+                    .counter(crate::obs::names::CACHE_HITS)
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                crate::obs::event("cache", || "hit".to_string());
+            }
+            CacheStatus::Miss => {
+                crate::obs::registry()
+                    .counter(crate::obs::names::CACHE_MISSES)
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                crate::obs::event("cache", || "miss".to_string());
+            }
+            // No counter — bypass is not a hit-ratio event — but traced
+            // runs still see that the request skipped the cache.
+            CacheStatus::Bypass => crate::obs::event("cache", || "bypass".to_string()),
+        }
         Ok(ClusterOutput {
             algo: self.algo,
             apsp_mode: self.apsp_mode,

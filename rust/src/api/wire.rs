@@ -7,6 +7,24 @@
 //! optional `v` field pins the protocol version. Error responses carry a
 //! human-readable `error` plus the stable machine-readable `code` from
 //! [`TmfgError::code`].
+//!
+//! ## Observability fields
+//!
+//! * Every batch-clustering response carries a `trace_id` string —
+//!   unique per request, echoed so clients can correlate responses with
+//!   server-side traces and logs.
+//! * A batch request may set `"trace": true` to have the server run it
+//!   under a tracing session; the response then also carries a `trace`
+//!   object: Chrome trace-event JSON (load it in Perfetto /
+//!   `chrome://tracing`) with one track per worker thread. Traced
+//!   requests serialize against each other on the session gate, so this
+//!   is a debugging tool, not a production default.
+//! * `{"cmd": "metrics"}` returns `{"ok": true, "metrics": "..."}` where
+//!   `metrics` is the process-wide Prometheus text exposition
+//!   (per-stage latency histograms, queue-wait histogram, pool/cache/
+//!   oracle counters — see [`crate::obs::names`]). `{"cmd": "stats"}`
+//!   additionally reports per-stage and queue-wait p50/p95/p99 under a
+//!   `latency` object.
 
 use crate::error::TmfgError;
 use super::plan::{ApspMode, TmfgAlgo};
@@ -75,8 +93,11 @@ pub enum Command {
     Ping,
     Shutdown,
     /// Service observability: worker count, queue depth, cache hit
-    /// ratio, cumulative per-stage timings.
+    /// ratio, cumulative per-stage timings, latency percentiles.
     Stats,
+    /// The Prometheus text exposition of the process-global metrics
+    /// registry, returned as the `metrics` string field.
+    Metrics,
     /// A batch clustering request (no `cmd` field).
     Cluster(ClusterSpec),
     OpenStream(StreamOpen),
@@ -112,6 +133,9 @@ pub struct ClusterSpec {
     /// Hub-oracle overrides (None = [`HubConfig`] defaults): hub count
     /// (0 = auto ⌈√n⌉), ball-radius multiplier, nearest hubs per vertex.
     pub hub: Option<HubConfig>,
+    /// Run under a tracing session and attach the Chrome trace-event
+    /// JSON to the response (`trace` field). See the module docs.
+    pub trace: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -228,6 +252,7 @@ impl Request {
                     "ping" => Command::Ping,
                     "shutdown" => Command::Shutdown,
                     "stats" => Command::Stats,
+                    "metrics" => Command::Metrics,
                     "open_stream" => Command::OpenStream(decode_open_stream(j)?),
                     "tick" => Command::Tick(finite_data(j, "data")?),
                     "close_stream" => Command::CloseStream,
@@ -244,6 +269,11 @@ impl Request {
 fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
     let algo = opt_algo(j)?;
     let k = opt_usize(j, "k")?.unwrap_or(0);
+    let trace = match j.get("trace") {
+        Json::Null => false,
+        Json::Bool(b) => *b,
+        _ => return Err(TmfgError::protocol("field 'trace' must be a boolean")),
+    };
     // Sparse mode is opted into with sparse_k; it carries its own
     // resource caps (candidate storage is O(n·k), not O(n²)).
     let sparse_k = match opt_usize(j, "sparse_k")? {
@@ -384,7 +414,7 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
             }
         }
     };
-    Ok(ClusterSpec { source, algo, k, sparse_k, sparse_seed, apsp, hub })
+    Ok(ClusterSpec { source, algo, k, sparse_k, sparse_seed, apsp, hub, trace })
 }
 
 fn decode_open_stream(j: &Json) -> Result<StreamOpen, TmfgError> {
@@ -537,6 +567,28 @@ mod tests {
         let r = Request::decode(&parse(r#"{"id": 9, "cmd": "stats"}"#)).unwrap();
         assert!(matches!(r.body, Command::Stats));
         assert_eq!(r.id.as_usize(), Some(9));
+    }
+
+    #[test]
+    fn decodes_metrics_command() {
+        let r = Request::decode(&parse(r#"{"id": 2, "cmd": "metrics"}"#)).unwrap();
+        assert!(matches!(r.body, Command::Metrics));
+        assert_eq!(r.id.as_usize(), Some(2));
+    }
+
+    #[test]
+    fn trace_flag_decodes_and_validates() {
+        let r = Request::decode(&parse(r#"{"dataset": "CBF", "trace": true}"#)).unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert!(spec.trace);
+        // absent defaults to false
+        let r = Request::decode(&parse(r#"{"dataset": "CBF"}"#)).unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert!(!spec.trace);
+        // non-boolean rejected
+        let e = Request::decode(&parse(r#"{"dataset": "CBF", "trace": 1}"#)).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("trace"), "{e}");
     }
 
     #[test]

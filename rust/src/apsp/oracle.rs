@@ -27,6 +27,27 @@ use super::hub::{
 };
 use crate::data::matrix::Matrix;
 use crate::parlay;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Cached obs counters so the per-row accounting is one relaxed
+/// `fetch_add` (the registry lookup happens once per process). Counting
+/// is per *row derivation*, never per `at()` query — the entry-level hot
+/// path stays untouched.
+fn rows_dense_counter() -> &'static Arc<AtomicU64> {
+    static C: OnceLock<Arc<AtomicU64>> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry().counter(crate::obs::names::ORACLE_ROWS_DENSE))
+}
+
+fn rows_hub_counter() -> &'static Arc<AtomicU64> {
+    static C: OnceLock<Arc<AtomicU64>> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry().counter(crate::obs::names::ORACLE_ROWS_HUB))
+}
+
+fn ball_entries_counter() -> &'static Arc<AtomicU64> {
+    static C: OnceLock<Arc<AtomicU64>> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry().counter(crate::obs::names::ORACLE_BALL_ENTRIES))
+}
 
 /// Which backend an oracle is (reported by the service's `stats`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,6 +122,8 @@ impl ApspOracle for DenseOracle {
     }
 
     fn row_into(&self, u: usize, buf: &mut [f32]) {
+        let _span = crate::span!("oracle_row", "dense row {u}");
+        rows_dense_counter().fetch_add(1, Ordering::Relaxed);
         buf.copy_from_slice(self.m.row(u));
     }
 
@@ -316,11 +339,15 @@ impl ApspOracle for HubOracle {
     fn row_into(&self, u: usize, buf: &mut [f32]) {
         let n = self.n;
         debug_assert_eq!(buf.len(), n);
+        let _span = crate::span!("oracle_row", "hub row {u}");
+        rows_hub_counter().fetch_add(1, Ordering::Relaxed);
         // Row estimate, the dense builder's own pass: the shared hub
         // upper-bound fold, then the exact-ball overwrite and the zeroed
         // diagonal.
         hub_bound_row(self.near_of(u), &self.hub_rows, n, buf);
         let (bc, bv) = self.ball(u);
+        ball_entries_counter()
+            .fetch_add((bc.len() + self.tball(u).0.len()) as u64, Ordering::Relaxed);
         for (i, &v) in bc.iter().enumerate() {
             buf[v as usize] = bv[i];
         }

@@ -4,7 +4,10 @@
 //! writes a CSV under `results/`. All experiments drive the typed staged
 //! API ([`crate::api::ClusterRequest`] / [`crate::api::Plan`]) directly
 //! and are fallible — unknown datasets and IO failures surface as
-//! [`TmfgError`] instead of panics.
+//! [`TmfgError`] instead of panics. Human-readable tables are emitted
+//! through the leveled [`log!`](crate::log) macro (info level, so
+//! `--quiet`/`TMFG_LOG` filter them); the CSV artifacts are written
+//! unconditionally.
 
 use super::registry;
 use crate::api::{ApspMode, ClusterOutput, ClusterRequest, TmfgAlgo, TmfgError};
@@ -82,7 +85,7 @@ fn write_csv(
     for r in rows {
         writeln!(f, "{}", r.join(","))?;
     }
-    println!("wrote {path}");
+    crate::log!(info, "wrote {path}");
     Ok(())
 }
 
@@ -150,12 +153,13 @@ fn run_algo_timed(
 // Table 1
 // ---------------------------------------------------------------------------
 pub fn table1(opts: &ExpOpts) -> Result<(), TmfgError> {
-    println!("\n== Table 1: datasets (scale {}) ==", opts.scale);
-    println!("{:<4} {:<28} {:>7} {:>6} {:>8}", "ID", "Name", "n", "L", "classes");
+    crate::log!(info, "\n== Table 1: datasets (scale {}) ==", opts.scale);
+    crate::log!(info, "{:<4} {:<28} {:>7} {:>6} {:>8}", "ID", "Name", "n", "L", "classes");
     let mut rows = Vec::new();
     for (i, name) in registry::table1_names().iter().enumerate() {
         let ds = load(opts, name)?;
-        println!(
+        crate::log!(
+            info,
             "{:<4} {:<28} {:>7} {:>6} {:>8}",
             i + 1,
             ds.name,
@@ -178,27 +182,26 @@ pub fn table1(opts: &ExpOpts) -> Result<(), TmfgError> {
 // Fig 2: parallel runtime of all methods per dataset
 // ---------------------------------------------------------------------------
 pub fn fig2(opts: &ExpOpts) -> Result<(), TmfgError> {
-    println!("\n== Fig 2: parallel runtime (s) of TMFG-DBHT methods ==");
+    crate::log!(info, "\n== Fig 2: parallel runtime (s) of TMFG-DBHT methods ==");
     let names = opts.dataset_names(registry::table1_names());
     let algos = fig2_algos();
-    print!("{:<28}", "dataset");
+    let mut head = format!("{:<28}", "dataset");
     for a in &algos {
-        print!(" {:>14}", a.name());
+        head.push_str(&format!(" {:>14}", a.name()));
     }
-    println!();
+    crate::log!(info, "{head}");
     let mut rows = Vec::new();
     for name in &names {
         let ds = load(opts, name)?;
         let s = similarity(&ds);
-        print!("{:<28}", format!("{}(n={})", ds.name, ds.n()));
+        let mut line = format!("{:<28}", format!("{}(n={})", ds.name, ds.n()));
         let mut row = vec![ds.name.clone(), ds.n().to_string()];
         for algo in &algos {
             let (_out, secs) = run_algo_timed(*algo, &s, &ds)?;
-            print!(" {:>14.4}", secs);
-            std::io::stdout().flush().ok();
+            line.push_str(&format!(" {secs:>14.4}"));
             row.push(format!("{secs:.6}"));
         }
-        println!();
+        crate::log!(info, "{line}");
         rows.push(row);
     }
     let header = format!(
@@ -212,7 +215,8 @@ pub fn fig2(opts: &ExpOpts) -> Result<(), TmfgError> {
 // Figs 3 & 4: self-relative speedup on the three largest datasets
 // ---------------------------------------------------------------------------
 fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) -> Result<(), TmfgError> {
-    println!(
+    crate::log!(
+        info,
         "\n== Self-relative speedup of {} on the 3 largest datasets ==",
         algo.name()
     );
@@ -220,7 +224,7 @@ fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) -> Result<(), TmfgError> {
         registry::largest3_names().iter().map(|s| s.to_string()).collect(),
     );
     let sweep = opts.thread_sweep();
-    println!("{:<28} {:>8} {:>10} {:>9}", "dataset", "threads", "secs", "speedup");
+    crate::log!(info, "{:<28} {:>8} {:>10} {:>9}", "dataset", "threads", "secs", "speedup");
     let mut rows = Vec::new();
     for name in &names {
         let ds = load(opts, name)?;
@@ -231,7 +235,7 @@ fn scaling(opts: &ExpOpts, algo: TmfgAlgo, csv: &str) -> Result<(), TmfgError> {
                 run_algo_timed(algo, &s, &ds).map(|(_, secs)| secs)
             })?;
             let b = *base.get_or_insert(secs);
-            println!("{:<28} {:>8} {:>10.4} {:>9.2}", ds.name, t, secs, b / secs);
+            crate::log!(info, "{:<28} {:>8} {:>10.4} {:>9.2}", ds.name, t, secs, b / secs);
             rows.push(vec![
                 ds.name.clone(),
                 t.to_string(),
@@ -262,21 +266,30 @@ pub fn fig5(opts: &ExpOpts) -> Result<(), TmfgError> {
     let algos = fig2_algos();
     let mut rows = Vec::new();
     for threads in [parlay::num_threads(), 1] {
-        println!(
+        crate::log!(
+            info,
             "\n== Fig 5: stage breakdown on {} (n={}) with {} thread(s) ==",
             ds.name,
             ds.n(),
             threads
         );
-        println!(
+        crate::log!(
+            info,
             "{:<16} {:>12} {:>12} {:>12} {:>10} {:>10} {:>10}",
-            "method", "init-faces", "sort", "add-verts", "apsp", "dbht", "total"
+            "method",
+            "init-faces",
+            "sort",
+            "add-verts",
+            "apsp",
+            "dbht",
+            "total"
         );
         for algo in &algos {
             let out =
                 parlay::with_threads(threads, || run_algo(*algo, &s, &ds))?;
             let g = |k: &str| out.breakdown.get(k).unwrap_or(0.0);
-            println!(
+            crate::log!(
+                info,
                 "{:<16} {:>12.4} {:>12.4} {:>12.4} {:>10.4} {:>10.4} {:>10.4}",
                 algo.name(),
                 g("tmfg:init-faces"),
@@ -310,41 +323,40 @@ pub fn fig5(opts: &ExpOpts) -> Result<(), TmfgError> {
 // Fig 6: ARI of every method per dataset
 // ---------------------------------------------------------------------------
 pub fn fig6(opts: &ExpOpts) -> Result<(), TmfgError> {
-    println!("\n== Fig 6: ARI scores ==");
+    crate::log!(info, "\n== Fig 6: ARI scores ==");
     let names = opts.dataset_names(registry::table1_names());
     let mut algos = fig2_algos();
     algos.insert(2, TmfgAlgo::Par(200));
-    print!("{:<28}", "dataset");
+    let mut head = format!("{:<28}", "dataset");
     for a in &algos {
-        print!(" {:>14}", a.name());
+        head.push_str(&format!(" {:>14}", a.name()));
     }
-    println!();
+    crate::log!(info, "{head}");
     let mut rows = Vec::new();
     let mut sums = vec![0.0f64; algos.len()];
     for name in &names {
         let ds = load(opts, name)?;
         let s = similarity(&ds);
-        print!("{:<28}", ds.name);
+        let mut line = format!("{:<28}", ds.name);
         let mut row = vec![ds.name.clone()];
         for (i, algo) in algos.iter().enumerate() {
             let out = run_algo(*algo, &s, &ds)?;
             let ari = out.ari.unwrap_or(f64::NAN);
             sums[i] += ari;
-            print!(" {:>14.3}", ari);
-            std::io::stdout().flush().ok();
+            line.push_str(&format!(" {ari:>14.3}"));
             row.push(format!("{ari:.4}"));
         }
-        println!();
+        crate::log!(info, "{line}");
         rows.push(row);
     }
-    print!("{:<28}", "AVERAGE");
+    let mut avg_line = format!("{:<28}", "AVERAGE");
     let mut avg_row = vec!["AVERAGE".to_string()];
     for s in &sums {
         let avg = s / names.len() as f64;
-        print!(" {:>14.3}", avg);
+        avg_line.push_str(&format!(" {avg:>14.3}"));
         avg_row.push(format!("{avg:.4}"));
     }
-    println!();
+    crate::log!(info, "{avg_line}");
     rows.push(avg_row);
     let header = format!(
         "dataset,{}",
@@ -357,28 +369,28 @@ pub fn fig6(opts: &ExpOpts) -> Result<(), TmfgError> {
 // Fig 7: percent edge-sum reduction vs PAR-TDBHT-1
 // ---------------------------------------------------------------------------
 pub fn fig7(opts: &ExpOpts) -> Result<(), TmfgError> {
-    println!("\n== Fig 7: % edge-sum reduction vs par-tdbht-1 (lower = better) ==");
+    crate::log!(info, "\n== Fig 7: % edge-sum reduction vs par-tdbht-1 (lower = better) ==");
     let names = opts.dataset_names(registry::table1_names());
     let algos = vec![TmfgAlgo::Par(10), TmfgAlgo::Par(200), TmfgAlgo::Corr, TmfgAlgo::Heap];
-    print!("{:<28}", "dataset");
+    let mut head = format!("{:<28}", "dataset");
     for a in &algos {
-        print!(" {:>14}", a.name());
+        head.push_str(&format!(" {:>14}", a.name()));
     }
-    println!();
+    crate::log!(info, "{head}");
     let mut rows = Vec::new();
     for name in &names {
         let ds = load(opts, name)?;
         let s = similarity(&ds);
         let base = run_algo(TmfgAlgo::Par(1), &s, &ds)?.edge_sum;
-        print!("{:<28}", ds.name);
+        let mut line = format!("{:<28}", ds.name);
         let mut row = vec![ds.name.clone()];
         for algo in &algos {
             let es = run_algo(*algo, &s, &ds)?.edge_sum;
             let pct = crate::metrics::edge_sum_reduction_pct(base, es);
-            print!(" {:>14.3}", pct);
+            line.push_str(&format!(" {pct:>14.3}"));
             row.push(format!("{pct:.5}"));
         }
-        println!();
+        crate::log!(info, "{line}");
         rows.push(row);
     }
     let header = format!(
@@ -396,11 +408,17 @@ pub fn fig7(opts: &ExpOpts) -> Result<(), TmfgError> {
 /// [`crate::api::Plan::set_apsp_mode`] — exactly the stage reuse the
 /// typed API exists for.
 pub fn apsp_speedup(opts: &ExpOpts) -> Result<(), TmfgError> {
-    println!("\n== §5.1: exact vs approximate APSP (OPT pipeline, shared TMFG) ==");
+    crate::log!(info, "\n== §5.1: exact vs approximate APSP (OPT pipeline, shared TMFG) ==");
     let names = opts.dataset_names(registry::table1_names());
-    println!(
+    crate::log!(
+        info,
         "{:<28} {:>10} {:>10} {:>9} {:>9} {:>9}",
-        "dataset", "exact_s", "approx_s", "speedup", "ari_ex", "ari_ap"
+        "dataset",
+        "exact_s",
+        "approx_s",
+        "speedup",
+        "ari_ex",
+        "ari_ap"
     );
     let mut rows = Vec::new();
     for name in &names {
@@ -423,7 +441,8 @@ pub fn apsp_speedup(opts: &ExpOpts) -> Result<(), TmfgError> {
             aris[i] = adjusted_rand_index(&ds.labels, &pred);
         }
         let (te, ta) = (secs[0], secs[1]);
-        println!(
+        crate::log!(
+            info,
             "{:<28} {:>10.4} {:>10.4} {:>9.2} {:>9.3} {:>9.3}",
             ds.name,
             te,
@@ -451,9 +470,9 @@ pub fn apsp_speedup(opts: &ExpOpts) -> Result<(), TmfgError> {
 
 /// Linkage ablation (DESIGN.md calls this out as a design choice).
 pub fn ablation_linkage(opts: &ExpOpts) -> Result<(), TmfgError> {
-    println!("\n== Ablation: linkage function in DBHT (OPT pipeline) ==");
+    crate::log!(info, "\n== Ablation: linkage function in DBHT (OPT pipeline) ==");
     let names = opts.dataset_names(vec!["CBF".into(), "ECG5000".into(), "ShapesAll".into()]);
-    println!("{:<28} {:>10} {:>10} {:>10}", "dataset", "complete", "average", "single");
+    crate::log!(info, "{:<28} {:>10} {:>10} {:>10}", "dataset", "complete", "average", "single");
     let mut rows = Vec::new();
     for name in &names {
         let ds = load(opts, name)?;
@@ -463,9 +482,13 @@ pub fn ablation_linkage(opts: &ExpOpts) -> Result<(), TmfgError> {
             let out = run_algo_linkage(TmfgAlgo::Opt, &s, &ds, linkage)?;
             aris.push(out.ari.unwrap_or(f64::NAN));
         }
-        println!(
+        crate::log!(
+            info,
             "{:<28} {:>10.3} {:>10.3} {:>10.3}",
-            ds.name, aris[0], aris[1], aris[2]
+            ds.name,
+            aris[0],
+            aris[1],
+            aris[2]
         );
         rows.push(vec![
             ds.name.clone(),

@@ -24,8 +24,14 @@
 //! "jobs": ..., "open_streams": ..., "sparse_requests": ...,
 //! "dense_requests": ..., "oracle_dense": ..., "oracle_hub": ...,
 //! "cache_hits": ..., "cache_misses":
-//! ..., "cache_hit_ratio": ..., "cache_bytes": ..., "stages": {...}}.
+//! ..., "cache_hit_ratio": ..., "cache_bytes": ..., "stages": {...},
+//! "latency": {"stages": {"tmfg": {"p50": ..., "p95": ..., "p99": ...},
+//! ...}, "queue_wait": {...}}}, and {"cmd": "metrics"} → {"ok": true,
+//! "metrics": "<Prometheus text exposition>"} (see [`crate::obs`]).
 //! Optional: {"v": 1, ...} pins the protocol version.
+//! Every batch clustering response carries a "trace_id"; requests with
+//! {"trace": true} run under an exclusive tracing session and their
+//! response gains a "trace" object (Chrome trace-event JSON).
 //!
 //! Response: {"id": 7, "ok": true, "labels": [...], "ari": 0.4,
 //!            "secs": 0.01, "algo": "opt-tdbht", "oracle":
@@ -141,6 +147,9 @@ struct Job {
     /// Synthetic housekeeping job (disconnect cleanup) — processed like
     /// any other but excluded from the `stats` request counter.
     internal: bool,
+    /// Submit time — the dispatcher queue-wait (submit → dequeue) is
+    /// observed into the obs registry when a worker picks the job up.
+    enqueued: Instant,
 }
 
 /// Result of a timed pop from a [`JobQueue`].
@@ -327,6 +336,31 @@ impl ServiceState {
             Json::obj(g.stages().iter().map(|(s, t)| (s.as_str(), Json::Num(*t))).collect())
         };
         fields.push(("stages", stages_json));
+        // Latency percentiles (seconds) read back from the obs registry's
+        // log-linear histograms: one entry per observed stage, plus the
+        // dispatcher queue-wait once any job has been dequeued.
+        let reg = crate::obs::registry();
+        let pcts = |p: [f64; 3]| {
+            Json::obj(vec![
+                ("p50", Json::Num(p[0])),
+                ("p95", Json::Num(p[1])),
+                ("p99", Json::Num(p[2])),
+            ])
+        };
+        let stage_labels = reg.hist_labels(crate::obs::names::STAGE_SECONDS);
+        let mut stage_pairs = Vec::with_capacity(stage_labels.len());
+        for label in &stage_labels {
+            if let Some(p) =
+                reg.percentiles_secs(crate::obs::names::STAGE_SECONDS, Some(("stage", label)))
+            {
+                stage_pairs.push((label.as_str(), pcts(p)));
+            }
+        }
+        let mut lat_pairs = vec![("stages", Json::obj(stage_pairs))];
+        if let Some(p) = reg.percentiles_secs(crate::obs::names::QUEUE_WAIT_SECONDS, None) {
+            lat_pairs.push(("queue_wait", pcts(p)));
+        }
+        fields.push(("latency", Json::obj(lat_pairs)));
         wire::ok_response(id, fields)
     }
 }
@@ -409,6 +443,7 @@ fn process(
     default_algo: TmfgAlgo,
     batch_size: usize,
     state: &ServiceState,
+    enqueued: Instant,
 ) -> Json {
     let t = crate::util::timer::Timer::start();
     if spec.sparse_k.is_some() {
@@ -416,12 +451,36 @@ fn process(
     } else {
         state.dense_requests.fetch_add(1, Ordering::Relaxed);
     }
-    match run_cluster(spec, engine, state.cache.as_ref(), default_algo) {
+    // Traced requests own the process-wide tracing session for their
+    // duration (the session gate serializes them); everything else just
+    // gets a fresh trace_id to echo for log correlation.
+    let traced = spec.trace;
+    let (session, trace_id) = if traced {
+        let s = crate::obs::TraceSession::begin();
+        let tid = s.id().to_string();
+        (Some(s), tid)
+    } else {
+        (None, crate::obs::next_trace_id())
+    };
+    // Retroactive queue-wait span (submit → processing start). Its start
+    // predates the session epoch, which the exporter clamps to ts=0.
+    crate::obs::record_span(
+        "queue_wait",
+        String::new(),
+        enqueued,
+        enqueued.elapsed().as_nanos() as u64,
+    );
+    let result = run_cluster(spec, engine, state.cache.as_ref(), default_algo);
+    let trace_json = session.map(|s| {
+        let (tid, epoch, threads) = s.finish();
+        crate::obs::chrome_trace(&tid, epoch, &threads)
+    });
+    match result {
         Ok(out) => {
             let Some(labels) = out.labels else {
-                return wire::error_response(
-                    id,
-                    &TmfgError::invariant("run produced no labels"),
+                return with_trace_id(
+                    wire::error_response(id, &TmfgError::invariant("run produced no labels")),
+                    &trace_id,
                 );
             };
             match out.oracle {
@@ -451,10 +510,23 @@ fn process(
                 CacheStatus::Miss => fields.push(("cache", Json::str("miss"))),
                 CacheStatus::Bypass => {}
             }
-            wire::ok_response(id, fields)
+            fields.push(("trace_id", Json::str(&trace_id)));
+            let mut resp = wire::ok_response(id, fields);
+            if let (Some(tj), Json::Obj(map)) = (trace_json, &mut resp) {
+                map.insert("trace".to_string(), tj);
+            }
+            resp
         }
-        Err(e) => wire::error_response(id, &e),
+        Err(e) => with_trace_id(wire::error_response(id, &e), &trace_id),
     }
+}
+
+/// Stamp the request's trace id onto a wire response (ok or error).
+fn with_trace_id(mut resp: Json, trace_id: &str) -> Json {
+    if let Json::Obj(map) = &mut resp {
+        map.insert("trace_id".to_string(), Json::str(trace_id));
+    }
+    resp
 }
 
 /// Handle one streaming command against this worker's session map.
@@ -562,22 +634,32 @@ fn run_job(
     state: &ServiceState,
     batch_size: usize,
 ) {
-    let Job { request, reply, conn, internal } = job;
+    let Job { request, reply, conn, internal, enqueued } = job;
     let wire::Request { id, body, .. } = request;
+    // Dispatcher queue-wait: submit → dequeue, into the metrics
+    // histogram (stats/Prometheus percentiles). The matching trace span
+    // is recorded in `process` once a traced request's session is live.
+    crate::obs::registry().observe_secs(
+        crate::obs::names::QUEUE_WAIT_SECONDS,
+        None,
+        enqueued.elapsed().as_secs_f64(),
+    );
     // Contain panics to the one request: an unwinding worker thread would
     // otherwise die silently and permanently wedge its pinned shard
     // (queued jobs never drained, handlers blocked in recv forever). The
     // library paths are de-panicked, so this only guards regressions.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match body {
         Command::Cluster(spec) => {
-            process(&id, spec, engine, cfg.default_algo, batch_size, state)
+            process(&id, spec, engine, cfg.default_algo, batch_size, state, enqueued)
         }
         body @ (Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream) => {
             stream_cmd(&id, &body, streams, conn, cfg.default_algo, batch_size, state)
         }
-        // Ping/Shutdown/Stats are answered in the connection handler and
-        // never enqueued; answer defensively anyway.
-        Command::Ping | Command::Shutdown | Command::Stats => wire::ok_response(&id, vec![]),
+        // Ping/Shutdown/Stats/Metrics are answered in the connection
+        // handler and never enqueued; answer defensively anyway.
+        Command::Ping | Command::Shutdown | Command::Stats | Command::Metrics => {
+            wire::ok_response(&id, vec![])
+        }
     }));
     let resp = result.unwrap_or_else(|_| {
         wire::error_response(
@@ -663,6 +745,9 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
     let addr = listener.local_addr()?.to_string();
     let shutdown = Arc::new(AtomicBool::new(false));
     let workers = cfg.resolved_workers();
+    crate::obs::registry()
+        .gauge(crate::obs::names::DISPATCH_WORKERS)
+        .store(workers as u64, Ordering::Relaxed);
     let cache = if cfg.cache_entries > 0 {
         Some(Arc::new(ArtifactCache::new(cfg.cache_entries, cfg.cache_bytes)))
     } else {
@@ -760,6 +845,12 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, shutdown: Arc<Atomic
                 let _ = writeln!(writer, "{}", state.stats_response(&req.id).to_string());
                 continue;
             }
+            Command::Metrics => {
+                let text = crate::obs::registry().prometheus();
+                let resp = wire::ok_response(&req.id, vec![("metrics", Json::str(&text))]);
+                let _ = writeln!(writer, "{}", resp.to_string());
+                continue;
+            }
             Command::Shutdown => {
                 shutdown.store(true, Ordering::Release);
                 let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
@@ -780,7 +871,7 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, shutdown: Arc<Atomic
             Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream
         );
         let (rtx, rrx) = channel();
-        let job = Job { request: req, reply: rtx, conn, internal: false };
+        let job = Job { request: req, reply: rtx, conn, internal: false, enqueued: Instant::now() };
         if !state.submit(is_stream, shard, job) {
             break; // queues closed: service is shutting down
         }
@@ -808,6 +899,7 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, shutdown: Arc<Atomic
             reply: rtx,
             conn,
             internal: true,
+            enqueued: Instant::now(),
         },
     );
 }

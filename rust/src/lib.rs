@@ -22,6 +22,12 @@
 //! unified [`api::TmfgError`], and the versioned [`api::wire`] types of
 //! the TCP service.
 //!
+//! Cross-cutting observability lives in [`obs`]: RAII tracing spans
+//! (`span!`) collected into Chrome trace-event JSON, log-linear latency
+//! histograms with a Prometheus exposition (`{"cmd": "metrics"}` on the
+//! wire), and the leveled `log!` macro — all gated to a single relaxed
+//! atomic load when disabled.
+//!
 //! The top-level `README.md` documents the three-layer architecture, the
 //! streaming subsystem and its wire protocol, and how to run the
 //! examples, benches, and experiments.
@@ -58,6 +64,7 @@ pub mod data;
 pub mod dbht;
 pub mod error;
 pub mod metrics;
+pub mod obs;
 pub mod parlay;
 pub mod runtime;
 pub mod sparse;

@@ -16,10 +16,15 @@ use tmfg::coordinator::pipeline::{ApspMode, Pipeline, PipelineConfig, TmfgAlgo};
 use tmfg::coordinator::registry;
 use tmfg::coordinator::service::{serve, ServiceConfig};
 use tmfg::dbht::Linkage;
+use tmfg::log;
 use tmfg::parlay;
 use tmfg::util::cli::Args;
+use tmfg::util::json::Json;
 
 const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
+
+  global: [--quiet]  (suppress info output; TMFG_LOG=off|error|warn|info|debug
+          also filters -- machine output like --json-out is unaffected)
 
   tmfg run --dataset <name|csv> [--algo par1|par10|par200|corr|heap|opt]
            [--scale 0.1] [--seed N] [--threads N]
@@ -27,13 +32,15 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
            [--hub-n H] [--hub-radius X] [--hub-q Q]
            [--linkage complete|average|single] [--no-xla] [--check]
            [--sparse-k K] [--sparse-seed N]
-           [--newick out.nwk] [--json-out out.json]
+           [--newick out.nwk] [--json-out out.json] [--trace out.json]
            (--sparse-k runs the sparse k-NN pipeline: O(n*K) candidate
             memory instead of the dense O(n^2) similarity matrix.
             --apsp approx|auto serves DBHT through the streaming hub
             oracle -- O(n*H) memory, no n^2 distance matrix; --hub-n 0
             means auto (~sqrt(n) hubs). Try
-            --dataset synth-large-16384 --sparse-k 32 --apsp approx)
+            --dataset synth-large-16384 --sparse-k 32 --apsp approx.
+            --trace writes a Chrome trace-event JSON of the run --
+            load it in Perfetto or chrome://tracing)
   tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|ablation|all>
            [--scale 0.1] [--seed N] [--datasets a,b,c] [--threads 1,2,4]
            [--out-dir results]
@@ -53,6 +60,9 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if args.get_bool("quiet", false) {
+        tmfg::obs::set_max_level(Some(tmfg::obs::Level::Warn));
+    }
     match args.subcommand().unwrap_or_default() {
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
@@ -70,14 +80,14 @@ fn main() {
 /// CLI boundary: the library reports `TmfgError`; the binary prints it
 /// and exits (the one place where exiting is the right response).
 fn fail(e: TmfgError) -> ! {
-    eprintln!("error: {e}");
+    log!(error, "error: {e}");
     std::process::exit(1);
 }
 
 fn parse_algo(args: &Args) -> TmfgAlgo {
     let s = args.get_str("algo", "opt");
     TmfgAlgo::parse(&s).unwrap_or_else(|| {
-        eprintln!("unknown algo {s}");
+        log!(error, "unknown algo {s}");
         std::process::exit(2);
     })
 }
@@ -90,7 +100,7 @@ fn cmd_run(args: &Args) {
         parlay::set_num_threads(t.parse().unwrap_or(1));
     }
     let ds = registry::get_dataset(&name, scale, seed).unwrap_or_else(|| {
-        eprintln!("unknown dataset {name}");
+        log!(error, "unknown dataset {name}");
         std::process::exit(2);
     });
     let apsp = args.opt_str("apsp").and_then(ApspMode::parse);
@@ -114,7 +124,8 @@ fn cmd_run(args: &Args) {
         check_invariants: args.get_bool("check", false),
         ..Default::default()
     };
-    println!(
+    log!(
+        info,
         "dataset {} (n={}, L={}, k={}), algo {}, {} threads{}",
         ds.name,
         ds.n(),
@@ -128,6 +139,10 @@ fn cmd_run(args: &Args) {
             String::new()
         }
     );
+    // An exclusive tracing session spanning the whole pipeline run; the
+    // per-thread span buffers render as Chrome trace-event JSON below.
+    let trace_path = args.opt_str("trace");
+    let trace_session = trace_path.as_ref().map(|_| tmfg::obs::TraceSession::begin());
     let out = if args.has("sparse-k") {
         // Sparse mode goes through the typed API directly: the legacy
         // Pipeline facade is dense-only.
@@ -149,31 +164,47 @@ fn cmd_run(args: &Args) {
     } else {
         Pipeline::new(cfg).run_dataset(&ds).unwrap_or_else(|e| fail(e))
     };
-    println!("\nstage breakdown:\n{}", out.breakdown.table());
+    if let (Some(session), Some(path)) = (trace_session, trace_path.as_deref()) {
+        let (trace_id, epoch, threads) = session.finish();
+        let trace = tmfg::obs::chrome_trace(&trace_id, epoch, &threads);
+        std::fs::write(path, trace.to_string()).unwrap_or_else(|e| fail(e.into()));
+        log!(info, "wrote Chrome trace {trace_id} to {path} (open in Perfetto)");
+    }
+    log!(info, "\nstage breakdown:\n{}", out.breakdown.table());
     if let Some(sp) = &out.sparse {
-        println!(
+        log!(
+            info,
             "sparse candidates: k={} nnz={} mean degree {:.1}, {} dense-fallback rounds",
-            sp.k, sp.nnz, sp.mean_degree, sp.fallbacks
+            sp.k,
+            sp.nnz,
+            sp.mean_degree,
+            sp.fallbacks
         );
     }
     if let Some(p) = out.corr_path {
-        println!("similarity path: {p:?}");
+        log!(info, "similarity path: {p:?}");
     }
-    println!("apsp oracle: {}", out.oracle.name());
-    println!("TMFG edges: {} (edge sum {:.3})", out.tmfg.edges.len(), out.edge_sum);
-    println!("converging bubbles: {}", out.dbht.n_converging);
+    log!(info, "apsp oracle: {}", out.oracle.name());
+    log!(info, "TMFG edges: {} (edge sum {:.3})", out.tmfg.edges.len(), out.edge_sum);
+    log!(info, "converging bubbles: {}", out.dbht.n_converging);
     if let Some(ari) = out.ari {
-        println!("ARI @ k={}: {ari:.4}", ds.n_classes);
+        log!(info, "ARI @ k={}: {ari:.4}", ds.n_classes);
     }
     if let Some(path) = args.opt_str("newick") {
         std::fs::write(path, out.dbht.dendrogram.to_newick(None))
             .unwrap_or_else(|e| fail(e.into()));
-        println!("wrote dendrogram (Newick) to {path}");
+        log!(info, "wrote dendrogram (Newick) to {path}");
     }
     if let Some(path) = args.opt_str("json-out") {
-        std::fs::write(path, out.dbht.dendrogram.to_json().to_string())
-            .unwrap_or_else(|e| fail(e.into()));
-        println!("wrote dendrogram (JSON) to {path}");
+        // Machine output: dendrogram plus the per-stage timings in one
+        // document (stages serialized via Breakdown::to_json, the same
+        // form the trace exporter uses).
+        let doc = Json::obj(vec![
+            ("dendrogram", out.dbht.dendrogram.to_json()),
+            ("breakdown", out.breakdown.to_json()),
+        ]);
+        std::fs::write(path, doc.to_string()).unwrap_or_else(|e| fail(e.into()));
+        log!(info, "wrote dendrogram + breakdown (JSON) to {path}");
     }
 }
 
@@ -201,7 +232,7 @@ fn cmd_experiment(args: &Args) {
         "ablation" => experiments::ablation_linkage(&opts),
         "all" => experiments::all(&opts),
         other => {
-            eprintln!("unknown experiment {other}\n{USAGE}");
+            log!(error, "unknown experiment {other}\n{USAGE}");
             std::process::exit(2);
         }
     };
@@ -215,12 +246,12 @@ fn cmd_gen(args: &Args) {
     let out = args.get_str("out", "dataset.csv");
     let ds = registry::get_dataset(&name, args.get_f64("scale", 0.1), args.get_u64("seed", 1))
         .unwrap_or_else(|| {
-            eprintln!("unknown dataset {name}");
+            log!(error, "unknown dataset {name}");
             std::process::exit(2);
         });
     tmfg::data::loader::save_ucr_csv(&ds, std::path::Path::new(&out))
         .unwrap_or_else(|e| fail(e.into()));
-    println!("wrote {} (n={}, L={}, k={})", out, ds.n(), ds.len(), ds.n_classes);
+    log!(info, "wrote {} (n={}, L={}, k={})", out, ds.n(), ds.len(), ds.n_classes);
 }
 
 fn cmd_serve(args: &Args) {
@@ -237,16 +268,17 @@ fn cmd_serve(args: &Args) {
     let workers = cfg.resolved_workers();
     let cache_entries = cfg.cache_entries;
     let h = serve(cfg).unwrap_or_else(|e| fail(e.into()));
-    println!("tmfg clustering service listening on {}", h.addr);
-    println!(
+    log!(info, "tmfg clustering service listening on {}", h.addr);
+    log!(
+        info,
         "dispatch workers: {workers}; artifact cache: {}",
         if cache_entries > 0 { format!("{cache_entries} entries") } else { "disabled".into() }
     );
-    println!("protocol: one JSON request per line; see api::wire + coordinator/service.rs");
+    log!(info, "protocol: one JSON request per line; see api::wire + coordinator/service.rs");
     // Block on the service itself: when a client sends {"cmd":"shutdown"}
     // the acceptor and dispatcher wind down and wait() returns.
     h.wait();
-    println!("tmfg clustering service shut down cleanly");
+    log!(info, "tmfg clustering service shut down cleanly");
 }
 
 fn cmd_stream(args: &Args) {
@@ -257,7 +289,7 @@ fn cmd_stream(args: &Args) {
         parlay::set_num_threads(t.parse().unwrap_or(1));
     }
     let ds = registry::get_dataset(&name, scale, seed).unwrap_or_else(|| {
-        eprintln!("unknown dataset {name}");
+        log!(error, "unknown dataset {name}");
         std::process::exit(2);
     });
     let window = args.get_usize("window", 64);
@@ -269,7 +301,8 @@ fn cmd_stream(args: &Args) {
     let mut scfg = pipeline.stream_config(ds.n(), window, k);
     scfg.policy.drift_threshold =
         args.get_f64("drift", scfg.policy.drift_threshold as f64) as f32;
-    println!(
+    log!(
+        info,
         "streaming {} (n={}, {} ticks), window {}, k {}, algo {}, drift threshold {:.3}, {} threads",
         ds.name,
         ds.n(),
@@ -282,7 +315,8 @@ fn cmd_stream(args: &Args) {
     );
     let (session, outputs) = pipeline.run_stream(&ds.data, scfg).unwrap_or_else(|e| fail(e));
     let st = session.stats();
-    println!(
+    log!(
+        info,
         "ticks {}  emissions {}  rebuilds {}  refreshes {}  (final generation {})",
         st.ticks,
         st.emissions,
@@ -295,22 +329,26 @@ fn cmd_stream(args: &Args) {
     if !emitted.is_empty() {
         let mean = emitted.iter().sum::<f64>() / emitted.len() as f64;
         let max = emitted.iter().cloned().fold(0.0f64, f64::max);
-        println!("per-tick latency (emitting ticks): mean {mean:.5}s  max {max:.5}s");
+        log!(info, "per-tick latency (emitting ticks): mean {mean:.5}s  max {max:.5}s");
     }
     if let Some(last) = outputs.iter().rev().find_map(|o| o.labels.as_ref()) {
         let ari = tmfg::metrics::adjusted_rand_index(&ds.labels, last);
-        println!("final clustering ARI vs ground truth @ k={k}: {ari:.4}");
+        log!(info, "final clustering ARI vs ground truth @ k={k}: {ari:.4}");
     }
 }
 
 fn cmd_info() {
-    println!("tmfg — parallel TMFG-DBHT hierarchical clustering (Raphael & Shun 2024 reproduction)");
-    println!("pool threads: {}", parlay::num_threads());
+    log!(
+        info,
+        "tmfg — parallel TMFG-DBHT hierarchical clustering (Raphael & Shun 2024 reproduction)"
+    );
+    log!(info, "pool threads: {}", parlay::num_threads());
     match tmfg::runtime::Manifest::load(std::path::Path::new("artifacts")) {
         Ok(m) => {
-            println!("XLA artifacts ({} buckets):", m.buckets.len());
+            log!(info, "XLA artifacts ({} buckets):", m.buckets.len());
             for b in &m.buckets {
-                println!(
+                log!(
+                    info,
                     "  {}x{}  block_rows={} vmem/step={}KiB  {}",
                     b.n,
                     b.l,
@@ -320,11 +358,11 @@ fn cmd_info() {
                 );
             }
             match tmfg::runtime::client::XlaRuntime::new() {
-                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
-                Err(e) => println!("PJRT unavailable: {e:#}"),
+                Ok(rt) => log!(info, "PJRT platform: {}", rt.platform()),
+                Err(e) => log!(info, "PJRT unavailable: {e:#}"),
             }
         }
-        Err(e) => println!("no artifacts ({e:#}); run `make artifacts`"),
+        Err(e) => log!(info, "no artifacts ({e:#}); run `make artifacts`"),
     }
-    println!("datasets: {}", registry::table1_names().join(", "));
+    log!(info, "datasets: {}", registry::table1_names().join(", "));
 }

@@ -1,0 +1,255 @@
+//! Log-linear (HDR-style) latency histogram.
+//!
+//! Values (u64, typically nanoseconds) land in one of 976 fixed buckets:
+//! 16 unit-width buckets for `v < 16`, then 16 linear sub-buckets per
+//! power of two above that — so the relative quantization error is
+//! bounded by 1/16 (6.25%) everywhere, while the whole u64 range fits in
+//! ~8 KiB of counts. Recording is one index computation plus one
+//! increment; percentiles walk the cumulative counts. Histograms merge
+//! by elementwise addition, which is what lets per-worker instances be
+//! combined into one process view without locking on the hot path.
+
+/// log2 of the sub-bucket count per octave.
+const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per octave (and the width of the unit range).
+const SUB: u64 = 1 << SUB_BITS;
+/// Total bucket count: the unit range plus 16 sub-buckets for each
+/// most-significant-bit position 4..=63.
+pub const BUCKETS: usize = (SUB as usize) * 61;
+
+/// Fixed-layout log-linear histogram with running count/sum/min/max.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: vec![0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Bucket index for a value; total order over values is preserved
+    /// (monotone in `v`).
+    pub fn index_of(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (msb as u32 - SUB_BITS)) - SUB) as usize;
+        (msb - SUB_BITS as usize + 1) * SUB as usize + sub
+    }
+
+    /// Smallest value mapping to bucket `i`.
+    pub fn bucket_low(i: usize) -> u64 {
+        if i < SUB as usize {
+            return i as u64;
+        }
+        let msb = i / SUB as usize + SUB_BITS as usize - 1;
+        let sub = (i % SUB as usize) as u64;
+        (SUB + sub) << (msb as u32 - SUB_BITS)
+    }
+
+    /// Largest value mapping to bucket `i`.
+    pub fn bucket_high(i: usize) -> u64 {
+        if i + 1 < BUCKETS {
+            Self::bucket_low(i + 1) - 1
+        } else {
+            u64::MAX
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index_of(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` ∈ [0, 1]: the upper edge of the bucket
+    /// holding the ceil(q·count)-th observation, clamped to the observed
+    /// max — so the reported value is within one bucket width (≤ 6.25%
+    /// relative) of the true order statistic, and monotone in `q`.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_high(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Non-empty buckets as `(upper_edge, cumulative_count)` pairs —
+    /// the shape a Prometheus histogram exposition needs.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((Self::bucket_high(i), cum));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries_are_exact_at_octave_edges() {
+        // Unit range: identity.
+        for v in 0..16u64 {
+            assert_eq!(Histogram::index_of(v), v as usize);
+            assert_eq!(Histogram::bucket_low(v as usize), v);
+        }
+        // Octave edges land on fresh buckets, last sub-bucket just below.
+        assert_eq!(Histogram::index_of(16), 16);
+        assert_eq!(Histogram::index_of(31), 31);
+        assert_eq!(Histogram::index_of(32), 32);
+        assert_eq!(Histogram::index_of(33), 32); // 33 shares 32's sub-bucket
+        assert_eq!(Histogram::index_of(u64::MAX), BUCKETS - 1);
+        // bucket_low/bucket_high tile the axis with no gaps or overlaps.
+        for i in 1..BUCKETS {
+            assert_eq!(Histogram::bucket_high(i - 1) + 1, Histogram::bucket_low(i), "bucket {i}");
+        }
+        // Round trip: every bucket's low and high map back to it.
+        for i in 0..BUCKETS {
+            assert_eq!(Histogram::index_of(Histogram::bucket_low(i)), i);
+            assert_eq!(Histogram::index_of(Histogram::bucket_high(i)), i);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut v = 1u64;
+        while v < u64::MAX / 3 {
+            let i = Histogram::index_of(v);
+            let (lo, hi) = (Histogram::bucket_low(i), Histogram::bucket_high(i));
+            assert!(lo <= v && v <= hi);
+            // Bucket width ≤ lo/16 above the unit range.
+            if lo >= 16 {
+                assert!(hi - lo + 1 <= lo / 16 + 1, "v={v} lo={lo} hi={hi}");
+            }
+            v = v.wrapping_mul(3).max(v + 1);
+        }
+    }
+
+    #[test]
+    fn merge_matches_single_histogram() {
+        let mut rng = Rng::new(7);
+        let mut all = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 0..2000u64 {
+            let v = (rng.next_u64() % 1_000_000).max(1);
+            all.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum(), all.sum());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(a.percentile(q), all.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn percentiles_monotone_and_bounded() {
+        let mut rng = Rng::new(42);
+        let mut h = Histogram::new();
+        for _ in 0..5000 {
+            h.record(rng.next_u64() % 10_000_000);
+        }
+        let mut prev = 0u64;
+        for i in 0..=100 {
+            let p = h.percentile(i as f64 / 100.0);
+            assert!(p >= prev, "p{i}={p} < {prev}");
+            assert!(p <= h.max());
+            prev = p;
+        }
+        assert_eq!(h.percentile(1.0), h.max());
+    }
+
+    #[test]
+    fn exact_small_values_and_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0);
+        assert!(h.is_empty());
+        let mut h = Histogram::new();
+        for v in [3u64, 3, 7, 9] {
+            h.record(v);
+        }
+        // All below 16: buckets are exact.
+        assert_eq!(h.percentile(0.5), 3);
+        assert_eq!(h.percentile(1.0), 9);
+        assert_eq!(h.cumulative_buckets(), vec![(3, 2), (7, 3), (9, 4)]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Dependency-free observability layer: spans, metrics, leveled
+//! logging, and trace export.
+//!
+//! Three cooperating pieces, all in-repo (no external crates, matching
+//! the offline `vendor/` policy):
+//!
+//! - **Spans/events** ([`spans`]): `span!(kind, ...)` returns an RAII
+//!   guard that records into per-thread buffers, collected sequentially
+//!   by an exclusive [`TraceSession`]. Disabled cost is one relaxed
+//!   atomic load — the determinism suites run with tracing on and off
+//!   and pin byte-identical results either way.
+//! - **Metrics** ([`registry`]): log-linear latency [`Histogram`]s
+//!   (p50/p95/p99 within 6.25%), counters, and gauges in a
+//!   process-global [`Registry`] with a Prometheus text exposition —
+//!   served by the TCP service as `{"cmd": "metrics"}`.
+//! - **Export** ([`trace`]): finished sessions render as Chrome
+//!   trace-event JSON (`tmfg run --trace out.json`, wire
+//!   `"trace": true`), one track per thread.
+//!
+//! Span taxonomy (the `cat` field in exported traces):
+//!
+//! | kind         | emitted by                                        |
+//! |--------------|---------------------------------------------------|
+//! | `stage`      | `api::Plan` stage runs (similarity…cut)           |
+//! | `tmfg_round` | lazy-gain scan rounds in CORR/HEAP/sparse TMFG    |
+//! | `oracle_row` | `ApspOracle::row_into` derivations                |
+//! | `knn_phase`  | sparse k-NN build phases                          |
+//! | `pool_job`   | `parlay::pool` posted parallel jobs               |
+//! | `queue_wait` | dispatcher submit→dequeue wait (retroactive)      |
+//! | `cache`      | artifact-cache hit/miss/bypass instants           |
+//!
+//! The leveled [`log!`](crate::log) macro replaces scattered
+//! `println!`/`eprintln!` sites: `error`/`warn` go to stderr,
+//! `info`/`debug` to stdout, filtered by the `TMFG_LOG` env var
+//! (`off|error|warn|info|debug`, default `info`) or programmatically
+//! via [`set_max_level`] (the CLI's `--quiet` maps to `warn`). Machine
+//! output (wire responses, `--json-out`, CSV artifacts) never goes
+//! through `log!` and is unaffected by the filter.
+
+pub mod hist;
+pub mod registry;
+pub mod spans;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use registry::{names, registry, Registry};
+pub use spans::{
+    event, next_trace_id, record_span, tracing_enabled, SpanGuard, SpanRecord, ThreadSpans,
+    TraceSession,
+};
+pub use trace::chrome_trace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity; messages pass the filter when `level <= max_level`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+/// 0 suppresses everything ("off"); `UNSET` defers to `TMFG_LOG`.
+const LEVEL_UNSET: u8 = u8::MAX;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNSET);
+
+fn level_from_env() -> u8 {
+    match std::env::var("TMFG_LOG").as_deref() {
+        Ok("off") => 0,
+        Ok("error") => Level::Error as u8,
+        Ok("warn") => Level::Warn as u8,
+        Ok("debug") => Level::Debug as u8,
+        _ => Level::Info as u8,
+    }
+}
+
+fn max_level() -> u8 {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != LEVEL_UNSET {
+        return v;
+    }
+    let v = level_from_env();
+    MAX_LEVEL.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Override the log filter (wins over `TMFG_LOG`); `None` restores the
+/// env-derived default. The CLI's `--quiet` calls
+/// `set_max_level(Some(Level::Warn))`.
+pub fn set_max_level(level: Option<Level>) {
+    MAX_LEVEL.store(level.map_or(LEVEL_UNSET, |l| l as u8), Ordering::Relaxed);
+}
+
+/// Sink for the [`log!`](crate::log) macro — don't call directly.
+pub fn log_emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if (level as u8) > max_level() {
+        return;
+    }
+    match level {
+        Level::Error | Level::Warn => eprintln!("{args}"),
+        Level::Info | Level::Debug => println!("{args}"),
+    }
+}
+
+/// Leveled logging: `log!(info, "wrote {path}")`. Levels: `error`,
+/// `warn` (stderr), `info`, `debug` (stdout). Filtered by `TMFG_LOG` /
+/// [`obs::set_max_level`](set_max_level); formatting is skipped for
+/// filtered-out messages.
+#[macro_export]
+macro_rules! log {
+    (error, $($arg:tt)+) => {
+        $crate::obs::log_emit($crate::obs::Level::Error, format_args!($($arg)+))
+    };
+    (warn, $($arg:tt)+) => {
+        $crate::obs::log_emit($crate::obs::Level::Warn, format_args!($($arg)+))
+    };
+    (info, $($arg:tt)+) => {
+        $crate::obs::log_emit($crate::obs::Level::Info, format_args!($($arg)+))
+    };
+    (debug, $($arg:tt)+) => {
+        $crate::obs::log_emit($crate::obs::Level::Debug, format_args!($($arg)+))
+    };
+}
+
+/// RAII tracing span: `let _s = span!("stage", "similarity n={n}");`.
+/// The kind must be a `&'static str`; the label format is only
+/// evaluated when a trace session is collecting (disabled cost: one
+/// relaxed atomic load).
+#[macro_export]
+macro_rules! span {
+    ($kind:expr) => {
+        $crate::obs::SpanGuard::enter($kind, String::new)
+    };
+    ($kind:expr, $($arg:tt)+) => {
+        $crate::obs::SpanGuard::enter($kind, || format!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering_is_programmable() {
+        // The macro itself must compile at every level; emission goes
+        // through the filter (asserted via max_level transitions, since
+        // capturing stdout is not worth a dependency).
+        set_max_level(Some(Level::Warn));
+        assert_eq!(max_level(), Level::Warn as u8);
+        crate::log!(debug, "filtered out {}", 1);
+        set_max_level(Some(Level::Debug));
+        assert_eq!(max_level(), Level::Debug as u8);
+        set_max_level(None);
+        let env_default = max_level();
+        assert!(env_default <= Level::Debug as u8);
+    }
+
+    #[test]
+    fn span_macro_compiles_in_both_arities() {
+        let _bare = crate::span!("stage");
+        let n = 3;
+        let _labeled = crate::span!("stage", "similarity n={n}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Process-global metrics registry: counters, gauges, and log-linear
+//! latency histograms, with a Prometheus text exposition.
+//!
+//! Counters and gauges are plain relaxed `AtomicU64`s handed out as
+//! `Arc`s — call sites cache the `Arc` in a `OnceLock` so the hot path
+//! is a single `fetch_add`. Histograms record nanoseconds and live
+//! behind per-instance mutexes; the stage/queue-wait observation sites
+//! are coarse (one lock per pipeline stage or dequeued job), so the
+//! locks are uncontended in practice.
+
+use super::hist::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+/// Identifies one histogram series: a metric family plus an optional
+/// single label (e.g. `stage="tmfg"`).
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct HistKey {
+    pub metric: &'static str,
+    pub label: Option<(&'static str, String)>,
+}
+
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<&'static str, Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<HistKey, Arc<Mutex<Histogram>>>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Registry {
+    /// Get or create a monotone counter.
+    pub fn counter(&self, name: &'static str) -> Arc<AtomicU64> {
+        lock(&self.counters).entry(name).or_default().clone()
+    }
+
+    /// Get or create a gauge (stored as a u64 set with `store`).
+    pub fn gauge(&self, name: &'static str) -> Arc<AtomicU64> {
+        lock(&self.gauges).entry(name).or_default().clone()
+    }
+
+    /// Get or create a histogram series.
+    pub fn hist(
+        &self,
+        metric: &'static str,
+        label: Option<(&'static str, &str)>,
+    ) -> Arc<Mutex<Histogram>> {
+        let key = HistKey { metric, label: label.map(|(k, v)| (k, v.to_string())) };
+        lock(&self.hists).entry(key).or_default().clone()
+    }
+
+    /// Record one latency observation in nanoseconds.
+    pub fn observe_ns(&self, metric: &'static str, label: Option<(&'static str, &str)>, ns: u64) {
+        let h = self.hist(metric, label);
+        lock(&h).record(ns);
+    }
+
+    /// Record one latency observation in seconds (negative/NaN ignored).
+    pub fn observe_secs(
+        &self,
+        metric: &'static str,
+        label: Option<(&'static str, &str)>,
+        secs: f64,
+    ) {
+        if secs.is_finite() && secs >= 0.0 {
+            self.observe_ns(metric, label, (secs * 1e9).round() as u64);
+        }
+    }
+
+    /// p50/p95/p99 in seconds for one series, `None` if it has no data.
+    pub fn percentiles_secs(
+        &self,
+        metric: &'static str,
+        label: Option<(&'static str, &str)>,
+    ) -> Option<[f64; 3]> {
+        let key = HistKey { metric, label: label.map(|(k, v)| (k, v.to_string())) };
+        let h = lock(&self.hists).get(&key)?.clone();
+        let h = lock(&h);
+        if h.is_empty() {
+            return None;
+        }
+        Some([0.50, 0.95, 0.99].map(|q| h.percentile(q) as f64 / 1e9))
+    }
+
+    /// Label values present for a labeled histogram family, in sorted
+    /// (BTreeMap) order — deterministic for wire responses.
+    pub fn hist_labels(&self, metric: &'static str) -> Vec<String> {
+        lock(&self.hists)
+            .keys()
+            .filter(|k| k.metric == metric)
+            .filter_map(|k| k.label.as_ref().map(|(_, v)| v.clone()))
+            .collect()
+    }
+
+    /// Render the whole registry as Prometheus text exposition
+    /// (version 0.0.4). Histogram series emit only their non-empty
+    /// buckets (cumulative, ascending `le`) plus `+Inf`, `_sum`, and
+    /// `_count`; values are seconds.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in lock(&self.counters).iter() {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", c.load(Ordering::Relaxed)));
+        }
+        for (name, g) in lock(&self.gauges).iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", g.load(Ordering::Relaxed)));
+        }
+        let hists: Vec<(HistKey, Arc<Mutex<Histogram>>)> =
+            lock(&self.hists).iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        let mut last_family = "";
+        for (key, h) in hists {
+            let h = lock(&h).clone();
+            if key.metric != last_family {
+                out.push_str(&format!("# TYPE {} histogram\n", key.metric));
+                last_family = key.metric;
+            }
+            let label = |extra: &str| match (&key.label, extra.is_empty()) {
+                (Some((k, v)), true) => format!("{{{k}=\"{v}\"}}"),
+                (Some((k, v)), false) => format!("{{{k}=\"{v}\",{extra}}}"),
+                (None, true) => String::new(),
+                (None, false) => format!("{{{extra}}}"),
+            };
+            for (edge, cum) in h.cumulative_buckets() {
+                let le = format!("le=\"{}\"", edge as f64 / 1e9);
+                out.push_str(&format!("{}_bucket{} {cum}\n", key.metric, label(&le)));
+            }
+            out.push_str(&format!(
+                "{}_bucket{} {}\n",
+                key.metric,
+                label("le=\"+Inf\""),
+                h.count()
+            ));
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                key.metric,
+                label(""),
+                h.sum() as f64 / 1e9
+            ));
+            out.push_str(&format!("{}_count{} {}\n", key.metric, label(""), h.count()));
+        }
+        out
+    }
+}
+
+/// The process-global registry.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+/// Metric-family names used across the crate (one place to keep the
+/// wire docs, README, and call sites in sync).
+pub mod names {
+    /// Per-pipeline-stage latency histogram, label `stage`.
+    pub const STAGE_SECONDS: &str = "tmfg_stage_duration_seconds";
+    /// Dispatcher queue-wait histogram (submit → dequeue).
+    pub const QUEUE_WAIT_SECONDS: &str = "tmfg_queue_wait_seconds";
+    /// Parallel jobs posted to the `parlay` pool.
+    pub const POOL_JOBS: &str = "tmfg_pool_jobs_posted_total";
+    /// `run_chunked` calls that ran inline (nested / tiny / 1 thread).
+    pub const POOL_SELF_EXEC: &str = "tmfg_pool_self_execute_total";
+    /// Total workers (incl. the poster) that participated in pool jobs.
+    pub const POOL_WORKERS_GRANTED: &str = "tmfg_pool_workers_granted_total";
+    /// APSP oracle rows derived on demand, by backend.
+    pub const ORACLE_ROWS_DENSE: &str = "tmfg_oracle_rows_dense_total";
+    pub const ORACLE_ROWS_HUB: &str = "tmfg_oracle_rows_hub_total";
+    /// Exact truncated-ball entries applied during hub row derivations.
+    pub const ORACLE_BALL_ENTRIES: &str = "tmfg_oracle_ball_entries_total";
+    /// Artifact-cache outcomes observed by plan executions.
+    pub const CACHE_HITS: &str = "tmfg_artifact_cache_hits_total";
+    pub const CACHE_MISSES: &str = "tmfg_artifact_cache_misses_total";
+    /// Dispatch workers configured for the running service.
+    pub const DISPATCH_WORKERS: &str = "tmfg_dispatch_workers";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_text_shape() {
+        let reg = Registry::default();
+        reg.counter("tmfg_test_events_total").fetch_add(3, Ordering::Relaxed);
+        reg.gauge("tmfg_test_workers").store(4, Ordering::Relaxed);
+        reg.observe_secs(names::STAGE_SECONDS, Some(("stage", "tmfg")), 0.5);
+        reg.observe_secs(names::STAGE_SECONDS, Some(("stage", "tmfg")), 1.0);
+        reg.observe_secs(names::QUEUE_WAIT_SECONDS, None, 0.001);
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE tmfg_test_events_total counter"));
+        assert!(text.contains("tmfg_test_events_total 3"));
+        assert!(text.contains("tmfg_test_workers 4"));
+        assert!(text.contains("# TYPE tmfg_stage_duration_seconds histogram"));
+        assert!(text.contains("tmfg_stage_duration_seconds_bucket{stage=\"tmfg\",le=\"+Inf\"} 2"));
+        assert!(text.contains("tmfg_stage_duration_seconds_count{stage=\"tmfg\"} 2"));
+        assert!(text.contains("tmfg_queue_wait_seconds_bucket{le=\"+Inf\"} 1"));
+        // ascending le edges within a series
+        let edges: Vec<f64> = text
+            .lines()
+            .filter(|l| l.starts_with("tmfg_stage_duration_seconds_bucket") && !l.contains("+Inf"))
+            .map(|l| {
+                let s = l.split("le=\"").nth(1).unwrap();
+                s.split('"').next().unwrap().parse::<f64>().unwrap()
+            })
+            .collect();
+        assert!(edges.windows(2).all(|w| w[0] < w[1]), "{edges:?}");
+    }
+
+    #[test]
+    fn percentiles_and_labels() {
+        let reg = Registry::default();
+        assert!(reg.percentiles_secs(names::STAGE_SECONDS, Some(("stage", "apsp"))).is_none());
+        for ms in 1..=100u64 {
+            reg.observe_ns(names::STAGE_SECONDS, Some(("stage", "apsp")), ms * 1_000_000);
+        }
+        let [p50, p95, p99] =
+            reg.percentiles_secs(names::STAGE_SECONDS, Some(("stage", "apsp"))).unwrap();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((0.04..=0.06).contains(&p50), "{p50}");
+        assert!((0.09..=0.11).contains(&p99), "{p99}");
+        assert_eq!(reg.hist_labels(names::STAGE_SECONDS), vec!["apsp".to_string()]);
+    }
+}

@@ -1,0 +1,280 @@
+//! Span collection: per-thread buffers, RAII guards, and exclusive
+//! trace sessions.
+//!
+//! Recording is designed to never perturb the computation it observes
+//! (the determinism suites run with tracing on):
+//!
+//! - The enabled check is one relaxed atomic load; when tracing is off
+//!   (the default) `span!` costs that load and nothing else — no
+//!   allocation, no clock read.
+//! - When tracing is on, each thread appends to its **own** buffer.
+//!   The buffer sits behind a mutex, but the owning thread is the only
+//!   writer while a session runs — collection happens sequentially at
+//!   `finish()`, after the traced workload has quiesced — so the fast
+//!   path is an uncontended lock (no cross-thread ordering is ever
+//!   introduced between workers).
+//! - Buffers are bounded ([`MAX_SPANS_PER_THREAD`]); overflow drops
+//!   records and counts the drops rather than growing or blocking.
+//!
+//! Sessions are exclusive: [`TraceSession::begin`] holds a global gate
+//! for the session's lifetime, so concurrent `"trace":true` service
+//! requests serialize instead of interleaving their collections. A
+//! session captures *process-wide* activity between `begin` and
+//! `finish` — in a busy service that includes spans from other
+//! in-flight requests, which is exactly what the per-worker tracks are
+//! for.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Per-thread span cap; beyond it records are dropped (and counted).
+pub const MAX_SPANS_PER_THREAD: usize = 1 << 16;
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+
+/// Is a trace session currently collecting? One relaxed load.
+#[inline]
+pub fn tracing_enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// One recorded span or instant event.
+#[derive(Clone)]
+pub struct SpanRecord {
+    /// Span kind — the Chrome trace `cat` (e.g. `"stage"`,
+    /// `"tmfg_round"`, `"oracle_row"`, `"pool_job"`, `"queue_wait"`,
+    /// `"cache"`, `"knn_phase"`).
+    pub kind: &'static str,
+    /// Human label; empty means "use the kind".
+    pub label: String,
+    pub start: Instant,
+    pub dur_ns: u64,
+    /// Instant event (a point in time) rather than a duration span.
+    pub instant: bool,
+}
+
+/// All records collected on one thread, plus its identity.
+pub struct ThreadSpans {
+    pub tid: u64,
+    pub name: String,
+    pub records: Vec<SpanRecord>,
+    pub dropped: u64,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    name: String,
+    inner: Mutex<(Vec<SpanRecord>, u64)>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn buffers() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    static BUFS: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+    BUFS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: Arc<ThreadBuf> = {
+        static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+        let buf = Arc::new(ThreadBuf {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            name: std::thread::current().name().unwrap_or("main").to_string(),
+            inner: Mutex::new((Vec::new(), 0)),
+        });
+        lock(buffers()).push(buf.clone());
+        buf
+    };
+}
+
+fn push(rec: SpanRecord) {
+    LOCAL.with(|b| {
+        let mut inner = lock(&b.inner);
+        if inner.0.len() < MAX_SPANS_PER_THREAD {
+            inner.0.push(rec);
+        } else {
+            inner.1 += 1;
+        }
+    });
+}
+
+/// Record a completed span with an explicit start and duration — for
+/// retroactive measurements like dispatcher queue wait, where the
+/// duration is only known at the end.
+pub fn record_span(kind: &'static str, label: String, start: Instant, dur_ns: u64) {
+    if tracing_enabled() {
+        push(SpanRecord { kind, label, start, dur_ns, instant: false });
+    }
+}
+
+/// Record an instant event (e.g. a cache hit).
+pub fn event(kind: &'static str, label: impl FnOnce() -> String) {
+    if tracing_enabled() {
+        push(SpanRecord { kind, label: label(), start: Instant::now(), dur_ns: 0, instant: true });
+    }
+}
+
+/// RAII span guard — create via the [`span!`](crate::span) macro. When
+/// tracing is disabled construction is a no-op (the label closure is
+/// never called).
+pub struct SpanGuard {
+    active: Option<(&'static str, String, Instant)>,
+}
+
+impl SpanGuard {
+    #[inline]
+    pub fn enter(kind: &'static str, label: impl FnOnce() -> String) -> SpanGuard {
+        if !tracing_enabled() {
+            return SpanGuard { active: None };
+        }
+        SpanGuard { active: Some((kind, label(), Instant::now())) }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((kind, label, start)) = self.active.take() {
+            let dur_ns = start.elapsed().as_nanos() as u64;
+            push(SpanRecord { kind, label, start, dur_ns, instant: false });
+        }
+    }
+}
+
+/// Process-unique id for correlating a request with its trace; echoed
+/// on every wire clustering response as `trace_id`.
+pub fn next_trace_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let wall = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0);
+    format!("t{:012x}-{seq:04x}", wall & 0xffff_ffff_ffff)
+}
+
+static SESSION_GATE: Mutex<()> = Mutex::new(());
+
+/// An exclusive span-collection window. Construction clears all thread
+/// buffers and enables recording; [`finish`](TraceSession::finish)
+/// disables recording and returns everything collected, grouped by
+/// thread.
+pub struct TraceSession {
+    id: String,
+    epoch: Instant,
+    _gate: MutexGuard<'static, ()>,
+}
+
+impl TraceSession {
+    pub fn begin() -> TraceSession {
+        let gate = SESSION_GATE.lock().unwrap_or_else(|p| p.into_inner());
+        // No session is active (the gate serializes them), so no thread
+        // is recording — clearing here cannot race a push.
+        for buf in lock(buffers()).iter() {
+            let mut inner = lock(&buf.inner);
+            inner.0.clear();
+            inner.1 = 0;
+        }
+        let session = TraceSession { id: next_trace_id(), epoch: Instant::now(), _gate: gate };
+        TRACING.store(true, Ordering::SeqCst);
+        session
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// The instant recording started; event timestamps in the export
+    /// are offsets from this.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Stop recording and collect all spans, sequentially per thread.
+    pub fn finish(self) -> (String, Instant, Vec<ThreadSpans>) {
+        TRACING.store(false, Ordering::SeqCst);
+        let mut out = Vec::new();
+        for buf in lock(buffers()).iter() {
+            let mut inner = lock(&buf.inner);
+            let records = std::mem::take(&mut inner.0);
+            let dropped = inner.1;
+            inner.1 = 0;
+            if !records.is_empty() || dropped > 0 {
+                out.push(ThreadSpans {
+                    tid: buf.tid,
+                    name: buf.name.clone(),
+                    records,
+                    dropped,
+                });
+            }
+        }
+        out.sort_by_key(|t| t.tid);
+        (self.id, self.epoch, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests in this module that depend on the global
+    /// tracing flag (libtest runs them on concurrent threads).
+    fn test_lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing_and_skip_labels() {
+        let _serial = test_lock();
+        // Not under a session: the label closure must not run.
+        let _g = SpanGuard::enter("stage", || panic!("label evaluated while disabled"));
+        event("cache", || panic!("event label evaluated while disabled"));
+        assert!(!tracing_enabled());
+    }
+
+    #[test]
+    fn session_collects_balanced_spans_across_threads() {
+        let _serial = test_lock();
+        let session = TraceSession::begin();
+        assert!(tracing_enabled());
+        {
+            let _outer = SpanGuard::enter("stage", || "outer".to_string());
+            let _inner = SpanGuard::enter("tmfg_round", || "round 0".to_string());
+        }
+        event("cache", || "hit".to_string());
+        let t = std::thread::Builder::new()
+            .name("obs-test-worker".into())
+            .spawn(|| {
+                let _s = SpanGuard::enter("pool_job", || "job".to_string());
+            })
+            .unwrap();
+        t.join().unwrap();
+        let (id, _epoch, threads) = session.finish();
+        assert!(!tracing_enabled());
+        assert!(id.starts_with('t'));
+        assert!(threads
+            .iter()
+            .any(|t| t.name == "obs-test-worker"
+                && t.records.first().is_some_and(|r| r.kind == "pool_job")));
+        // This thread's buffer holds exactly this test's records, in
+        // RAII order: the inner span is recorded before the outer.
+        let me = std::thread::current().name().unwrap_or("main").to_string();
+        let mine = &threads.iter().find(|t| t.name == me).expect("own thread").records;
+        assert_eq!(mine.len(), 3);
+        assert_eq!(mine[0].kind, "tmfg_round");
+        assert_eq!(mine[1].kind, "stage");
+        assert_eq!(mine[1].label, "outer");
+        assert!(mine[2].instant && mine[2].kind == "cache");
+        assert!(mine[1].dur_ns >= mine[0].dur_ns);
+    }
+
+    #[test]
+    fn trace_ids_unique() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, b);
+    }
+}

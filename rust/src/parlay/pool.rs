@@ -27,6 +27,24 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+/// Cached obs counters (one registry lookup per process; the accounting
+/// itself is a relaxed `fetch_add` per posted job or fast-path call —
+/// never per chunk, so the work loop is untouched).
+fn jobs_posted_counter() -> &'static Arc<AtomicU64> {
+    static C: OnceLock<Arc<AtomicU64>> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry().counter(crate::obs::names::POOL_JOBS))
+}
+
+fn self_exec_counter() -> &'static Arc<AtomicU64> {
+    static C: OnceLock<Arc<AtomicU64>> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry().counter(crate::obs::names::POOL_SELF_EXEC))
+}
+
+fn workers_granted_counter() -> &'static Arc<AtomicU64> {
+    static C: OnceLock<Arc<AtomicU64>> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry().counter(crate::obs::names::POOL_WORKERS_GRANTED))
+}
+
 /// One posted parallel job: `func` processes chunk `[start, end)`.
 struct Job {
     /// Lifetime-erased chunk closure. Valid until `completed == nchunks`
@@ -43,6 +61,10 @@ struct Job {
     /// Threads currently working this job — used to spread workers across
     /// concurrent jobs (least-loaded job first). Purely advisory.
     participants: AtomicUsize,
+    /// Pool workers that ever joined this job (monotone; the poster is
+    /// not counted). Read once at retirement for the obs
+    /// workers-granted counter.
+    joined: AtomicUsize,
     done_lock: Mutex<bool>,
     done_cv: Condvar,
 }
@@ -126,6 +148,7 @@ fn worker_loop(shared: Arc<Shared>, id: usize) {
             };
             let Some(job) = job else { break };
             job.participants.fetch_add(1, Ordering::Relaxed);
+            job.joined.fetch_add(1, Ordering::Relaxed);
             IN_PARALLEL.with(|f| f.set(true));
             job.work();
             IN_PARALLEL.with(|f| f.set(false));
@@ -207,6 +230,7 @@ impl Pool {
         let active = self.shared.active.load(Ordering::Relaxed).min(self.n_workers + 1);
         let nested = IN_PARALLEL.with(|fl| fl.get());
         if active <= 1 || n <= grain || nested {
+            self_exec_counter().fetch_add(1, Ordering::Relaxed);
             f(0, n);
             return;
         }
@@ -214,9 +238,12 @@ impl Pool {
         let chunk = grain.max(n.div_ceil(active * 8)).max(1);
         let nchunks = n.div_ceil(chunk);
         if nchunks <= 1 {
+            self_exec_counter().fetch_add(1, Ordering::Relaxed);
             f(0, n);
             return;
         }
+        jobs_posted_counter().fetch_add(1, Ordering::Relaxed);
+        let _span = crate::span!("pool_job", "n={n} chunks={nchunks}");
 
         // Erase the closure's lifetime: we guarantee below that we do not
         // return until every chunk has completed.
@@ -232,6 +259,7 @@ impl Pool {
             completed: AtomicUsize::new(0),
             worker_limit: active - 1,
             participants: AtomicUsize::new(1), // the caller
+            joined: AtomicUsize::new(0),
             done_lock: Mutex::new(false),
             done_cv: Condvar::new(),
         });
@@ -260,10 +288,15 @@ impl Pool {
             }
         }
         // Retire the job so workers stop scanning it.
-        let mut jobs = self.shared.jobs.lock().unwrap();
-        if let Some(pos) = jobs.iter().position(|j| Arc::ptr_eq(j, &job)) {
-            jobs.remove(pos);
+        {
+            let mut jobs = self.shared.jobs.lock().unwrap();
+            if let Some(pos) = jobs.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                jobs.remove(pos);
+            }
         }
+        // Poster + every pool worker that ever joined.
+        workers_granted_counter()
+            .fetch_add(1 + job.joined.load(Ordering::Relaxed) as u64, Ordering::Relaxed);
     }
 }
 

@@ -53,7 +53,8 @@ impl CorrEngine {
         match Self::with_artifacts(dir) {
             Ok(e) => e,
             Err(err) => {
-                eprintln!(
+                crate::log!(
+                    warn,
                     "note: XLA artifacts unavailable ({err:#}); using native correlation path"
                 );
                 Self::native_only()

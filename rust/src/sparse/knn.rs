@@ -77,12 +77,18 @@ pub fn knn_candidates(panel: &Matrix, cfg: &KnnConfig) -> Result<SparseSimilarit
         return Err(TmfgError::invalid("sparse k must be >= 1"));
     }
     let k = cfg.k.min(n - 1);
-    let z = standardize_rows_generic::<f32>(panel);
+    let z = {
+        let _span = crate::span!("knn_phase", "standardize n={n} l={l}");
+        standardize_rows_generic::<f32>(panel)
+    };
     let picks: Vec<Vec<(u32, f32)>> = if n <= cfg.prefilter_above {
+        let _span = crate::span!("knn_phase", "exact picks n={n} k={k}");
         exact_picks(&z, n, l, k)
     } else {
+        let _span = crate::span!("knn_phase", "prefiltered picks n={n} k={k}");
         prefiltered_picks(&z, n, l, k, cfg)
     };
+    let _span = crate::span!("knn_phase", "assemble csr n={n}");
     SparseSimilarity::from_directed_picks(n, &picks)
 }
 

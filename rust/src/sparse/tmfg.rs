@@ -196,7 +196,10 @@ pub fn sparse_tmfg(
         gains.push(state.best_pair(s, &fv).unwrap_or(EXHAUSTED));
     }
 
+    let mut round: u64 = 0;
     while state.n_rem > 0 {
+        let _round_span = crate::span!("tmfg_round", "sparse round {round} rem={}", state.n_rem);
+        round += 1;
         // ---- selection: argmax gain over alive faces -----------------------
         let ids = faces.alive_ids();
         let g = &gains;

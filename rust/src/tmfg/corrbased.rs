@@ -165,7 +165,10 @@ pub fn corr_tmfg(s: &Matrix, cfg: &TmfgConfig) -> Result<TmfgResult, TmfgError> 
         gains.push(p);
     }
 
+    let mut round: u64 = 0;
     while state.n_rem > 0 {
+        let _round_span = crate::span!("tmfg_round", "corr round {round} rem={}", state.n_rem);
+        round += 1;
         // ---- selection (Alg. 1 lines 13–14) --------------------------------
         // Collect the winning face-vertex pairs for this round.
         let selected: Vec<(f32, u32, u32)> = if cfg.prefix == 1 {

@@ -75,7 +75,10 @@ pub fn heap_tmfg(s: &Matrix, cfg: &TmfgConfig) -> Result<TmfgResult, TmfgError> 
         }
     }
 
+    let mut round: u64 = 0;
     while state.n_rem > 0 {
+        let _round_span = crate::span!("tmfg_round", "heap round {round} rem={}", state.n_rem);
+        round += 1;
         let Some(top) = heap.pop() else {
             return Err(TmfgError::invariant(
                 "heap exhausted while vertices remain uninserted",

@@ -18,6 +18,15 @@ pub struct Stats {
     pub stddev: f64,
     pub min: f64,
     pub max: f64,
+    /// Histogram percentiles of the samples (seconds), via the obs
+    /// log-linear histogram — exact order statistics only down to its
+    /// 6.25% bucket resolution, which is what the JSON artifact tracks.
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Process peak RSS (VmHWM, KiB) read right after the last rep —
+    /// `None` off Linux.
+    pub peak_rss_kb: Option<u64>,
 }
 
 impl Stats {
@@ -34,6 +43,13 @@ impl Stats {
                 m => (sorted[m / 2 - 1] + sorted[m / 2]) / 2.0,
             }
         };
+        let mut hist = crate::obs::Histogram::new();
+        for &s in samples {
+            if s.is_finite() && s >= 0.0 {
+                hist.record((s * 1e9).round() as u64);
+            }
+        }
+        let pct = |q: f64| hist.percentile(q) as f64 / 1e9;
         Stats {
             name: name.to_string(),
             reps: samples.len(),
@@ -42,8 +58,25 @@ impl Stats {
             stddev: var.sqrt(),
             min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
             max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            peak_rss_kb: peak_rss_kb(),
         }
     }
+}
+
+/// Process peak resident set size in KiB (Linux `VmHWM`), the ad-hoc
+/// reading bench_apsp pioneered, now recorded by every suite entry.
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("VmHWM:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
 }
 
 /// Time a single invocation of `f` in seconds.
@@ -139,8 +172,10 @@ impl BenchSuite {
     /// Write all results as machine-readable JSON under
     /// `results/BENCH_<suite>.json` — the perf-trajectory artifact CI
     /// smoke-runs on every push. One entry per scenario: `name`,
-    /// `median_ns` (plus mean/min for context), `reps`, and every
-    /// metadata column (numeric where parseable, e.g. `n`, `threads`).
+    /// `median_ns` (plus mean/min for context), histogram percentiles
+    /// (`p50_ns`/`p95_ns`/`p99_ns`), the peak RSS observed after the
+    /// case ran (`peak_rss_kb`, Linux), `reps`, and every metadata
+    /// column (numeric where parseable, e.g. `n`, `threads`).
     pub fn write_json(&self) -> std::io::Result<String> {
         use crate::util::json::Json;
         std::fs::create_dir_all("results")?;
@@ -155,6 +190,13 @@ impl BenchSuite {
                     ("median_ns", Json::Num((s.median * 1e9).round())),
                     ("mean_ns", Json::Num((s.mean * 1e9).round())),
                     ("min_ns", Json::Num((s.min * 1e9).round())),
+                    ("p50_ns", Json::Num((s.p50 * 1e9).round())),
+                    ("p95_ns", Json::Num((s.p95 * 1e9).round())),
+                    ("p99_ns", Json::Num((s.p99 * 1e9).round())),
+                    (
+                        "peak_rss_kb",
+                        s.peak_rss_kb.map_or(Json::Null, |kb| Json::Num(kb as f64)),
+                    ),
                     ("reps", Json::Num(s.reps as f64)),
                 ];
                 for (k, v) in row {
@@ -240,6 +282,20 @@ mod tests {
         assert_eq!(calls, 5); // 2 warmup + 3 reps
         assert_eq!(suite.results.len(), 1);
         assert_eq!(suite.results[0].reps, 3);
+    }
+
+    #[test]
+    fn stats_percentiles_and_rss() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let s = Stats::from_samples("p", &samples);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        // within histogram bucket resolution (6.25%) of the true order stats
+        assert!((s.p50 - 0.050).abs() < 0.004, "{}", s.p50);
+        assert!((s.p99 - 0.099).abs() < 0.007, "{}", s.p99);
+        // VmHWM is available on Linux CI; just sanity-check when present
+        if let Some(kb) = s.peak_rss_kb {
+            assert!(kb > 0);
+        }
     }
 
     #[test]

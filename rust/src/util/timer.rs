@@ -86,12 +86,27 @@ impl Breakdown {
     /// Render as an aligned two-column table with a total row.
     pub fn table(&self) -> String {
         let width = self.entries.iter().map(|(s, _)| s.len()).max().unwrap_or(5).max(5);
+        // One pass for the total; the per-row percentage divides by it
+        // (recomputing total() per row made this O(stages²)).
+        let total = self.total();
+        let denom = total.max(1e-12);
         let mut out = String::new();
         for (s, t) in &self.entries {
-            out.push_str(&format!("{s:width$}  {t:10.4}s  ({:5.1}%)\n", 100.0 * t / self.total().max(1e-12)));
+            out.push_str(&format!("{s:width$}  {t:10.4}s  ({:5.1}%)\n", 100.0 * t / denom));
         }
-        out.push_str(&format!("{:width$}  {:10.4}s\n", "TOTAL", self.total()));
+        out.push_str(&format!("{:width$}  {total:10.4}s\n", "TOTAL"));
         out
+    }
+
+    /// The one JSON serialization of stage timings, shared by the CLI's
+    /// `--json-out` and the trace exporter: stage → seconds plus a
+    /// `"total"` key.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut pairs: Vec<(&str, Json)> =
+            self.entries.iter().map(|(s, t)| (s.as_str(), Json::Num(*t))).collect();
+        pairs.push(("total", Json::Num(self.total())));
+        Json::obj(pairs)
     }
 }
 
@@ -132,5 +147,19 @@ mod tests {
         let t = a.table();
         assert!(t.contains("TOTAL"));
         assert!(t.contains('x'));
+    }
+
+    #[test]
+    fn breakdown_to_json_includes_stages_and_total() {
+        let mut b = Breakdown::new();
+        b.add("similarity", 1.25);
+        b.add("tmfg", 0.75);
+        let j = b.to_json();
+        assert_eq!(j.get("similarity").as_f64(), Some(1.25));
+        assert_eq!(j.get("tmfg").as_f64(), Some(0.75));
+        assert_eq!(j.get("total").as_f64(), Some(2.0));
+        // Serializes cleanly (the --json-out / trace-export path).
+        let text = j.to_string();
+        assert!(text.contains("\"total\""));
     }
 }

@@ -219,6 +219,29 @@ fn hub_oracle_dendrograms_byte_identical_to_hub_matrix() {
 }
 
 #[test]
+fn tracing_session_leaves_results_byte_identical() {
+    // The observability contract: a live trace session records into
+    // per-thread buffers and must never branch the computation. Runs
+    // with tracing enabled are byte-identical to untraced runs at every
+    // thread count, and the session actually collects spans.
+    let _serial = thread_count_lock();
+    let (_, s, k) = panels().remove(0);
+    for &t in &THREADS {
+        let plain = parlay::with_threads(t, || run(&s, TmfgAlgo::Heap, ApspMode::Approx, k));
+        let session = tmfg::obs::TraceSession::begin();
+        let traced = parlay::with_threads(t, || run(&s, TmfgAlgo::Heap, ApspMode::Approx, k));
+        let (_, _, threads) = session.finish();
+        assert_identical(&plain, &traced, &format!("tracing on, {t} threads"));
+        let n_spans: usize = threads.iter().map(|th| th.records.len()).sum();
+        assert!(n_spans > 0, "session collected nothing at {t} threads");
+        assert!(
+            threads.iter().flat_map(|th| th.records.iter()).any(|r| r.kind == "stage"),
+            "no stage spans at {t} threads"
+        );
+    }
+}
+
+#[test]
 fn repeated_runs_identical_at_fixed_thread_count() {
     // Same-thread-count reruns must also agree (guards against
     // completion-order nondeterminism inside reductions).

@@ -237,6 +237,131 @@ fn stats_reports_cache_bytes_and_sparse_vs_dense_counts() {
 }
 
 #[test]
+fn metrics_returns_prometheus_text_with_stage_histograms() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    let resp = c
+        .call(&Json::obj(vec![
+            ("dataset", Json::str("CBF")),
+            ("scale", Json::Num(0.03)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let m = c.call(&Json::obj(vec![("cmd", Json::str("metrics"))])).unwrap();
+    assert_eq!(m.get("ok").as_bool(), Some(true), "{m:?}");
+    let text = m.get("metrics").as_str().unwrap();
+    assert!(
+        text.contains("# TYPE tmfg_stage_duration_seconds histogram"),
+        "{text}"
+    );
+    // every pipeline stage of the completed request has a series
+    for stage in ["similarity", "tmfg", "apsp", "dbht", "cut"] {
+        assert!(
+            text.contains(&format!("tmfg_stage_duration_seconds_count{{stage=\"{stage}\"}}")),
+            "missing stage {stage} in:\n{text}"
+        );
+    }
+    assert!(text.contains("tmfg_queue_wait_seconds_count"), "{text}");
+    assert!(text.contains("# TYPE tmfg_dispatch_workers gauge"), "{text}");
+    h.stop();
+}
+
+#[test]
+fn stats_reports_latency_percentiles() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    let resp = c
+        .call(&Json::obj(vec![
+            ("dataset", Json::str("CBF")),
+            ("scale", Json::Num(0.03)),
+            ("seed", Json::Num(3.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let stats = c.call(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+    let lat = stats.get("latency");
+    // stage percentiles come from the process-global registry, so at
+    // least this request's stages are present and ordered
+    let tmfg = lat.get("stages").get("tmfg");
+    let p50 = tmfg.get("p50").as_f64().expect("p50");
+    let p95 = tmfg.get("p95").as_f64().expect("p95");
+    let p99 = tmfg.get("p99").as_f64().expect("p99");
+    assert!(p50 <= p95 && p95 <= p99, "{stats:?}");
+    // the request was dequeued once, so queue-wait has data too
+    assert!(
+        lat.get("queue_wait").get("p99").as_f64().is_some(),
+        "{stats:?}"
+    );
+    h.stop();
+}
+
+#[test]
+fn trace_flag_returns_chrome_trace_and_every_response_echoes_trace_id() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    let plain = c
+        .call(&Json::obj(vec![
+            ("dataset", Json::str("CBF")),
+            ("scale", Json::Num(0.03)),
+        ]))
+        .unwrap();
+    assert_eq!(plain.get("ok").as_bool(), Some(true), "{plain:?}");
+    let plain_tid = plain.get("trace_id").as_str().expect("trace_id on every response");
+    assert!(plain_tid.starts_with('t'), "{plain_tid}");
+    assert!(matches!(plain.get("trace"), Json::Null), "untraced response has no trace");
+
+    let traced = c
+        .call(&Json::obj(vec![
+            ("dataset", Json::str("CBF")),
+            ("scale", Json::Num(0.03)),
+            ("seed", Json::Num(5.0)),
+            ("trace", Json::Bool(true)),
+        ]))
+        .unwrap();
+    assert_eq!(traced.get("ok").as_bool(), Some(true), "{traced:?}");
+    let trace = traced.get("trace");
+    let events = trace.get("traceEvents").as_arr().expect("traceEvents");
+    assert!(!events.is_empty());
+    // the response trace_id is the trace document's id
+    assert_eq!(
+        traced.get("trace_id").as_str(),
+        trace.get("otherData").get("trace_id").as_str(),
+        "{traced:?}"
+    );
+    assert_ne!(traced.get("trace_id").as_str(), Some(plain_tid));
+    // balanced B/E per tid, and the pipeline stages + the queue wait
+    // show up as span kinds
+    let mut depth = std::collections::BTreeMap::new();
+    let mut kinds = std::collections::BTreeSet::new();
+    for e in events {
+        if let Some(k) = e.get("cat").as_str() {
+            kinds.insert(k.to_string());
+        }
+        let tid = e.get("tid").as_usize().unwrap();
+        match e.get("ph").as_str().unwrap() {
+            "B" => *depth.entry(tid).or_insert(0i64) += 1,
+            "E" => {
+                let d = depth.entry(tid).or_insert(0i64);
+                *d -= 1;
+                assert!(*d >= 0, "E without B on tid {tid}");
+            }
+            _ => {}
+        }
+    }
+    assert!(depth.values().all(|&d| d == 0), "unbalanced: {depth:?}");
+    assert!(kinds.contains("stage"), "{kinds:?}");
+    assert!(kinds.contains("queue_wait"), "{kinds:?}");
+    assert!(kinds.contains("cache"), "{kinds:?}");
+    // errors echo a trace_id too
+    let err = c
+        .call(&Json::obj(vec![("id", Json::Num(9.0)), ("dataset", Json::str("Nope"))]))
+        .unwrap();
+    assert_eq!(err.get("ok").as_bool(), Some(false));
+    assert!(err.get("trace_id").as_str().is_some(), "{err:?}");
+    h.stop();
+}
+
+#[test]
 fn concurrent_clients_batching() {
     let h = start();
     let addr = h.addr.clone();

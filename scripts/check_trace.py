@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON emitted by the tmfg observability
+subsystem, or drive a live tmfg service end-to-end.
+
+File mode — check a trace written by `tmfg run ... --trace out.json`:
+
+    python3 scripts/check_trace.py out.json [--min-kinds N] [--require a,b]
+
+Serve mode — send a traced sparse clustering request to a running
+service over the wire protocol, validate the returned trace object, and
+scrape `{"cmd": "metrics"}` for the Prometheus exposition:
+
+    python3 scripts/check_trace.py --serve HOST:PORT [--min-kinds N]
+
+Checks (both modes):
+  * the JSON parses and `traceEvents` is a non-empty list
+  * every event has a known phase (M metadata, B/E span pair, i instant)
+  * B/E events are balanced per (pid, tid) and timestamps are >= 0
+  * the number of distinct span kinds (`cat`, metadata excluded) meets
+    the floor, and every `--require`d kind is present
+  * `otherData.trace_id` is present and non-empty
+
+Serve mode additionally asserts that the wire response's `trace_id`
+matches the trace's, and that the metrics text contains the per-stage
+latency histogram. Exits non-zero with a message on the first failure.
+
+Stdlib only — no pip dependencies.
+"""
+
+import argparse
+import json
+import socket
+import sys
+import time
+
+# A traced sparse+approx service request exercises every layer of the
+# span taxonomy except the pool (tiny inputs may run under the grain
+# size): pipeline stages, dispatcher queue wait, artifact cache,
+# k-NN build phases, TMFG insertion rounds, and APSP oracle row reads.
+SERVE_REQUIRED = ["stage", "queue_wait", "cache", "knn_phase", "tmfg_round", "oracle_row"]
+
+KNOWN_PHASES = {"M", "B", "E", "i"}
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def validate_trace(trace, min_kinds, require):
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents missing or empty")
+    kinds = set()
+    depth = {}  # (pid, tid) -> open B count
+    for ev in events:
+        ph = ev.get("ph")
+        if ph not in KNOWN_PHASES:
+            fail(f"unknown event phase {ph!r}: {ev}")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"bad timestamp in {ev}")
+        cat = ev.get("cat")
+        if not cat:
+            fail(f"event without cat: {ev}")
+        kinds.add(cat)
+        key = (ev.get("pid"), ev.get("tid"))
+        if ph == "B":
+            depth[key] = depth.get(key, 0) + 1
+        elif ph == "E":
+            depth[key] = depth.get(key, 0) - 1
+            if depth[key] < 0:
+                fail(f"E without matching B on thread {key}")
+    open_spans = {k: d for k, d in depth.items() if d != 0}
+    if open_spans:
+        fail(f"unbalanced B/E pairs: {open_spans}")
+    trace_id = trace.get("otherData", {}).get("trace_id")
+    if not trace_id:
+        fail("otherData.trace_id missing")
+    missing = [k for k in require if k not in kinds]
+    if missing:
+        fail(f"required span kinds missing: {missing} (have {sorted(kinds)})")
+    if len(kinds) < min_kinds:
+        fail(f"only {len(kinds)} span kinds {sorted(kinds)}, need >= {min_kinds}")
+    n_spans = sum(1 for ev in events if ev.get("ph") == "B")
+    print(
+        f"check_trace: OK: {n_spans} spans, {len(kinds)} kinds {sorted(kinds)}, "
+        f"trace_id {trace_id}"
+    )
+    return trace_id
+
+
+class WireClient:
+    """Newline-delimited JSON over TCP — the tmfg wire protocol.
+
+    Retries the connect for up to ~30s so CI can launch `tmfg serve` in
+    the background and call this script immediately.
+    """
+
+    def __init__(self, host, port):
+        last = None
+        for _ in range(60):
+            try:
+                self.sock = socket.create_connection((host, port), timeout=120)
+                break
+            except OSError as e:
+                last = e
+                time.sleep(0.5)
+        else:
+            fail(f"could not connect to {host}:{port}: {last}")
+        self.reader = self.sock.makefile("r", encoding="utf-8")
+
+    def call(self, req):
+        self.sock.sendall((json.dumps(req) + "\n").encode())
+        line = self.reader.readline()
+        if not line:
+            fail("service closed the connection")
+        return json.loads(line)
+
+
+def serve_mode(addr, min_kinds):
+    host, _, port = addr.rpartition(":")
+    client = WireClient(host or "127.0.0.1", int(port))
+
+    req = {
+        "id": "ci-trace",
+        "dataset": "CBF",
+        "scale": 0.03,
+        "seed": 1,
+        "algo": "heap",
+        "sparse_k": 16,
+        "apsp": "approx",
+        "trace": True,
+    }
+    resp = client.call(req)
+    if resp.get("ok") is not True:
+        fail(f"traced request failed: {resp}")
+    trace = resp.get("trace")
+    if not isinstance(trace, dict):
+        fail("response carries no trace object")
+    trace_id = validate_trace(trace, min_kinds, SERVE_REQUIRED)
+    if resp.get("trace_id") != trace_id:
+        fail(f"response trace_id {resp.get('trace_id')!r} != trace's {trace_id!r}")
+
+    metrics = client.call({"cmd": "metrics"})
+    if metrics.get("ok") is not True:
+        fail(f"metrics request failed: {metrics}")
+    text = metrics.get("metrics", "")
+    for needle in [
+        "# TYPE tmfg_stage_duration_seconds histogram",
+        'tmfg_stage_duration_seconds_count{stage="tmfg"}',
+        "tmfg_queue_wait_seconds_count",
+        "# TYPE tmfg_dispatch_workers gauge",
+    ]:
+        if needle not in text:
+            fail(f"metrics exposition missing {needle!r}")
+    print(f"check_trace: OK: metrics exposition has stage histograms ({len(text)} bytes)")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("trace", nargs="?", help="Chrome trace-event JSON file")
+    p.add_argument("--serve", metavar="HOST:PORT", help="drive a live service instead")
+    p.add_argument("--min-kinds", type=int, default=None, help="distinct span-kind floor")
+    p.add_argument("--require", default="", help="comma-separated span kinds that must appear")
+    args = p.parse_args()
+
+    if args.serve:
+        serve_mode(args.serve, args.min_kinds if args.min_kinds is not None else 6)
+    elif args.trace:
+        require = [k for k in args.require.split(",") if k]
+        with open(args.trace, encoding="utf-8") as f:
+            trace = json.load(f)
+        validate_trace(trace, args.min_kinds if args.min_kinds is not None else 3, require)
+    else:
+        p.error("pass a trace file or --serve HOST:PORT")
+
+
+if __name__ == "__main__":
+    main()
