@@ -103,6 +103,15 @@ fn main() {
         stats.get("cache_misses").as_usize().unwrap_or(0),
         stats.get("cache_hit_ratio").as_f64().unwrap_or(0.0),
     );
+    // Serving front end: which readiness backend ran the connection
+    // tier, and how busy it was (one OS thread regardless of clients).
+    println!(
+        "net: backend {}  conns accepted {}  active {}  loop wakeups {}",
+        stats.get("net_backend").as_str().unwrap_or("?"),
+        stats.get("conns_accepted").as_usize().unwrap_or(0),
+        stats.get("conns_active").as_usize().unwrap_or(0),
+        stats.get("loop_wakeups").as_usize().unwrap_or(0),
+    );
     // Service-side latency percentiles (obs registry histograms) for the
     // TMFG stage and the dispatcher queue wait, from the same stats call.
     let lat = stats.get("latency");

@@ -78,12 +78,20 @@ pub const MAX_HUBS: usize = 512;
 /// radius, and a huge multiplier turns every ball into the whole graph.
 pub const MAX_HUB_RADIUS: f64 = 64.0;
 
+/// Upper bound on the `tenant` identity length. Tenants key admission
+/// counters and per-tenant metrics series, so the id is kept short and
+/// restricted to `[A-Za-z0-9._-]` (safe inside Prometheus label values
+/// without escaping).
+pub const MAX_TENANT_LEN: usize = 64;
+
 /// A decoded wire request: the echoed `id`, the (validated) protocol
-/// version, and the typed command body.
+/// version, the optional `tenant` identity (admission control /
+/// per-tenant metrics), and the typed command body.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: Json,
     pub v: u64,
+    pub tenant: Option<String>,
     pub body: Command,
 }
 
@@ -242,6 +250,7 @@ impl Request {
                 "unsupported protocol version {v} (supported: 1..={PROTOCOL_VERSION})"
             )));
         }
+        let tenant = decode_tenant(j)?;
         let body = match j.get("cmd") {
             Json::Null => Command::Cluster(decode_cluster(j)?),
             cmd => {
@@ -262,7 +271,37 @@ impl Request {
                 }
             }
         };
-        Ok(Request { id, v, body })
+        Ok(Request { id, v, tenant, body })
+    }
+}
+
+/// Optional `tenant` identity: a short `[A-Za-z0-9._-]` string. The
+/// charset keeps tenant ids safe as Prometheus label values and as keys
+/// of the per-tenant admission counters; absent means anonymous (exempt
+/// from tenant quotas).
+fn decode_tenant(j: &Json) -> Result<Option<String>, TmfgError> {
+    match j.get("tenant") {
+        Json::Null => Ok(None),
+        v => {
+            let s = v
+                .as_str()
+                .ok_or_else(|| TmfgError::protocol("field 'tenant' must be a string"))?;
+            if s.is_empty() || s.len() > MAX_TENANT_LEN {
+                return Err(TmfgError::protocol(format!(
+                    "tenant must be 1..={MAX_TENANT_LEN} bytes, got {}",
+                    s.len()
+                )));
+            }
+            if !s
+                .bytes()
+                .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.'))
+            {
+                return Err(TmfgError::protocol(
+                    "tenant must match [A-Za-z0-9._-]+".to_string(),
+                ));
+            }
+            Ok(Some(s.to_string()))
+        }
     }
 }
 
@@ -771,6 +810,31 @@ mod tests {
             let e = Request::decode(&parse(line)).unwrap_err();
             assert_eq!(e.code(), "protocol", "{line}");
         }
+    }
+
+    #[test]
+    fn tenant_field_decodes_and_validates() {
+        let r = Request::decode(&parse(r#"{"cmd": "ping", "tenant": "acme-1.prod"}"#)).unwrap();
+        assert_eq!(r.tenant.as_deref(), Some("acme-1.prod"));
+        // absent means anonymous
+        let r = Request::decode(&parse(r#"{"cmd": "ping"}"#)).unwrap();
+        assert_eq!(r.tenant, None);
+        for line in [
+            r#"{"cmd": "ping", "tenant": 7}"#,
+            r#"{"cmd": "ping", "tenant": ""}"#,
+            r#"{"cmd": "ping", "tenant": "has space"}"#,
+            r#"{"cmd": "ping", "tenant": "semi;colon"}"#,
+            r#"{"cmd": "ping", "tenant": "quo\"te"}"#,
+        ] {
+            let e = Request::decode(&parse(line)).unwrap_err();
+            assert_eq!(e.code(), "protocol", "{line}");
+            assert!(e.to_string().contains("tenant"), "{line}: {e}");
+        }
+        // length cap
+        let long = "a".repeat(MAX_TENANT_LEN + 1);
+        let e = Request::decode(&parse(&format!(r#"{{"cmd": "ping", "tenant": "{long}"}}"#)))
+            .unwrap_err();
+        assert_eq!(e.code(), "protocol");
     }
 
     #[test]

@@ -19,15 +19,22 @@
 //! algorithm's default mode; {"hub_n": 32, "hub_radius": 2.0,
 //! "hub_q": 4} tune the streaming hub oracle (approx/auto modes run it
 //! with O(n·h) memory — no n×n distance matrix on the worker).
+//! Multi-tenant identity: {"tenant": "acme-1"} ([A-Za-z0-9._-]{1,64})
+//! keys per-tenant admission control and metrics; absent = anonymous
+//! (exempt from tenant quotas).
 //! Special: {"cmd": "ping"} → {"ok": true}, {"cmd": "shutdown"},
 //! {"cmd": "stats"} → {"ok": true, "workers": ..., "queue_depth": ...,
-//! "jobs": ..., "open_streams": ..., "sparse_requests": ...,
-//! "dense_requests": ..., "oracle_dense": ..., "oracle_hub": ...,
-//! "cache_hits": ..., "cache_misses":
-//! ..., "cache_hit_ratio": ..., "cache_bytes": ..., "stages": {...},
-//! "latency": {"stages": {"tmfg": {"p50": ..., "p95": ..., "p99": ...},
-//! ...}, "queue_wait": {...}}}, and {"cmd": "metrics"} → {"ok": true,
-//! "metrics": "<Prometheus text exposition>"} (see [`crate::obs`]).
+//! "max_queue": ..., "jobs": ..., "open_streams": ...,
+//! "sparse_requests": ..., "dense_requests": ..., "oracle_dense": ...,
+//! "oracle_hub": ..., "net_backend": "epoll"|"poll"|"threads",
+//! "conns_accepted": ..., "conns_active": ..., "conns_rejected": ...,
+//! "overload_rejected": ..., "reaped_idle": ..., "loop_wakeups": ...,
+//! "admission_rejected": {"<tenant>": ...}, "cache_hits": ...,
+//! "cache_misses": ..., "cache_hit_ratio": ..., "cache_bytes": ...,
+//! "stages": {...}, "latency": {"stages": {"tmfg": {"p50": ...,
+//! "p95": ..., "p99": ...}, ...}, "queue_wait": {...}}}, and
+//! {"cmd": "metrics"} → {"ok": true, "metrics": "<Prometheus text
+//! exposition>"} (see [`crate::obs`]).
 //! Optional: {"v": 1, ...} pins the protocol version.
 //! Every batch clustering response carries a "trace_id"; requests with
 //! {"trace": true} run under an exclusive tracing session and their
@@ -40,6 +47,9 @@
 //!   the Similarity→TMFG artifacts were served from the cross-request
 //!   cache and only the cheap downstream stages ran.)
 //! Errors:   {"id": 7, "ok": false, "error": "...", "code": "protocol"}
+//!   `code: "overloaded"` means the request was *not* processed — the
+//!   connection limit, dispatch-queue depth bound, or the sender's
+//!   tenant quota rejected it; back off and retry.
 //!
 //! Streaming (one session per connection, pinned to one dispatch worker):
 //!   {"cmd": "open_stream", "n": 16, "k": 2, "window": 64, "algo": "opt",
@@ -54,10 +64,23 @@
 //!        echoes the id of the session this connection owns)
 //!   {"cmd": "close_stream"} → {"ok": true, "closed": true, "ticks": ...,
 //!        "emissions": ..., "rebuilds": ..., "refreshes": ...}
-//!   Sessions are freed automatically when the connection drops.
+//!   Sessions are freed automatically when the connection drops — on
+//!   *every* close path, including idle reaping and server shutdown.
 //!
-//! Architecture: acceptor threads parse + decode requests and route them
-//! into a **sharded dispatcher worker pool**
+//! Architecture: on unix, the front end is a single-threaded readiness
+//! event loop ([`crate::net`]: epoll on Linux, portable `poll(2)`
+//! fallback) owning every connection — nonblocking accept with a hard
+//! `--max-conns` limit, buffered line framing with a `--max-line-bytes`
+//! cap, per-tenant admission control, dispatch-queue-depth backpressure
+//! (typed `overloaded` errors), idle reaping on a deadline wheel, and
+//! graceful drain. The connection tier is exactly one OS thread no
+//! matter how many clients connect; responses are delivered back to the
+//! loop via a completion mailbox + self-pipe waker and written under
+//! write-interest, so a slow reader backpressures only itself. (The
+//! pre-event-loop thread-per-connection front end remains as the
+//! non-unix fallback.)
+//!
+//! Requests are routed into a **sharded dispatcher worker pool**
 //! ([`ServiceConfig::dispatch_workers`] OS threads, default
 //! `min(4, cores/2)`). Batch clustering jobs land in one shared MPMC
 //! queue that any worker drains in small batches (batching window), so
@@ -82,19 +105,23 @@ use crate::api::cache::{ArtifactCache, CacheStatus};
 use crate::api::wire::{self, ClusterSource, ClusterSpec, Command};
 use crate::api::{ClusterOutput, ClusterRequest, TmfgAlgo, TmfgError};
 use crate::data::matrix::Matrix;
+use crate::net::server::LoopCtl;
 use crate::runtime::engine::CorrEngine;
 use crate::stream::{StreamConfig, StreamSession};
 use crate::util::json::Json;
 use crate::util::timer::Breakdown;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(unix))]
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Distinguishes connections so stream sessions can be keyed and pinned.
+/// Distinguishes connections so stream sessions can be keyed and pinned
+/// (legacy blocking front end; the event loop allocates its own tokens).
+#[cfg(not(unix))]
 static CONN_SEQ: AtomicU64 = AtomicU64::new(1);
 
 pub struct ServiceConfig {
@@ -112,6 +139,24 @@ pub struct ServiceConfig {
     pub cache_entries: usize,
     /// Artifact cache byte budget.
     pub cache_bytes: usize,
+    /// Hard cap on simultaneously open connections; excess sockets get a
+    /// best-effort `overloaded` line and are dropped at accept.
+    pub max_conns: usize,
+    /// Longest accepted request line in bytes; a newline-free prefix
+    /// past this cap earns a typed `protocol` error and a close.
+    pub max_line_bytes: usize,
+    /// Reap connections idle this long (`Duration::ZERO` disables).
+    pub idle_timeout: Duration,
+    /// Per-tenant in-flight request cap (0 = unlimited). Requests over
+    /// the cap get a typed `overloaded` error; anonymous requests and
+    /// `close_stream` are exempt.
+    pub tenant_quota: usize,
+    /// Dispatch-queue depth bound for batch admission. 0 = auto:
+    /// `workers * max_batch * 8`, at least 64.
+    pub max_queue_depth: usize,
+    /// Force the portable `poll(2)` readiness backend (diagnostics/CI;
+    /// the default picks epoll where available).
+    pub poll_backend: bool,
 }
 
 impl Default for ServiceConfig {
@@ -124,6 +169,12 @@ impl Default for ServiceConfig {
             dispatch_workers: 0,
             cache_entries: ArtifactCache::DEFAULT_ENTRIES,
             cache_bytes: ArtifactCache::DEFAULT_BYTES,
+            max_conns: 1024,
+            max_line_bytes: 16 << 20,
+            idle_timeout: Duration::from_secs(300),
+            tenant_quota: 0,
+            max_queue_depth: 0,
+            poll_backend: false,
         }
     }
 }
@@ -137,11 +188,48 @@ impl ServiceConfig {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         (cores / 2).clamp(1, 4)
     }
+
+    /// The dispatch-queue depth bound admission will actually enforce.
+    pub fn resolved_max_queue(&self) -> usize {
+        if self.max_queue_depth > 0 {
+            return self.max_queue_depth;
+        }
+        (self.resolved_workers() * self.max_batch * 8).max(64)
+    }
+}
+
+/// Where a finished job's response line goes.
+enum Reply {
+    /// Legacy blocking front end: per-request rendezvous channel.
+    #[cfg(not(unix))]
+    Channel(Sender<String>),
+    /// Event-loop front end: the loop's completion mailbox (worker →
+    /// waker → loop writes the line under write-interest).
+    #[cfg(unix)]
+    Net { conn: u64, ctl: Arc<LoopCtl> },
+    /// Internal housekeeping job (disconnect cleanup): response dropped.
+    Discard,
+}
+
+impl Reply {
+    fn send(self, line: String) {
+        match self {
+            #[cfg(not(unix))]
+            Reply::Channel(tx) => {
+                let _ = tx.send(line);
+            }
+            #[cfg(unix)]
+            Reply::Net { conn, ctl } => ctl.complete(conn, line),
+            Reply::Discard => {
+                let _ = line;
+            }
+        }
+    }
 }
 
 struct Job {
     request: wire::Request,
-    reply: Sender<String>,
+    reply: Reply,
     /// Originating connection (stream sessions are per-connection).
     conn: u64,
     /// Synthetic housekeeping job (disconnect cleanup) — processed like
@@ -161,7 +249,7 @@ enum Pop {
     Closed,
 }
 
-/// MPMC job queue: connection handlers push, dispatch workers pop.
+/// MPMC job queue: the front end pushes, dispatch workers pop.
 /// Closing wakes every waiter, but pops keep returning queued jobs until
 /// the queue is empty — shutdown never drops accepted work. A worker's
 /// *pinned* queue doubles as its parking spot: `poke` marks shared-queue
@@ -252,11 +340,16 @@ impl JobQueue {
 /// the `stats` command reports.
 struct ServiceState {
     workers: usize,
+    /// Resolved dispatch-queue depth bound (batch admission).
+    max_queue: usize,
     /// Shared queue for batch clustering jobs (any worker pulls).
     global: Arc<JobQueue>,
     /// Per-shard queues for session-pinned stream jobs.
     pinned: Vec<Arc<JobQueue>>,
     cache: Option<Arc<ArtifactCache>>,
+    /// Front-end identity reported by `stats`: "threads" until the event
+    /// loop starts and reports its poller backend ("epoll"/"poll").
+    net_backend: Mutex<&'static str>,
     /// Requests fully processed by the workers.
     jobs_done: AtomicU64,
     open_streams: AtomicUsize,
@@ -269,6 +362,20 @@ struct ServiceState {
     /// Completed batch requests whose APSP stage used the streaming hub
     /// oracle (no n×n allocation).
     oracle_hub: AtomicU64,
+    /// Connections accepted by the front end.
+    conns_accepted: AtomicU64,
+    /// Currently open connections.
+    conns_active: AtomicU64,
+    /// Connections refused at accept by the `max_conns` hard limit.
+    conns_rejected: AtomicU64,
+    /// Requests shed by dispatch-queue-depth backpressure.
+    overload_rejected: AtomicU64,
+    /// Idle connections reaped by the deadline wheel.
+    reaped_idle: AtomicU64,
+    /// Event-loop wakeups (readiness, completion poke, or timer).
+    loop_wakeups: AtomicU64,
+    /// tenant → requests rejected by per-tenant admission control.
+    admission_rejected: Mutex<BTreeMap<String, u64>>,
     /// Cumulative per-stage wall-clock across every request.
     stages: Mutex<Breakdown>,
 }
@@ -299,6 +406,7 @@ impl ServiceState {
         let mut fields = vec![
             ("workers", Json::Num(self.workers as f64)),
             ("queue_depth", Json::Num(self.queue_depth() as f64)),
+            ("max_queue", Json::Num(self.max_queue as f64)),
             ("jobs", Json::Num(self.jobs_done.load(Ordering::Relaxed) as f64)),
             (
                 "open_streams",
@@ -320,7 +428,37 @@ impl ServiceState {
                 "oracle_hub",
                 Json::Num(self.oracle_hub.load(Ordering::Relaxed) as f64),
             ),
+            ("net_backend", Json::str(*self.net_backend.lock().unwrap())),
+            (
+                "conns_accepted",
+                Json::Num(self.conns_accepted.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "conns_active",
+                Json::Num(self.conns_active.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "conns_rejected",
+                Json::Num(self.conns_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "overload_rejected",
+                Json::Num(self.overload_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "reaped_idle",
+                Json::Num(self.reaped_idle.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "loop_wakeups",
+                Json::Num(self.loop_wakeups.load(Ordering::Relaxed) as f64),
+            ),
         ];
+        let admission = {
+            let g = self.admission_rejected.lock().unwrap();
+            Json::obj(g.iter().map(|(t, c)| (t.as_str(), Json::Num(*c as f64))).collect())
+        };
+        fields.push(("admission_rejected", admission));
         if let Some(cache) = &self.cache {
             let st = cache.stats();
             let total = st.hits + st.misses;
@@ -369,15 +507,18 @@ impl ServiceState {
 /// CLI's `tmfg serve`).
 pub struct ServiceHandle {
     pub addr: String,
-    shutdown: Arc<AtomicBool>,
+    ctl: Arc<LoopCtl>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServiceHandle {
-    /// Request shutdown and join the service threads (drains queued work).
+    /// Request a graceful drain and join the service threads: accepting
+    /// stops, in-flight requests complete and flush, queued work drains.
     pub fn stop(mut self) {
-        self.shutdown.store(true, Ordering::Release);
-        // poke the acceptor so it notices
+        self.ctl.request_shutdown();
+        // The legacy blocking front end parks in accept(); poke it so it
+        // observes the flag. The event loop has its own waker.
+        #[cfg(not(unix))]
         let _ = TcpStream::connect(&self.addr);
         if let Some(j) = self.join.take() {
             let _ = j.join();
@@ -646,7 +787,7 @@ fn run_job(
     );
     // Contain panics to the one request: an unwinding worker thread would
     // otherwise die silently and permanently wedge its pinned shard
-    // (queued jobs never drained, handlers blocked in recv forever). The
+    // (queued jobs never drained, completions never delivered). The
     // library paths are de-panicked, so this only guards regressions.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match body {
         Command::Cluster(spec) => {
@@ -655,8 +796,8 @@ fn run_job(
         body @ (Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream) => {
             stream_cmd(&id, &body, streams, conn, cfg.default_algo, batch_size, state)
         }
-        // Ping/Shutdown/Stats/Metrics are answered in the connection
-        // handler and never enqueued; answer defensively anyway.
+        // Ping/Shutdown/Stats/Metrics are answered in the front end and
+        // never enqueued; answer defensively anyway.
         Command::Ping | Command::Shutdown | Command::Stats | Command::Metrics => {
             wire::ok_response(&id, vec![])
         }
@@ -670,7 +811,7 @@ fn run_job(
     if !internal {
         state.jobs_done.fetch_add(1, Ordering::Relaxed);
     }
-    let _ = reply.send(resp.to_string());
+    reply.send(resp.to_string());
 }
 
 /// One dispatch worker: drains its pinned (stream) queue eagerly, then
@@ -739,12 +880,271 @@ fn dispatch_worker(
     }
 }
 
+/// Serving policy for the event-loop front end: admission control,
+/// backpressure, worker submission, and lifecycle accounting. All
+/// callbacks run on the loop thread, so the maps need no locks.
+#[cfg(unix)]
+mod net_front {
+    use super::*;
+    use crate::net::server::{ConnId, Disposition, Handler};
+    use std::collections::HashSet;
+
+    pub(super) struct NetHandler {
+        cfg: Arc<ServiceConfig>,
+        state: Arc<ServiceState>,
+        ctl: Arc<LoopCtl>,
+        /// conn → tenant of its in-flight request (None = anonymous).
+        inflight_tenant: HashMap<ConnId, Option<String>>,
+        /// tenant → in-flight request count (quota admission).
+        tenant_inflight: HashMap<String, usize>,
+        /// Connections that ever opened a stream: on close they get an
+        /// internal close_stream so the pinned worker frees the session.
+        streamed: HashSet<ConnId>,
+        // Cached global-registry handles mirroring the per-service
+        // counters (the gauge sums across services in one process).
+        m_accepted: Arc<AtomicU64>,
+        m_active: Arc<AtomicU64>,
+        m_rejected: Arc<AtomicU64>,
+        m_overload: Arc<AtomicU64>,
+        m_reaped: Arc<AtomicU64>,
+        m_wakeups: Arc<AtomicU64>,
+    }
+
+    impl NetHandler {
+        pub(super) fn new(
+            cfg: Arc<ServiceConfig>,
+            state: Arc<ServiceState>,
+            ctl: Arc<LoopCtl>,
+        ) -> NetHandler {
+            use crate::obs::names;
+            let reg = crate::obs::registry();
+            NetHandler {
+                cfg,
+                state,
+                ctl,
+                inflight_tenant: HashMap::new(),
+                tenant_inflight: HashMap::new(),
+                streamed: HashSet::new(),
+                m_accepted: reg.counter(names::CONNS_ACCEPTED),
+                m_active: reg.gauge(names::CONNS_ACTIVE),
+                m_rejected: reg.counter(names::CONNS_REJECTED_LIMIT),
+                m_overload: reg.counter(names::OVERLOAD_REJECTED),
+                m_reaped: reg.counter(names::REAPED_IDLE),
+                m_wakeups: reg.counter(names::LOOP_WAKEUPS),
+            }
+        }
+
+        /// Would admitting a request from `tenant` exceed the quota?
+        /// Anonymous requests are exempt.
+        fn tenant_over_quota(&self, tenant: &Option<String>) -> bool {
+            if self.cfg.tenant_quota == 0 {
+                return false;
+            }
+            match tenant {
+                Some(t) => {
+                    self.tenant_inflight.get(t).copied().unwrap_or(0) >= self.cfg.tenant_quota
+                }
+                None => false,
+            }
+        }
+
+        fn note_admitted(&mut self, conn: ConnId, tenant: Option<String>) {
+            if let Some(t) = &tenant {
+                *self.tenant_inflight.entry(t.clone()).or_insert(0) += 1;
+            }
+            self.inflight_tenant.insert(conn, tenant);
+        }
+    }
+
+    impl Handler for NetHandler {
+        fn on_start(&mut self, backend: &'static str) {
+            *self.state.net_backend.lock().unwrap() = backend;
+        }
+
+        fn on_accept(&mut self, _conn: ConnId) {
+            self.state.conns_accepted.fetch_add(1, Ordering::Relaxed);
+            self.state.conns_active.fetch_add(1, Ordering::Relaxed);
+            self.m_accepted.fetch_add(1, Ordering::Relaxed);
+            self.m_active.fetch_add(1, Ordering::Relaxed);
+        }
+
+        fn on_line(&mut self, conn: ConnId, line: &str) -> Disposition {
+            let raw = match Json::parse(line) {
+                Ok(j) => j,
+                Err(e) => {
+                    let err = TmfgError::protocol(format!("bad json: {e}"));
+                    return Disposition::Respond(
+                        wire::error_response(&Json::Null, &err).to_string(),
+                    );
+                }
+            };
+            // The single validated parse path: typed command or typed
+            // error.
+            let req = match wire::Request::decode(&raw) {
+                Ok(r) => r,
+                Err(e) => {
+                    return Disposition::Respond(
+                        wire::error_response(raw.get("id"), &e).to_string(),
+                    )
+                }
+            };
+            match &req.body {
+                Command::Ping => {
+                    return Disposition::Respond(wire::ok_response(&req.id, vec![]).to_string())
+                }
+                Command::Stats => {
+                    return Disposition::Respond(self.state.stats_response(&req.id).to_string())
+                }
+                Command::Metrics => {
+                    let text = crate::obs::registry().prometheus();
+                    let resp = wire::ok_response(&req.id, vec![("metrics", Json::str(&text))]);
+                    return Disposition::Respond(resp.to_string());
+                }
+                Command::Shutdown => {
+                    return Disposition::RespondAndDrain(
+                        wire::ok_response(&req.id, vec![]).to_string(),
+                    )
+                }
+                _ => {}
+            }
+            let is_stream = matches!(
+                req.body,
+                Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream
+            );
+            // close_stream only frees state — exempt from admission so a
+            // throttled tenant can always release its sessions.
+            let frees = matches!(req.body, Command::CloseStream);
+            if !frees && self.tenant_over_quota(&req.tenant) {
+                let t = req.tenant.as_deref().unwrap_or_default();
+                *self
+                    .state
+                    .admission_rejected
+                    .lock()
+                    .unwrap()
+                    .entry(t.to_string())
+                    .or_insert(0) += 1;
+                crate::obs::registry()
+                    .counter_labeled(crate::obs::names::ADMISSION_REJECTED, "tenant", t)
+                    .fetch_add(1, Ordering::Relaxed);
+                let err = TmfgError::overloaded(format!(
+                    "tenant '{t}' is at its in-flight quota ({}); retry after a response",
+                    self.cfg.tenant_quota
+                ));
+                return Disposition::Respond(wire::error_response(&req.id, &err).to_string());
+            }
+            // Queue-depth backpressure for batch work. This thread is the
+            // only batch submitter, so check-then-push cannot overshoot.
+            if !is_stream && self.state.global.len() >= self.state.max_queue {
+                self.state.overload_rejected.fetch_add(1, Ordering::Relaxed);
+                self.m_overload.fetch_add(1, Ordering::Relaxed);
+                let err = TmfgError::overloaded(format!(
+                    "dispatch queue full ({} queued); back off and retry",
+                    self.state.max_queue
+                ));
+                return Disposition::Respond(wire::error_response(&req.id, &err).to_string());
+            }
+            if matches!(req.body, Command::OpenStream(_)) {
+                self.streamed.insert(conn);
+            }
+            let shard = (conn as usize) % self.state.workers;
+            let tenant = req.tenant.clone();
+            let id = req.id.clone();
+            let job = Job {
+                request: req,
+                reply: Reply::Net { conn, ctl: self.ctl.clone() },
+                conn,
+                internal: false,
+                enqueued: Instant::now(),
+            };
+            if !self.state.submit(is_stream, shard, job) {
+                // Queues already closed — a drain won the race.
+                let err = TmfgError::overloaded("service is shutting down");
+                return Disposition::RespondAndClose(
+                    wire::error_response(&id, &err).to_string(),
+                );
+            }
+            self.note_admitted(conn, tenant);
+            Disposition::Submitted
+        }
+
+        fn on_complete(&mut self, conn: ConnId) {
+            // Fires exactly once per admitted request — even if the
+            // connection died first — so quota accounting balances.
+            if let Some(Some(t)) = self.inflight_tenant.remove(&conn) {
+                match self.tenant_inflight.get_mut(&t) {
+                    Some(n) if *n > 1 => *n -= 1,
+                    _ => {
+                        self.tenant_inflight.remove(&t);
+                    }
+                }
+            }
+        }
+
+        fn on_close(&mut self, conn: ConnId) {
+            self.state.conns_active.fetch_sub(1, Ordering::Relaxed);
+            self.m_active.fetch_sub(1, Ordering::Relaxed);
+            // A dying connection that opened a stream gets an internal
+            // close_stream so the pinned worker frees the session and
+            // `open_streams` returns to truth — on *every* close path
+            // (EOF, error, idle reap, drain), which the old front end
+            // missed for shutdown-triggered disconnects.
+            if self.streamed.remove(&conn) {
+                let shard = (conn as usize) % self.state.workers;
+                let _ = self.state.submit(
+                    true,
+                    shard,
+                    Job {
+                        request: wire::Request {
+                            id: Json::Null,
+                            v: wire::PROTOCOL_VERSION,
+                            tenant: None,
+                            body: Command::CloseStream,
+                        },
+                        reply: Reply::Discard,
+                        conn,
+                        internal: true,
+                        enqueued: Instant::now(),
+                    },
+                );
+            }
+        }
+
+        fn on_conn_limit(&mut self) -> String {
+            self.state.conns_rejected.fetch_add(1, Ordering::Relaxed);
+            self.m_rejected.fetch_add(1, Ordering::Relaxed);
+            let err = TmfgError::overloaded(format!(
+                "connection limit reached ({}); retry later",
+                self.cfg.max_conns
+            ));
+            wire::error_response(&Json::Null, &err).to_string()
+        }
+
+        fn on_overflow(&mut self, _conn: ConnId) -> String {
+            let err = TmfgError::protocol(format!(
+                "request line exceeds max_line_bytes ({})",
+                self.cfg.max_line_bytes
+            ));
+            wire::error_response(&Json::Null, &err).to_string()
+        }
+
+        fn on_reaped(&mut self, _conn: ConnId) {
+            self.state.reaped_idle.fetch_add(1, Ordering::Relaxed);
+            self.m_reaped.fetch_add(1, Ordering::Relaxed);
+        }
+
+        fn on_wakeup(&mut self) {
+            self.state.loop_wakeups.fetch_add(1, Ordering::Relaxed);
+            self.m_wakeups.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
 /// Start the service; returns once the listener is bound.
 pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?.to_string();
-    let shutdown = Arc::new(AtomicBool::new(false));
     let workers = cfg.resolved_workers();
+    let max_queue = cfg.resolved_max_queue();
     crate::obs::registry()
         .gauge(crate::obs::names::DISPATCH_WORKERS)
         .store(workers as u64, Ordering::Relaxed);
@@ -755,19 +1155,33 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
     };
     let state = Arc::new(ServiceState {
         workers,
+        max_queue,
         global: Arc::new(JobQueue::new()),
         pinned: (0..workers).map(|_| Arc::new(JobQueue::new())).collect(),
         cache,
+        net_backend: Mutex::new("threads"),
         jobs_done: AtomicU64::new(0),
         open_streams: AtomicUsize::new(0),
         sparse_requests: AtomicU64::new(0),
         dense_requests: AtomicU64::new(0),
         oracle_dense: AtomicU64::new(0),
         oracle_hub: AtomicU64::new(0),
+        conns_accepted: AtomicU64::new(0),
+        conns_active: AtomicU64::new(0),
+        conns_rejected: AtomicU64::new(0),
+        overload_rejected: AtomicU64::new(0),
+        reaped_idle: AtomicU64::new(0),
+        loop_wakeups: AtomicU64::new(0),
+        admission_rejected: Mutex::new(BTreeMap::new()),
         stages: Mutex::new(Breakdown::new()),
     });
     let cfg = Arc::new(ServiceConfig { addr: addr.clone(), ..cfg });
-    let sd = shutdown.clone();
+    #[cfg(unix)]
+    let (ctl, wake_rx) = LoopCtl::new()?;
+    #[cfg(not(unix))]
+    let ctl = LoopCtl::new_detached();
+    let loop_ctl = ctl.clone();
+    let srv_cfg = cfg.clone();
     let st = state.clone();
     let join = std::thread::spawn(move || {
         // One similarity engine for the whole service lifetime: compiled
@@ -776,18 +1190,34 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
         let engine = Arc::new(CorrEngine::auto(std::path::Path::new("artifacts")));
         let mut worker_joins = Vec::with_capacity(st.workers);
         for w in 0..st.workers {
-            let (cfg, st2, engine) = (cfg.clone(), st.clone(), engine.clone());
+            let (cfg, st2, engine) = (srv_cfg.clone(), st.clone(), engine.clone());
             worker_joins.push(std::thread::spawn(move || dispatch_worker(w, cfg, st2, engine)));
         }
-        for stream in listener.incoming() {
-            if sd.load(Ordering::Acquire) {
-                break;
+        // The front end runs on this thread until drain completes: the
+        // event loop on unix (one OS thread for every connection), the
+        // legacy thread-per-connection accept loop elsewhere.
+        #[cfg(unix)]
+        {
+            let net_cfg = crate::net::server::ServerConfig {
+                max_conns: srv_cfg.max_conns,
+                max_line_bytes: srv_cfg.max_line_bytes,
+                idle_timeout: srv_cfg.idle_timeout,
+                backend: if srv_cfg.poll_backend {
+                    crate::net::poller::Backend::Poll
+                } else {
+                    crate::net::poller::Backend::Auto
+                },
+            };
+            let mut handler =
+                net_front::NetHandler::new(srv_cfg.clone(), st.clone(), loop_ctl.clone());
+            if let Err(e) =
+                crate::net::server::run(listener, &net_cfg, &loop_ctl, wake_rx, &mut handler)
+            {
+                crate::log!(error, "service event loop failed: {e}");
             }
-            let Ok(stream) = stream else { continue };
-            let st_conn = st.clone();
-            let sd_conn = sd.clone();
-            std::thread::spawn(move || handle_conn(stream, st_conn, sd_conn));
         }
+        #[cfg(not(unix))]
+        legacy_accept_loop(listener, &st, &loop_ctl);
         // Close pinned queues before the shared one: workers only exit on
         // shared-queue Closed, at which point the pinned drain sees a
         // queue that can no longer grow.
@@ -799,94 +1229,121 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
             let _ = j.join();
         }
     });
-    Ok(ServiceHandle { addr, shutdown, join: Some(join) })
+    Ok(ServiceHandle { addr, ctl, join: Some(join) })
 }
 
-fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, shutdown: Arc<AtomicBool>) {
+/// Legacy blocking front end: thread per connection (non-unix fallback).
+#[cfg(not(unix))]
+fn legacy_accept_loop(listener: TcpListener, state: &Arc<ServiceState>, ctl: &Arc<LoopCtl>) {
+    for stream in listener.incoming() {
+        if ctl.shutdown_requested() {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let st_conn = state.clone();
+        let ctl_conn = ctl.clone();
+        std::thread::spawn(move || handle_conn(stream, st_conn, ctl_conn));
+    }
+}
+
+#[cfg(not(unix))]
+fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, ctl: Arc<LoopCtl>) {
     let conn = CONN_SEQ.fetch_add(1, Ordering::Relaxed);
     let shard = (conn as usize) % state.workers;
+    state.conns_accepted.fetch_add(1, Ordering::Relaxed);
+    state.conns_active.fetch_add(1, Ordering::Relaxed);
     let peer = stream.try_clone();
     let reader = BufReader::new(stream);
-    let Ok(mut writer) = peer else { return };
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let raw = match Json::parse(&line) {
-            Ok(j) => j,
-            Err(e) => {
-                let _ = writeln!(
-                    writer,
-                    "{}",
-                    wire::error_response(
-                        &Json::Null,
-                        &TmfgError::protocol(format!("bad json: {e}"))
-                    )
-                    .to_string()
-                );
+    if let Ok(mut writer) = peer {
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
                 continue;
             }
-        };
-        // The single validated parse path: typed command or typed error.
-        let req = match wire::Request::decode(&raw) {
-            Ok(r) => r,
-            Err(e) => {
-                let _ = writeln!(writer, "{}", wire::error_response(raw.get("id"), &e).to_string());
-                continue;
-            }
-        };
-        match &req.body {
-            Command::Ping => {
-                let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
-                continue;
-            }
-            Command::Stats => {
-                let _ = writeln!(writer, "{}", state.stats_response(&req.id).to_string());
-                continue;
-            }
-            Command::Metrics => {
-                let text = crate::obs::registry().prometheus();
-                let resp = wire::ok_response(&req.id, vec![("metrics", Json::str(&text))]);
-                let _ = writeln!(writer, "{}", resp.to_string());
-                continue;
-            }
-            Command::Shutdown => {
-                shutdown.store(true, Ordering::Release);
-                let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
-                // Poke the acceptor (blocked in accept()) so it observes
-                // the flag and the whole service can exit cleanly.
-                if let Ok(addr) = writer.local_addr() {
-                    let _ = TcpStream::connect(addr);
+            let raw = match Json::parse(&line) {
+                Ok(j) => j,
+                Err(e) => {
+                    let _ = writeln!(
+                        writer,
+                        "{}",
+                        wire::error_response(
+                            &Json::Null,
+                            &TmfgError::protocol(format!("bad json: {e}"))
+                        )
+                        .to_string()
+                    );
+                    continue;
                 }
-                return;
-            }
-            _ => {}
-        }
-        // Stream commands are pinned to this connection's shard so the
-        // owning worker's session map serves every tick; batch work goes
-        // through the shared queue.
-        let is_stream = matches!(
-            req.body,
-            Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream
-        );
-        let (rtx, rrx) = channel();
-        let job = Job { request: req, reply: rtx, conn, internal: false, enqueued: Instant::now() };
-        if !state.submit(is_stream, shard, job) {
-            break; // queues closed: service is shutting down
-        }
-        match rrx.recv() {
-            Ok(resp) => {
-                if writeln!(writer, "{resp}").is_err() {
+            };
+            // The single validated parse path: typed command or typed error.
+            let req = match wire::Request::decode(&raw) {
+                Ok(r) => r,
+                Err(e) => {
+                    let _ =
+                        writeln!(writer, "{}", wire::error_response(raw.get("id"), &e).to_string());
+                    continue;
+                }
+            };
+            match &req.body {
+                Command::Ping => {
+                    let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
+                    continue;
+                }
+                Command::Stats => {
+                    let _ = writeln!(writer, "{}", state.stats_response(&req.id).to_string());
+                    continue;
+                }
+                Command::Metrics => {
+                    let text = crate::obs::registry().prometheus();
+                    let resp = wire::ok_response(&req.id, vec![("metrics", Json::str(&text))]);
+                    let _ = writeln!(writer, "{}", resp.to_string());
+                    continue;
+                }
+                Command::Shutdown => {
+                    ctl.request_shutdown();
+                    let _ = writeln!(writer, "{}", wire::ok_response(&req.id, vec![]).to_string());
+                    // Poke the acceptor (blocked in accept()) so it
+                    // observes the flag; break (not return!) so the
+                    // disconnect cleanup below still frees any session.
+                    if let Ok(addr) = writer.local_addr() {
+                        let _ = TcpStream::connect(addr);
+                    }
                     break;
                 }
+                _ => {}
             }
-            Err(_) => break,
+            // Stream commands are pinned to this connection's shard so the
+            // owning worker's session map serves every tick; batch work
+            // goes through the shared queue.
+            let is_stream = matches!(
+                req.body,
+                Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream
+            );
+            let (rtx, rrx) = channel();
+            let job = Job {
+                request: req,
+                reply: Reply::Channel(rtx),
+                conn,
+                internal: false,
+                enqueued: Instant::now(),
+            };
+            if !state.submit(is_stream, shard, job) {
+                break; // queues closed: service is shutting down
+            }
+            match rrx.recv() {
+                Ok(resp) => {
+                    if writeln!(writer, "{resp}").is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
         }
     }
     // Connection gone: free any stream session it owned (idempotent; the
-    // reply channel's receiver is dropped, so the response is discarded).
-    let (rtx, _rrx) = channel();
+    // response is discarded). Runs on every exit path, including
+    // client-initiated shutdown.
+    state.conns_active.fetch_sub(1, Ordering::Relaxed);
     let _ = state.submit(
         true,
         shard,
@@ -894,9 +1351,10 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, shutdown: Arc<Atomic
             request: wire::Request {
                 id: Json::Null,
                 v: wire::PROTOCOL_VERSION,
+                tenant: None,
                 body: Command::CloseStream,
             },
-            reply: rtx,
+            reply: Reply::Discard,
             conn,
             internal: true,
             enqueued: Instant::now(),

@@ -33,6 +33,11 @@ pub enum TmfgError {
     /// A malformed wire request (bad field type, wrong payload length,
     /// unknown command or algorithm, unsupported protocol version).
     Protocol(String),
+    /// The service is saturated and is shedding load instead of
+    /// stalling: the connection limit, the dispatch-queue depth bound,
+    /// or a per-tenant admission quota was hit. The request was **not**
+    /// processed; clients should back off and retry.
+    Overloaded(String),
     /// Filesystem or socket failure.
     Io(String),
 }
@@ -53,6 +58,11 @@ impl TmfgError {
         TmfgError::Protocol(msg.into())
     }
 
+    /// Shorthand constructor for [`TmfgError::Overloaded`].
+    pub fn overloaded(msg: impl Into<String>) -> TmfgError {
+        TmfgError::Overloaded(msg.into())
+    }
+
     /// Stable machine-readable error code (the `code` field of service
     /// error responses). These strings are part of the wire contract —
     /// never change them for an existing variant.
@@ -64,6 +74,7 @@ impl TmfgError {
             TmfgError::InvariantViolation(_) => "invariant_violation",
             TmfgError::StreamClosed => "stream_closed",
             TmfgError::Protocol(_) => "protocol",
+            TmfgError::Overloaded(_) => "overloaded",
             TmfgError::Io(_) => "io",
         }
     }
@@ -80,6 +91,7 @@ impl fmt::Display for TmfgError {
             TmfgError::InvariantViolation(m) => write!(f, "invariant violation: {m}"),
             TmfgError::StreamClosed => write!(f, "no open stream on this connection"),
             TmfgError::Protocol(m) => write!(f, "protocol error: {m}"),
+            TmfgError::Overloaded(m) => write!(f, "overloaded: {m}"),
             TmfgError::Io(m) => write!(f, "io error: {m}"),
         }
     }
@@ -106,6 +118,7 @@ mod tests {
             (TmfgError::invariant("x"), "invariant_violation"),
             (TmfgError::StreamClosed, "stream_closed"),
             (TmfgError::protocol("x"), "protocol"),
+            (TmfgError::overloaded("x"), "overloaded"),
             (TmfgError::Io("x".into()), "io"),
         ];
         for (e, code) in cases {

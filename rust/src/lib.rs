@@ -64,6 +64,7 @@ pub mod data;
 pub mod dbht;
 pub mod error;
 pub mod metrics;
+pub mod net;
 pub mod obs;
 pub mod parlay;
 pub mod runtime;

@@ -47,6 +47,13 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
   tmfg gen --dataset <name> --out <file.csv> [--scale 0.1] [--seed N]
   tmfg serve [--addr 127.0.0.1:7401] [--algo opt] [--max-batch 8]
            [--dispatch-workers N] [--cache-entries 32]
+           [--max-conns 1024] [--max-line-bytes 16777216]
+           [--idle-timeout 300] [--tenant-quota N] [--max-queue N]
+           [--poll-backend]
+           (event-loop front end: one OS thread serves every connection;
+            requests over --max-queue or a tenant's --tenant-quota get a
+            typed \"overloaded\" error; idle connections are reaped after
+            --idle-timeout seconds, 0 disables)
   tmfg stream --dataset <name|csv> [--window 64] [--k N] [--algo opt]
            [--drift 0.1] [--scale 0.1] [--seed N] [--threads N]
   tmfg info
@@ -255,6 +262,8 @@ fn cmd_gen(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
+    // Idle timeout in (fractional) seconds; <= 0 disables reaping.
+    let idle_secs = args.get_f64("idle-timeout", 300.0);
     let cfg = ServiceConfig {
         addr: args.get_str("addr", "127.0.0.1:7401"),
         max_batch: args.get_usize("max-batch", 8),
@@ -263,9 +272,23 @@ fn cmd_serve(args: &Args) {
         dispatch_workers: args.get_usize("dispatch-workers", 0),
         // 0 disables the cross-request artifact cache
         cache_entries: args.get_usize("cache-entries", 32),
+        max_conns: args.get_usize("max-conns", 1024),
+        max_line_bytes: args.get_usize("max-line-bytes", 16 << 20),
+        idle_timeout: if idle_secs > 0.0 {
+            std::time::Duration::from_secs_f64(idle_secs)
+        } else {
+            std::time::Duration::ZERO
+        },
+        // 0 = unlimited: per-tenant in-flight request quota
+        tenant_quota: args.get_usize("tenant-quota", 0),
+        // 0 = auto (workers * max_batch * 8): batch admission bound
+        max_queue_depth: args.get_usize("max-queue", 0),
+        poll_backend: args.get_bool("poll-backend", false),
         ..Default::default()
     };
     let workers = cfg.resolved_workers();
+    let max_queue = cfg.resolved_max_queue();
+    let (max_conns, quota) = (cfg.max_conns, cfg.tenant_quota);
     let cache_entries = cfg.cache_entries;
     let h = serve(cfg).unwrap_or_else(|e| fail(e.into()));
     log!(info, "tmfg clustering service listening on {}", h.addr);
@@ -273,6 +296,11 @@ fn cmd_serve(args: &Args) {
         info,
         "dispatch workers: {workers}; artifact cache: {}",
         if cache_entries > 0 { format!("{cache_entries} entries") } else { "disabled".into() }
+    );
+    log!(
+        info,
+        "admission: max {max_conns} conns, queue bound {max_queue}, tenant quota {}",
+        if quota > 0 { quota.to_string() } else { "unlimited".into() }
     );
     log!(info, "protocol: one JSON request per line; see api::wire + coordinator/service.rs");
     // Block on the service itself: when a client sends {"cmd":"shutdown"}

@@ -1,0 +1,261 @@
+//! Per-connection state machine: buffered newline framing on the read
+//! side, a pending-write buffer on the write side, and the interest
+//! computation that ties the two to the poller.
+//!
+//! Invariants the server loop relies on:
+//!
+//! - At most one request per connection is in flight at a time
+//!   (`in_flight`); read interest is dropped while it runs, so a
+//!   flooding client is backpressured by TCP instead of ballooning the
+//!   dispatch queue. This also preserves the old front end's per-
+//!   connection serial ordering.
+//! - The read buffer never exceeds `max_line_bytes` without containing
+//!   a newline — [`Conn::line_overflow`] catches the excess and the
+//!   loop answers with a typed `protocol` error, then closes.
+//! - Responses go through `queue_line` + `flush`; whatever the socket
+//!   won't take stays buffered and the poller watches for writability,
+//!   so a slow reader never blocks the loop (or a dispatch worker).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use super::poller::{INTEREST_READ, INTEREST_WRITE};
+
+/// Pause line parsing (and reading) while a connection has this many
+/// response bytes still unflushed: a reader that never drains its
+/// socket gets bounded per-connection memory, not an unbounded queue.
+pub const WRITE_HIGH_WATERMARK: usize = 256 * 1024;
+
+/// Outcome of one nonblocking `read` into the frame buffer.
+pub enum Fill {
+    /// Bytes arrived (frame buffer extended).
+    Data,
+    /// Nothing to read right now.
+    WouldBlock,
+    /// Orderly EOF from the peer.
+    Eof,
+    /// Hard socket error (connection reset, ...).
+    Err(std::io::Error),
+}
+
+/// Extract the next `\n`-terminated line from `buf`, resuming the
+/// newline scan at `*scan_from` (bytes before it are known
+/// newline-free, so repeated calls over a growing buffer stay linear).
+/// Strips the terminator and an optional trailing `\r`; invalid UTF-8
+/// is replaced (the JSON parse will reject it with a typed error
+/// rather than killing the connection).
+pub(crate) fn split_line(buf: &mut Vec<u8>, scan_from: &mut usize) -> Option<String> {
+    match buf[*scan_from..].iter().position(|&b| b == b'\n') {
+        Some(rel) => {
+            let end = *scan_from + rel;
+            let mut line = &buf[..end];
+            if line.last() == Some(&b'\r') {
+                line = &line[..line.len() - 1];
+            }
+            let s = String::from_utf8_lossy(line).into_owned();
+            buf.drain(..=end);
+            *scan_from = 0;
+            Some(s)
+        }
+        None => {
+            *scan_from = buf.len();
+            None
+        }
+    }
+}
+
+pub struct Conn {
+    pub stream: TcpStream,
+    /// Incoming bytes not yet split into lines.
+    read_buf: Vec<u8>,
+    /// Newline-scan resume offset into `read_buf`.
+    scan_from: usize,
+    /// Outgoing bytes not yet accepted by the socket.
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    /// A request from this connection is being processed by a worker.
+    pub in_flight: bool,
+    /// Peer sent EOF; no more lines will arrive.
+    pub peer_closed: bool,
+    /// Close once the write buffer flushes (fatal protocol error, or
+    /// server-initiated close).
+    pub closing: bool,
+    /// Last accept/read/completion on this connection — the idle-reap
+    /// clock.
+    pub last_activity: Instant,
+    /// Interest mask currently registered with the poller.
+    pub registered: u8,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, now: Instant) -> Conn {
+        Conn {
+            stream,
+            read_buf: Vec::new(),
+            scan_from: 0,
+            write_buf: Vec::new(),
+            write_pos: 0,
+            in_flight: false,
+            peer_closed: false,
+            closing: false,
+            last_activity: now,
+            registered: INTEREST_READ,
+        }
+    }
+
+    pub fn touch(&mut self, now: Instant) {
+        self.last_activity = now;
+    }
+
+    /// One nonblocking read through `scratch` into the frame buffer.
+    pub fn fill(&mut self, scratch: &mut [u8]) -> Fill {
+        match self.stream.read(scratch) {
+            Ok(0) => Fill::Eof,
+            Ok(n) => {
+                self.read_buf.extend_from_slice(&scratch[..n]);
+                Fill::Data
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Fill::WouldBlock,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Fill::WouldBlock,
+            Err(e) => Fill::Err(e),
+        }
+    }
+
+    /// Next complete line, if any (see [`split_line`]).
+    pub fn next_line(&mut self) -> Option<String> {
+        split_line(&mut self.read_buf, &mut self.scan_from)
+    }
+
+    /// True when the frame buffer holds a newline-free prefix past the
+    /// cap. Only meaningful right after `next_line` returned `None`
+    /// (the scan is then complete).
+    pub fn line_overflow(&self, max_line_bytes: usize) -> bool {
+        self.read_buf.len() > max_line_bytes && self.scan_from == self.read_buf.len()
+    }
+
+    pub fn read_buffered(&self) -> usize {
+        self.read_buf.len()
+    }
+
+    /// Non-consuming peek: is a complete line still buffered? (Bytes
+    /// before `scan_from` are known newline-free, so only the suffix
+    /// needs scanning.)
+    pub fn has_complete_line(&self) -> bool {
+        self.read_buf[self.scan_from..].contains(&b'\n')
+    }
+
+    /// Queue one response line (terminator appended here).
+    pub fn queue_line(&mut self, line: &str) {
+        self.write_buf.extend_from_slice(line.as_bytes());
+        self.write_buf.push(b'\n');
+    }
+
+    pub fn write_pending(&self) -> usize {
+        self.write_buf.len() - self.write_pos
+    }
+
+    /// Push buffered bytes until done or the socket blocks. `Ok(true)`
+    /// means fully flushed.
+    pub fn flush(&mut self) -> std::io::Result<bool> {
+        while self.write_pos < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.write_pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted 0 bytes",
+                    ))
+                }
+                Ok(n) => self.write_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        self.write_buf.clear();
+        self.write_pos = 0;
+        Ok(true)
+    }
+
+    /// The interest mask this connection should be registered with:
+    /// readable while it can accept a new request, writable while
+    /// responses are buffered.
+    pub fn desired_interest(&self, draining: bool) -> u8 {
+        let mut interest = 0;
+        if !self.in_flight
+            && !self.closing
+            && !self.peer_closed
+            && !draining
+            && self.write_pending() < WRITE_HIGH_WATERMARK
+        {
+            interest |= INTEREST_READ;
+        }
+        if self.write_pending() > 0 {
+            interest |= INTEREST_WRITE;
+        }
+        interest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_line_basic_and_crlf() {
+        let mut buf = b"{\"a\":1}\r\nnext".to_vec();
+        let mut scan = 0;
+        assert_eq!(split_line(&mut buf, &mut scan).as_deref(), Some("{\"a\":1}"));
+        assert_eq!(buf, b"next");
+        assert_eq!(scan, 0);
+        assert_eq!(split_line(&mut buf, &mut scan), None);
+        assert_eq!(scan, 4); // scan resumes past the partial
+    }
+
+    #[test]
+    fn split_line_resumes_scan_linearly() {
+        let mut buf = vec![b'x'; 1000];
+        let mut scan = 0;
+        assert_eq!(split_line(&mut buf, &mut scan), None);
+        assert_eq!(scan, 1000);
+        buf.extend_from_slice(b"tail\n");
+        let line = split_line(&mut buf, &mut scan).unwrap();
+        assert_eq!(line.len(), 1004);
+        assert!(line.ends_with("tail"));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn split_line_handles_pipelined_lines_and_empties() {
+        let mut buf = b"one\n\ntwo\n".to_vec();
+        let mut scan = 0;
+        assert_eq!(split_line(&mut buf, &mut scan).as_deref(), Some("one"));
+        assert_eq!(split_line(&mut buf, &mut scan).as_deref(), Some(""));
+        assert_eq!(split_line(&mut buf, &mut scan).as_deref(), Some("two"));
+        assert_eq!(split_line(&mut buf, &mut scan), None);
+    }
+
+    #[test]
+    fn split_line_lossy_on_invalid_utf8() {
+        let mut buf = vec![0xff, 0xfe, b'\n'];
+        let mut scan = 0;
+        let line = split_line(&mut buf, &mut scan).unwrap();
+        assert!(!line.is_empty()); // replacement chars, not a panic
+    }
+
+    #[test]
+    fn overflow_detection_via_conn_state() {
+        // line_overflow is pure state — exercise it through a real
+        // (loopback) Conn so the struct invariants hold.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(client);
+        let mut c = Conn::new(server_side, Instant::now());
+        c.read_buf = vec![b'x'; 100];
+        assert_eq!(c.next_line(), None);
+        assert!(c.line_overflow(64));
+        assert!(!c.line_overflow(100));
+    }
+}

@@ -1,0 +1,47 @@
+//! Dependency-free readiness-driven serving tier.
+//!
+//! The event loop that fronts [`crate::coordinator::service`]: one OS
+//! thread multiplexes every client connection with nonblocking
+//! accept/read/write over an OS readiness facility — `epoll(7)` on
+//! Linux, with a portable `poll(2)` fallback — replacing the old
+//! thread-per-connection front end. Like `vendor/anyhow`, everything is
+//! in-repo: the syscall surface is a handful of `extern "C"`
+//! declarations in [`sys`] (std already links libc, so they resolve at
+//! link time without adding a crate).
+//!
+//! Layering, bottom up:
+//!
+//! - [`sys`] — raw `epoll`/`poll` FFI plus the two backend structs.
+//! - [`poller`] — the unified [`poller::Poller`] facade; backend chosen
+//!   at runtime (`TMFG_NET_BACKEND=poll` forces the fallback).
+//! - [`conn`] — per-connection state machine: buffered newline framing
+//!   with a hard line-length cap, pending-write buffer, interest
+//!   computation, activity timestamps.
+//! - [`wheel`] — hashed deadline wheel for idle-session reaping
+//!   (schedule is O(1); expiry revalidates lazily against the
+//!   connection's real last-activity time).
+//! - [`server`] — the loop itself: accept with a hard connection
+//!   limit, dispatch to a [`server::Handler`] (the policy layer that
+//!   the coordinator implements: admission control, backpressure,
+//!   submit-to-workers), completion delivery via [`server::LoopCtl`]
+//!   (worker threads push finished responses and poke a self-pipe
+//!   waker), and graceful drain on shutdown.
+//!
+//! The split keeps mechanism and policy separate: this module knows
+//! nothing about TMFG, JSON, tenants, or queues — it moves bytes and
+//! surfaces events. All serving policy lives in the coordinator's
+//! `Handler` implementation.
+//!
+//! Unix-only (the readiness syscalls); on other targets the coordinator
+//! falls back to the legacy blocking front end and only [`server::LoopCtl`]
+//! (the completion mailbox) is compiled.
+
+#[cfg(unix)]
+pub mod conn;
+#[cfg(unix)]
+pub mod poller;
+pub mod server;
+#[cfg(unix)]
+pub mod sys;
+#[cfg(unix)]
+pub mod wheel;

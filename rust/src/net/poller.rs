@@ -1,0 +1,133 @@
+//! The unified readiness facade over the [`sys`] backends.
+//!
+//! The event loop talks to [`Poller`] only; the backend is picked once
+//! at startup — `epoll(7)` where available, the portable `poll(2)`
+//! rebuild-the-array fallback otherwise. `TMFG_NET_BACKEND=poll` (or
+//! [`Backend::Poll`]) forces the fallback, which is how CI and the
+//! concurrency suite exercise both paths on Linux.
+
+use super::sys;
+pub use super::sys::{Event, INTEREST_READ, INTEREST_WRITE};
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// Backend selection for [`Poller::new`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Best available: epoll on Linux, poll elsewhere.
+    #[default]
+    Auto,
+    /// Force the portable `poll(2)` fallback.
+    Poll,
+}
+
+enum Imp {
+    #[cfg(target_os = "linux")]
+    Epoll(sys::EpollBackend),
+    Poll(sys::PollBackend),
+}
+
+/// One readiness multiplexer owning the backend state. Registration is
+/// keyed by caller-chosen `u64` tokens; fds are only needed again for
+/// `reregister`/`deregister` because the poll fallback and `epoll_ctl`
+/// both want them.
+pub struct Poller {
+    imp: Imp,
+}
+
+impl Poller {
+    pub fn new(choice: Backend) -> io::Result<Poller> {
+        let force_poll = choice == Backend::Poll
+            || std::env::var("TMFG_NET_BACKEND").map(|v| v == "poll").unwrap_or(false);
+        #[cfg(target_os = "linux")]
+        {
+            if !force_poll {
+                // A failed epoll_create1 (e.g. fd exhaustion) falls back
+                // to poll rather than refusing to serve.
+                if let Ok(ep) = sys::EpollBackend::new() {
+                    return Ok(Poller { imp: Imp::Epoll(ep) });
+                }
+            }
+        }
+        #[cfg(not(target_os = "linux"))]
+        let _ = force_poll;
+        Ok(Poller { imp: Imp::Poll(sys::PollBackend::new()) })
+    }
+
+    /// The active backend's name (`"epoll"` / `"poll"`), surfaced in
+    /// `{"cmd": "stats"}` as `net_backend`.
+    pub fn name(&self) -> &'static str {
+        match &self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(_) => "epoll",
+            Imp::Poll(_) => "poll",
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(b) => b.register(fd, token, interest),
+            Imp::Poll(b) => b.register(fd, token, interest),
+        }
+    }
+
+    pub fn reregister(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(b) => b.reregister(fd, token, interest),
+            Imp::Poll(b) => b.reregister(fd, token, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd, token: u64) -> io::Result<()> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(b) => b.deregister(fd, token),
+            Imp::Poll(b) => b.deregister(fd, token),
+        }
+    }
+
+    /// Block for readiness (up to `timeout`; `None` = forever), filling
+    /// `events`. EINTR surfaces as zero events.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        match &mut self.imp {
+            #[cfg(target_os = "linux")]
+            Imp::Epoll(b) => b.wait(events, timeout),
+            Imp::Poll(b) => b.wait(events, timeout),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn forced_poll_backend_reports_name_and_works() {
+        let mut p = Poller::new(Backend::Poll).unwrap();
+        assert_eq!(p.name(), "poll");
+        let (mut a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        p.register(b.as_raw_fd(), 5, INTEREST_READ).unwrap();
+        a.write_all(b"hello").unwrap();
+        let mut events = Vec::new();
+        p.wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        assert!(events.iter().any(|e| e.token == 5 && e.readable));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn auto_prefers_epoll_on_linux() {
+        // TMFG_NET_BACKEND could legitimately force poll in a dedicated
+        // CI job; only assert epoll when the env var isn't set.
+        if std::env::var("TMFG_NET_BACKEND").is_err() {
+            let p = Poller::new(Backend::Auto).unwrap();
+            assert_eq!(p.name(), "epoll");
+        }
+    }
+}

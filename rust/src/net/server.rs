@@ -1,0 +1,768 @@
+//! The readiness event loop: accept, frame, dispatch, complete, drain.
+//!
+//! One OS thread runs [`run`]; it owns every connection and all serving
+//! state, so no per-connection locks exist anywhere in this module.
+//! Policy is delegated to a [`Handler`] (the coordinator implements
+//! admission control, backpressure, and worker submission there); the
+//! loop supplies mechanism:
+//!
+//! - **Accept** with a hard connection limit (over-limit sockets get a
+//!   best-effort rejection line and are dropped).
+//! - **Framing** via [`super::conn::Conn`]: at most one in-flight
+//!   request per connection, read interest parked while it runs.
+//! - **Completions**: worker threads finish a job and call
+//!   [`LoopCtl::complete`], which mails the response line and pokes a
+//!   self-pipe waker; the loop queues the line and re-registers write
+//!   interest, so a slow reader blocks only its own connection.
+//! - **Idle reaping** on a [`super::wheel::DeadlineWheel`] with lazy
+//!   revalidation against `last_activity`.
+//! - **Graceful drain** ([`LoopCtl::request_shutdown`] or a handler
+//!   [`Disposition::RespondAndDrain`]): stop accepting, stop parsing,
+//!   let in-flight requests complete and flush, then close everything —
+//!   with a hard flush-grace deadline so one dead reader cannot wedge
+//!   shutdown.
+//!
+//! The waker is deliberately flag-free: every `complete`/shutdown
+//! writes one byte and ignores `WouldBlock` (a full pipe already has a
+//! readable event pending), and the loop drains the completion mailbox
+//! every iteration — no lost-wakeup window.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Identifies one live connection within a server instance. Tokens are
+/// monotone and never reused, so a stale token (in the deadline wheel,
+/// or a completion for a closed connection) can never alias a newer
+/// connection.
+pub type ConnId = u64;
+
+/// What the [`Handler`] wants done with a parsed request line.
+pub enum Disposition {
+    /// Write this response line; keep parsing.
+    Respond(String),
+    /// The request was handed to the dispatch tier; a
+    /// [`LoopCtl::complete`] call will deliver the response. The loop
+    /// parks read interest on the connection until then.
+    Submitted,
+    /// Write the line, then close the connection once it flushes.
+    RespondAndClose(String),
+    /// Write the line, then begin graceful drain of the whole server.
+    RespondAndDrain(String),
+}
+
+/// Serving policy callbacks, all invoked on the loop thread (so a
+/// handler needs no internal locking for its own state).
+pub trait Handler {
+    /// The loop is up, with the named poller backend ("epoll"/"poll").
+    fn on_start(&mut self, _backend: &'static str) {}
+    /// A connection was accepted and registered.
+    fn on_accept(&mut self, _conn: ConnId) {}
+    /// One complete request line arrived.
+    fn on_line(&mut self, conn: ConnId, line: &str) -> Disposition;
+    /// A completion was delivered for `conn`. Fires exactly once per
+    /// [`Disposition::Submitted`] — even if the connection died first
+    /// (accounting must balance regardless).
+    fn on_complete(&mut self, _conn: ConnId) {}
+    /// The connection was removed: EOF, socket error, idle reap, drain,
+    /// or close-after-response. Fires exactly once per accepted
+    /// connection.
+    fn on_close(&mut self, _conn: ConnId) {}
+    /// Accept hit the hard connection limit; the returned line is
+    /// written best-effort to the rejected socket before dropping it.
+    fn on_conn_limit(&mut self) -> String;
+    /// A newline-free read prefix exceeded the line cap; the returned
+    /// line is sent and the connection closed.
+    fn on_overflow(&mut self, _conn: ConnId) -> String;
+    /// `conn` is about to be closed by the idle reaper (`on_close`
+    /// still follows).
+    fn on_reaped(&mut self, _conn: ConnId) {}
+    /// The poller returned (readiness, completion poke, or timer).
+    fn on_wakeup(&mut self) {}
+}
+
+/// Loop configuration (the coordinator derives it from `ServiceConfig`).
+pub struct ServerConfig {
+    /// Hard cap on simultaneously open connections.
+    pub max_conns: usize,
+    /// Reject (typed `protocol` error) any newline-free line prefix
+    /// longer than this.
+    pub max_line_bytes: usize,
+    /// Reap connections idle this long; `Duration::ZERO` disables.
+    pub idle_timeout: Duration,
+    /// Force the portable poll backend.
+    #[cfg(unix)]
+    pub backend: super::poller::Backend,
+}
+
+/// The cross-thread handle into a running loop: worker threads deliver
+/// completions, any thread can request shutdown. Compiled on every
+/// platform (the non-unix legacy front end shares the shutdown flag);
+/// the waker pipe exists only on unix.
+pub struct LoopCtl {
+    shutdown: AtomicBool,
+    completions: Mutex<Vec<(ConnId, String)>>,
+    #[cfg(unix)]
+    wake_tx: std::os::unix::net::UnixStream,
+}
+
+impl LoopCtl {
+    /// Build the control handle plus the loop's receive half of the
+    /// waker pipe.
+    #[cfg(unix)]
+    pub fn new() -> std::io::Result<(Arc<LoopCtl>, std::os::unix::net::UnixStream)> {
+        let (wake_tx, wake_rx) = std::os::unix::net::UnixStream::pair()?;
+        wake_tx.set_nonblocking(true)?;
+        wake_rx.set_nonblocking(true)?;
+        let ctl = Arc::new(LoopCtl {
+            shutdown: AtomicBool::new(false),
+            completions: Mutex::new(Vec::new()),
+            wake_tx,
+        });
+        Ok((ctl, wake_rx))
+    }
+
+    /// Control handle without a waker — the legacy (non-unix) blocking
+    /// front end only uses the shutdown flag.
+    #[cfg(not(unix))]
+    pub fn new_detached() -> Arc<LoopCtl> {
+        Arc::new(LoopCtl {
+            shutdown: AtomicBool::new(false),
+            completions: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn wake(&self) {
+        #[cfg(unix)]
+        {
+            use std::io::Write;
+            // Flag-free: always write; a full pipe means the loop
+            // already has a pending readable event, so WouldBlock (and
+            // any other failure) is safely ignorable.
+            let _ = (&self.wake_tx).write(&[1u8]);
+        }
+    }
+
+    /// Deliver a finished response line for `conn` and poke the loop.
+    /// Called from dispatch-worker threads.
+    pub fn complete(&self, conn: ConnId, line: String) {
+        self.completions.lock().unwrap_or_else(|p| p.into_inner()).push((conn, line));
+        self.wake();
+    }
+
+    /// Ask the loop to drain gracefully and exit.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.wake();
+    }
+
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    fn take_completions(&self) -> Vec<(ConnId, String)> {
+        std::mem::take(&mut *self.completions.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+}
+
+#[cfg(unix)]
+pub use unix_loop::run;
+
+#[cfg(unix)]
+mod unix_loop {
+    use super::*;
+    use crate::net::conn::{Conn, Fill, WRITE_HIGH_WATERMARK};
+    use crate::net::poller::{Event, Poller, INTEREST_READ};
+    use crate::net::wheel::DeadlineWheel;
+    use std::collections::HashMap;
+    use std::io::{self, Read, Write};
+    use std::net::TcpListener;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::time::Instant;
+
+    const TOK_LISTENER: ConnId = 0;
+    const TOK_WAKER: ConnId = 1;
+    const FIRST_CONN: ConnId = 2;
+
+    /// Read chunk size per nonblocking `read` call.
+    const READ_CHUNK: usize = 16 * 1024;
+
+    /// During drain, connections that are neither in flight nor flushed
+    /// get this long before being force-closed.
+    const DRAIN_FLUSH_GRACE: Duration = Duration::from_secs(5);
+
+    /// Poll cadence while draining (bounds the sweep latency).
+    const DRAIN_TICK: Duration = Duration::from_millis(50);
+
+    /// Run the event loop until drain completes. Consumes the listener;
+    /// returns only fatal setup/poll errors (per-connection errors just
+    /// close that connection).
+    pub fn run<H: Handler>(
+        listener: TcpListener,
+        cfg: &ServerConfig,
+        ctl: &Arc<LoopCtl>,
+        wake_rx: UnixStream,
+        handler: &mut H,
+    ) -> io::Result<()> {
+        listener.set_nonblocking(true)?;
+        let mut poller = Poller::new(cfg.backend)?;
+        handler.on_start(poller.name());
+        poller.register(listener.as_raw_fd(), TOK_LISTENER, INTEREST_READ)?;
+        poller.register(wake_rx.as_raw_fd(), TOK_WAKER, INTEREST_READ)?;
+        let wheel = (!cfg.idle_timeout.is_zero()).then(|| {
+            // ~8 slots per timeout keeps reap latency near timeout/8
+            // while one entry per connection bounds wheel memory.
+            DeadlineWheel::new(cfg.idle_timeout / 8, 64)
+        });
+        let mut el = EventLoop {
+            cfg,
+            ctl,
+            poller,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN,
+            wheel,
+            draining: false,
+            drain_since: None,
+            listener: Some(listener),
+            wake_rx,
+            handler,
+            scratch: vec![0u8; READ_CHUNK],
+        };
+        el.run()
+    }
+
+    struct EventLoop<'a, H: Handler> {
+        cfg: &'a ServerConfig,
+        ctl: &'a Arc<LoopCtl>,
+        poller: Poller,
+        conns: HashMap<ConnId, Conn>,
+        next_token: ConnId,
+        wheel: Option<DeadlineWheel>,
+        draining: bool,
+        drain_since: Option<Instant>,
+        listener: Option<TcpListener>,
+        wake_rx: UnixStream,
+        handler: &'a mut H,
+        scratch: Vec<u8>,
+    }
+
+    impl<H: Handler> EventLoop<'_, H> {
+        fn run(&mut self) -> io::Result<()> {
+            let mut events: Vec<Event> = Vec::new();
+            loop {
+                let timeout = if self.draining {
+                    Some(DRAIN_TICK)
+                } else {
+                    self.wheel.as_ref().and_then(|w| w.next_due(Instant::now()))
+                };
+                self.poller.wait(&mut events, timeout)?;
+                self.handler.on_wakeup();
+                if self.ctl.shutdown_requested() {
+                    self.begin_drain();
+                }
+                for ev in events.iter().copied() {
+                    match ev.token {
+                        TOK_LISTENER => self.accept_ready(),
+                        TOK_WAKER => self.drain_waker(),
+                        _ => self.conn_event(ev),
+                    }
+                }
+                // Unconditional drain: completions may land between the
+                // mailbox check and the next wait, but the paired waker
+                // byte guarantees the next iteration sees them.
+                for (token, line) in self.ctl.take_completions() {
+                    self.handler.on_complete(token);
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.in_flight = false;
+                        conn.touch(Instant::now());
+                        conn.queue_line(&line);
+                        self.advance(token);
+                    }
+                }
+                if !self.draining {
+                    self.reap(Instant::now());
+                }
+                if self.draining && self.drain_sweep() {
+                    return Ok(());
+                }
+            }
+        }
+
+        fn drain_waker(&mut self) {
+            let mut buf = [0u8; 64];
+            loop {
+                match (&self.wake_rx).read(&mut buf) {
+                    Ok(0) => break, // write half dropped — shutting down
+                    Ok(_) => continue,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => break, // WouldBlock: fully drained
+                }
+            }
+        }
+
+        fn accept_ready(&mut self) {
+            loop {
+                let Some(listener) = &self.listener else { return };
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if self.draining {
+                            continue; // raced a drain: drop silently
+                        }
+                        if self.conns.len() >= self.cfg.max_conns {
+                            let line = self.handler.on_conn_limit();
+                            let _ = stream.set_nonblocking(true);
+                            let mut bytes = line.into_bytes();
+                            bytes.push(b'\n');
+                            let _ = (&stream).write(&bytes); // best effort
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        let token = self.next_token;
+                        self.next_token += 1;
+                        if self
+                            .poller
+                            .register(stream.as_raw_fd(), token, INTEREST_READ)
+                            .is_err()
+                        {
+                            continue;
+                        }
+                        let now = Instant::now();
+                        self.conns.insert(token, Conn::new(stream, now));
+                        if let Some(w) = self.wheel.as_mut() {
+                            w.schedule(token, now + self.cfg.idle_timeout);
+                        }
+                        self.handler.on_accept(token);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return, // transient (EMFILE, ...): retry on next event
+                }
+            }
+        }
+
+        fn conn_event(&mut self, ev: Event) {
+            if ev.failed && self.conns.get(&ev.token).is_some_and(|c| c.in_flight) {
+                // Peer hung up while its request runs: the response is
+                // undeliverable, and a level-triggered poller would
+                // re-report HUP on every wait until the worker
+                // finishes. Close now; on_complete still fires at
+                // completion.
+                self.close_conn(ev.token);
+                return;
+            }
+            if ev.readable || ev.failed {
+                self.read_ready(ev.token);
+            }
+            if ev.writable {
+                self.advance(ev.token);
+            }
+        }
+
+        /// Pull bytes and parse lines until the socket blocks or the
+        /// connection stops accepting input (in-flight, closing,
+        /// backpressured, or draining).
+        fn read_ready(&mut self, token: ConnId) {
+            loop {
+                let Some(conn) = self.conns.get_mut(&token) else { return };
+                if conn.in_flight
+                    || conn.closing
+                    || conn.peer_closed
+                    || self.draining
+                    || conn.write_pending() >= WRITE_HIGH_WATERMARK
+                {
+                    break;
+                }
+                match conn.fill(&mut self.scratch) {
+                    Fill::Data => {
+                        conn.touch(Instant::now());
+                        if self.process_lines(token) {
+                            return; // connection gone
+                        }
+                    }
+                    Fill::WouldBlock => break,
+                    Fill::Eof => {
+                        conn.peer_closed = true;
+                        break;
+                    }
+                    Fill::Err(_) => {
+                        self.close_conn(token);
+                        return;
+                    }
+                }
+            }
+            self.advance(token);
+        }
+
+        /// Split and dispatch complete lines. Returns true if the
+        /// connection no longer exists.
+        fn process_lines(&mut self, token: ConnId) -> bool {
+            loop {
+                let Some(conn) = self.conns.get_mut(&token) else { return true };
+                if conn.in_flight
+                    || conn.closing
+                    || self.draining
+                    || conn.write_pending() >= WRITE_HIGH_WATERMARK
+                {
+                    return false;
+                }
+                let Some(line) = conn.next_line() else {
+                    if conn.line_overflow(self.cfg.max_line_bytes) {
+                        let msg = self.handler.on_overflow(token);
+                        let conn = self.conns.get_mut(&token).expect("conn alive");
+                        conn.queue_line(&msg);
+                        conn.closing = true;
+                    }
+                    return false;
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match self.handler.on_line(token, &line) {
+                    Disposition::Respond(resp) => {
+                        let conn = self.conns.get_mut(&token).expect("conn alive");
+                        conn.queue_line(&resp);
+                    }
+                    Disposition::Submitted => {
+                        let conn = self.conns.get_mut(&token).expect("conn alive");
+                        conn.in_flight = true;
+                    }
+                    Disposition::RespondAndClose(resp) => {
+                        let conn = self.conns.get_mut(&token).expect("conn alive");
+                        conn.queue_line(&resp);
+                        conn.closing = true;
+                        return false;
+                    }
+                    Disposition::RespondAndDrain(resp) => {
+                        let conn = self.conns.get_mut(&token).expect("conn alive");
+                        conn.queue_line(&resp);
+                        self.begin_drain();
+                        return false;
+                    }
+                }
+            }
+        }
+
+        /// The single convergence point after any progress on a
+        /// connection (bytes read, completion delivered, socket became
+        /// writable): flush, parse anything newly parseable — e.g.
+        /// pipelined requests that were parked behind an in-flight one,
+        /// which a level-triggered poller will NOT re-report because
+        /// the bytes already left the socket — then close or resync
+        /// poller interest.
+        fn advance(&mut self, token: ConnId) {
+            {
+                let Some(conn) = self.conns.get_mut(&token) else { return };
+                if conn.flush().is_err() {
+                    self.close_conn(token);
+                    return;
+                }
+            }
+            if self.process_lines(token) {
+                return;
+            }
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.flush().is_err() {
+                self.close_conn(token);
+                return;
+            }
+            let flushed = conn.write_pending() == 0;
+            if flushed && conn.closing {
+                self.close_conn(token);
+                return;
+            }
+            if flushed && conn.peer_closed && !conn.in_flight && !conn.has_complete_line() {
+                // EOF seen, everything owed delivered, nothing left to
+                // parse (a trailing partial line is discarded, like the
+                // old front end).
+                self.close_conn(token);
+                return;
+            }
+            self.sync_interest(token);
+        }
+
+        fn sync_interest(&mut self, token: ConnId) {
+            let Some(conn) = self.conns.get(&token) else { return };
+            let desired = conn.desired_interest(self.draining);
+            if desired != conn.registered {
+                let fd = conn.stream.as_raw_fd();
+                if self.poller.reregister(fd, token, desired).is_err() {
+                    self.close_conn(token);
+                    return;
+                }
+                self.conns.get_mut(&token).expect("conn alive").registered = desired;
+            }
+        }
+
+        fn close_conn(&mut self, token: ConnId) {
+            if let Some(conn) = self.conns.remove(&token) {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd(), token);
+                self.handler.on_close(token);
+                // conn drops here, closing the socket
+            }
+        }
+
+        fn begin_drain(&mut self) {
+            if self.draining {
+                return;
+            }
+            self.draining = true;
+            self.drain_since = Some(Instant::now());
+            if let Some(listener) = self.listener.take() {
+                let _ = self.poller.deregister(listener.as_raw_fd(), TOK_LISTENER);
+            }
+        }
+
+        /// Expire wheel entries, lazily revalidating each candidate:
+        /// still-active or in-flight connections are rescheduled, truly
+        /// idle ones are reaped.
+        fn reap(&mut self, now: Instant) {
+            let Some(wheel) = self.wheel.as_mut() else { return };
+            let mut due = Vec::new();
+            wheel.expire(now, |t| due.push(t));
+            for token in due {
+                let Some(conn) = self.conns.get(&token) else { continue };
+                let idle = now.saturating_duration_since(conn.last_activity);
+                if idle >= self.cfg.idle_timeout && !conn.in_flight {
+                    self.handler.on_reaped(token);
+                    self.close_conn(token);
+                } else {
+                    // Touched since scheduling (or still working):
+                    // reschedule for the remaining idle budget.
+                    let due_at = (conn.last_activity + self.cfg.idle_timeout).max(now);
+                    if let Some(w) = self.wheel.as_mut() {
+                        w.schedule(token, due_at);
+                    }
+                }
+            }
+        }
+
+        /// Close every connection that is finished (flushed, nothing in
+        /// flight) — or everything still lingering once the flush grace
+        /// expires. Returns true when the loop can exit.
+        fn drain_sweep(&mut self) -> bool {
+            let force = self
+                .drain_since
+                .map(|t| t.elapsed() >= DRAIN_FLUSH_GRACE)
+                .unwrap_or(false);
+            let victims: Vec<ConnId> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| {
+                    if c.in_flight && !force {
+                        return false; // completion still owed
+                    }
+                    c.write_pending() == 0 || force
+                })
+                .map(|(t, _)| *t)
+                .collect();
+            for token in victims {
+                // One last flush so a just-queued response isn't
+                // dropped when the socket would have taken it.
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    let _ = conn.flush();
+                }
+                self.close_conn(token);
+            }
+            self.conns.is_empty()
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::AtomicUsize;
+
+    /// Toy policy: "ping"→pong, "work"→async completion after a short
+    /// delay, "bye"→close, "stop"→drain. Counts lifecycle callbacks.
+    struct TestHandler {
+        ctl: Arc<LoopCtl>,
+        stats: Arc<Stats>,
+    }
+
+    #[derive(Default)]
+    struct Stats {
+        accepted: AtomicUsize,
+        closed: AtomicUsize,
+        completed: AtomicUsize,
+        reaped: AtomicUsize,
+        limited: AtomicUsize,
+    }
+
+    impl Handler for TestHandler {
+        fn on_accept(&mut self, _conn: ConnId) {
+            self.stats.accepted.fetch_add(1, Ordering::Relaxed);
+        }
+        fn on_line(&mut self, conn: ConnId, line: &str) -> Disposition {
+            match line {
+                "ping" => Disposition::Respond("pong".into()),
+                "work" => {
+                    let ctl = self.ctl.clone();
+                    std::thread::spawn(move || {
+                        std::thread::sleep(Duration::from_millis(30));
+                        ctl.complete(conn, "done".into());
+                    });
+                    Disposition::Submitted
+                }
+                "bye" => Disposition::RespondAndClose("bye".into()),
+                "stop" => Disposition::RespondAndDrain("stopping".into()),
+                other => Disposition::Respond(format!("echo {other}")),
+            }
+        }
+        fn on_complete(&mut self, _conn: ConnId) {
+            self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        fn on_close(&mut self, _conn: ConnId) {
+            self.stats.closed.fetch_add(1, Ordering::Relaxed);
+        }
+        fn on_conn_limit(&mut self) -> String {
+            self.stats.limited.fetch_add(1, Ordering::Relaxed);
+            "full".into()
+        }
+        fn on_overflow(&mut self, _conn: ConnId) -> String {
+            "toolong".into()
+        }
+        fn on_reaped(&mut self, _conn: ConnId) {
+            self.stats.reaped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    struct TestServer {
+        addr: String,
+        ctl: Arc<LoopCtl>,
+        stats: Arc<Stats>,
+        join: std::thread::JoinHandle<std::io::Result<()>>,
+    }
+
+    fn start(cfg: ServerConfig) -> TestServer {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (ctl, wake_rx) = LoopCtl::new().unwrap();
+        let stats = Arc::new(Stats::default());
+        let ctl2 = ctl.clone();
+        let stats2 = stats.clone();
+        let join = std::thread::spawn(move || {
+            let mut handler = TestHandler { ctl: ctl2.clone(), stats: stats2 };
+            run(listener, &cfg, &ctl2, wake_rx, &mut handler)
+        });
+        TestServer { addr, ctl, stats, join }
+    }
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            max_conns: 64,
+            max_line_bytes: 1 << 20,
+            idle_timeout: Duration::ZERO,
+            backend: crate::net::poller::Backend::Auto,
+        }
+    }
+
+    fn roundtrip(stream: &TcpStream, reader: &mut impl BufRead, line: &str) -> String {
+        let mut s = stream;
+        s.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    }
+
+    #[test]
+    fn inline_async_and_close_dispositions() {
+        let srv = start(cfg());
+        let stream = TcpStream::connect(&srv.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(roundtrip(&stream, &mut reader, "ping"), "pong");
+        assert_eq!(roundtrip(&stream, &mut reader, "work"), "done");
+        // pipelined: a request queued behind an async one still gets
+        // answered, in order, once the completion lands
+        (&stream).write_all(b"work\nping\n").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim_end(), "done");
+        resp.clear();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim_end(), "pong");
+        assert_eq!(roundtrip(&stream, &mut reader, "bye"), "bye");
+        let mut eof = String::new();
+        assert_eq!(reader.read_line(&mut eof).unwrap(), 0); // server closed
+        srv.ctl.request_shutdown();
+        srv.join.join().unwrap().unwrap();
+        assert_eq!(srv.stats.completed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn connection_limit_rejects_with_line() {
+        let mut c = cfg();
+        c.max_conns = 1;
+        let srv = start(c);
+        let keep = TcpStream::connect(&srv.addr).unwrap();
+        let mut keep_reader = BufReader::new(keep.try_clone().unwrap());
+        assert_eq!(roundtrip(&keep, &mut keep_reader, "ping"), "pong");
+        let reject = TcpStream::connect(&srv.addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(&reject).read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "full");
+        assert_eq!(srv.stats.limited.load(Ordering::Relaxed), 1);
+        srv.ctl.request_shutdown();
+        srv.join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn overflow_line_rejected_then_closed() {
+        let mut c = cfg();
+        c.max_line_bytes = 32;
+        let srv = start(c);
+        let stream = TcpStream::connect(&srv.addr).unwrap();
+        (&stream).write_all(&[b'x'; 128]).unwrap(); // no newline
+        let mut reader = BufReader::new(&stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "toolong");
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        srv.ctl.request_shutdown();
+        srv.join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn drain_completes_in_flight_work() {
+        let srv = start(cfg());
+        let worker = TcpStream::connect(&srv.addr).unwrap();
+        let mut worker_reader = BufReader::new(worker.try_clone().unwrap());
+        (&worker).write_all(b"work\n").unwrap();
+        std::thread::sleep(Duration::from_millis(5)); // let it submit
+        let stopper = TcpStream::connect(&srv.addr).unwrap();
+        let mut stop_reader = BufReader::new(stopper.try_clone().unwrap());
+        assert_eq!(roundtrip(&stopper, &mut stop_reader, "stop"), "stopping");
+        // the in-flight job still completes and is delivered
+        let mut resp = String::new();
+        worker_reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim_end(), "done");
+        srv.join.join().unwrap().unwrap();
+        assert_eq!(
+            srv.stats.closed.load(Ordering::Relaxed),
+            srv.stats.accepted.load(Ordering::Relaxed)
+        );
+    }
+
+    #[test]
+    fn idle_connections_reaped() {
+        let mut c = cfg();
+        c.idle_timeout = Duration::from_millis(60);
+        let srv = start(c);
+        let idle = TcpStream::connect(&srv.addr).unwrap();
+        idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut reader = BufReader::new(&idle);
+        let mut line = String::new();
+        // blocking read: returns 0 when the reaper closes us
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        assert!(srv.stats.reaped.load(Ordering::Relaxed) >= 1);
+        srv.ctl.request_shutdown();
+        srv.join.join().unwrap().unwrap();
+    }
+}

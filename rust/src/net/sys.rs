@@ -1,0 +1,388 @@
+//! Raw readiness syscalls: `epoll(7)` on Linux, portable `poll(2)`
+//! everywhere else.
+//!
+//! std links libc, so plain `extern "C"` declarations resolve at link
+//! time — no external crate needed (the repo's offline `vendor/`
+//! policy). Only the handful of calls the event loop needs are
+//! declared, with the constants copied from the Linux/POSIX ABI.
+
+use std::collections::HashMap;
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// Readable-interest bit for [`register`](PollBackend::register) masks.
+pub const INTEREST_READ: u8 = 0b01;
+/// Writable-interest bit.
+pub const INTEREST_WRITE: u8 = 0b10;
+
+/// One readiness notification, translated out of the backend's ABI.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The caller-chosen token the fd was registered under.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or hangup: read the socket (to observe the EOF/error) and
+    /// close it. Reported even when the registered interest mask is
+    /// empty — both facilities always deliver failure conditions.
+    pub failed: bool,
+}
+
+/// `Option<Duration>` → the millisecond timeout both syscalls take
+/// (`None` = block forever). Nonzero sub-millisecond waits round up so
+/// a near deadline can't spin at timeout 0.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) if d.is_zero() => 0,
+        Some(d) => d.as_micros().div_ceil(1000).min(i32::MAX as u128) as i32,
+    }
+}
+
+fn cvt(r: i32) -> io::Result<i32> {
+    if r < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(r)
+    }
+}
+
+// ---- poll(2): the portable fallback ---------------------------------------
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+#[allow(non_camel_case_types)]
+struct pollfd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(target_os = "linux")]
+#[allow(non_camel_case_types)]
+type nfds_t = u64;
+#[cfg(not(target_os = "linux"))]
+#[allow(non_camel_case_types)]
+type nfds_t = u32;
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    fn poll(fds: *mut pollfd, nfds: nfds_t, timeout: i32) -> i32;
+}
+
+/// `poll(2)` backend: the registration set is rebuilt into a `pollfd`
+/// array on every wait — O(conns) per call, the portable fallback's
+/// price. Fine up to a few thousand connections.
+pub struct PollBackend {
+    /// `(fd, token, interest)` in insertion order.
+    entries: Vec<(RawFd, u64, u8)>,
+    /// token → index into `entries`.
+    index: HashMap<u64, usize>,
+}
+
+impl PollBackend {
+    pub fn new() -> PollBackend {
+        PollBackend { entries: Vec::new(), index: HashMap::new() }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        if self.index.contains_key(&token) {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                "token already registered",
+            ));
+        }
+        self.index.insert(token, self.entries.len());
+        self.entries.push((fd, token, interest));
+        Ok(())
+    }
+
+    pub fn reregister(&mut self, _fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+        let &i = self
+            .index
+            .get(&token)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "unknown token"))?;
+        self.entries[i].2 = interest;
+        Ok(())
+    }
+
+    pub fn deregister(&mut self, _fd: RawFd, token: u64) -> io::Result<()> {
+        let i = self
+            .index
+            .remove(&token)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "unknown token"))?;
+        self.entries.swap_remove(i);
+        if let Some(&(_, moved, _)) = self.entries.get(i) {
+            self.index.insert(moved, i);
+        }
+        Ok(())
+    }
+
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        let mut fds: Vec<pollfd> = self
+            .entries
+            .iter()
+            .map(|&(fd, _, interest)| {
+                let mut mask = 0i16;
+                if interest & INTEREST_READ != 0 {
+                    mask |= POLLIN;
+                }
+                if interest & INTEREST_WRITE != 0 {
+                    mask |= POLLOUT;
+                }
+                pollfd { fd, events: mask, revents: 0 }
+            })
+            .collect();
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as nfds_t, timeout_ms(timeout)) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(()); // EINTR: surface zero events, caller re-loops
+            }
+            return Err(e);
+        }
+        for (pfd, &(_, token, _)) in fds.iter().zip(self.entries.iter()) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            events.push(Event {
+                token,
+                readable: pfd.revents & POLLIN != 0,
+                writable: pfd.revents & POLLOUT != 0,
+                failed: pfd.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---- epoll(7): the Linux fast path ----------------------------------------
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{cvt, timeout_ms, Event, INTEREST_READ, INTEREST_WRITE};
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    // The kernel ABI packs the struct on x86-64 (12 bytes); other
+    // architectures use natural alignment.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    #[allow(non_camel_case_types)]
+    struct epoll_event {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut epoll_event) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut epoll_event, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    fn mask(interest: u8) -> u32 {
+        let mut m = 0;
+        if interest & INTEREST_READ != 0 {
+            m |= EPOLLIN;
+        }
+        if interest & INTEREST_WRITE != 0 {
+            m |= EPOLLOUT;
+        }
+        m // level-triggered (no EPOLLET): simplest correct mode
+    }
+
+    /// `epoll(7)` backend: O(ready) per wait, O(1) interest updates.
+    pub struct EpollBackend {
+        epfd: RawFd,
+        /// token → fd: `epoll_ctl` MOD/DEL need the original fd.
+        fds: HashMap<u64, RawFd>,
+        buf: Vec<epoll_event>,
+    }
+
+    impl EpollBackend {
+        pub fn new() -> io::Result<EpollBackend> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(EpollBackend {
+                epfd,
+                fds: HashMap::new(),
+                buf: vec![epoll_event { events: 0, data: 0 }; 256],
+            })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+            let mut ev = epoll_event { events: mask(interest), data: token };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)?;
+            self.fds.insert(token, fd);
+            Ok(())
+        }
+
+        pub fn reregister(&mut self, fd: RawFd, token: u64, interest: u8) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd, token: u64) -> io::Result<()> {
+            self.fds.remove(&token);
+            self.ctl(EPOLL_CTL_DEL, fd, token, 0)
+        }
+
+        pub fn wait(
+            &mut self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<()> {
+            events.clear();
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    self.buf.as_mut_ptr(),
+                    self.buf.len() as i32,
+                    timeout_ms(timeout),
+                )
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in &self.buf[..n as usize] {
+                // copy out of the (possibly packed) struct before use
+                let bits = ev.events;
+                let token = ev.data;
+                events.push(Event {
+                    token,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    failed: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for EpollBackend {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use epoll::EpollBackend;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn timeout_rounding() {
+        assert_eq!(timeout_ms(None), -1);
+        assert_eq!(timeout_ms(Some(Duration::ZERO)), 0);
+        // sub-millisecond rounds up, never to a spin at 0
+        assert_eq!(timeout_ms(Some(Duration::from_micros(1))), 1);
+        assert_eq!(timeout_ms(Some(Duration::from_millis(250))), 250);
+        assert_eq!(timeout_ms(Some(Duration::from_secs(1 << 40))), i32::MAX);
+    }
+
+    /// Drive one backend through register → wait → reregister →
+    /// deregister against a socketpair.
+    fn exercise_backend(
+        mut register: impl FnMut(RawFd, u64, u8) -> io::Result<()>,
+        mut reregister: impl FnMut(RawFd, u64, u8) -> io::Result<()>,
+        mut deregister: impl FnMut(RawFd, u64) -> io::Result<()>,
+        mut wait: impl FnMut(&mut Vec<Event>, Option<Duration>) -> io::Result<()>,
+    ) {
+        let (mut a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        let fd = b.as_raw_fd();
+        register(fd, 42, INTEREST_READ).unwrap();
+
+        // nothing readable yet
+        let mut events = Vec::new();
+        wait(&mut events, Some(Duration::from_millis(1))).unwrap();
+        assert!(events.iter().all(|e| !e.readable));
+
+        a.write_all(b"x").unwrap();
+        wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        let ev = events.iter().find(|e| e.token == 42).expect("readable event");
+        assert!(ev.readable);
+
+        // drain, then switch to write interest: an idle socket is writable
+        let mut buf = [0u8; 8];
+        let _ = (&b).read(&mut buf);
+        reregister(fd, 42, INTEREST_WRITE).unwrap();
+        wait(&mut events, Some(Duration::from_millis(500))).unwrap();
+        let ev = events.iter().find(|e| e.token == 42).expect("writable event");
+        assert!(ev.writable);
+
+        deregister(fd, 42).unwrap();
+        wait(&mut events, Some(Duration::from_millis(1))).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn poll_backend_readiness_cycle() {
+        let mut p = PollBackend::new();
+        // Split borrows via RefCell so the closures can share the backend.
+        let p = std::cell::RefCell::new(&mut p);
+        exercise_backend(
+            |fd, t, i| p.borrow_mut().register(fd, t, i),
+            |fd, t, i| p.borrow_mut().reregister(fd, t, i),
+            |fd, t| p.borrow_mut().deregister(fd, t),
+            |ev, to| p.borrow_mut().wait(ev, to),
+        );
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_backend_readiness_cycle() {
+        let mut e = EpollBackend::new().unwrap();
+        let e = std::cell::RefCell::new(&mut e);
+        exercise_backend(
+            |fd, t, i| e.borrow_mut().register(fd, t, i),
+            |fd, t, i| e.borrow_mut().reregister(fd, t, i),
+            |fd, t| e.borrow_mut().deregister(fd, t),
+            |ev, to| e.borrow_mut().wait(ev, to),
+        );
+    }
+
+    #[test]
+    fn poll_backend_duplicate_token_rejected() {
+        let (_a, b) = UnixStream::pair().unwrap();
+        let mut p = PollBackend::new();
+        p.register(b.as_raw_fd(), 1, INTEREST_READ).unwrap();
+        assert!(p.register(b.as_raw_fd(), 1, INTEREST_READ).is_err());
+        assert!(p.deregister(b.as_raw_fd(), 9).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Hashed deadline wheel for idle-connection reaping.
+//!
+//! Time is bucketed into fixed-width slots over a circular array;
+//! scheduling is `O(1)` (push the token into `due / granularity mod
+//! slots`), expiry drains every slot the cursor has passed. Deadlines
+//! beyond the horizon clamp to the last slot — harmless, because the
+//! server *revalidates lazily*: an expired token is checked against the
+//! connection's real `last_activity` and rescheduled if it was touched
+//! (or clamped) since. A connection therefore carries at most one live
+//! wheel entry, scheduled at accept and re-scheduled only on expiry —
+//! no per-request wheel traffic and no entry removal on close (stale
+//! tokens fall out of the map lookup).
+
+use std::time::{Duration, Instant};
+
+pub struct DeadlineWheel {
+    slots: Vec<Vec<u64>>,
+    granularity: Duration,
+    epoch: Instant,
+    /// Next absolute slot index to expire (monotone).
+    cursor: u64,
+}
+
+impl DeadlineWheel {
+    /// `granularity` is floored to 1ms (slot math divides by it).
+    pub fn new(granularity: Duration, nslots: usize) -> DeadlineWheel {
+        DeadlineWheel {
+            slots: vec![Vec::new(); nslots.max(2)],
+            granularity: granularity.max(Duration::from_millis(1)),
+            epoch: Instant::now(),
+            cursor: 0,
+        }
+    }
+
+    fn abs_slot(&self, t: Instant) -> u64 {
+        let since = t.saturating_duration_since(self.epoch);
+        (since.as_nanos() / self.granularity.as_nanos()) as u64
+    }
+
+    /// Schedule `token` to surface from [`expire`](Self::expire) once
+    /// `due` has passed (up to one slot late; clamped into the wheel's
+    /// horizon — lazy revalidation reschedules the remainder).
+    pub fn schedule(&mut self, token: u64, due: Instant) {
+        let horizon = self.cursor + self.slots.len() as u64 - 1;
+        let s = self.abs_slot(due).clamp(self.cursor, horizon);
+        let idx = (s % self.slots.len() as u64) as usize;
+        self.slots[idx].push(token);
+    }
+
+    /// Time until the earliest scheduled slot fully elapses, `None` if
+    /// the wheel is empty — the event loop's wait timeout.
+    pub fn next_due(&self, now: Instant) -> Option<Duration> {
+        let nslots = self.slots.len() as u64;
+        for off in 0..nslots {
+            let s = self.cursor + off;
+            if !self.slots[(s % nslots) as usize].is_empty() {
+                // u64 nanosecond math: `Duration * u32` would wrap the
+                // slot index on a long-lived server.
+                let offset =
+                    Duration::from_nanos(self.granularity.as_nanos() as u64 * (s + 1));
+                let boundary = self.epoch + offset;
+                return Some(boundary.saturating_duration_since(now));
+            }
+        }
+        None
+    }
+
+    /// Drain every slot that has fully elapsed by `now`, invoking `f`
+    /// per token. Callers revalidate each token (still alive? actually
+    /// idle?) and reschedule survivors.
+    pub fn expire(&mut self, now: Instant, mut f: impl FnMut(u64)) {
+        let current = self.abs_slot(now);
+        let nslots = self.slots.len() as u64;
+        // Bound the sweep to one lap: after a long sleep every slot has
+        // elapsed at least once and extra laps would revisit them.
+        let target = current.min(self.cursor + nslots);
+        while self.cursor < target {
+            let idx = (self.cursor % nslots) as usize;
+            for token in std::mem::take(&mut self.slots[idx]) {
+                f(token);
+            }
+            self.cursor += 1;
+        }
+        if self.cursor < current {
+            self.cursor = current;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const G: Duration = Duration::from_millis(10);
+
+    fn drain(w: &mut DeadlineWheel, at: Instant) -> Vec<u64> {
+        let mut out = Vec::new();
+        w.expire(at, |t| out.push(t));
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn expires_after_deadline_not_before() {
+        let mut w = DeadlineWheel::new(G, 8);
+        let t0 = w.epoch;
+        w.schedule(1, t0 + G * 2);
+        assert_eq!(drain(&mut w, t0 + G), Vec::<u64>::new());
+        // slot 2 fully elapses at t0 + 3G
+        let fired = drain(&mut w, t0 + G * 4);
+        assert_eq!(fired, vec![1]);
+        // one-shot: nothing fires twice
+        assert_eq!(drain(&mut w, t0 + G * 20), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn beyond_horizon_clamps_and_still_fires() {
+        let mut w = DeadlineWheel::new(G, 4);
+        let t0 = w.epoch;
+        w.schedule(7, t0 + G * 100); // far past the 4-slot horizon
+        let fired = drain(&mut w, t0 + G * 10);
+        assert_eq!(fired, vec![7]); // early — caller revalidates + reschedules
+    }
+
+    #[test]
+    fn next_due_tracks_earliest_entry() {
+        let mut w = DeadlineWheel::new(G, 8);
+        let t0 = w.epoch;
+        assert_eq!(w.next_due(t0), None);
+        w.schedule(1, t0 + G * 3);
+        w.schedule(2, t0 + G * 5);
+        let due = w.next_due(t0).unwrap();
+        assert!(due <= G * 4 && due >= G * 2, "{due:?}");
+        // elapsed deadlines report zero-ish, never panic
+        w.schedule(3, t0);
+        assert!(w.next_due(t0 + G * 50).unwrap() == Duration::ZERO);
+    }
+
+    #[test]
+    fn long_sleep_drains_in_one_lap() {
+        let mut w = DeadlineWheel::new(G, 4);
+        let t0 = w.epoch;
+        for tok in 0..4u64 {
+            w.schedule(tok, t0 + G * (tok as u32 + 1));
+        }
+        // A sleep far past every deadline drains everything exactly once.
+        let fired = drain(&mut w, t0 + G * 1000);
+        assert_eq!(fired, vec![0, 1, 2, 3]);
+        // cursor caught up: new schedules land in the future
+        w.schedule(9, t0 + G * 1001);
+        assert_eq!(drain(&mut w, t0 + G * 1000), Vec::<u64>::new());
+        assert_eq!(drain(&mut w, t0 + G * 1003), vec![9]);
+    }
+}

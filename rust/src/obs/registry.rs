@@ -21,9 +21,14 @@ pub struct HistKey {
     pub label: Option<(&'static str, String)>,
 }
 
+/// Identifies one labeled counter series: a metric family plus a single
+/// `key="value"` label pair (e.g. `tenant="acme"`).
+pub type LabeledKey = (&'static str, &'static str, String);
+
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<&'static str, Arc<AtomicU64>>>,
+    labeled_counters: Mutex<BTreeMap<LabeledKey, Arc<AtomicU64>>>,
     gauges: Mutex<BTreeMap<&'static str, Arc<AtomicU64>>>,
     hists: Mutex<BTreeMap<HistKey, Arc<Mutex<Histogram>>>>,
 }
@@ -36,6 +41,31 @@ impl Registry {
     /// Get or create a monotone counter.
     pub fn counter(&self, name: &'static str) -> Arc<AtomicU64> {
         lock(&self.counters).entry(name).or_default().clone()
+    }
+
+    /// Get or create a monotone counter carrying one label pair
+    /// (per-series cardinality is bounded by the caller — the service
+    /// caps tenant-id length and charset at decode time).
+    pub fn counter_labeled(
+        &self,
+        metric: &'static str,
+        key: &'static str,
+        value: &str,
+    ) -> Arc<AtomicU64> {
+        lock(&self.labeled_counters)
+            .entry((metric, key, value.to_string()))
+            .or_default()
+            .clone()
+    }
+
+    /// `(label value, count)` pairs for one labeled counter family, in
+    /// sorted (BTreeMap) order — deterministic for wire responses.
+    pub fn labeled_counter_values(&self, metric: &'static str) -> Vec<(String, u64)> {
+        lock(&self.labeled_counters)
+            .iter()
+            .filter(|((m, _, _), _)| *m == metric)
+            .map(|((_, _, v), c)| (v.clone(), c.load(Ordering::Relaxed)))
+            .collect()
     }
 
     /// Get or create a gauge (stored as a u64 set with `store`).
@@ -105,6 +135,19 @@ impl Registry {
         for (name, c) in lock(&self.counters).iter() {
             out.push_str(&format!("# TYPE {name} counter\n"));
             out.push_str(&format!("{name} {}\n", c.load(Ordering::Relaxed)));
+        }
+        // BTreeMap tuple keys group series by metric family, so one TYPE
+        // line precedes each family's series.
+        let mut last_labeled = "";
+        for ((metric, key, value), c) in lock(&self.labeled_counters).iter() {
+            if *metric != last_labeled {
+                out.push_str(&format!("# TYPE {metric} counter\n"));
+                last_labeled = metric;
+            }
+            out.push_str(&format!(
+                "{metric}{{{key}=\"{value}\"}} {}\n",
+                c.load(Ordering::Relaxed)
+            ));
         }
         for (name, g) in lock(&self.gauges).iter() {
             out.push_str(&format!("# TYPE {name} gauge\n"));
@@ -176,6 +219,20 @@ pub mod names {
     pub const CACHE_MISSES: &str = "tmfg_artifact_cache_misses_total";
     /// Dispatch workers configured for the running service.
     pub const DISPATCH_WORKERS: &str = "tmfg_dispatch_workers";
+    /// Connections accepted by the serving event loop.
+    pub const CONNS_ACCEPTED: &str = "tmfg_conns_accepted_total";
+    /// Currently open connections (gauge; summed across services).
+    pub const CONNS_ACTIVE: &str = "tmfg_conns_active";
+    /// Connections refused at accept by the `--max-conns` hard limit.
+    pub const CONNS_REJECTED_LIMIT: &str = "tmfg_conns_rejected_limit_total";
+    /// Requests rejected by per-tenant admission control, label `tenant`.
+    pub const ADMISSION_REJECTED: &str = "tmfg_admission_rejected_total";
+    /// Requests shed by dispatch-queue-depth backpressure.
+    pub const OVERLOAD_REJECTED: &str = "tmfg_overload_rejected_total";
+    /// Idle connections reaped by the deadline wheel.
+    pub const REAPED_IDLE: &str = "tmfg_conns_reaped_idle_total";
+    /// Event-loop wakeups (readiness, completion, or timer).
+    pub const LOOP_WAKEUPS: &str = "tmfg_event_loop_wakeups_total";
 }
 
 #[cfg(test)]
@@ -223,5 +280,31 @@ mod tests {
         assert!((0.04..=0.06).contains(&p50), "{p50}");
         assert!((0.09..=0.11).contains(&p99), "{p99}");
         assert_eq!(reg.hist_labels(names::STAGE_SECONDS), vec!["apsp".to_string()]);
+    }
+
+    #[test]
+    fn labeled_counters_expose_per_series_values() {
+        let reg = Registry::default();
+        reg.counter_labeled(names::ADMISSION_REJECTED, "tenant", "acme")
+            .fetch_add(2, Ordering::Relaxed);
+        reg.counter_labeled(names::ADMISSION_REJECTED, "tenant", "beta")
+            .fetch_add(1, Ordering::Relaxed);
+        // Same series again → same underlying atomic.
+        reg.counter_labeled(names::ADMISSION_REJECTED, "tenant", "acme")
+            .fetch_add(3, Ordering::Relaxed);
+        assert_eq!(
+            reg.labeled_counter_values(names::ADMISSION_REJECTED),
+            vec![("acme".to_string(), 5), ("beta".to_string(), 1)]
+        );
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE tmfg_admission_rejected_total counter"));
+        assert!(text.contains("tmfg_admission_rejected_total{tenant=\"acme\"} 5"));
+        assert!(text.contains("tmfg_admission_rejected_total{tenant=\"beta\"} 1"));
+        // One TYPE line per family, not per series.
+        let type_lines = text
+            .lines()
+            .filter(|l| *l == "# TYPE tmfg_admission_rejected_total counter")
+            .count();
+        assert_eq!(type_lines, 1);
     }
 }

@@ -1,9 +1,20 @@
-//! Multi-tenant service stress suite: 4 dispatch workers, 16 concurrent
-//! client threads issuing mixed batch / stream / malformed traffic.
-//! Asserts every response is well-formed, stream-session isolation holds
-//! (interleaved ticks from different connections never cross), cache
-//! hits equal misses' payloads bit-for-bit, and `{"cmd":"shutdown"}`
-//! drains cleanly with no deadlock or orphaned worker.
+//! Multi-tenant service stress + load suite.
+//!
+//! The first half is the original stress suite: 4 dispatch workers, 16
+//! concurrent client threads issuing mixed batch / stream / malformed
+//! traffic. Asserts every response is well-formed, stream-session
+//! isolation holds (interleaved ticks from different connections never
+//! cross), cache hits equal misses' payloads bit-for-bit, and
+//! `{"cmd":"shutdown"}` drains cleanly with no deadlock or orphaned
+//! worker.
+//!
+//! The second half is the event-loop load harness: 512 concurrent
+//! connections on a thread-flat connection tier, pipelined requests,
+//! slow readers, queue-depth backpressure shedding with typed
+//! `overloaded` errors under saturation, per-tenant admission control,
+//! the request line-length cap, idle reaping (including sessions whose
+//! connection died without `close_stream`), and the forced `poll(2)`
+//! backend.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -323,6 +334,475 @@ fn stress_16_clients_mixed_traffic_then_clean_shutdown() {
     });
     rx.recv_timeout(Duration::from_secs(120))
         .expect("service failed to drain and shut down (deadlock or orphaned worker)");
+}
+
+// ---------------------------------------------------------------------------
+// Event-loop load harness
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+fn stats_req() -> Json {
+    Json::obj(vec![("id", Json::Num(0.0)), ("cmd", Json::str("stats"))])
+}
+
+#[cfg(unix)]
+fn open_stream_req(n: usize) -> Json {
+    Json::obj(vec![
+        ("cmd", Json::str("open_stream")),
+        ("n", Json::Num(n as f64)),
+        ("k", Json::Num(2.0)),
+        ("window", Json::Num(16.0)),
+        ("warmup", Json::Num(4.0)),
+        ("algo", Json::str("heap")),
+    ])
+}
+
+/// A clustering request heavy enough to occupy a dispatch worker for a
+/// macroscopic interval — saturation fuel for the backpressure tests.
+#[cfg(unix)]
+fn heavy_req(id: usize, seed: u64, tenant: Option<&str>) -> Json {
+    let mut req = Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("dataset", Json::str("CBF")),
+        ("scale", Json::Num(0.05)),
+        ("seed", Json::Num(seed as f64)),
+        ("algo", Json::str("heap")),
+    ]);
+    if let (Json::Obj(map), Some(t)) = (&mut req, tenant) {
+        map.insert("tenant".into(), Json::str(t));
+    }
+    req
+}
+
+#[cfg(target_os = "linux")]
+fn raise_nofile(target: u64) {
+    #[repr(C)]
+    struct Rlimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = Rlimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return;
+        }
+        if r.cur < target {
+            let want = Rlimit { cur: target.min(r.max), max: r.max };
+            let _ = setrlimit(RLIMIT_NOFILE, &want);
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn os_thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").expect("/proc/self/status");
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .expect("Threads: line")
+}
+
+/// The tentpole claim: 512 live connections are carried by the readiness
+/// loop on a flat thread count — the connection tier never spawns a
+/// thread per socket, and the whole fleet still gets correct answers.
+#[cfg(target_os = "linux")]
+#[test]
+fn load_512_connections_on_a_flat_thread_count() {
+    raise_nofile(4096);
+    let h = start();
+    let addr = h.addr.clone();
+
+    // Warm every lazy thread pool (dispatch workers exist already; the
+    // parallel runtime spins up on the first real job) so the baseline
+    // below isolates the connection tier.
+    let mut warm = Client::connect(&addr).unwrap();
+    let resp = warm.call(&inline_req(1, 8)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let baseline = os_thread_count();
+
+    const CONNS: usize = 512;
+    let mut fleet = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        let mut c = Client::connect(&addr).unwrap_or_else(|e| panic!("conn {i}: {e}"));
+        let resp = c
+            .call(&Json::obj(vec![
+                ("id", Json::Num(i as f64)),
+                ("cmd", Json::str("ping")),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "conn {i}: {resp:?}");
+        assert_eq!(resp.get("id").as_usize(), Some(i), "conn {i} echoes its id");
+        fleet.push(c);
+    }
+    // Sprinkle real clustering work across the open fleet.
+    for (i, c) in fleet.iter_mut().enumerate().filter(|(i, _)| i % 32 == 0) {
+        let resp = c.call(&inline_req(10_000 + i, 8)).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "conn {i}: {resp:?}");
+        assert_eq!(resp.get("labels").as_arr().unwrap().len(), 8);
+    }
+
+    let grown = os_thread_count();
+    assert!(
+        grown.saturating_sub(baseline) < 16,
+        "connection tier must not scale threads with connections: \
+         {baseline} -> {grown} across {CONNS} conns"
+    );
+
+    let stats = warm.call(&stats_req()).unwrap();
+    assert!(stats.get("conns_accepted").as_usize().unwrap() > CONNS, "{stats:?}");
+    assert!(stats.get("conns_active").as_usize().unwrap() > CONNS, "{stats:?}");
+    if std::env::var("TMFG_NET_BACKEND").is_err() {
+        assert_eq!(stats.get("net_backend").as_str(), Some("epoll"), "{stats:?}");
+    }
+    assert!(stats.get("loop_wakeups").as_usize().unwrap() > 0, "{stats:?}");
+
+    drop(fleet);
+    drop(warm);
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        h.stop();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(Duration::from_secs(60))
+        .expect("drain with 512 disconnecting clients hung");
+}
+
+/// Pipelined requests in one write burst on a single connection come back
+/// one response per request, in request order — the loop must keep
+/// parsing buffered lines after each completion without new readiness.
+#[test]
+fn pipelined_requests_answer_in_order() {
+    let h = start();
+    let mut raw = RawConn::connect(&h.addr);
+    let mut burst = String::new();
+    for i in 0..5 {
+        burst.push_str(&inline_req(i, 8).to_string());
+        burst.push('\n');
+    }
+    raw.stream.write_all(burst.as_bytes()).unwrap();
+    for i in 0..5 {
+        let mut line = String::new();
+        raw.reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        assert_eq!(resp.get("id").as_usize(), Some(i), "responses in request order");
+    }
+    h.stop();
+}
+
+/// A client that submits work but doesn't read its response must not
+/// stall the loop or other clients; its response waits in the write
+/// buffer until it gets around to reading.
+#[test]
+fn slow_reader_does_not_stall_other_clients() {
+    let h = start();
+    let addr = h.addr.clone();
+    let mut slow = RawConn::connect(&addr);
+    let submitted = inline_req(1, 8).to_string();
+    writeln!(slow.stream, "{submitted}").unwrap();
+    let mut fast = Client::connect(&addr).unwrap();
+    for i in 0..3 {
+        let resp = fast.call(&inline_req(10 + i, 8)).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let mut line = String::new();
+    slow.reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("id").as_usize(), Some(1));
+    h.stop();
+}
+
+/// Saturate a deliberately tiny service (2 workers, queue bound 4, cache
+/// off). Overflow requests get typed `overloaded` rejections while
+/// admitted work completes, and the sampled dispatch queue stays bounded
+/// by the admission gate the whole time.
+#[cfg(unix)]
+#[test]
+fn overload_sheds_with_typed_errors_while_admitted_work_completes() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let h = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: 2,
+        max_queue_depth: 4,
+        cache_entries: 0,
+        ..Default::default()
+    })
+    .expect("bind");
+    let addr = h.addr.clone();
+
+    const CLIENTS: usize = 48;
+    const PER: usize = 3;
+    let ok_count = Arc::new(AtomicUsize::new(0));
+    let shed_count = Arc::new(AtomicUsize::new(0));
+    // Finished clients park their connection in this channel instead of
+    // dropping it, so disconnect cleanup can't pollute the depth samples.
+    let (park_tx, park_rx) = channel::<Client>();
+    let joins: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            let ok_count = ok_count.clone();
+            let shed_count = shed_count.clone();
+            let park_tx = park_tx.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for r in 0..PER {
+                    let id = c * 100 + r;
+                    let resp =
+                        client.call(&heavy_req(id, (id + 1) as u64, None)).unwrap();
+                    assert_eq!(resp.get("id").as_usize(), Some(id), "{resp:?}");
+                    match resp.get("ok").as_bool() {
+                        Some(true) => {
+                            ok_count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Some(false) => {
+                            assert_eq!(
+                                resp.get("code").as_str(),
+                                Some("overloaded"),
+                                "saturation must shed with the typed code: {resp:?}"
+                            );
+                            assert!(!resp.get("error").as_str().unwrap().is_empty());
+                            shed_count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => panic!("malformed response: {resp:?}"),
+                    }
+                }
+                park_tx.send(client).unwrap();
+            })
+        })
+        .collect();
+    drop(park_tx);
+
+    // Sample queue depth for the storm's whole duration. Stats are
+    // answered inline on the loop thread, so they work under saturation.
+    let mut sc = Client::connect(&addr).unwrap();
+    let mut max_depth = 0usize;
+    let mut parked = Vec::new();
+    let storm_deadline = std::time::Instant::now() + Duration::from_secs(240);
+    while parked.len() < CLIENTS {
+        assert!(
+            std::time::Instant::now() < storm_deadline,
+            "saturation storm did not finish within 240s ({}/{CLIENTS} clients done)",
+            parked.len()
+        );
+        let mut disconnected = false;
+        loop {
+            match park_rx.try_recv() {
+                Ok(c) => parked.push(c),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if disconnected && parked.len() < CLIENTS {
+            break; // a client thread panicked — fall through to the joins
+        }
+        let stats = sc.call(&stats_req()).unwrap();
+        max_depth = max_depth.max(stats.get("queue_depth").as_usize().unwrap());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for j in joins {
+        j.join().expect("load client must not panic");
+    }
+
+    let ok = ok_count.load(Ordering::Relaxed);
+    let shed = shed_count.load(Ordering::Relaxed);
+    assert_eq!(ok + shed, CLIENTS * PER, "every request got exactly one response");
+    assert!(ok > 0, "admitted work must complete under saturation");
+    assert!(shed > 0, "144 heavy requests against 2 workers × queue 4 must shed");
+    assert!(
+        max_depth <= 4 + 8,
+        "admission must bound the dispatch queue (sampled max {max_depth})"
+    );
+    let stats = sc.call(&stats_req()).unwrap();
+    assert!(stats.get("overload_rejected").as_usize().unwrap() >= shed, "{stats:?}");
+    assert_eq!(stats.get("max_queue").as_usize(), Some(4), "{stats:?}");
+    drop(parked);
+    h.stop();
+}
+
+/// Per-tenant admission: with `tenant_quota: 2`, a tenant firing 8
+/// concurrent requests keeps at most 2 in flight; the rest are shed with
+/// a typed `overloaded` error naming the tenant, while other tenants and
+/// anonymous traffic sail through.
+#[cfg(unix)]
+#[test]
+fn tenant_quota_sheds_excess_inflight_requests() {
+    let h = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: 2,
+        tenant_quota: 2,
+        cache_entries: 0,
+        ..Default::default()
+    })
+    .expect("bind");
+    let addr = h.addr.clone();
+
+    // All 8 "acme" requests hit the wire before any response is read, so
+    // they are concurrently in flight from the service's point of view.
+    let mut acme: Vec<RawConn> = (0..8).map(|_| RawConn::connect(&addr)).collect();
+    for (i, conn) in acme.iter_mut().enumerate() {
+        let line = heavy_req(i, (100 + i) as u64, Some("acme")).to_string();
+        writeln!(conn.stream, "{line}").unwrap();
+    }
+
+    // Anonymous and different-tenant traffic is admitted regardless.
+    let mut anon = Client::connect(&addr).unwrap();
+    let resp = anon.call(&inline_req(900, 8)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "anonymous admitted: {resp:?}");
+    let mut beta = RawConn::connect(&addr);
+    let resp = beta.call(&heavy_req(901, 901, Some("beta")).to_string());
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "other tenant admitted: {resp:?}");
+
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for conn in acme.iter_mut() {
+        let mut line = String::new();
+        conn.reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        if resp.get("ok").as_bool() == Some(true) {
+            ok += 1;
+        } else {
+            assert_eq!(resp.get("code").as_str(), Some("overloaded"), "{resp:?}");
+            assert!(
+                resp.get("error").as_str().unwrap().contains("tenant"),
+                "quota rejection names the tenant mechanism: {resp:?}"
+            );
+            shed += 1;
+        }
+    }
+    assert_eq!(ok + shed, 8);
+    assert!(ok >= 2, "the in-quota pair must complete (ok={ok})");
+    assert!(shed >= 1, "over-quota requests must shed (shed={shed})");
+
+    let stats = anon.call(&stats_req()).unwrap();
+    let rejected = stats.get("admission_rejected");
+    assert!(
+        rejected.get("acme").as_usize().unwrap() >= shed,
+        "per-tenant rejection counter: {stats:?}"
+    );
+    assert_eq!(rejected.get("beta"), &Json::Null, "beta was never rejected");
+    let metrics = anon
+        .call(&Json::obj(vec![("cmd", Json::str("metrics"))]))
+        .unwrap();
+    let text = metrics.get("metrics").as_str().unwrap();
+    assert!(
+        text.contains("tmfg_admission_rejected_total{tenant=\"acme\"}"),
+        "labeled Prometheus series for the shed tenant"
+    );
+    h.stop();
+}
+
+/// A newline-free request past `max_line_bytes` earns a typed `protocol`
+/// error and a close instead of unbounded buffer growth; fresh
+/// connections are unaffected.
+#[cfg(unix)]
+#[test]
+fn oversized_line_gets_protocol_error_then_close() {
+    let h = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: 1,
+        max_line_bytes: 4096,
+        ..Default::default()
+    })
+    .expect("bind");
+    let addr = h.addr.clone();
+
+    let mut raw = RawConn::connect(&addr);
+    raw.stream.write_all(&[b'x'; 8192]).unwrap();
+    let mut line = String::new();
+    raw.reader.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.get("code").as_str(), Some("protocol"), "{resp:?}");
+    assert!(
+        resp.get("error").as_str().unwrap().contains("max_line_bytes"),
+        "{resp:?}"
+    );
+    line.clear();
+    assert_eq!(raw.reader.read_line(&mut line).unwrap(), 0, "server closes after overflow");
+
+    let mut fresh = Client::connect(&addr).unwrap();
+    let resp = fresh.call(&inline_req(1, 8)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    h.stop();
+}
+
+/// Idle connections are reaped on the deadline wheel, and stream
+/// sessions die with their connection — whether it was reaped or just
+/// hung up without `close_stream` — so `open_streams` returns to 0.
+#[cfg(unix)]
+#[test]
+fn idle_reap_frees_connections_and_dead_stream_sessions() {
+    let h = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: 2,
+        idle_timeout: Duration::from_millis(300),
+        ..Default::default()
+    })
+    .expect("bind");
+    let addr = h.addr.clone();
+
+    // A stream session whose connection goes silent (reaped)...
+    let mut ghost = RawConn::connect(&addr);
+    let resp = ghost.call(&open_stream_req(8).to_string());
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    // ...and one whose connection dies outright, no close_stream.
+    let mut dropper = Client::connect(&addr).unwrap();
+    let resp = dropper.call(&open_stream_req(8)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    drop(dropper);
+
+    // The poller's own traffic keeps it alive past the idle deadline.
+    let mut poller = Client::connect(&addr).unwrap();
+    let mut reaped = 0usize;
+    let mut open_streams = usize::MAX;
+    for _ in 0..200 {
+        let stats = poller.call(&stats_req()).unwrap();
+        reaped = stats.get("reaped_idle").as_usize().unwrap();
+        open_streams = stats.get("open_streams").as_usize().unwrap();
+        if reaped >= 1 && open_streams == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(reaped >= 1, "silent connection must be reaped");
+    assert_eq!(open_streams, 0, "sessions freed on reap and on disconnect");
+    // The server closed the reaped socket out from under the ghost.
+    let mut line = String::new();
+    assert_eq!(ghost.reader.read_line(&mut line).unwrap(), 0, "ghost sees EOF");
+    h.stop();
+}
+
+/// `poll_backend: true` forces the portable `poll(2)` readiness backend;
+/// the service behaves identically and reports the backend in stats.
+#[cfg(unix)]
+#[test]
+fn poll_backend_forced_by_config() {
+    let h = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: 1,
+        poll_backend: true,
+        ..Default::default()
+    })
+    .expect("bind");
+    let mut c = Client::connect(&h.addr).unwrap();
+    let resp = c.call(&inline_req(1, 8)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let stats = c.call(&stats_req()).unwrap();
+    assert_eq!(stats.get("net_backend").as_str(), Some("poll"), "{stats:?}");
+    h.stop();
 }
 
 #[test]

@@ -21,8 +21,11 @@ Checks (both modes):
   * `otherData.trace_id` is present and non-empty
 
 Serve mode additionally asserts that the wire response's `trace_id`
-matches the trace's, and that the metrics text contains the per-stage
-latency histogram. Exits non-zero with a message on the first failure.
+matches the trace's, that the metrics text contains the per-stage
+latency histogram, and that the async serving tier is live: `stats`
+reports a readiness backend with non-zero accepted connections and
+event-loop wakeups, and the metrics exposition carries the connection
+counters. Exits non-zero with a message on the first failure.
 
 Stdlib only — no pip dependencies.
 """
@@ -144,19 +147,48 @@ def serve_mode(addr, min_kinds):
     if resp.get("trace_id") != trace_id:
         fail(f"response trace_id {resp.get('trace_id')!r} != trace's {trace_id!r}")
 
+    # The async serving tier: stats must report the readiness backend and
+    # live connection accounting for this very client.
+    stats = client.call({"cmd": "stats"})
+    if stats.get("ok") is not True:
+        fail(f"stats request failed: {stats}")
+    backend = stats.get("net_backend")
+    if backend not in ("epoll", "poll", "threads"):
+        fail(f"unknown net_backend {backend!r}")
+    if not stats.get("conns_accepted", 0) >= 1:
+        fail(f"conns_accepted must count this client: {stats}")
+    if not stats.get("conns_active", 0) >= 1:
+        fail(f"conns_active must include this client: {stats}")
+    event_loop = backend != "threads"
+    if event_loop and not stats.get("loop_wakeups", 0) >= 1:
+        fail(f"event loop reported no wakeups: {stats}")
+
     metrics = client.call({"cmd": "metrics"})
     if metrics.get("ok") is not True:
         fail(f"metrics request failed: {metrics}")
     text = metrics.get("metrics", "")
-    for needle in [
+    needles = [
         "# TYPE tmfg_stage_duration_seconds histogram",
         'tmfg_stage_duration_seconds_count{stage="tmfg"}',
         "tmfg_queue_wait_seconds_count",
         "# TYPE tmfg_dispatch_workers gauge",
-    ]:
+    ]
+    if event_loop:
+        needles += [
+            "# TYPE tmfg_conns_accepted_total counter",
+            "# TYPE tmfg_conns_active gauge",
+            "# TYPE tmfg_conns_rejected_limit_total counter",
+            "# TYPE tmfg_conns_reaped_idle_total counter",
+            "# TYPE tmfg_overload_rejected_total counter",
+            "# TYPE tmfg_event_loop_wakeups_total counter",
+        ]
+    for needle in needles:
         if needle not in text:
             fail(f"metrics exposition missing {needle!r}")
-    print(f"check_trace: OK: metrics exposition has stage histograms ({len(text)} bytes)")
+    print(
+        f"check_trace: OK: metrics exposition has stage histograms and "
+        f"{backend} serving-tier counters ({len(text)} bytes)"
+    )
 
 
 def main():
