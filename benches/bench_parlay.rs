@@ -2,16 +2,20 @@
 //! sort/radix throughput, scan variants — the knobs the §Perf pass tunes.
 
 use tmfg::parlay;
-use tmfg::tmfg::scan::{scan_chunked, scan_scalar};
+use tmfg::tmfg::scan::{scan_chunked, scan_scalar, scan_wide};
 use tmfg::util::bench::BenchSuite;
 use tmfg::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 fn main() {
-    let mut suite = BenchSuite::new("bench_parlay");
+    let mut suite = BenchSuite::new("parlay");
+    let threads = parlay::num_threads().to_string();
 
     // Dispatch overhead: many tiny parallel-fors (the ORIG-TMFG pattern).
-    suite.meta("kind", "dispatch").run("dispatch/10k tiny parfors", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "dispatch")
+        .run("dispatch/10k tiny parfors", |_| {
         let c = AtomicU64::new(0);
         for _ in 0..10_000 {
             parlay::parallel_for(64, 8, |_| {
@@ -22,7 +26,10 @@ fn main() {
     });
 
     // Big parallel map (the CORR-TMFG initial-sort pattern width).
-    suite.meta("kind", "map").run("map/4M f32 ops", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "map")
+        .run("map/4M f32 ops", |_| {
         let v = parlay::par_map(4_000_000, 4096, |i| (i as f32).sqrt());
         assert_eq!(v.len(), 4_000_000);
     });
@@ -32,12 +39,18 @@ fn main() {
     let base: Vec<(f32, u32)> = (0..2_000_000)
         .map(|i| (rng.next_f32() * 2.0 - 1.0, i as u32))
         .collect();
-    suite.meta("kind", "sort").run("sort/merge 2M pairs", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "sort")
+        .run("sort/merge 2M pairs", |_| {
         let mut v = base.clone();
         parlay::par_sort_pairs_desc(&mut v);
         assert!(v[0].0 >= v[v.len() - 1].0);
     });
-    suite.meta("kind", "sort").run("sort/radix 2M pairs", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "sort")
+        .run("sort/radix 2M pairs", |_| {
         let mut v = base.clone();
         parlay::par_radix_sort_pairs_desc(&mut v);
         assert!(v[0].0 >= v[v.len() - 1].0);
@@ -46,7 +59,10 @@ fn main() {
     // Row-sized sequential sorts inside a parallel loop (the real
     // CORR-TMFG shape: n rows of n-1 entries).
     let n = 2000;
-    suite.meta("kind", "sort").run("sort/2k rows of 2k (pdqsort)", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "sort")
+        .run("sort/2k rows of 2k (pdqsort)", |_| {
         parlay::parallel_for(n, 1, |r| {
             let mut rng = Rng::new(r as u64);
             let mut row: Vec<(f32, u32)> =
@@ -54,7 +70,10 @@ fn main() {
             row.sort_unstable_by(|a, b| b.0.total_cmp(&a.0));
         });
     });
-    suite.meta("kind", "sort").run("sort/2k rows of 2k (radix)", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "sort")
+        .run("sort/2k rows of 2k (radix)", |_| {
         parlay::parallel_for(n, 1, |r| {
             let mut rng = Rng::new(r as u64);
             let mut row: Vec<(f32, u32)> =
@@ -72,7 +91,10 @@ fn main() {
         v
     };
     let inserted: Vec<u8> = (0..m).map(|_| (rng2.next_below(10) < 9) as u8).collect();
-    suite.meta("kind", "scan").run("scan/scalar 1M", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "scan")
+        .run("scan/scalar 1M", |_| {
         let mut p = 0usize;
         let mut hits = 0;
         while p < m {
@@ -81,7 +103,10 @@ fn main() {
         }
         assert!(hits > 0);
     });
-    suite.meta("kind", "scan").run("scan/chunked 1M", |_| {
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "scan")
+        .run("scan/chunked 1M", |_| {
         let mut p = 0usize;
         let mut hits = 0;
         while p < m {
@@ -90,6 +115,21 @@ fn main() {
         }
         assert!(hits > 0);
     });
+    suite
+        .meta("threads", &threads)
+        .meta("kind", "scan")
+        .run("scan/wide 1M", |_| {
+        let mut p = 0usize;
+        let mut hits = 0;
+        while p < m {
+            p = scan_wide(&row, &inserted, p) + 1;
+            hits += 1;
+        }
+        assert!(hits > 0);
+    });
 
     suite.write_csv().unwrap();
+    // Machine-readable perf trajectory (results/BENCH_parlay.json),
+    // smoke-run and gated in CI.
+    suite.write_json().unwrap();
 }

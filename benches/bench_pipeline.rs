@@ -33,7 +33,47 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0.1);
-    let mut suite = BenchSuite::new("bench_pipeline");
+    let mut suite = BenchSuite::new("pipeline");
+
+    // Correlation-kernel scenarios: the dispatched Gram kernel (AVX2
+    // where the host has it) vs the forced scalar core on the same
+    // standardized panel — the O(n²·l) top cost of every cold request,
+    // and the pair the perf gate's ≥1.3× kernel claim is recorded
+    // against. `BENCH_CORR_MAX_N` caps the sweep (CI smoke uses 1024).
+    {
+        use tmfg::data::corr::{gram_kernel_name, pearson_correlation_scalar};
+        use tmfg::data::synth::SynthSpec;
+        let corr_max_n: usize = std::env::var("BENCH_CORR_MAX_N")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(4096);
+        let threads = parlay::num_threads().to_string();
+        for n in [512usize, 2048, 4096] {
+            if n > corr_max_n {
+                continue;
+            }
+            let ds = SynthSpec::new("corrbench", n, 128, 8).generate(7);
+            suite
+                .meta("n", &n.to_string())
+                .meta("len", "128")
+                .meta("threads", &threads)
+                .meta("kernel", gram_kernel_name())
+                .run(&format!("corr_kernel/n{n}"), |_| {
+                    let s = pearson_correlation(&ds.data);
+                    assert_eq!(s.rows, n);
+                });
+            suite
+                .meta("n", &n.to_string())
+                .meta("len", "128")
+                .meta("threads", &threads)
+                .meta("kernel", "scalar")
+                .run(&format!("corr_kernel_scalar/n{n}"), |_| {
+                    let s = pearson_correlation_scalar(&ds.data);
+                    assert_eq!(s.rows, n);
+                });
+        }
+    }
+
     let algos = [
         TmfgAlgo::Par(1),
         TmfgAlgo::Par(10),
@@ -175,7 +215,7 @@ fn main() {
     }
 
     suite.write_csv().unwrap();
-    // Machine-readable perf trajectory (results/BENCH_bench_pipeline.json):
+    // Machine-readable perf trajectory (results/BENCH_pipeline.json):
     // scenario → median ns plus the n/threads metadata, smoke-run in CI.
     suite.write_json().unwrap();
 }

@@ -16,7 +16,7 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(4096);
     let k = 32usize;
-    let mut suite = BenchSuite::new("bench_sparse");
+    let mut suite = BenchSuite::new("sparse");
     let threads = parlay::num_threads().to_string();
 
     // Candidate construction: exact vs prefiltered at the same n.

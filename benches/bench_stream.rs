@@ -19,7 +19,7 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(256);
-    let mut suite = BenchSuite::new("bench_stream");
+    let mut suite = BenchSuite::new("stream");
     let mut speedups = Vec::new();
     for &n in &[100usize, 500, 1000] {
         let mut rng = Rng::new(n as u64);
@@ -70,7 +70,7 @@ fn main() {
         println!("n={n:5}: {s:.1}x");
     }
     suite.write_csv().unwrap();
-    // Machine-readable artifact (results/BENCH_bench_stream.json) with
+    // Machine-readable artifact (results/BENCH_stream.json) with
     // median/p50/p95/p99 + peak RSS, asserted by the CI smoke step.
     suite.write_json().unwrap();
 }

@@ -15,7 +15,7 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0.1);
-    let mut suite = BenchSuite::new("bench_tmfg");
+    let mut suite = BenchSuite::new("tmfg");
     for name in registry::largest3_names() {
         let ds = registry::get_dataset(name, scale, registry::DEFAULT_SEED).unwrap();
         let s = pearson_correlation(&ds.data);
@@ -47,11 +47,12 @@ fn main() {
                 let r = heap_tmfg(&s, &TmfgConfig::default()).unwrap();
                 assert_eq!(r.edges.len(), 3 * n - 6);
             });
-        // §4.3 ablation: scan × sort on the heap algorithm (OPT = chunked+radix).
+        // §4.3 ablation: scan × sort on the heap algorithm (OPT = wide+radix).
         for (scan, sort, label) in [
             (ScanKind::Chunked, SortKind::Comparison, "heap+scan"),
+            (ScanKind::Wide, SortKind::Comparison, "heap+wide"),
             (ScanKind::Scalar, SortKind::Radix, "heap+radix"),
-            (ScanKind::Chunked, SortKind::Radix, "opt"),
+            (ScanKind::Wide, SortKind::Radix, "opt"),
         ] {
             suite
                 .meta("dataset", name)
@@ -64,6 +65,9 @@ fn main() {
         }
     }
     suite.write_csv().unwrap();
+    // Machine-readable perf trajectory (results/BENCH_tmfg.json),
+    // smoke-run and gated in CI.
+    suite.write_json().unwrap();
 
     // Paper's qualitative claims, asserted on the measured means:
     // TMFG construction in heap-tdbht is faster than par-tdbht-10.

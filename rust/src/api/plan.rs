@@ -181,15 +181,17 @@ pub fn build_tmfg_for(algo: TmfgAlgo, s: &Matrix) -> Result<TmfgResult, TmfgErro
         TmfgAlgo::Par(p) => orig_tmfg(s, p),
         TmfgAlgo::Corr => corr_tmfg(s, &TmfgConfig::default()),
         TmfgAlgo::Heap => heap_tmfg(s, &TmfgConfig::default()),
-        // OPT = HEAP + radix sort (+ approximate APSP via the plan's
-        // apsp mode). The paper's manual-vectorization scan is kept
-        // available as ScanKind::Chunked but measured a net 0.9–1.0× on
-        // this host (the paper itself reports 0.97–1.07×), so the default
-        // follows the perf-pass keep-if-it-helps rule (EXPERIMENTS.md
-        // §Perf iter. 6).
+        // OPT = HEAP + radix sort + the 16-wide branch-light scan
+        // (+ approximate APSP via the plan's apsp mode). The earlier
+        // 8-wide ScanKind::Chunked measured a net 0.9–1.0× on this host
+        // (the paper itself reports 0.97–1.07×) and stayed off; the Wide
+        // scan hoists the bounds checks out of the flag gather and is
+        // selection-identical to Scalar (pinned by the equivalence
+        // suites), so OPT follows the perf-pass keep-if-it-helps rule
+        // with the wider variant.
         TmfgAlgo::Opt => heap_tmfg(
             s,
-            &TmfgConfig { prefix: 1, scan: ScanKind::Scalar, sort: SortKind::Radix },
+            &TmfgConfig { prefix: 1, scan: ScanKind::Wide, sort: SortKind::Radix },
         ),
     }
 }

@@ -33,6 +33,9 @@ pub struct ExpOpts {
     /// Restrict to these dataset names (empty = experiment default).
     pub datasets: Vec<String>,
     pub out_dir: String,
+    /// Experiments that support it (currently `speedup-table`) also
+    /// write a machine-readable JSON document here (`--json-out`).
+    pub json_out: Option<String>,
 }
 
 impl Default for ExpOpts {
@@ -43,6 +46,7 @@ impl Default for ExpOpts {
             threads: Vec::new(),
             datasets: Vec::new(),
             out_dir: "results".into(),
+            json_out: None,
         }
     }
 }
@@ -468,6 +472,124 @@ pub fn apsp_speedup(opts: &ExpOpts) -> Result<(), TmfgError> {
     )
 }
 
+// ---------------------------------------------------------------------------
+// Headline speedup table: OPT construction vs the reference baselines
+// ---------------------------------------------------------------------------
+/// The paper's headline table: TMFG construction time of the optimized
+/// configuration (heap + radix sort + wide scan — what `TmfgAlgo::Opt`
+/// runs) against the Fast-TMFG-shaped reference `orig_tmfg` (prefix 10,
+/// the original algorithm's parallel configuration) and the plain
+/// `heap_tmfg` baseline, across the thread sweep on the three largest
+/// datasets. Construction-only from a precomputed similarity matrix (the
+/// paper's input convention). Always writes `speedup_table.csv`; when
+/// `opts.json_out` is set, also writes a JSON document with the same
+/// rows plus a min/max headline over the OPT-vs-orig speedups.
+pub fn speedup_table(opts: &ExpOpts) -> Result<(), TmfgError> {
+    use crate::tmfg::{heap_tmfg, orig_tmfg, ScanKind, SortKind, TmfgConfig};
+    use crate::util::json::Json;
+    crate::log!(info, "\n== Speedup table: OPT vs orig/heap TMFG construction ==");
+    let names = opts.dataset_names(
+        registry::largest3_names().iter().map(|s| s.to_string()).collect(),
+    );
+    let sweep = opts.thread_sweep();
+    crate::log!(
+        info,
+        "{:<28} {:>7} {:>10} {:>10} {:>10} {:>9} {:>9}",
+        "dataset",
+        "threads",
+        "orig_s",
+        "heap_s",
+        "opt_s",
+        "vs_orig",
+        "vs_heap"
+    );
+    let opt_cfg = TmfgConfig { prefix: 1, scan: ScanKind::Wide, sort: SortKind::Radix };
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut vs_orig_all: Vec<f64> = Vec::new();
+    for name in &names {
+        let ds = load(opts, name)?;
+        let s = similarity(&ds);
+        for &t in &sweep {
+            let (orig_s, heap_s, opt_s) =
+                parlay::with_threads(t, || -> Result<(f64, f64, f64), TmfgError> {
+                    let timer = Timer::start();
+                    orig_tmfg(&s, 10)?;
+                    let orig_s = timer.elapsed();
+                    let timer = Timer::start();
+                    heap_tmfg(&s, &TmfgConfig::default())?;
+                    let heap_s = timer.elapsed();
+                    let timer = Timer::start();
+                    heap_tmfg(&s, &opt_cfg)?;
+                    Ok((orig_s, heap_s, timer.elapsed()))
+                })?;
+            let vs_orig = orig_s / opt_s.max(1e-12);
+            let vs_heap = heap_s / opt_s.max(1e-12);
+            vs_orig_all.push(vs_orig);
+            crate::log!(
+                info,
+                "{:<28} {:>7} {:>10.4} {:>10.4} {:>10.4} {:>9.2} {:>9.2}",
+                ds.name,
+                t,
+                orig_s,
+                heap_s,
+                opt_s,
+                vs_orig,
+                vs_heap
+            );
+            rows.push(vec![
+                ds.name.clone(),
+                ds.n().to_string(),
+                t.to_string(),
+                format!("{orig_s:.6}"),
+                format!("{heap_s:.6}"),
+                format!("{opt_s:.6}"),
+                format!("{vs_orig:.3}"),
+                format!("{vs_heap:.3}"),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("dataset", Json::str(&ds.name)),
+                ("n", Json::Num(ds.n() as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("orig_s", Json::Num(orig_s)),
+                ("heap_s", Json::Num(heap_s)),
+                ("opt_s", Json::Num(opt_s)),
+                ("speedup_vs_orig", Json::Num(vs_orig)),
+                ("speedup_vs_heap", Json::Num(vs_heap)),
+            ]));
+        }
+    }
+    write_csv(
+        opts,
+        "speedup_table",
+        "dataset,n,threads,orig_s,heap_s,opt_s,speedup_vs_orig,speedup_vs_heap",
+        &rows,
+    )?;
+    if let Some(path) = &opts.json_out {
+        let (lo, hi) = vs_orig_all.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &v| {
+            (lo.min(v), hi.max(v))
+        });
+        let doc = Json::obj(vec![
+            ("experiment", Json::str("speedup-table")),
+            ("scale", Json::Num(opts.scale)),
+            (
+                "headline",
+                Json::obj(vec![
+                    ("min_speedup_vs_orig", Json::Num(lo)),
+                    ("max_speedup_vs_orig", Json::Num(hi)),
+                ]),
+            ),
+            ("rows", Json::Arr(json_rows)),
+        ]);
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, doc.to_string())?;
+        crate::log!(info, "wrote {path}");
+    }
+    Ok(())
+}
+
 /// Linkage ablation (DESIGN.md calls this out as a design choice).
 pub fn ablation_linkage(opts: &ExpOpts) -> Result<(), TmfgError> {
     crate::log!(info, "\n== Ablation: linkage function in DBHT (OPT pipeline) ==");
@@ -510,6 +632,7 @@ pub fn all(opts: &ExpOpts) -> Result<(), TmfgError> {
     fig6(opts)?;
     fig7(opts)?;
     apsp_speedup(opts)?;
+    speedup_table(opts)?;
     ablation_linkage(opts)
 }
 
@@ -559,6 +682,29 @@ mod tests {
         apsp_speedup(&o).unwrap();
         let t = std::fs::read_to_string(format!("{}/apsp_speedup.csv", o.out_dir)).unwrap();
         assert!(t.contains("CBF"));
+    }
+
+    #[test]
+    fn speedup_table_smoke() {
+        let mut o = tiny_opts();
+        let json_path = format!("{}/speedup_table_test.json", o.out_dir);
+        o.json_out = Some(json_path.clone());
+        speedup_table(&o).unwrap();
+        let csv = std::fs::read_to_string(format!("{}/speedup_table.csv", o.out_dir)).unwrap();
+        assert!(csv.lines().count() >= 3, "{csv}"); // header + 2 thread counts
+        assert!(csv.starts_with("dataset,n,threads,orig_s,heap_s,opt_s"));
+        let doc = crate::util::json::Json::parse(
+            &std::fs::read_to_string(&json_path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("experiment").as_str(), Some("speedup-table"));
+        let rows = doc.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 2); // 1 dataset × threads [1, 2]
+        for r in rows {
+            assert!(r.get("opt_s").as_f64().unwrap() > 0.0);
+            assert!(r.get("speedup_vs_orig").as_f64().unwrap() > 0.0);
+        }
+        assert!(doc.get("headline").get("max_speedup_vs_orig").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -151,6 +151,213 @@ fn correlation_from_standardized<T: CorrScalar>(z: &[T], n: usize, l: usize) -> 
     s
 }
 
+/// Which micro-kernel the f32 Gram accumulation dispatches to on this
+/// host (runtime CPU detection). The scalar core is both the portable
+/// fallback and the reference the SIMD path is property-tested against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GramKernel {
+    /// The generic [`CorrScalar`] core (4-accumulator auto-vectorized dot).
+    Scalar,
+    /// Cache-blocked explicit AVX2+FMA kernel (x86_64 only).
+    Avx2,
+}
+
+/// Rows per block of the cache-blocked kernel: 4 standardized rows stay
+/// register/L1-resident while every `j` row is streamed past them once,
+/// so each streamed load feeds 4 dot products instead of 1 — the O(n²·l)
+/// kernel's read traffic drops ~4× before the 8-lane FMAs even start.
+/// (The AVX2 micro-kernel hard-codes this width; change both together.)
+const GRAM_BLOCK_ROWS: usize = 4;
+
+/// Runtime kernel selection for the f32 Gram path.
+pub fn gram_kernel() -> GramKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return GramKernel::Avx2;
+        }
+    }
+    GramKernel::Scalar
+}
+
+/// Kernel name for logs and bench-artifact metadata: "avx2" or "scalar".
+pub fn gram_kernel_name() -> &'static str {
+    match gram_kernel() {
+        GramKernel::Avx2 => "avx2",
+        GramKernel::Scalar => "scalar",
+    }
+}
+
+/// f32 Gram dispatch: explicit SIMD where the host supports it, the
+/// generic scalar core otherwise. Both kernels write each (i, j≥i) cell
+/// (plus its mirror) from exactly one task with a fixed accumulation
+/// order, so output is byte-identical across thread counts either way —
+/// the invariant the determinism suites pin. The two kernels differ from
+/// *each other* only by float-association rounding (~1e-6 on unit rows;
+/// property-tested in `rust/tests/properties.rs`).
+fn gram_f32(z: &[f32], n: usize, l: usize) -> Vec<f32> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if gram_kernel() == GramKernel::Avx2 {
+            let mut s: Vec<f32> = Vec::with_capacity(n * n);
+            let sp = SendPtr(s.as_mut_ptr());
+            parlay::par_symmetric_blocks(n, GRAM_BLOCK_ROWS, |lo, hi| {
+                // SAFETY: AVX2+FMA presence verified above;
+                // par_symmetric_blocks hands every row to exactly one
+                // task, so the (i, j≥i) cells plus (j, i) mirrors written
+                // per call are disjoint across calls.
+                unsafe { avx2::gram_block(z, n, l, lo, hi, sp) };
+            });
+            unsafe { s.set_len(n * n) };
+            return s;
+        }
+    }
+    correlation_from_standardized::<f32>(z, n, l)
+}
+
+/// AVX2+FMA micro-kernels for the blocked f32 Gram accumulation — the
+/// §4.3-style manual vectorization of the dense L1/L2 hot spot. All
+/// horizontal reductions use a fixed lane order (store + left-to-right
+/// fold), so for a given host the result is a pure function of the
+/// inputs: reproducible run-to-run and across thread counts.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::GRAM_BLOCK_ROWS;
+    use crate::parlay::SendPtr;
+    use std::arch::x86_64::*;
+
+    /// Fixed-order horizontal sum of 8 lanes.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        let mut acc = 0.0f32;
+        for &x in &lanes {
+            acc += x;
+        }
+        acc
+    }
+
+    /// One dot product over length `l`, two 8-lane FMA accumulator chains.
+    ///
+    /// # Safety
+    /// `a` and `b` must be valid for reads of `l` f32s; AVX2+FMA must be
+    /// available.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn dot1(a: *const f32, b: *const f32, l: usize) -> f32 {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut k = 0usize;
+        while k + 16 <= l {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(a.add(k + 8)),
+                _mm256_loadu_ps(b.add(k + 8)),
+                acc1,
+            );
+            k += 16;
+        }
+        if k + 8 <= l {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)), acc0);
+            k += 8;
+        }
+        let mut out = hsum(_mm256_add_ps(acc0, acc1));
+        while k < l {
+            out += *a.add(k) * *b.add(k);
+            k += 1;
+        }
+        out
+    }
+
+    /// Four dot products sharing every load of `b` — the register
+    /// blocking that makes the Gram kernel compute-bound.
+    ///
+    /// # Safety
+    /// All four `a` pointers and `b` must be valid for reads of `l`
+    /// f32s; AVX2+FMA must be available.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn dot4(a: [*const f32; 4], b: *const f32, l: usize) -> [f32; 4] {
+        let mut acc = [_mm256_setzero_ps(); 4];
+        let mut k = 0usize;
+        while k + 8 <= l {
+            let vb = _mm256_loadu_ps(b.add(k));
+            acc[0] = _mm256_fmadd_ps(_mm256_loadu_ps(a[0].add(k)), vb, acc[0]);
+            acc[1] = _mm256_fmadd_ps(_mm256_loadu_ps(a[1].add(k)), vb, acc[1]);
+            acc[2] = _mm256_fmadd_ps(_mm256_loadu_ps(a[2].add(k)), vb, acc[2]);
+            acc[3] = _mm256_fmadd_ps(_mm256_loadu_ps(a[3].add(k)), vb, acc[3]);
+            k += 8;
+        }
+        let mut out = [hsum(acc[0]), hsum(acc[1]), hsum(acc[2]), hsum(acc[3])];
+        while k < l {
+            let vb = *b.add(k);
+            for r in 0..4 {
+                out[r] += *a[r].add(k) * vb;
+            }
+            k += 1;
+        }
+        out
+    }
+
+    /// Fill rows `[lo, hi)` of the n×n Gram matrix (upper-triangle cells
+    /// plus their mirrors, forced unit diagonal, values clamped to
+    /// [−1, 1] exactly like the scalar core).
+    ///
+    /// # Safety
+    /// AVX2+FMA must be available; `z` must hold `n * l` f32s;
+    /// `lo < hi <= n`; no other task may write these rows' cells or
+    /// their mirrors concurrently (guaranteed by `par_symmetric_blocks`).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn gram_block(
+        z: &[f32],
+        n: usize,
+        l: usize,
+        lo: usize,
+        hi: usize,
+        sp: SendPtr<f32>,
+    ) {
+        debug_assert!(z.len() == n * l && lo < hi && hi <= n);
+        // SAFETY (closure body): i < n throughout, so i * l + l <= z.len().
+        // A closure does not inherit the surrounding unsafe-fn context,
+        // hence the explicit block.
+        let row = |i: usize| unsafe { z.as_ptr().add(i * l) };
+        // Diagonal and the small within-block triangle.
+        for i in lo..hi {
+            sp.write(i * n + i, 1.0);
+            for j in (i + 1)..hi {
+                let v = dot1(row(i), row(j), l).clamp(-1.0, 1.0);
+                sp.write(i * n + j, v);
+                sp.write(j * n + i, v);
+            }
+        }
+        // Columns past the block: the 4-row kernel when the block is
+        // full, the single-row kernel for the ragged tail block.
+        if hi - lo == GRAM_BLOCK_ROWS {
+            let a = [row(lo), row(lo + 1), row(lo + 2), row(lo + 3)];
+            for j in hi..n {
+                let d = dot4(a, row(j), l);
+                for (r, &raw) in d.iter().enumerate() {
+                    let i = lo + r;
+                    let v = raw.clamp(-1.0, 1.0);
+                    sp.write(i * n + j, v);
+                    sp.write(j * n + i, v);
+                }
+            }
+        } else {
+            for i in lo..hi {
+                for j in hi..n {
+                    let v = dot1(row(i), row(j), l).clamp(-1.0, 1.0);
+                    sp.write(i * n + j, v);
+                    sp.write(j * n + i, v);
+                }
+            }
+        }
+    }
+}
+
 /// Standardize each row to zero mean and unit ℓ2 norm (f32 storage).
 /// Rows with ~zero variance become all-zero (their correlations are
 /// defined as 0).
@@ -159,11 +366,23 @@ pub fn standardize_rows(x: &Matrix) -> Matrix {
 }
 
 /// Pearson correlation matrix: S = Ẑ Ẑᵀ with Ẑ = standardized rows, f32
-/// storage and accumulation throughout (the production path).
+/// storage and accumulation throughout (the production path). The Gram
+/// accumulation dispatches per-host ([`gram_kernel`]): the cache-blocked
+/// explicit AVX2+FMA kernel on capable x86_64, the generic scalar core
+/// everywhere else.
 pub fn pearson_correlation(x: &Matrix) -> Matrix {
     let n = x.rows;
     let z = standardize_rows_generic::<f32>(x);
-    Matrix { rows: n, cols: n, data: correlation_from_standardized(&z, n, x.cols) }
+    Matrix { rows: n, cols: n, data: gram_f32(&z, n, x.cols) }
+}
+
+/// [`pearson_correlation`] with the portable scalar Gram core forced —
+/// the ablation/reference entry point the SIMD property tests and the
+/// `corr_kernel_scalar` bench scenarios compare against.
+pub fn pearson_correlation_scalar(x: &Matrix) -> Matrix {
+    let n = x.rows;
+    let z = standardize_rows_generic::<f32>(x);
+    Matrix { rows: n, cols: n, data: correlation_from_standardized::<f32>(&z, n, x.cols) }
 }
 
 /// f64 Pearson reference: the same standardize→Gram core as
@@ -336,5 +555,62 @@ mod tests {
         let d = distance_matrix(&s);
         assert!((d.at(0, 0)).abs() < 1e-7);
         assert!((d.at(0, 1) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dispatched_gram_agrees_with_scalar_core() {
+        // On AVX2 hosts this pins the SIMD kernel against the scalar
+        // core; elsewhere both sides run the scalar core and it's a
+        // no-op. Shapes straddle the 4-row block edge and the 8/16-lane
+        // vector edges; row 0 is exactly constant (degenerate → zeros).
+        let mut r = Rng::new(11);
+        for &(n, l) in
+            &[(1usize, 5usize), (3, 7), (4, 8), (5, 9), (8, 16), (9, 17), (13, 31), (20, 33)]
+        {
+            let mut data: Vec<f32> =
+                (0..n * l).map(|_| r.next_gaussian() as f32).collect();
+            for v in data.iter_mut().take(l) {
+                *v = 2.5;
+            }
+            let x = Matrix::from_vec(n, l, data);
+            let a = pearson_correlation(&x);
+            let b = pearson_correlation_scalar(&x);
+            for i in 0..n {
+                for j in 0..n {
+                    let (va, vb) = (a.at(i, j), b.at(i, j));
+                    assert!(
+                        (va - vb).abs() < 1e-5,
+                        "n={n} l={l} ({i},{j}): {va} vs {vb}"
+                    );
+                    assert!(va.abs() <= 1.0);
+                }
+                assert_eq!(a.at(i, i), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_gram_byte_identical_across_thread_counts() {
+        let mut r = Rng::new(12);
+        let x = Matrix::from_vec(
+            37,
+            29,
+            (0..37 * 29).map(|_| r.next_gaussian() as f32).collect(),
+        );
+        let base = parlay::with_threads(1, || pearson_correlation(&x));
+        for t in [2, 3, 8] {
+            let s = parlay::with_threads(t, || pearson_correlation(&x));
+            assert!(
+                s.data.iter().zip(&base.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "gram output differs between 1 and {t} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn gram_kernel_name_matches_dispatch() {
+        let name = gram_kernel_name();
+        assert!(name == "avx2" || name == "scalar");
+        assert_eq!(name == "avx2", gram_kernel() == GramKernel::Avx2);
     }
 }

@@ -41,9 +41,13 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
             --dataset synth-large-16384 --sparse-k 32 --apsp approx.
             --trace writes a Chrome trace-event JSON of the run --
             load it in Perfetto or chrome://tracing)
-  tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|ablation|all>
+  tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|speedup-table|
+           ablation|all>
            [--scale 0.1] [--seed N] [--datasets a,b,c] [--threads 1,2,4]
-           [--out-dir results]
+           [--out-dir results] [--json-out file.json]
+           (speedup-table reproduces the paper's headline table: OPT
+            construction vs the orig/heap baselines across threads;
+            --json-out adds a machine-readable document)
   tmfg gen --dataset <name> --out <file.csv> [--scale 0.1] [--seed N]
   tmfg serve [--addr 127.0.0.1:7401] [--algo opt] [--max-batch 8]
            [--dispatch-workers N] [--cache-entries 32]
@@ -226,6 +230,7 @@ fn cmd_experiment(args: &Args) {
             .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
             .unwrap_or_default(),
         out_dir: args.get_str("out-dir", "results"),
+        json_out: args.opt_str("json-out"),
     };
     let result = match which.as_str() {
         "table1" => experiments::table1(&opts),
@@ -236,6 +241,7 @@ fn cmd_experiment(args: &Args) {
         "fig6" => experiments::fig6(&opts),
         "fig7" => experiments::fig7(&opts),
         "apsp" => experiments::apsp_speedup(&opts),
+        "speedup-table" => experiments::speedup_table(&opts),
         "ablation" => experiments::ablation_linkage(&opts),
         "all" => experiments::all(&opts),
         other => {

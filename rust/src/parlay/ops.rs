@@ -60,6 +60,32 @@ pub fn par_symmetric_rows<F: Fn(usize) + Sync>(n: usize, f: F) {
     });
 }
 
+/// Triangle-balanced parallel iteration over fixed row-*blocks* of an
+/// n×n symmetric matrix: `f(lo, hi)` runs exactly once for every block
+/// `[lo, hi)` of up to `block` consecutive rows (the last block may be
+/// ragged), with task h covering blocks h and nb−1−h so long (early) and
+/// short (late) upper-triangle blocks pair up for load balance — the
+/// block-granular sibling of [`par_symmetric_rows`], for kernels that
+/// amortize loads across several rows at once (the cache-blocked Gram
+/// kernel is the motivating user). The block layout depends only on `n`
+/// and `block` — never on the thread count — so a body with a fixed
+/// intra-block order writes bit-identical output at every
+/// `set_num_threads` setting. Each row belongs to exactly one block, so
+/// a body writing cells (i, j≥i) for its rows plus their (j, i) mirrors
+/// touches disjoint memory across calls (the `SendPtr` safety contract).
+pub fn par_symmetric_blocks<F: Fn(usize, usize) + Sync>(n: usize, block: usize, f: F) {
+    let b = block.max(1);
+    let nb = n.div_ceil(b);
+    super::pool::parallel_for(nb.div_ceil(2), 1, |half| {
+        let run = |bi: usize| f(bi * b, ((bi + 1) * b).min(n));
+        run(half);
+        let hi = nb - 1 - half;
+        if hi != half {
+            run(hi);
+        }
+    });
+}
+
 /// Parallel reduce with an associative combiner. `id` must be the identity.
 ///
 /// **Deterministic by construction**: items are folded left-to-right
@@ -256,6 +282,25 @@ mod tests {
             assert!(
                 hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
                 "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn symmetric_blocks_cover_rows_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for (n, block) in [(0usize, 4usize), (1, 4), (3, 4), (4, 4), (5, 4), (101, 4), (64, 8)] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            par_symmetric_blocks(n, block, |lo, hi| {
+                assert!(lo < hi && hi <= n && hi - lo <= block, "[{lo},{hi}) n={n}");
+                assert_eq!(lo % block, 0, "blocks start on fixed boundaries");
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n} block={block}"
             );
         }
     }

@@ -14,6 +14,10 @@ pub enum ScanKind {
     /// 8-wide unrolled scan over a u8 inserted-flag array (the portable
     /// analog of the paper's AVX2 gather+movemask scan).
     Chunked,
+    /// 16-wide branch-light scan with the bounds checks hoisted out of
+    /// the flag gather — the widest portable analog of the paper's
+    /// AVX512 gather+movemask scan, and what `TmfgAlgo::Opt` uses.
+    Wide,
 }
 
 /// How the initial per-row correlation sort is executed
@@ -105,6 +109,24 @@ impl TmfgResult {
 pub fn gain(s: &Matrix, f: &[u32; 3], v: u32) -> f32 {
     let r = v as usize;
     s.at(r, f[0] as usize) + s.at(r, f[1] as usize) + s.at(r, f[2] as usize)
+}
+
+/// Gains of up to three candidate vertices against the same face in one
+/// branch-light pass: `out[k] = gain(s, f, cands[k])`. The face columns
+/// are hoisted and each candidate's three loads are issued back-to-back
+/// with the same left-to-right add order as [`gain`], so the results are
+/// bit-identical to three separate `gain` calls — the fold `best_pair`
+/// runs after gathering its `MaxCorrs` candidates.
+#[inline]
+pub fn gain3(s: &Matrix, f: &[u32; 3], cands: &[u32]) -> [f32; 3] {
+    debug_assert!(cands.len() <= 3);
+    let (c0, c1, c2) = (f[0] as usize, f[1] as usize, f[2] as usize);
+    let mut out = [f32::NEG_INFINITY; 3];
+    for (o, &v) in out.iter_mut().zip(cands.iter()) {
+        let r = v as usize * s.cols;
+        *o = s.data[r + c0] + s.data[r + c1] + s.data[r + c2];
+    }
+    out
 }
 
 /// Validate a similarity matrix for TMFG construction: square with

@@ -9,7 +9,7 @@
 //! inserted (plus the three new faces) are recomputed per round.
 
 use super::common::{
-    gain, initial_clique, validate_similarity, Builder, Faces, ScanKind, SortKind, TmfgConfig,
+    gain3, initial_clique, validate_similarity, Builder, Faces, ScanKind, SortKind, TmfgConfig,
     TmfgResult,
 };
 use super::scan::scan;
@@ -113,16 +113,27 @@ impl CorrState {
     }
 
     /// Best (gain, vertex) face-vertex pair for face `f` from the up-to-3
-    /// `MaxCorrs` candidates (Alg. 1 lines 9–11 / 23–25).
+    /// `MaxCorrs` candidates (Alg. 1 lines 9–11 / 23–25). The pointer
+    /// scans (which mutate state) gather the candidates first; the gains
+    /// are then computed in one branch-light [`gain3`] pass. The keep
+    /// rule — higher gain wins, ties keep the earlier face vertex's
+    /// candidate unless the later candidate id is larger — is unchanged
+    /// from the per-candidate formulation, so selection is bit-identical.
     pub fn best_pair(&mut self, s: &Matrix, f: &[u32; 3]) -> Option<(f32, u32)> {
-        let mut best: Option<(f32, u32)> = None;
+        let mut cands = [0u32; 3];
+        let mut nc = 0usize;
         for &w in f {
             if let Some(cand) = self.maxcorr(w) {
-                let g = gain(s, f, cand);
-                match best {
-                    Some((bg, bv)) if bg > g || (bg == g && bv <= cand) => {}
-                    _ => best = Some((g, cand)),
-                }
+                cands[nc] = cand;
+                nc += 1;
+            }
+        }
+        let gains = gain3(s, f, &cands[..nc]);
+        let mut best: Option<(f32, u32)> = None;
+        for (&g, &cand) in gains.iter().zip(cands.iter()).take(nc) {
+            match best {
+                Some((bg, bv)) if bg > g || (bg == g && bv <= cand) => {}
+                _ => best = Some((g, cand)),
             }
         }
         best
@@ -343,6 +354,8 @@ mod tests {
             (ScanKind::Chunked, SortKind::Comparison),
             (ScanKind::Scalar, SortKind::Radix),
             (ScanKind::Chunked, SortKind::Radix),
+            (ScanKind::Wide, SortKind::Comparison),
+            (ScanKind::Wide, SortKind::Radix),
         ] {
             let r = corr_tmfg(&s, &TmfgConfig { prefix: 1, scan, sort }).unwrap();
             assert_eq!(r.edges, base.edges, "scan={scan:?} sort={sort:?}");

@@ -40,12 +40,40 @@ pub fn scan_chunked(row: &[u32], inserted: &[u8], mut p: usize) -> usize {
     scan_scalar(row, inserted, p)
 }
 
+/// 16-wide branch-light scan: one 16-flag gather fused into a single
+/// mask per iteration, with the bounds checks hoisted out of the gather
+/// so LLVM sees a straight-line load/shift/or body. Falls back to the
+/// 8-wide scan (and from there the scalar scan) for the tail.
+#[inline]
+pub fn scan_wide(row: &[u32], inserted: &[u8], mut p: usize) -> usize {
+    let n = row.len();
+    while p + 16 <= n {
+        let mut mask = 0u32;
+        for k in 0..16 {
+            // SAFETY: `p + k < n` by the loop bound, and row entries are
+            // vertex ids `< inserted.len()` — the `CorrState::sorted`
+            // layout invariant, re-checked here in debug builds.
+            let u = unsafe { *row.get_unchecked(p + k) } as usize;
+            debug_assert!(u < inserted.len());
+            let flag = unsafe { *inserted.get_unchecked(u) } as u32;
+            mask |= flag << k;
+        }
+        if mask != 0xFFFF {
+            // first zero bit = first uninserted
+            return p + (!mask).trailing_zeros() as usize;
+        }
+        p += 16;
+    }
+    scan_chunked(row, inserted, p)
+}
+
 /// Dispatch on the configured kind.
 #[inline]
 pub fn scan(kind: ScanKind, row: &[u32], inserted: &[u8], p: usize) -> usize {
     match kind {
         ScanKind::Scalar => scan_scalar(row, inserted, p),
         ScanKind::Chunked => scan_chunked(row, inserted, p),
+        ScanKind::Wide => scan_wide(row, inserted, p),
     }
 }
 
@@ -68,7 +96,9 @@ mod tests {
             for start in [0usize, n / 3, n.saturating_sub(1)] {
                 let a = scan_scalar(&row, &inserted, start);
                 let b = scan_chunked(&row, &inserted, start);
+                let c = scan_wide(&row, &inserted, start);
                 assert_eq!(a, b, "n={n} start={start}");
+                assert_eq!(a, c, "wide: n={n} start={start}");
                 if a < n {
                     assert_eq!(inserted[row[a] as usize], 0);
                     for q in start..a {
@@ -85,6 +115,7 @@ mod tests {
         let inserted = vec![1u8, 1, 1];
         assert_eq!(scan_scalar(&row, &inserted, 0), 3);
         assert_eq!(scan_chunked(&row, &inserted, 0), 3);
+        assert_eq!(scan_wide(&row, &inserted, 0), 3);
     }
 
     #[test]
@@ -92,6 +123,7 @@ mod tests {
         let row: Vec<u32> = (0..64).collect();
         let inserted = vec![0u8; 64];
         assert_eq!(scan_chunked(&row, &inserted, 5), 5);
+        assert_eq!(scan_wide(&row, &inserted, 5), 5);
     }
 
     #[test]
@@ -102,6 +134,24 @@ mod tests {
             let mut inserted = vec![1u8; 32];
             inserted[hole] = 0;
             assert_eq!(scan_chunked(&row, &inserted, 0), hole);
+        }
+    }
+
+    #[test]
+    fn boundary_at_wide_edges() {
+        // first uninserted around the 16-wide boundary, plus tail shapes
+        // (row lengths that leave 0 / <8 / 8..16 entries after the last
+        // full 16-block) so every fallback path is exercised.
+        for len in [16usize, 17, 23, 24, 31, 32, 48] {
+            for hole in [0usize, 14, 15, 16, 17, 30, 31, 32, 33, 47] {
+                if hole >= len {
+                    continue;
+                }
+                let row: Vec<u32> = (0..len as u32).collect();
+                let mut inserted = vec![1u8; len];
+                inserted[hole] = 0;
+                assert_eq!(scan_wide(&row, &inserted, 0), hole, "len={len} hole={hole}");
+            }
         }
     }
 }

@@ -31,6 +31,27 @@ pub struct Stats {
 
 impl Stats {
     pub fn from_samples(name: &str, samples: &[f64]) -> Stats {
+        // Empty-slice guard: a fold over no samples would yield
+        // min = +inf / max = -inf, which `write_json` can only serialize
+        // as null (JSON has no Inf) — silently breaking every JSON
+        // consumer downstream (check_bench.py rejects non-finite fields
+        // loudly for exactly this reason). Define the empty summary as
+        // all-zeros instead, like `median` already does.
+        if samples.is_empty() {
+            return Stats {
+                name: name.to_string(),
+                reps: 0,
+                mean: 0.0,
+                median: 0.0,
+                stddev: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                peak_rss_kb: peak_rss_kb(),
+            };
+        }
         let n = samples.len().max(1) as f64;
         let mean = samples.iter().sum::<f64>() / n;
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
@@ -92,10 +113,18 @@ pub fn time_once<F: FnOnce()>(f: F) -> f64 {
 pub struct BenchConfig {
     pub warmup: usize,
     pub reps: usize,
-    /// Keep repeating (up to `reps`) until this much total time has been
-    /// measured, so fast cases get enough samples.
+    /// Keep repeating *past* `reps` until this much total time has been
+    /// measured, so fast cases collect enough samples for a stable
+    /// median (the regression gate compares medians). Bounded by
+    /// [`MIN_SECS_REP_CEILING`] so a mis-set `BENCH_MIN_SECS` on a
+    /// sub-microsecond case can't spin forever.
     pub min_secs: f64,
 }
+
+/// Hard ceiling on the number of timed reps when `min_secs` extends
+/// sampling — generous (a ~0-cost case still finishes in well under a
+/// second) but finite.
+pub const MIN_SECS_REP_CEILING: usize = 10_000;
 
 impl Default for BenchConfig {
     fn default() -> Self {
@@ -141,21 +170,32 @@ impl BenchSuite {
     }
 
     /// Run a case: warmups then timed reps; prints and records stats.
-    /// `f` receives the rep index and returns an optional "work" payload
-    /// printed as-is (e.g. an accuracy check) — return `None` normally.
+    /// `f` receives the rep index. At least `config.reps` reps always
+    /// run; when `config.min_secs > 0` sampling keeps extending past
+    /// `reps` until that much total time has been measured (or the
+    /// [`MIN_SECS_REP_CEILING`] hard cap is hit), so near-zero-cost
+    /// cases still produce a usable sample population.
     pub fn run<F: FnMut(usize)>(&mut self, name: &str, mut f: F) -> &Stats {
         for w in 0..self.config.warmup {
             f(w);
         }
-        let mut samples = Vec::with_capacity(self.config.reps);
+        let reps = self.config.reps.max(1);
+        let ceiling = if self.config.min_secs > 0.0 {
+            reps.max(MIN_SECS_REP_CEILING)
+        } else {
+            reps
+        };
+        let mut samples = Vec::with_capacity(reps);
         let mut spent = 0.0;
-        for r in 0..self.config.reps.max(1) {
+        loop {
             let t = Timer::start();
-            f(r);
+            f(samples.len());
             let dt = t.elapsed();
             samples.push(dt);
             spent += dt;
-            if r + 1 >= self.config.reps && spent >= self.config.min_secs {
+            if (samples.len() >= reps && spent >= self.config.min_secs)
+                || samples.len() >= ceiling
+            {
                 break;
             }
         }
@@ -171,7 +211,11 @@ impl BenchSuite {
 
     /// Write all results as machine-readable JSON under
     /// `results/BENCH_<suite>.json` — the perf-trajectory artifact CI
-    /// smoke-runs on every push. One entry per scenario: `name`,
+    /// smoke-runs on every push and `scripts/check_bench.py` gates
+    /// against the committed baselines. Suites use the canonical short
+    /// names (`apsp`, `parlay`, `pipeline`, `sparse`, `stream`, `tmfg`)
+    /// so all six artifacts follow one `BENCH_<name>.json` shape.
+    /// One entry per scenario: `name`,
     /// `median_ns` (plus mean/min for context), histogram percentiles
     /// (`p50_ns`/`p95_ns`/`p99_ns`), the peak RSS observed after the
     /// case ran (`peak_rss_kb`, Linux), `reps`, and every metadata
@@ -282,6 +326,49 @@ mod tests {
         assert_eq!(calls, 5); // 2 warmup + 3 reps
         assert_eq!(suite.results.len(), 1);
         assert_eq!(suite.results[0].reps, 3);
+    }
+
+    #[test]
+    fn min_secs_extends_sampling_for_fast_cases() {
+        // A ~0-cost case under min_secs > 0 must collect more than
+        // `reps` samples (the historical bug: the break condition could
+        // only fire on the final of `reps` iterations, so BENCH_MIN_SECS
+        // was dead code and fast cases got 3 noisy samples).
+        let mut suite = BenchSuite::new("test_min_secs_tmp");
+        suite.config = BenchConfig { warmup: 0, reps: 3, min_secs: 0.005 };
+        let mut calls = 0usize;
+        let s = suite.run("noop", |_| calls += 1).clone();
+        assert!(
+            s.reps > 3,
+            "min_secs should extend past reps, got {} samples",
+            s.reps
+        );
+        assert!(s.reps <= MIN_SECS_REP_CEILING);
+        assert_eq!(calls, s.reps);
+        // rep indices were passed in order: the closure ran once per sample
+        // and the recorded stats are finite.
+        assert!(s.mean.is_finite() && s.min.is_finite() && s.max.is_finite());
+    }
+
+    #[test]
+    fn min_secs_already_satisfied_stays_at_reps() {
+        // A case slower than min_secs/reps must not over-sample.
+        let mut suite = BenchSuite::new("test_min_secs_slow_tmp");
+        suite.config = BenchConfig { warmup: 0, reps: 2, min_secs: 0.002 };
+        let s = suite
+            .run("slow", |_| std::thread::sleep(std::time::Duration::from_millis(3)))
+            .clone();
+        assert_eq!(s.reps, 2);
+    }
+
+    #[test]
+    fn empty_samples_yield_finite_stats() {
+        // min/max folds over an empty slice would give +inf/-inf, which
+        // serialize as JSON null and break every artifact consumer.
+        let s = Stats::from_samples("empty", &[]);
+        assert_eq!(s.reps, 0);
+        assert_eq!((s.min, s.max, s.mean, s.median), (0.0, 0.0, 0.0, 0.0));
+        assert!(s.stddev.is_finite() && s.p50.is_finite() && s.p99.is_finite());
     }
 
     #[test]

@@ -227,10 +227,10 @@ fn prop_scan_chunked_equals_scalar() {
     // tail, rows shorter than one chunk, all-inserted (exhausted) rows,
     // and all-clear rows — and both must return the first uninserted
     // entry at or after the start.
-    use tmfg::tmfg::scan::{scan_chunked, scan_scalar};
+    use tmfg::tmfg::scan::{scan_chunked, scan_scalar, scan_wide};
     let mut rng = Rng::new(77);
     for case in 0..400 {
-        let n = 1 + rng.next_below(80); // plenty of sub-8 and tail shapes
+        let n = 1 + rng.next_below(80); // plenty of sub-8/sub-16 and tail shapes
         let mut row: Vec<u32> = (0..n as u32).collect();
         rng.shuffle(&mut row);
         // density sweep: 0 = all-clear, high = mostly/fully inserted
@@ -244,12 +244,60 @@ fn prop_scan_chunked_equals_scalar() {
         for start in 0..=n {
             let a = scan_scalar(&row, &inserted, start);
             let b = scan_chunked(&row, &inserted, start);
+            let c = scan_wide(&row, &inserted, start);
             assert_eq!(a, b, "case {case}: n={n} start={start}");
+            assert_eq!(a, c, "wide: case {case}: n={n} start={start}");
             // semantic check against a brute-force reference
             let expect = (start..n)
                 .find(|&p| inserted[row[p] as usize] == 0)
                 .unwrap_or(n);
             assert_eq!(a, expect, "case {case}: n={n} start={start}");
+        }
+    }
+}
+
+#[test]
+fn prop_simd_gram_matches_scalar_core() {
+    // The dispatched Gram kernel (AVX2+FMA where the host has it) must
+    // agree with the portable scalar core everywhere: random panels,
+    // exactly-constant rows (degenerate → standardized to zero → all
+    // correlations 0), duplicated rows (correlation exactly 1 after
+    // clamping), and panel shapes straddling the 4-row block edge and
+    // the 8/16-lane vector edges. f32 tolerance covers only the
+    // float-association difference between the two accumulation orders.
+    use tmfg::data::corr::{pearson_correlation, pearson_correlation_scalar};
+    use tmfg::data::Matrix;
+    let mut rng = Rng::new(99);
+    for case in 0..40 {
+        let n = 1 + rng.next_below(24); // straddles blocks of 4
+        let l = 1 + rng.next_below(40); // straddles 8- and 16-lane edges
+        let mut data: Vec<f32> = (0..n * l)
+            .map(|_| rng.next_f32() * 4.0 - 2.0)
+            .collect();
+        if case % 3 == 0 {
+            // a degenerate (constant) row
+            let r = rng.next_below(n);
+            data[r * l..(r + 1) * l].iter_mut().for_each(|v| *v = 0.25);
+        }
+        if case % 4 == 0 && n >= 2 {
+            // duplicate a row → correlation exactly 1 after clamp
+            let (a, b) = (0, n - 1);
+            let src: Vec<f32> = data[a * l..(a + 1) * l].to_vec();
+            data[b * l..(b + 1) * l].copy_from_slice(&src);
+        }
+        let x = Matrix::from_vec(n, l, data);
+        let simd = pearson_correlation(&x);
+        let scalar = pearson_correlation_scalar(&x);
+        for i in 0..n {
+            for j in 0..n {
+                let (a, b) = (simd.at(i, j), scalar.at(i, j));
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "case {case}: n={n} l={l} ({i},{j}): {a} vs {b}"
+                );
+                assert!(a.abs() <= 1.0, "case {case}: |S({i},{j})| > 1");
+            }
+            assert_eq!(simd.at(i, i), 1.0);
         }
     }
 }

@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the committed BENCH_*.json baselines.
+
+Compares the median (median_ns) of every scenario in the current bench
+artifacts against the committed baselines:
+
+    python3 scripts/check_bench.py --baseline bench_baselines \
+        --current results [--tolerance 0.25] [--suites apsp,pipeline]
+
+Matching rules:
+  * suites pair by filename (BENCH_<suite>.json); a suite file missing
+    on either side is a warning + skip, never a failure (CI smoke runs
+    shrink or skip suites)
+  * scenarios pair by their "name" field; a scenario present in only
+    one side is a warning + skip
+  * the measurement keys (median_ns, mean_ns, min_ns, p50/p95/p99_ns,
+    peak_rss_kb, reps) are compared; every OTHER key is configuration
+    metadata (n, threads, dataset, ...) and must be EQUAL on both
+    sides, else the pair is a warning + skip — a CI run at
+    BENCH_SCALE=0.02 must not be judged against a full-scale baseline
+  * a scenario regresses when current median_ns exceeds
+    baseline median_ns * (1 + tolerance)
+
+Non-finite or missing median_ns fields (JSON null — the serialized form
+of Inf/NaN from an empty-sample Stats) are a hard error: that class of
+harness bug must fail loudly, not skip quietly.
+
+Exit codes: 0 ok (including all-skipped), 1 regression(s), 2 bad input.
+Stdlib only — no pip dependencies.
+"""
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+# Everything else in a scenario entry is configuration metadata.
+MEASUREMENT_KEYS = {
+    "name",
+    "median_ns",
+    "mean_ns",
+    "min_ns",
+    "p50_ns",
+    "p95_ns",
+    "p99_ns",
+    "peak_rss_kb",
+    "reps",
+}
+
+
+def _reject_constant(token):
+    # json.loads otherwise accepts Infinity/NaN tokens, which are not
+    # JSON; a writer emitting them is exactly the bug this gate polices.
+    raise ValueError(f"non-finite JSON token {token!r}")
+
+
+def load_suite(path):
+    """Parse one BENCH_<suite>.json -> {scenario name: entry dict}."""
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f, parse_constant=_reject_constant)
+    results = doc.get("results")
+    if not isinstance(results, list):
+        raise ValueError(f"{path}: no 'results' array")
+    by_name = {}
+    for entry in results:
+        name = entry.get("name")
+        if not isinstance(name, str):
+            raise ValueError(f"{path}: scenario without a string 'name'")
+        by_name[name] = entry
+    return by_name
+
+
+def median_ns(entry, origin):
+    v = entry.get("median_ns")
+    if not isinstance(v, (int, float)) or isinstance(v, bool) or not math.isfinite(v):
+        raise ValueError(
+            f"{origin}: median_ns is {v!r} (missing/null/non-finite) — "
+            "the bench harness emitted an unusable summary"
+        )
+    return float(v)
+
+
+def metadata(entry):
+    return {k: v for k, v in entry.items() if k not in MEASUREMENT_KEYS}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="dir with committed BENCH_*.json")
+    ap.add_argument("--current", required=True, help="dir with freshly produced BENCH_*.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed fractional median slowdown before failing (default 0.25)",
+    )
+    ap.add_argument(
+        "--suites",
+        default="",
+        help="comma-separated suite names to check (default: every baseline file)",
+    )
+    args = ap.parse_args()
+    if args.tolerance < 0:
+        print("error: --tolerance must be >= 0", file=sys.stderr)
+        return 2
+
+    base_files = sorted(glob.glob(os.path.join(args.baseline, "BENCH_*.json")))
+    if args.suites:
+        wanted = {s.strip() for s in args.suites.split(",") if s.strip()}
+        base_files = [
+            p for p in base_files
+            if os.path.basename(p)[len("BENCH_"):-len(".json")] in wanted
+        ]
+    if not base_files:
+        print(f"error: no BENCH_*.json baselines under {args.baseline}", file=sys.stderr)
+        return 2
+
+    compared = 0
+    skipped = 0
+    regressions = []
+    try:
+        for base_path in base_files:
+            fname = os.path.basename(base_path)
+            cur_path = os.path.join(args.current, fname)
+            if not os.path.exists(cur_path):
+                print(f"warn: {fname}: no current artifact, skipping suite")
+                skipped += 1
+                continue
+            base = load_suite(base_path)
+            cur = load_suite(cur_path)
+            for name in sorted(base):
+                if name not in cur:
+                    print(f"warn: {fname}: scenario {name!r} missing from current run, skipping")
+                    skipped += 1
+                    continue
+                b_entry, c_entry = base[name], cur[name]
+                b_med = median_ns(b_entry, f"{base_path}:{name}")
+                c_med = median_ns(c_entry, f"{cur_path}:{name}")
+                b_meta, c_meta = metadata(b_entry), metadata(c_entry)
+                if b_meta != c_meta:
+                    diff = {
+                        k: (b_meta.get(k), c_meta.get(k))
+                        for k in set(b_meta) | set(c_meta)
+                        if b_meta.get(k) != c_meta.get(k)
+                    }
+                    print(
+                        f"warn: {fname}: scenario {name!r} metadata differs "
+                        f"{diff}, skipping (shrunk/other-config run)"
+                    )
+                    skipped += 1
+                    continue
+                compared += 1
+                limit = b_med * (1.0 + args.tolerance)
+                ratio = c_med / b_med if b_med > 0 else float("inf") if c_med > 0 else 1.0
+                if c_med > limit:
+                    regressions.append((fname, name, b_med, c_med, ratio))
+                    print(
+                        f"FAIL {fname}:{name}: median {c_med:.0f}ns vs baseline "
+                        f"{b_med:.0f}ns ({ratio:.2f}x > 1+{args.tolerance})"
+                    )
+            for name in sorted(set(cur) - set(base)):
+                print(f"note: {fname}: new scenario {name!r} has no baseline yet")
+    except (ValueError, json.JSONDecodeError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    print(
+        f"check_bench: {compared} scenario(s) compared, {skipped} skipped, "
+        f"{len(regressions)} regression(s), tolerance {args.tolerance}"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
