@@ -188,6 +188,67 @@ fn main() {
             });
     }
 
+    // Flight-recorder wide-event cost pins: the disabled path (budget 0,
+    // closure never evaluated) must stay ~one branch per request, and
+    // the enabled path bounds the serialize+ring cost the service layer
+    // pays per completed request under the default 1 MiB budget.
+    {
+        use tmfg::obs::FlightRecorder;
+        const EVENTS_PER_REP: usize = 1_000_000;
+        let wide_event = |i: usize| {
+            Json::obj(vec![
+                ("trace_id", Json::str(&format!("req-{i:08x}"))),
+                ("kind", Json::str("batch")),
+                ("tenant", Json::Null),
+                ("outcome", Json::str("ok")),
+                ("ts_ms", Json::Num(1_700_000_000_000.0 + i as f64)),
+                ("queue_delay_ms", Json::Num(0.42)),
+                ("wall_ms", Json::Num(12.5)),
+                (
+                    "stages",
+                    Json::obj(vec![
+                        ("similarity", Json::Num(3.0)),
+                        ("tmfg:add-vertices", Json::Num(4.0)),
+                        ("apsp", Json::Num(2.0)),
+                        ("dbht", Json::Num(2.5)),
+                    ]),
+                ),
+                ("response_bytes", Json::Num(2048.0)),
+                ("cache", Json::str("miss")),
+            ])
+        };
+        // The SLO window config rides along as metadata so a future
+        // window change skips (not false-fails) the baseline comparison.
+        let slo_windows = format!(
+            "{}/{}",
+            tmfg::obs::slo::SHORT_WINDOW_SECS,
+            tmfg::obs::slo::LONG_WINDOW_SECS
+        );
+        let disabled = FlightRecorder::new(0);
+        suite
+            .meta("events", &EVENTS_PER_REP.to_string())
+            .meta("mode", "disabled")
+            .meta("recorder_budget_bytes", "0")
+            .meta("slo_windows", &slo_windows)
+            .run("obs/wide_event_1M_disabled", |_| {
+                for i in 0..EVENTS_PER_REP {
+                    disabled.record_with(|| wide_event(i));
+                }
+            });
+        let enabled = FlightRecorder::new(FlightRecorder::DEFAULT_BUDGET);
+        suite
+            .meta("events", &EVENTS_PER_REP.to_string())
+            .meta("mode", "enabled")
+            .meta("recorder_budget_bytes", &FlightRecorder::DEFAULT_BUDGET.to_string())
+            .meta("slo_windows", &slo_windows)
+            .run("obs/wide_event_1M_enabled", |_| {
+                for i in 0..EVENTS_PER_REP {
+                    enabled.record_with(|| wide_event(i));
+                }
+                assert!(enabled.stats().bytes <= FlightRecorder::DEFAULT_BUDGET);
+            });
+    }
+
     // Artifact-cache hit path: repeated identical requests skip the
     // similarity + TMFG stages entirely.
     {

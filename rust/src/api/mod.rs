@@ -61,7 +61,7 @@ pub use crate::apsp::{ApspOracle, OracleKind};
 pub use crate::error::TmfgError;
 pub use cache::{ArtifactCache, CacheKey, CacheStatus};
 pub use plan::{
-    build_apsp_oracle, build_tmfg_for, ApspMode, ClusterOutput, Plan, SimilaritySpec,
-    SparseReport, Stage, TmfgAlgo, APSP_AUTO_DENSE_MAX,
+    build_apsp_oracle, build_tmfg_for, ApspMode, ClusterOutput, Plan, ResourceUsage,
+    SimilaritySpec, SparseReport, Stage, TmfgAlgo, APSP_AUTO_DENSE_MAX,
 };
 pub use request::ClusterRequest;

@@ -24,6 +24,7 @@ use crate::sparse::{knn_candidates, sparse_tmfg, KnnConfig, SparseSimilarity};
 use crate::tmfg::{corr_tmfg, heap_tmfg, orig_tmfg, ScanKind, SortKind, TmfgConfig, TmfgResult};
 use crate::util::timer::{Breakdown, Timer};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// How the similarity stage reduces the input panel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -164,13 +165,18 @@ pub fn build_apsp_oracle(
 
 /// Record one stage latency into the global obs registry — the source
 /// for the service's `stats` p50/p95/p99 and the Prometheus
-/// `{"cmd": "metrics"}` exposition.
+/// `{"cmd": "metrics"}` exposition — and into the per-stage SLO series
+/// (`stage:<name>`) the multi-window tracker reports attainment for.
 fn observe_stage(stage: &str, secs: f64) {
     crate::obs::registry().observe_secs(
         crate::obs::names::STAGE_SECONDS,
         Some(("stage", stage)),
         secs,
     );
+    if secs.is_finite() && secs >= 0.0 {
+        crate::obs::slo_tracker()
+            .record(&format!("stage:{stage}"), Duration::from_secs_f64(secs));
+    }
 }
 
 /// Build a TMFG with the given algorithm's standard configuration — the
@@ -206,6 +212,22 @@ pub enum Stage {
     Cut,
 }
 
+/// Per-request resource accounting, threaded from the plan's artifacts
+/// into the flight recorder's wide events — the "why was this request
+/// expensive" counters the process-global totals can't attribute.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResourceUsage {
+    /// APSP rows materialized by this request's oracle instance
+    /// (`row_into` calls across DBHT and the HAC layers).
+    pub oracle_rows: u64,
+    /// Sparse TMFG rounds that fell back to a dense scan (0 on dense
+    /// plans); high counts mean the request's `k` was too small.
+    pub knn_fallbacks: u64,
+    /// Bytes of the Similarity+TMFG artifact pair this request served
+    /// from or published to the artifact cache (0 on bypass).
+    pub cache_bytes: u64,
+}
+
 /// Owned result of a completed plan (what [`Plan::finish`] returns and
 /// what the legacy `Pipeline` facade hands back).
 #[derive(Debug)]
@@ -239,6 +261,8 @@ pub struct ClusterOutput {
     pub cache: CacheStatus,
     /// Sparse-mode statistics (None on the dense path).
     pub sparse: Option<SparseReport>,
+    /// Per-request resource accounting (flight-recorder wide events).
+    pub resources: ResourceUsage,
 }
 
 /// A plan's attachment to an [`ArtifactCache`]: where to publish freshly
@@ -291,6 +315,9 @@ pub struct Plan {
     pub timings: Breakdown,
     /// Artifact-cache attachment (None = no cache on the request).
     cache_ctx: Option<CacheCtx>,
+    /// Bytes of the cached artifact pair this plan served from or
+    /// published (resource accounting; 0 on bypass).
+    cache_bytes: u64,
 }
 
 impl Plan {
@@ -334,12 +361,19 @@ impl Plan {
             cut_k: None,
             timings: Breakdown::new(),
             cache_ctx: None,
+            cache_bytes: 0,
         }
     }
 
     /// Attach an artifact-cache context (set by `ClusterRequest::build`).
     pub(crate) fn set_cache_ctx(&mut self, ctx: CacheCtx) {
         self.cache_ctx = Some(ctx);
+    }
+
+    /// Record the size of the cached artifacts this plan was served
+    /// from (set by `ClusterRequest::build` on a hit).
+    pub(crate) fn set_cache_bytes(&mut self, bytes: u64) {
+        self.cache_bytes = bytes;
     }
 
     /// Seed the similarity + TMFG artifacts from a cache hit: the
@@ -546,18 +580,21 @@ impl Plan {
             self.timings.add("tmfg:init-faces", tmfg.timings.init);
             self.timings.add("tmfg:sort", tmfg.timings.sort);
             self.timings.add("tmfg:add-vertices", tmfg.timings.insert);
+            let mut published_bytes = None;
             if let (Some(ctx), Some(sim)) = (&self.cache_ctx, &self.similarity) {
                 if ctx.status == CacheStatus::Miss {
-                    ctx.cache.put(
-                        ctx.key.clone(),
-                        CachedArtifacts {
-                            similarity: sim.clone(),
-                            tmfg: tmfg.clone(),
-                            truth: ctx.truth.clone(),
-                            default_k: ctx.default_k,
-                        },
-                    );
+                    let art = CachedArtifacts {
+                        similarity: sim.clone(),
+                        tmfg: tmfg.clone(),
+                        truth: ctx.truth.clone(),
+                        default_k: ctx.default_k,
+                    };
+                    published_bytes = Some(art.bytes() as u64);
+                    ctx.cache.put(ctx.key.clone(), art);
                 }
+            }
+            if let Some(b) = published_bytes {
+                self.cache_bytes = b;
             }
             self.tmfg = Some(tmfg);
         }
@@ -712,6 +749,11 @@ impl Plan {
             .as_deref()
             .map(|o| o.kind())
             .ok_or_else(|| TmfgError::invariant("apsp artifact missing"))?;
+        let resources = ResourceUsage {
+            oracle_rows: self.apsp.as_deref().map(|o| o.rows_served()).unwrap_or(0),
+            knn_fallbacks: self.sparse_fallbacks.unwrap_or(0) as u64,
+            cache_bytes: self.cache_bytes,
+        };
         let cache = self.cache_status();
         match cache {
             CacheStatus::Hit => {
@@ -743,6 +785,7 @@ impl Plan {
             corr_path: self.corr_path,
             cache,
             sparse,
+            resources,
         })
     }
 }

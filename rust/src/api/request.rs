@@ -385,6 +385,7 @@ impl ClusterRequest {
             None,
             None,
         );
+        plan.set_cache_bytes(art.bytes() as u64);
         plan.seed_artifacts(art.similarity, art.tmfg);
         plan.set_cache_ctx(CacheCtx {
             cache,

@@ -106,6 +106,9 @@ pub enum Command {
     /// The Prometheus text exposition of the process-global metrics
     /// registry, returned as the `metrics` string field.
     Metrics,
+    /// Dump the flight recorder: the ring of wide events (one JSON
+    /// object per recently completed request) plus ring counters.
+    DebugDump,
     /// A batch clustering request (no `cmd` field).
     Cluster(ClusterSpec),
     OpenStream(StreamOpen),
@@ -262,6 +265,7 @@ impl Request {
                     "shutdown" => Command::Shutdown,
                     "stats" => Command::Stats,
                     "metrics" => Command::Metrics,
+                    "debug_dump" => Command::DebugDump,
                     "open_stream" => Command::OpenStream(decode_open_stream(j)?),
                     "tick" => Command::Tick(finite_data(j, "data")?),
                     "close_stream" => Command::CloseStream,
@@ -613,6 +617,13 @@ mod tests {
         let r = Request::decode(&parse(r#"{"id": 2, "cmd": "metrics"}"#)).unwrap();
         assert!(matches!(r.body, Command::Metrics));
         assert_eq!(r.id.as_usize(), Some(2));
+    }
+
+    #[test]
+    fn decodes_debug_dump_command() {
+        let r = Request::decode(&parse(r#"{"id": 3, "cmd": "debug_dump"}"#)).unwrap();
+        assert!(matches!(r.body, Command::DebugDump));
+        assert_eq!(r.id.as_usize(), Some(3));
     }
 
     #[test]

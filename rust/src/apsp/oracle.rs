@@ -96,18 +96,34 @@ pub trait ApspOracle: Send + Sync {
     fn as_dense(&self) -> Option<&Matrix> {
         None
     }
+
+    /// Rows materialized by **this instance** (`row_into` calls) — the
+    /// per-request resource accounting the flight recorder reports,
+    /// complementing the process-global `tmfg_oracle_rows_*` counters.
+    fn rows_served(&self) -> u64 {
+        0
+    }
 }
 
 /// An [`ApspOracle`] over a fully materialized distance matrix.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct DenseOracle {
     m: Matrix,
+    rows: AtomicU64,
 }
 
 impl DenseOracle {
     pub fn new(m: Matrix) -> DenseOracle {
         debug_assert_eq!(m.rows, m.cols);
-        DenseOracle { m }
+        DenseOracle { m, rows: AtomicU64::new(0) }
+    }
+}
+
+impl Clone for DenseOracle {
+    fn clone(&self) -> DenseOracle {
+        // The clone carries the matrix, not the accounting: it starts a
+        // fresh per-instance row count.
+        DenseOracle { m: self.m.clone(), rows: AtomicU64::new(0) }
     }
 }
 
@@ -124,6 +140,7 @@ impl ApspOracle for DenseOracle {
     fn row_into(&self, u: usize, buf: &mut [f32]) {
         let _span = crate::span!("oracle_row", "dense row {u}");
         rows_dense_counter().fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(1, Ordering::Relaxed);
         buf.copy_from_slice(self.m.row(u));
     }
 
@@ -137,6 +154,10 @@ impl ApspOracle for DenseOracle {
 
     fn as_dense(&self) -> Option<&Matrix> {
         Some(&self.m)
+    }
+
+    fn rows_served(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
     }
 }
 
@@ -168,6 +189,8 @@ pub struct HubOracle {
     tball_ptr: Vec<usize>,
     tball_cols: Vec<u32>,
     tball_vals: Vec<f32>,
+    /// Per-instance `row_into` count (see `ApspOracle::rows_served`).
+    rows: AtomicU64,
 }
 
 impl HubOracle {
@@ -264,6 +287,7 @@ impl HubOracle {
             tball_ptr,
             tball_cols,
             tball_vals,
+            rows: AtomicU64::new(0),
         }
     }
 
@@ -341,6 +365,7 @@ impl ApspOracle for HubOracle {
         debug_assert_eq!(buf.len(), n);
         let _span = crate::span!("oracle_row", "hub row {u}");
         rows_hub_counter().fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(1, Ordering::Relaxed);
         // Row estimate, the dense builder's own pass: the shared hub
         // upper-bound fold, then the exact-ball overwrite and the zeroed
         // diagonal.
@@ -382,6 +407,10 @@ impl ApspOracle for HubOracle {
 
     fn kind(&self) -> OracleKind {
         OracleKind::Hub
+    }
+
+    fn rows_served(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
     }
 }
 
@@ -438,6 +467,10 @@ mod tests {
         assert_eq!(o.kind(), OracleKind::Dense);
         assert!(o.as_dense().is_some());
         assert_eq!(o.bytes(), 60 * 60 * 4);
+        // The helper materialized each row exactly once; `at()` queries
+        // never count. A clone starts its own accounting.
+        assert_eq!(o.rows_served(), 60);
+        assert_eq!(o.clone().rows_served(), 0);
     }
 
     #[test]

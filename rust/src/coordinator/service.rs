@@ -32,9 +32,17 @@
 //! "admission_rejected": {"<tenant>": ...}, "cache_hits": ...,
 //! "cache_misses": ..., "cache_hit_ratio": ..., "cache_bytes": ...,
 //! "stages": {...}, "latency": {"stages": {"tmfg": {"p50": ...,
-//! "p95": ..., "p99": ...}, ...}, "queue_wait": {...}}}, and
+//! "p95": ..., "p99": ...}, ...}, "queue_wait": {...}},
+//! "slo": {"windows": {...}, "series": {...}}, "shed": {"depth": ...,
+//! "delay": ..., "tenant": ...}, "recorder": {...},
+//! "target_queue_delay_ms": ...}, and
 //! {"cmd": "metrics"} → {"ok": true, "metrics": "<Prometheus text
 //! exposition>"} (see [`crate::obs`]).
+//! {"cmd": "debug_dump"} → {"ok": true, "events": [...], "recorder":
+//! {...}} replays the flight recorder's wide events (oldest first): one
+//! canonical JSON object per completed request — trace id, tenant,
+//! cache/oracle outcome, per-stage timings, queue delay, response
+//! bytes, resource counters, and shed cause for rejected work.
 //! Optional: {"v": 1, ...} pins the protocol version.
 //! Every batch clustering response carries a "trace_id"; requests with
 //! {"trace": true} run under an exclusive tracing session and their
@@ -157,6 +165,17 @@ pub struct ServiceConfig {
     /// Force the portable `poll(2)` readiness backend (diagnostics/CI;
     /// the default picks epoll where available).
     pub poll_backend: bool,
+    /// CoDel-style queue-delay target for batch admission
+    /// (`Duration::ZERO` disables the gate and keeps the pure
+    /// depth-bound behavior). When set, new batch work is shed with a
+    /// typed `overloaded` error (cause `delay`) once the dispatch
+    /// queue's front job has been older than the target for a sustained
+    /// interval; the depth bound stays on as the hard ceiling.
+    pub target_queue_delay: Duration,
+    /// Flight-recorder ring-buffer byte budget (0 disables recording).
+    pub flight_recorder_bytes: usize,
+    /// Dump the flight recorder to this JSONL path on graceful drain.
+    pub flight_log: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -175,6 +194,9 @@ impl Default for ServiceConfig {
             tenant_quota: 0,
             max_queue_depth: 0,
             poll_backend: false,
+            target_queue_delay: Duration::ZERO,
+            flight_recorder_bytes: crate::obs::FlightRecorder::DEFAULT_BUDGET,
+            flight_log: None,
         }
     }
 }
@@ -334,6 +356,13 @@ impl JobQueue {
     fn len(&self) -> usize {
         self.q.lock().unwrap().0.len()
     }
+
+    /// Age of the front (oldest) job — the CoDel-style delay signal the
+    /// admission gate and the `tmfg_admission_queue_delay_us` gauge
+    /// sample. `None` when the queue is empty.
+    fn oldest_wait(&self) -> Option<Duration> {
+        self.q.lock().unwrap().0.front().map(|j| j.enqueued.elapsed())
+    }
 }
 
 /// Shared live state: the queues, the artifact cache, and the counters
@@ -378,6 +407,16 @@ struct ServiceState {
     admission_rejected: Mutex<BTreeMap<String, u64>>,
     /// Cumulative per-stage wall-clock across every request.
     stages: Mutex<Breakdown>,
+    /// Always-on request flight recorder (budget 0 = disabled).
+    recorder: Arc<crate::obs::FlightRecorder>,
+    /// Resolved queue-delay target (`ZERO` = adaptive admission off).
+    target_queue_delay: Duration,
+    /// Batch requests shed at the dispatch-queue depth ceiling.
+    shed_depth: AtomicU64,
+    /// Batch requests shed by the queue-delay gate.
+    shed_delay: AtomicU64,
+    /// Requests shed by per-tenant quota admission.
+    shed_tenant: AtomicU64,
 }
 
 impl ServiceState {
@@ -499,6 +538,58 @@ impl ServiceState {
             lat_pairs.push(("queue_wait", pcts(p)));
         }
         fields.push(("latency", Json::obj(lat_pairs)));
+        fields.push((
+            "target_queue_delay_ms",
+            Json::Num(self.target_queue_delay.as_secs_f64() * 1e3),
+        ));
+        fields.push((
+            "shed",
+            Json::obj(vec![
+                ("depth", Json::Num(self.shed_depth.load(Ordering::Relaxed) as f64)),
+                ("delay", Json::Num(self.shed_delay.load(Ordering::Relaxed) as f64)),
+                ("tenant", Json::Num(self.shed_tenant.load(Ordering::Relaxed) as f64)),
+            ]),
+        ));
+        fields.push(("recorder", recorder_stats_json(&self.recorder)));
+        // Multi-window SLO attainment: short/long sliding windows over
+        // the same log-linear histograms that back `latency`.
+        let slo = crate::obs::slo_tracker().report();
+        let win = |w: &crate::obs::slo::WindowStats| {
+            Json::obj(vec![
+                ("count", Json::Num(w.count as f64)),
+                ("attainment", Json::Num(w.attainment)),
+                ("burn_rate", Json::Num(w.burn_rate)),
+            ])
+        };
+        let series = Json::obj(
+            slo.series
+                .iter()
+                .map(|s| {
+                    (
+                        s.name.as_str(),
+                        Json::obj(vec![
+                            ("objective_ms", Json::Num(s.objective_ms)),
+                            ("target", Json::Num(s.target)),
+                            ("short", win(&s.short)),
+                            ("long", win(&s.long)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        fields.push((
+            "slo",
+            Json::obj(vec![
+                (
+                    "windows",
+                    Json::obj(vec![
+                        ("short_secs", Json::Num(slo.short_secs as f64)),
+                        ("long_secs", Json::Num(slo.long_secs as f64)),
+                    ]),
+                ),
+                ("series", series),
+            ]),
+        ));
         wire::ok_response(id, fields)
     }
 }
@@ -577,6 +668,7 @@ fn run_cluster(
     req.run()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn process(
     id: &Json,
     spec: ClusterSpec,
@@ -585,8 +677,14 @@ fn process(
     batch_size: usize,
     state: &ServiceState,
     enqueued: Instant,
+    tenant: Option<&str>,
+    conn: u64,
 ) -> Json {
     let t = crate::util::timer::Timer::start();
+    // Queue delay as seen at processing start — stamped on this
+    // request's wide event (the histogram observation happens in
+    // `run_job`).
+    let queue_delay = enqueued.elapsed();
     if spec.sparse_k.is_some() {
         state.sparse_requests.fetch_add(1, Ordering::Relaxed);
     } else {
@@ -603,6 +701,8 @@ fn process(
     } else {
         (None, crate::obs::next_trace_id())
     };
+    // Logs emitted while this request runs carry its trace id.
+    let _trace = crate::obs::TraceCtx::enter(&trace_id);
     // Retroactive queue-wait span (submit → processing start). Its start
     // predates the session epoch, which the exporter clamps to ts=0.
     crate::obs::record_span(
@@ -616,13 +716,23 @@ fn process(
         let (tid, epoch, threads) = s.finish();
         crate::obs::chrome_trace(&tid, epoch, &threads)
     });
+    let wall = t.elapsed();
+    // End-to-end latency feeds the "request" SLO series for every
+    // completed (ok or error) batch request.
+    if wall.is_finite() && wall >= 0.0 {
+        crate::obs::slo_tracker().record("request", Duration::from_secs_f64(wall));
+    }
     match result {
         Ok(out) => {
             let Some(labels) = out.labels else {
-                return with_trace_id(
+                let resp = with_trace_id(
                     wire::error_response(id, &TmfgError::invariant("run produced no labels")),
                     &trace_id,
                 );
+                record_failure(
+                    state, &trace_id, tenant, conn, "invariant", queue_delay, wall, &resp,
+                );
+                return resp;
             };
             match out.oracle {
                 crate::apsp::OracleKind::Dense => {
@@ -636,12 +746,12 @@ fn process(
             let mut fields = vec![
                 ("labels", Json::arr_usize(&labels)),
                 ("ari", out.ari.map(Json::Num).unwrap_or(Json::Null)),
-                ("secs", Json::Num(t.elapsed())),
+                ("secs", Json::Num(wall)),
                 ("algo", Json::str(&out.algo.name())),
                 ("oracle", Json::str(out.oracle.name())),
                 ("batch", Json::Num(batch_size as f64)),
             ];
-            if let Some(sp) = out.sparse {
+            if let Some(sp) = &out.sparse {
                 fields.push(("sparse_k", Json::Num(sp.k as f64)));
                 fields.push(("sparse_nnz", Json::Num(sp.nnz as f64)));
                 fields.push(("sparse_fallbacks", Json::Num(sp.fallbacks as f64)));
@@ -656,9 +766,70 @@ fn process(
             if let (Some(tj), Json::Obj(map)) = (trace_json, &mut resp) {
                 map.insert("trace".to_string(), tj);
             }
+            // The wide event is built only when the recorder is enabled,
+            // strictly after the computation — it can never affect the
+            // (deterministic) response bytes.
+            state.recorder.record_with(|| {
+                let stages = Json::obj(
+                    out.breakdown
+                        .stages()
+                        .iter()
+                        .map(|(s, v)| (s.as_str(), Json::Num(*v * 1e3)))
+                        .collect(),
+                );
+                let sparse = out
+                    .sparse
+                    .as_ref()
+                    .map(|sp| {
+                        Json::obj(vec![
+                            ("k", Json::Num(sp.k as f64)),
+                            ("nnz", Json::Num(sp.nnz as f64)),
+                            ("fallbacks", Json::Num(sp.fallbacks as f64)),
+                        ])
+                    })
+                    .unwrap_or(Json::Null);
+                let cache = match out.cache {
+                    CacheStatus::Hit => "hit",
+                    CacheStatus::Miss => "miss",
+                    CacheStatus::Bypass => "bypass",
+                };
+                wide_event(
+                    &trace_id,
+                    "batch",
+                    tenant,
+                    conn,
+                    "ok",
+                    queue_delay,
+                    wall,
+                    stages,
+                    vec![
+                        ("response_bytes", Json::Num(resp.to_string().len() as f64)),
+                        ("cache", Json::str(cache)),
+                        ("oracle", Json::str(out.oracle.name())),
+                        ("algo", Json::str(&out.algo.name())),
+                        ("batch", Json::Num(batch_size as f64)),
+                        ("sparse", sparse),
+                        (
+                            "resources",
+                            Json::obj(vec![
+                                ("oracle_rows", Json::Num(out.resources.oracle_rows as f64)),
+                                (
+                                    "knn_fallbacks",
+                                    Json::Num(out.resources.knn_fallbacks as f64),
+                                ),
+                                ("cache_bytes", Json::Num(out.resources.cache_bytes as f64)),
+                            ]),
+                        ),
+                    ],
+                )
+            });
             resp
         }
-        Err(e) => with_trace_id(wire::error_response(id, &e), &trace_id),
+        Err(e) => {
+            let resp = with_trace_id(wire::error_response(id, &e), &trace_id);
+            record_failure(state, &trace_id, tenant, conn, e.code(), queue_delay, wall, &resp);
+            resp
+        }
     }
 }
 
@@ -670,7 +841,112 @@ fn with_trace_id(mut resp: Json, trace_id: &str) -> Json {
     resp
 }
 
+/// Render the flight recorder's live counters as a JSON object (embedded
+/// by both `stats` and `debug_dump`).
+fn recorder_stats_json(rec: &crate::obs::FlightRecorder) -> Json {
+    let rs = rec.stats();
+    Json::obj(vec![
+        ("budget_bytes", Json::Num(rs.budget_bytes as f64)),
+        ("events", Json::Num(rs.events as f64)),
+        ("bytes", Json::Num(rs.bytes as f64)),
+        ("recorded", Json::Num(rs.recorded as f64)),
+        ("evicted", Json::Num(rs.evicted as f64)),
+    ])
+}
+
+/// Answer `{"cmd": "debug_dump"}`: replay the flight recorder's wide
+/// events (oldest first) plus its live counters.
+fn debug_dump_response(id: &Json, state: &ServiceState) -> Json {
+    let events: Vec<Json> =
+        state.recorder.dump().iter().filter_map(|l| Json::parse(l).ok()).collect();
+    wire::ok_response(
+        id,
+        vec![
+            ("events", Json::Arr(events)),
+            ("recorder", recorder_stats_json(&state.recorder)),
+        ],
+    )
+}
+
+/// Prometheus text for `{"cmd": "metrics"}`: refresh the recorder gauges
+/// at scrape time, then append the `tmfg_slo_*` families (fractional
+/// attainment/burn values live outside the u64-gauge registry).
+fn metrics_text(state: &ServiceState) -> String {
+    let reg = crate::obs::registry();
+    let rs = state.recorder.stats();
+    reg.gauge(crate::obs::names::RECORDER_EVENTS).store(rs.events as u64, Ordering::Relaxed);
+    reg.gauge(crate::obs::names::RECORDER_BYTES).store(rs.bytes as u64, Ordering::Relaxed);
+    format!("{}{}", reg.prometheus(), crate::obs::slo_tracker().prometheus())
+}
+
+/// One canonical flight-recorder wide event. The envelope keys
+/// (`trace_id`, `kind`, `tenant`, `conn`, `outcome`, `ts_ms`,
+/// `queue_delay_ms`, `wall_ms`, `stages`) appear on every event; callers
+/// append per-kind extras. Stage timings are milliseconds and sum to at
+/// most `wall_ms` — stages run sequentially within one request.
+#[allow(clippy::too_many_arguments)]
+fn wide_event(
+    trace_id: &str,
+    kind: &str,
+    tenant: Option<&str>,
+    conn: u64,
+    outcome: &str,
+    queue_delay: Duration,
+    wall_secs: f64,
+    stages: Json,
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let ts_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    let mut fields = vec![
+        ("trace_id", Json::str(trace_id)),
+        ("kind", Json::str(kind)),
+        ("tenant", tenant.map(Json::str).unwrap_or(Json::Null)),
+        ("conn", Json::Num(conn as f64)),
+        ("outcome", Json::str(outcome)),
+        ("ts_ms", Json::Num(ts_ms)),
+        ("queue_delay_ms", Json::Num(queue_delay.as_secs_f64() * 1e3)),
+        ("wall_ms", Json::Num(wall_secs * 1e3)),
+        ("stages", stages),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
+}
+
+/// Record the wide event for a failed batch request.
+#[allow(clippy::too_many_arguments)]
+fn record_failure(
+    state: &ServiceState,
+    trace_id: &str,
+    tenant: Option<&str>,
+    conn: u64,
+    code: &str,
+    queue_delay: Duration,
+    wall_secs: f64,
+    resp: &Json,
+) {
+    state.recorder.record_with(|| {
+        wide_event(
+            trace_id,
+            "batch",
+            tenant,
+            conn,
+            "error",
+            queue_delay,
+            wall_secs,
+            Json::obj(vec![]),
+            vec![
+                ("code", Json::str(code)),
+                ("response_bytes", Json::Num(resp.to_string().len() as f64)),
+            ],
+        )
+    });
+}
+
 /// Handle one streaming command against this worker's session map.
+#[allow(clippy::too_many_arguments)]
 fn stream_cmd(
     id: &Json,
     body: &Command,
@@ -679,6 +955,8 @@ fn stream_cmd(
     default_algo: TmfgAlgo,
     batch: usize,
     state: &ServiceState,
+    tenant: Option<&str>,
+    enqueued: Instant,
 ) -> Json {
     match body {
         Command::OpenStream(open) => {
@@ -717,19 +995,26 @@ fn stream_cmd(
             }
         }
         Command::Tick(sample) => {
+            let queue_delay = enqueued.elapsed();
             let Some(session) = streams.get_mut(&conn) else {
                 return wire::error_response(id, &TmfgError::StreamClosed);
             };
+            let sid = session.id();
             match session.tick(sample) {
                 Ok(out) => {
                     state.stages.lock().unwrap().add("stream_tick", out.secs);
+                    if out.secs.is_finite() && out.secs >= 0.0 {
+                        crate::obs::slo_tracker()
+                            .record("stream_tick", Duration::from_secs_f64(out.secs));
+                    }
                     let mut pairs = vec![
-                        ("session", Json::Num(session.id() as f64)),
+                        ("session", Json::Num(sid as f64)),
                         ("generation", Json::Num(out.generation as f64)),
                         ("tick", Json::Num(out.tick as f64)),
                         ("decision", Json::str(out.decision.name())),
                         ("secs", Json::Num(out.secs)),
                         ("batch", Json::Num(batch as f64)),
+                        ("trace_id", Json::str(&out.trace_id)),
                     ];
                     if let Some(labels) = &out.labels {
                         pairs.push(("labels", Json::arr_usize(labels)));
@@ -737,7 +1022,29 @@ fn stream_cmd(
                     if let Some(d) = out.drift {
                         pairs.push(("drift", Json::Num(d.max_abs as f64)));
                     }
-                    wire::ok_response(id, pairs)
+                    let resp = wire::ok_response(id, pairs);
+                    state.recorder.record_with(|| {
+                        wide_event(
+                            &out.trace_id,
+                            "tick",
+                            tenant,
+                            conn,
+                            "ok",
+                            queue_delay,
+                            out.secs,
+                            Json::obj(vec![("stream_tick", Json::Num(out.secs * 1e3))]),
+                            vec![
+                                (
+                                    "response_bytes",
+                                    Json::Num(resp.to_string().len() as f64),
+                                ),
+                                ("session", Json::Num(sid as f64)),
+                                ("generation", Json::Num(out.generation as f64)),
+                                ("decision", Json::str(out.decision.name())),
+                            ],
+                        )
+                    });
+                    resp
                 }
                 Err(e) => wire::error_response(id, &e),
             }
@@ -776,31 +1083,52 @@ fn run_job(
     batch_size: usize,
 ) {
     let Job { request, reply, conn, internal, enqueued } = job;
-    let wire::Request { id, body, .. } = request;
+    let wire::Request { id, tenant, body, .. } = request;
     // Dispatcher queue-wait: submit → dequeue, into the metrics
-    // histogram (stats/Prometheus percentiles). The matching trace span
-    // is recorded in `process` once a traced request's session is live.
+    // histogram (stats/Prometheus percentiles) and the "queue_wait" SLO
+    // series. The matching trace span is recorded in `process` once a
+    // traced request's session is live.
+    let wait = enqueued.elapsed();
     crate::obs::registry().observe_secs(
         crate::obs::names::QUEUE_WAIT_SECONDS,
         None,
-        enqueued.elapsed().as_secs_f64(),
+        wait.as_secs_f64(),
     );
+    crate::obs::slo_tracker().record("queue_wait", wait);
     // Contain panics to the one request: an unwinding worker thread would
     // otherwise die silently and permanently wedge its pinned shard
     // (queued jobs never drained, completions never delivered). The
     // library paths are de-panicked, so this only guards regressions.
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match body {
-        Command::Cluster(spec) => {
-            process(&id, spec, engine, cfg.default_algo, batch_size, state, enqueued)
-        }
-        body @ (Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream) => {
-            stream_cmd(&id, &body, streams, conn, cfg.default_algo, batch_size, state)
-        }
-        // Ping/Shutdown/Stats/Metrics are answered in the front end and
-        // never enqueued; answer defensively anyway.
-        Command::Ping | Command::Shutdown | Command::Stats | Command::Metrics => {
-            wire::ok_response(&id, vec![])
-        }
+        Command::Cluster(spec) => process(
+            &id,
+            spec,
+            engine,
+            cfg.default_algo,
+            batch_size,
+            state,
+            enqueued,
+            tenant.as_deref(),
+            conn,
+        ),
+        body @ (Command::OpenStream(_) | Command::Tick(_) | Command::CloseStream) => stream_cmd(
+            &id,
+            &body,
+            streams,
+            conn,
+            cfg.default_algo,
+            batch_size,
+            state,
+            tenant.as_deref(),
+            enqueued,
+        ),
+        // Ping/Shutdown/Stats/Metrics/DebugDump are answered in the
+        // front end and never enqueued; answer defensively anyway.
+        Command::Ping
+        | Command::Shutdown
+        | Command::Stats
+        | Command::Metrics
+        | Command::DebugDump => wire::ok_response(&id, vec![]),
     }));
     let resp = result.unwrap_or_else(|_| {
         wire::error_response(
@@ -889,10 +1217,58 @@ mod net_front {
     use crate::net::server::{ConnId, Disposition, Handler};
     use std::collections::HashSet;
 
+    /// CoDel-style admission gate over the dispatch queue's front-job
+    /// age. The fixed depth bound answers "how much work is queued"; the
+    /// gate answers "how *stale* is the queued work" — it arms once the
+    /// oldest queued job has been older than the target for a sustained
+    /// interval (target/4), then sheds new batch work until the delay
+    /// drains back under the target. Loop-thread-only: no locks.
+    struct DelayGate {
+        target: Duration,
+        /// When the front-job age first rose above the target (`None`
+        /// while at/under it).
+        above_since: Option<Instant>,
+        dropping: bool,
+    }
+
+    impl DelayGate {
+        fn new(target: Duration) -> DelayGate {
+            DelayGate { target, above_since: None, dropping: false }
+        }
+
+        fn enabled(&self) -> bool {
+            !self.target.is_zero()
+        }
+
+        /// Advance the gate with the current front-job age; returns
+        /// whether new batch work should be shed.
+        fn update(&mut self, oldest: Option<Duration>, now: Instant) -> bool {
+            if !self.enabled() {
+                return false;
+            }
+            match oldest {
+                Some(age) if age > self.target => {
+                    let since = *self.above_since.get_or_insert(now);
+                    if now.duration_since(since) >= self.target / 4 {
+                        self.dropping = true;
+                    }
+                }
+                // Empty queue or age back under target: disarm fully.
+                _ => {
+                    self.above_since = None;
+                    self.dropping = false;
+                }
+            }
+            self.dropping
+        }
+    }
+
     pub(super) struct NetHandler {
         cfg: Arc<ServiceConfig>,
         state: Arc<ServiceState>,
         ctl: Arc<LoopCtl>,
+        /// Queue-delay admission gate (ZERO target = disabled).
+        gate: DelayGate,
         /// conn → tenant of its in-flight request (None = anonymous).
         inflight_tenant: HashMap<ConnId, Option<String>>,
         /// tenant → in-flight request count (quota admission).
@@ -908,6 +1284,8 @@ mod net_front {
         m_overload: Arc<AtomicU64>,
         m_reaped: Arc<AtomicU64>,
         m_wakeups: Arc<AtomicU64>,
+        /// Front-job age gauge, refreshed on every loop wakeup.
+        m_queue_delay: Arc<AtomicU64>,
     }
 
     impl NetHandler {
@@ -918,10 +1296,12 @@ mod net_front {
         ) -> NetHandler {
             use crate::obs::names;
             let reg = crate::obs::registry();
+            let gate = DelayGate::new(cfg.target_queue_delay);
             NetHandler {
                 cfg,
                 state,
                 ctl,
+                gate,
                 inflight_tenant: HashMap::new(),
                 tenant_inflight: HashMap::new(),
                 streamed: HashSet::new(),
@@ -931,7 +1311,55 @@ mod net_front {
                 m_overload: reg.counter(names::OVERLOAD_REJECTED),
                 m_reaped: reg.counter(names::REAPED_IDLE),
                 m_wakeups: reg.counter(names::LOOP_WAKEUPS),
+                m_queue_delay: reg.gauge(names::ADMISSION_QUEUE_DELAY_US),
             }
+        }
+
+        /// Shed one request: count it under its cause (`depth`, `delay`,
+        /// or `tenant`), write a `shed` wide event with a fresh trace
+        /// id, and render the typed `overloaded` error line.
+        fn shed(
+            &self,
+            id: &Json,
+            tenant: Option<&str>,
+            conn: ConnId,
+            cause: &str,
+            msg: String,
+        ) -> String {
+            match cause {
+                "depth" => {
+                    self.state.shed_depth.fetch_add(1, Ordering::Relaxed);
+                    self.state.overload_rejected.fetch_add(1, Ordering::Relaxed);
+                    self.m_overload.fetch_add(1, Ordering::Relaxed);
+                }
+                "delay" => {
+                    self.state.shed_delay.fetch_add(1, Ordering::Relaxed);
+                    self.state.overload_rejected.fetch_add(1, Ordering::Relaxed);
+                    self.m_overload.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    self.state.shed_tenant.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            crate::obs::registry()
+                .counter_labeled(crate::obs::names::SHED_TOTAL, "cause", cause)
+                .fetch_add(1, Ordering::Relaxed);
+            let trace_id = crate::obs::next_trace_id();
+            self.state.recorder.record_with(|| {
+                wide_event(
+                    &trace_id,
+                    "shed",
+                    tenant,
+                    conn,
+                    "shed",
+                    Duration::ZERO,
+                    0.0,
+                    Json::obj(vec![]),
+                    vec![("shed_cause", Json::str(cause))],
+                )
+            });
+            let err = TmfgError::overloaded(msg);
+            with_trace_id(wire::error_response(id, &err), &trace_id).to_string()
         }
 
         /// Would admitting a request from `tenant` exceed the quota?
@@ -996,9 +1424,14 @@ mod net_front {
                     return Disposition::Respond(self.state.stats_response(&req.id).to_string())
                 }
                 Command::Metrics => {
-                    let text = crate::obs::registry().prometheus();
+                    let text = metrics_text(&self.state);
                     let resp = wire::ok_response(&req.id, vec![("metrics", Json::str(&text))]);
                     return Disposition::Respond(resp.to_string());
+                }
+                Command::DebugDump => {
+                    return Disposition::Respond(
+                        debug_dump_response(&req.id, &self.state).to_string(),
+                    )
                 }
                 Command::Shutdown => {
                     return Disposition::RespondAndDrain(
@@ -1026,22 +1459,50 @@ mod net_front {
                 crate::obs::registry()
                     .counter_labeled(crate::obs::names::ADMISSION_REJECTED, "tenant", t)
                     .fetch_add(1, Ordering::Relaxed);
-                let err = TmfgError::overloaded(format!(
+                let msg = format!(
                     "tenant '{t}' is at its in-flight quota ({}); retry after a response",
                     self.cfg.tenant_quota
+                );
+                return Disposition::Respond(self.shed(
+                    &req.id,
+                    req.tenant.as_deref(),
+                    conn,
+                    "tenant",
+                    msg,
                 ));
-                return Disposition::Respond(wire::error_response(&req.id, &err).to_string());
             }
-            // Queue-depth backpressure for batch work. This thread is the
-            // only batch submitter, so check-then-push cannot overshoot.
+            // Queue-depth backpressure for batch work: the hard ceiling.
+            // This thread is the only batch submitter, so check-then-push
+            // cannot overshoot.
             if !is_stream && self.state.global.len() >= self.state.max_queue {
-                self.state.overload_rejected.fetch_add(1, Ordering::Relaxed);
-                self.m_overload.fetch_add(1, Ordering::Relaxed);
-                let err = TmfgError::overloaded(format!(
+                let msg = format!(
                     "dispatch queue full ({} queued); back off and retry",
                     self.state.max_queue
+                );
+                return Disposition::Respond(self.shed(
+                    &req.id,
+                    req.tenant.as_deref(),
+                    conn,
+                    "depth",
+                    msg,
                 ));
-                return Disposition::Respond(wire::error_response(&req.id, &err).to_string());
+            }
+            // Adaptive admission: shed new batch work while the dispatch
+            // queue's front job has been older than the target for a
+            // sustained interval. Pinned stream commands are exempt,
+            // matching the depth check above.
+            if !is_stream && self.gate.update(self.state.global.oldest_wait(), Instant::now()) {
+                let msg = format!(
+                    "dispatch queue delay above target ({} ms); back off and retry",
+                    self.cfg.target_queue_delay.as_millis()
+                );
+                return Disposition::Respond(self.shed(
+                    &req.id,
+                    req.tenant.as_deref(),
+                    conn,
+                    "delay",
+                    msg,
+                ));
             }
             if matches!(req.body, Command::OpenStream(_)) {
                 self.streamed.insert(conn);
@@ -1135,6 +1596,14 @@ mod net_front {
         fn on_wakeup(&mut self) {
             self.state.loop_wakeups.fetch_add(1, Ordering::Relaxed);
             self.m_wakeups.fetch_add(1, Ordering::Relaxed);
+            // Sample the shared queue's front-job age on every loop
+            // iteration: exported as the admission queue-delay gauge and
+            // advanced through the delay gate so the drop state decays
+            // once the backlog drains, even with no new arrivals.
+            let oldest = self.state.global.oldest_wait();
+            let us = oldest.map(|d| d.as_micros().min(u64::MAX as u128) as u64).unwrap_or(0);
+            self.m_queue_delay.store(us, Ordering::Relaxed);
+            self.gate.update(oldest, Instant::now());
         }
     }
 }
@@ -1174,6 +1643,11 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
         loop_wakeups: AtomicU64::new(0),
         admission_rejected: Mutex::new(BTreeMap::new()),
         stages: Mutex::new(Breakdown::new()),
+        recorder: Arc::new(crate::obs::FlightRecorder::new(cfg.flight_recorder_bytes)),
+        target_queue_delay: cfg.target_queue_delay,
+        shed_depth: AtomicU64::new(0),
+        shed_delay: AtomicU64::new(0),
+        shed_tenant: AtomicU64::new(0),
     });
     let cfg = Arc::new(ServiceConfig { addr: addr.clone(), ..cfg });
     #[cfg(unix)]
@@ -1227,6 +1701,18 @@ pub fn serve(cfg: ServiceConfig) -> std::io::Result<ServiceHandle> {
         st.global.close();
         for j in worker_joins {
             let _ = j.join();
+        }
+        // Graceful drain finished: dump the flight recorder to the
+        // configured JSONL path (one wide event per line, oldest first).
+        if let Some(path) = &srv_cfg.flight_log {
+            let mut out = String::new();
+            for line in st.recorder.dump() {
+                out.push_str(&line);
+                out.push('\n');
+            }
+            if let Err(e) = std::fs::write(path, out) {
+                crate::log!(error, "failed to write flight log {path}: {e}");
+            }
         }
     });
     Ok(ServiceHandle { addr, ctl, join: Some(join) })
@@ -1294,9 +1780,17 @@ fn handle_conn(stream: TcpStream, state: Arc<ServiceState>, ctl: Arc<LoopCtl>) {
                     continue;
                 }
                 Command::Metrics => {
-                    let text = crate::obs::registry().prometheus();
+                    let text = metrics_text(&state);
                     let resp = wire::ok_response(&req.id, vec![("metrics", Json::str(&text))]);
                     let _ = writeln!(writer, "{}", resp.to_string());
+                    continue;
+                }
+                Command::DebugDump => {
+                    let _ = writeln!(
+                        writer,
+                        "{}",
+                        debug_dump_response(&req.id, &state).to_string()
+                    );
                     continue;
                 }
                 Command::Shutdown => {

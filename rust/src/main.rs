@@ -53,11 +53,20 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
            [--dispatch-workers N] [--cache-entries 32]
            [--max-conns 1024] [--max-line-bytes 16777216]
            [--idle-timeout 300] [--tenant-quota N] [--max-queue N]
-           [--poll-backend]
+           [--target-queue-delay-ms M] [--recorder-budget BYTES]
+           [--flight-log out.jsonl] [--poll-backend]
            (event-loop front end: one OS thread serves every connection;
             requests over --max-queue or a tenant's --tenant-quota get a
             typed \"overloaded\" error; idle connections are reaped after
-            --idle-timeout seconds, 0 disables)
+            --idle-timeout seconds, 0 disables.
+            --target-queue-delay-ms enables CoDel-style adaptive
+            admission: batch work is shed with cause \"delay\" while the
+            dispatch queue's oldest job exceeds the target, with
+            --max-queue kept as the hard depth ceiling; 0 disables.
+            every completed request lands in an in-memory flight
+            recorder ring (--recorder-budget bytes, 0 disables; dump it
+            live with {\"cmd\":\"debug_dump\"} or to --flight-log as
+            JSONL on graceful shutdown))
   tmfg stream --dataset <name|csv> [--window 64] [--k N] [--algo opt]
            [--drift 0.1] [--scale 0.1] [--seed N] [--threads N]
   tmfg info
@@ -290,11 +299,22 @@ fn cmd_serve(args: &Args) {
         // 0 = auto (workers * max_batch * 8): batch admission bound
         max_queue_depth: args.get_usize("max-queue", 0),
         poll_backend: args.get_bool("poll-backend", false),
+        // 0 disables the CoDel-style queue-delay admission gate
+        target_queue_delay: std::time::Duration::from_millis(
+            args.get_u64("target-queue-delay-ms", 0),
+        ),
+        // 0 disables the flight recorder entirely
+        flight_recorder_bytes: args.get_usize(
+            "recorder-budget",
+            tmfg::obs::FlightRecorder::DEFAULT_BUDGET,
+        ),
+        flight_log: args.opt_str("flight-log"),
         ..Default::default()
     };
     let workers = cfg.resolved_workers();
     let max_queue = cfg.resolved_max_queue();
     let (max_conns, quota) = (cfg.max_conns, cfg.tenant_quota);
+    let target_delay = cfg.target_queue_delay;
     let cache_entries = cfg.cache_entries;
     let h = serve(cfg).unwrap_or_else(|e| fail(e.into()));
     log!(info, "tmfg clustering service listening on {}", h.addr);
@@ -305,8 +325,13 @@ fn cmd_serve(args: &Args) {
     );
     log!(
         info,
-        "admission: max {max_conns} conns, queue bound {max_queue}, tenant quota {}",
-        if quota > 0 { quota.to_string() } else { "unlimited".into() }
+        "admission: max {max_conns} conns, queue bound {max_queue}, tenant quota {}, queue-delay target {}",
+        if quota > 0 { quota.to_string() } else { "unlimited".into() },
+        if target_delay.is_zero() {
+            "off".into()
+        } else {
+            format!("{}ms", target_delay.as_millis())
+        }
     );
     log!(info, "protocol: one JSON request per line; see api::wire + coordinator/service.rs");
     // Block on the service itself: when a client sends {"cmd":"shutdown"}

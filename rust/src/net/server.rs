@@ -78,6 +78,12 @@ pub trait Handler {
     /// still follows).
     fn on_reaped(&mut self, _conn: ConnId) {}
     /// The poller returned (readiness, completion poke, or timer).
+    /// Called once per loop iteration, which makes it the natural
+    /// periodic telemetry hook: the coordinator samples its dispatch
+    /// queue's front-job age here (queue-delay gauge + adaptive
+    /// admission gate) so the signal advances even when no new request
+    /// lines arrive. Keep implementations cheap — this runs on the loop
+    /// thread between every batch of readiness events.
     fn on_wakeup(&mut self) {}
 }
 

@@ -16,6 +16,12 @@
 //! - **Export** ([`trace`]): finished sessions render as Chrome
 //!   trace-event JSON (`tmfg run --trace out.json`, wire
 //!   `"trace": true`), one track per thread.
+//! - **SLOs** ([`slo`]): multi-window (1m/10m) latency-objective
+//!   attainment and burn rate per series, rendered as the `"slo"`
+//!   stats block and the Prometheus `tmfg_slo_*` families.
+//! - **Flight recorder** ([`recorder`]): byte-budgeted ring of wide
+//!   events (one per completed request), dumped as JSONL via
+//!   `{"cmd": "debug_dump"}` or `tmfg serve --flight-log`.
 //!
 //! Span taxonomy (the `cat` field in exported traces):
 //!
@@ -38,15 +44,19 @@
 //! through `log!` and is unaffected by the filter.
 
 pub mod hist;
+pub mod recorder;
 pub mod registry;
+pub mod slo;
 pub mod spans;
 pub mod trace;
 
 pub use hist::Histogram;
+pub use recorder::{FlightRecorder, RecorderStats};
 pub use registry::{names, registry, Registry};
+pub use slo::{slo_tracker, SloReport, SloTracker};
 pub use spans::{
-    event, next_trace_id, record_span, tracing_enabled, SpanGuard, SpanRecord, ThreadSpans,
-    TraceSession,
+    current_trace_id, event, next_trace_id, record_span, tracing_enabled, SpanGuard, SpanRecord,
+    ThreadSpans, TraceCtx, TraceSession,
 };
 pub use trace::chrome_trace;
 
@@ -94,13 +104,18 @@ pub fn set_max_level(level: Option<Level>) {
 }
 
 /// Sink for the [`log!`](crate::log) macro — don't call directly.
+/// Lines emitted while a request [`TraceCtx`] is active on this thread
+/// are prefixed with `[<trace_id>]` so server logs correlate with
+/// trace exports and flight-recorder wide events.
 pub fn log_emit(level: Level, args: std::fmt::Arguments<'_>) {
     if (level as u8) > max_level() {
         return;
     }
-    match level {
-        Level::Error | Level::Warn => eprintln!("{args}"),
-        Level::Info | Level::Debug => println!("{args}"),
+    match (current_trace_id(), level) {
+        (Some(id), Level::Error | Level::Warn) => eprintln!("[{id}] {args}"),
+        (Some(id), Level::Info | Level::Debug) => println!("[{id}] {args}"),
+        (None, Level::Error | Level::Warn) => eprintln!("{args}"),
+        (None, Level::Info | Level::Debug) => println!("{args}"),
     }
 }
 

@@ -1,0 +1,180 @@
+//! Request flight recorder: an always-on, fixed-byte-budget ring
+//! buffer holding one canonical *wide event* per completed request.
+//!
+//! Each event is a single pre-serialized JSON line (trace id, tenant,
+//! outcome, cache status, oracle kind, per-stage timings, queue delay,
+//! response bytes, resource usage — assembled by the service layer).
+//! The ring evicts oldest-first the moment the byte budget is
+//! exceeded, so memory stays bounded no matter the traffic shape and a
+//! dump always replays the most recent window of requests as JSONL.
+//!
+//! Three consumers share the same [`FlightRecorder::dump`]: the
+//! `{"cmd":"debug_dump"}` wire command, the graceful-drain flush to
+//! `--flight-log <path>`, and tests. Like spans and the SLO tracker,
+//! recording is strictly post-computation and observational — a budget
+//! of 0 disables the recorder entirely and [`FlightRecorder::record_with`]
+//! never evaluates its closure, so the disabled path costs one branch
+//! (the `obs/wide_event_1M` bench scenarios pin both modes).
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Counters describing the ring's lifetime and current occupancy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RecorderStats {
+    /// Configured byte budget (0 = disabled).
+    pub budget_bytes: usize,
+    /// Events currently held.
+    pub events: usize,
+    /// Bytes currently held (serialized line lengths).
+    pub bytes: usize,
+    /// Total events ever recorded.
+    pub recorded: u64,
+    /// Total events evicted to stay within the budget.
+    pub evicted: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    events: VecDeque<String>,
+    bytes: usize,
+    recorded: u64,
+    evicted: u64,
+}
+
+/// Fixed-byte-budget ring buffer of serialized wide events.
+pub struct FlightRecorder {
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+impl FlightRecorder {
+    /// Default ring budget: 1 MiB of serialized events (~thousands of
+    /// requests at typical event sizes).
+    pub const DEFAULT_BUDGET: usize = 1 << 20;
+
+    pub fn new(budget_bytes: usize) -> FlightRecorder {
+        FlightRecorder { budget: budget_bytes, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// False when constructed with budget 0 — every record is a no-op.
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Record one wide event. The closure builds the event and is only
+    /// evaluated when the recorder is enabled, so a disabled recorder
+    /// costs one branch (same contract as `span!`).
+    pub fn record_with<F: FnOnce() -> Json>(&self, build: F) {
+        if !self.enabled() {
+            return;
+        }
+        let line = build().to_string();
+        let mut g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.recorded += 1;
+        if line.len() > self.budget {
+            // A single event larger than the whole ring would evict
+            // everything and still not fit; drop it instead.
+            g.evicted += 1;
+            return;
+        }
+        g.bytes += line.len();
+        g.events.push_back(line);
+        while g.bytes > self.budget {
+            match g.events.pop_front() {
+                Some(old) => {
+                    g.bytes -= old.len();
+                    g.evicted += 1;
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Snapshot the ring oldest-first, one JSON line per event.
+    pub fn dump(&self) -> Vec<String> {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        g.events.iter().cloned().collect()
+    }
+
+    pub fn stats(&self) -> RecorderStats {
+        let g = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        RecorderStats {
+            budget_bytes: self.budget,
+            events: g.events.len(),
+            bytes: g.bytes,
+            recorded: g.recorded,
+            evicted: g.evicted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+
+    fn event(tag: usize) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::str(&format!("t{tag:08}"))),
+            ("outcome", Json::str("ok")),
+        ])
+    }
+
+    #[test]
+    fn evicts_oldest_first_at_the_byte_budget() {
+        let line_len = event(0).to_string().len();
+        // Room for exactly three events.
+        let rec = FlightRecorder::new(line_len * 3);
+        for i in 0..10 {
+            rec.record_with(|| event(i));
+        }
+        let lines = rec.dump();
+        assert_eq!(lines.len(), 3, "ring holds exactly the budget");
+        // Oldest-first dump of the three most recent events.
+        for (i, line) in lines.iter().enumerate() {
+            assert!(line.contains(&format!("t{:08}", 7 + i)), "line {i}: {line}");
+            let parsed = Json::parse(line).expect("dump lines are valid JSON");
+            assert_eq!(parsed.get("outcome").as_str(), Some("ok"));
+        }
+        let s = rec.stats();
+        assert_eq!(s.events, 3);
+        assert_eq!(s.bytes, line_len * 3);
+        assert_eq!(s.recorded, 10);
+        assert_eq!(s.evicted, 7);
+        assert!(s.bytes <= s.budget_bytes);
+    }
+
+    #[test]
+    fn disabled_recorder_never_evaluates_the_closure() {
+        let rec = FlightRecorder::new(0);
+        assert!(!rec.enabled());
+        let evaluated = Cell::new(false);
+        rec.record_with(|| {
+            evaluated.set(true);
+            event(0)
+        });
+        assert!(!evaluated.get());
+        assert!(rec.dump().is_empty());
+        assert_eq!(rec.stats().recorded, 0);
+    }
+
+    #[test]
+    fn oversized_event_is_dropped_not_wedged() {
+        let rec = FlightRecorder::new(8);
+        rec.record_with(|| event(1));
+        let s = rec.stats();
+        assert_eq!(s.events, 0);
+        assert_eq!(s.recorded, 1);
+        assert_eq!(s.evicted, 1);
+        // The ring still accepts events that do fit.
+        let rec2 = FlightRecorder::new(4096);
+        rec2.record_with(|| event(2));
+        assert_eq!(rec2.stats().events, 1);
+    }
+}

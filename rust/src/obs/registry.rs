@@ -233,6 +233,14 @@ pub mod names {
     pub const REAPED_IDLE: &str = "tmfg_conns_reaped_idle_total";
     /// Event-loop wakeups (readiness, completion, or timer).
     pub const LOOP_WAKEUPS: &str = "tmfg_event_loop_wakeups_total";
+    /// Requests shed at admission, label `cause` (`depth`/`delay`/`tenant`).
+    pub const SHED_TOTAL: &str = "tmfg_shed_total";
+    /// Latest sampled age of the oldest queued job, in microseconds
+    /// (the CoDel-style admission signal; 0 when the queue is empty).
+    pub const ADMISSION_QUEUE_DELAY_US: &str = "tmfg_admission_queue_delay_us";
+    /// Flight-recorder ring occupancy (gauges, refreshed at scrape).
+    pub const RECORDER_EVENTS: &str = "tmfg_flight_recorder_events";
+    pub const RECORDER_BYTES: &str = "tmfg_flight_recorder_bytes";
 }
 
 #[cfg(test)]

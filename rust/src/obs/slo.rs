@@ -1,0 +1,412 @@
+//! Multi-window SLO tracker: latency-objective attainment and burn rate
+//! over sliding short/long windows.
+//!
+//! Every tracked series (end-to-end `request`, `queue_wait`,
+//! `stream_tick`, and the per-stage `stage:<name>` family fed by
+//! [`crate::api::plan`]) owns two slot-ring windows of the existing
+//! log-linear [`Histogram`]s: a short window for paging-grade signals
+//! ([`SHORT_WINDOW_SECS`] = 60 s in 10 s slots) and a long window for
+//! trend-grade ones ([`LONG_WINDOW_SECS`] = 600 s in 60 s slots).
+//! Recording is one histogram increment into each ring's current slot;
+//! reporting merges the live slots, so a sample ages out when its slot
+//! is overwritten — a sliding window with slot-granularity expiry and
+//! no per-sample timestamps.
+//!
+//! **Attainment** is `good / count` where a sample is good when it is
+//! ≤ the series objective; the straddling histogram bucket is counted
+//! bad, so attainment is conservative by at most one bucket width
+//! (≤ 6.25%). An empty window reports attainment 1.0 (no traffic means
+//! no violated objective). **Burn rate** is the SRE definition:
+//! `(1 − attainment) / (1 − target)` — 1.0 means the error budget is
+//! being consumed exactly at the sustainable rate, N means N× too fast.
+//!
+//! The process-global tracker ([`slo_tracker`]) is exported two ways:
+//! the service's `{"cmd":"stats"}` renders [`SloTracker::report`] as the
+//! `"slo"` block, and [`SloTracker::prometheus`] emits the
+//! `tmfg_slo_objective_seconds` / `tmfg_slo_attainment_ratio` /
+//! `tmfg_slo_burn_rate` gauge families appended to the registry
+//! exposition (attainment is fractional, which the u64 registry gauges
+//! cannot carry). Recording is purely observational — it never feeds
+//! back into any computation, so results stay byte-identical with the
+//! tracker hot (same contract as spans and the flight recorder).
+
+use super::hist::Histogram;
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Short-window span in seconds (6 slots of 10 s).
+pub const SHORT_WINDOW_SECS: u64 = 60;
+/// Long-window span in seconds (10 slots of 60 s).
+pub const LONG_WINDOW_SECS: u64 = 600;
+
+const SHORT_SLOTS: usize = 6;
+const LONG_SLOTS: usize = 10;
+
+/// A sliding window as a ring of per-slot histograms. Advancing to a
+/// new slot clears everything the wall clock skipped, so a slot only
+/// ever holds samples from its own time span.
+struct WindowRing {
+    slot_len: Duration,
+    slots: Vec<Histogram>,
+    epoch: Instant,
+    /// Absolute (monotone, non-wrapping) index of the current slot.
+    cur_slot: u64,
+}
+
+impl WindowRing {
+    fn new(slot_len: Duration, n_slots: usize, epoch: Instant) -> WindowRing {
+        WindowRing {
+            slot_len,
+            slots: (0..n_slots).map(|_| Histogram::new()).collect(),
+            epoch,
+            cur_slot: 0,
+        }
+    }
+
+    fn abs_slot(&self, now: Instant) -> u64 {
+        (now.saturating_duration_since(self.epoch).as_nanos() / self.slot_len.as_nanos().max(1))
+            as u64
+    }
+
+    /// Rotate to `now`'s slot, clearing every slot the clock skipped
+    /// (bounded by the ring length — a long idle clears everything).
+    fn advance(&mut self, now: Instant) {
+        let abs = self.abs_slot(now);
+        if abs <= self.cur_slot {
+            return;
+        }
+        let len = self.slots.len() as u64;
+        let skipped = (abs - self.cur_slot).min(len);
+        for i in 0..skipped {
+            let idx = ((self.cur_slot + 1 + i) % len) as usize;
+            self.slots[idx] = Histogram::new();
+        }
+        self.cur_slot = abs;
+    }
+
+    fn record_at(&mut self, v: u64, now: Instant) {
+        self.advance(now);
+        let len = self.slots.len() as u64;
+        self.slots[(self.cur_slot % len) as usize].record(v);
+    }
+
+    /// The whole window merged into one histogram.
+    fn merged(&mut self, now: Instant) -> Histogram {
+        self.advance(now);
+        let mut all = Histogram::new();
+        for h in &self.slots {
+            all.merge(h);
+        }
+        all
+    }
+}
+
+/// Attainment/burn snapshot of one window of one series.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowStats {
+    pub count: u64,
+    /// Fraction of samples at or under the objective; 1.0 when empty.
+    pub attainment: f64,
+    /// `(1 − attainment) / (1 − target)` — error-budget consumption
+    /// rate; 0.0 when empty or fully attained.
+    pub burn_rate: f64,
+}
+
+fn window_stats(h: &Histogram, objective_ns: u64, target: f64) -> WindowStats {
+    let count = h.count();
+    if count == 0 {
+        return WindowStats { count: 0, attainment: 1.0, burn_rate: 0.0 };
+    }
+    // Cumulative count of whole buckets whose upper edge is within the
+    // objective — the straddling bucket counts as bad (conservative).
+    let mut good = 0u64;
+    for (edge, cum) in h.cumulative_buckets() {
+        if edge <= objective_ns {
+            good = cum;
+        } else {
+            break;
+        }
+    }
+    let attainment = good as f64 / count as f64;
+    WindowStats {
+        count,
+        attainment,
+        burn_rate: (1.0 - attainment) / (1.0 - target).max(1e-9),
+    }
+}
+
+/// One tracked latency series: an objective, a target attainment
+/// fraction, and the two windows.
+struct SloSeries {
+    objective: Duration,
+    target: f64,
+    short: WindowRing,
+    long: WindowRing,
+}
+
+impl SloSeries {
+    fn new(objective: Duration, target: f64, epoch: Instant) -> SloSeries {
+        SloSeries {
+            objective,
+            target,
+            short: WindowRing::new(
+                Duration::from_secs(SHORT_WINDOW_SECS / SHORT_SLOTS as u64),
+                SHORT_SLOTS,
+                epoch,
+            ),
+            long: WindowRing::new(
+                Duration::from_secs(LONG_WINDOW_SECS / LONG_SLOTS as u64),
+                LONG_SLOTS,
+                epoch,
+            ),
+        }
+    }
+
+    fn record_at(&mut self, d: Duration, now: Instant) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.short.record_at(ns, now);
+        self.long.record_at(ns, now);
+    }
+
+    fn report_at(&mut self, name: &str, now: Instant) -> SeriesReport {
+        let objective_ns = self.objective.as_nanos().min(u64::MAX as u128) as u64;
+        SeriesReport {
+            name: name.to_string(),
+            objective_ms: self.objective.as_secs_f64() * 1e3,
+            target: self.target,
+            short: window_stats(&self.short.merged(now), objective_ns, self.target),
+            long: window_stats(&self.long.merged(now), objective_ns, self.target),
+        }
+    }
+}
+
+/// Snapshot of one series, both windows.
+#[derive(Debug, Clone)]
+pub struct SeriesReport {
+    pub name: String,
+    pub objective_ms: f64,
+    pub target: f64,
+    pub short: WindowStats,
+    pub long: WindowStats,
+}
+
+/// Snapshot of the whole tracker — what `stats` renders as `"slo"`.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub short_secs: u64,
+    pub long_secs: u64,
+    pub series: Vec<SeriesReport>,
+}
+
+/// Default objective/target per series name; `set_objective` overrides.
+fn default_objective(name: &str) -> (Duration, f64) {
+    match name {
+        "request" => (Duration::from_millis(500), 0.99),
+        "queue_wait" => (Duration::from_millis(100), 0.99),
+        "stream_tick" => (Duration::from_millis(100), 0.99),
+        _ if name.starts_with("stage:") => (Duration::from_millis(250), 0.99),
+        _ => (Duration::from_millis(500), 0.99),
+    }
+}
+
+/// The multi-window SLO tracker. All methods take `&self`; series are
+/// created lazily on first record with [`default_objective`]s.
+pub struct SloTracker {
+    inner: Mutex<BTreeMap<String, SloSeries>>,
+}
+
+impl SloTracker {
+    pub fn new() -> SloTracker {
+        SloTracker { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Record one latency sample for `name` at the current instant.
+    pub fn record(&self, name: &str, d: Duration) {
+        self.record_at(name, d, Instant::now());
+    }
+
+    /// Record with an explicit clock (tests inject time for rotation).
+    pub fn record_at(&self, name: &str, d: Duration, now: Instant) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let series = inner.entry(name.to_string()).or_insert_with(|| {
+            let (objective, target) = default_objective(name);
+            SloSeries::new(objective, target, now)
+        });
+        series.record_at(d, now);
+    }
+
+    /// Override (or pre-create) a series' objective and target.
+    pub fn set_objective(&self, name: &str, objective: Duration, target: f64) {
+        let now = Instant::now();
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        match inner.get_mut(name) {
+            Some(s) => {
+                s.objective = objective;
+                s.target = target.clamp(0.0, 1.0);
+            }
+            None => {
+                inner.insert(
+                    name.to_string(),
+                    SloSeries::new(objective, target.clamp(0.0, 1.0), now),
+                );
+            }
+        }
+    }
+
+    pub fn report(&self) -> SloReport {
+        self.report_at(Instant::now())
+    }
+
+    pub fn report_at(&self, now: Instant) -> SloReport {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        SloReport {
+            short_secs: SHORT_WINDOW_SECS,
+            long_secs: LONG_WINDOW_SECS,
+            series: inner
+                .iter_mut()
+                .map(|(name, s)| s.report_at(name, now))
+                .collect(),
+        }
+    }
+
+    /// The `tmfg_slo_*` gauge families as Prometheus text exposition —
+    /// appended to the registry's by the service's `metrics` handlers.
+    pub fn prometheus(&self) -> String {
+        let report = self.report();
+        if report.series.is_empty() {
+            return String::new();
+        }
+        let mut out = String::new();
+        out.push_str("# TYPE tmfg_slo_objective_seconds gauge\n");
+        for s in &report.series {
+            out.push_str(&format!(
+                "tmfg_slo_objective_seconds{{series=\"{}\"}} {}\n",
+                s.name,
+                s.objective_ms / 1e3
+            ));
+        }
+        out.push_str("# TYPE tmfg_slo_attainment_ratio gauge\n");
+        for s in &report.series {
+            for (window, w) in [("short", &s.short), ("long", &s.long)] {
+                out.push_str(&format!(
+                    "tmfg_slo_attainment_ratio{{series=\"{}\",window=\"{window}\"}} {}\n",
+                    s.name, w.attainment
+                ));
+            }
+        }
+        out.push_str("# TYPE tmfg_slo_burn_rate gauge\n");
+        for s in &report.series {
+            for (window, w) in [("short", &s.short), ("long", &s.long)] {
+                out.push_str(&format!(
+                    "tmfg_slo_burn_rate{{series=\"{}\",window=\"{window}\"}} {}\n",
+                    s.name, w.burn_rate
+                ));
+            }
+        }
+        out
+    }
+}
+
+impl Default for SloTracker {
+    fn default() -> Self {
+        SloTracker::new()
+    }
+}
+
+/// The process-global tracker every producer records into.
+pub fn slo_tracker() -> &'static SloTracker {
+    static T: OnceLock<SloTracker> = OnceLock::new();
+    T.get_or_init(SloTracker::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_rotation_expires_old_samples() {
+        let epoch = Instant::now();
+        let mut ring = WindowRing::new(Duration::from_secs(10), 6, epoch);
+        ring.record_at(100, epoch);
+        assert_eq!(ring.merged(epoch).count(), 1);
+        // Still inside the 60 s window at +55 s.
+        let t55 = epoch + Duration::from_secs(55);
+        ring.record_at(200, t55);
+        assert_eq!(ring.merged(t55).count(), 2);
+        // At +65 s the epoch slot has been overwritten: only the +55 s
+        // sample remains.
+        let t65 = epoch + Duration::from_secs(65);
+        assert_eq!(ring.merged(t65).count(), 1);
+        // A jump far past the horizon clears everything in one advance.
+        let later = epoch + Duration::from_secs(10_000);
+        assert_eq!(ring.merged(later).count(), 0);
+    }
+
+    #[test]
+    fn rotation_clears_exactly_the_skipped_slots() {
+        let epoch = Instant::now();
+        let mut ring = WindowRing::new(Duration::from_secs(10), 6, epoch);
+        // One sample per slot across the first window.
+        for slot in 0..6u64 {
+            ring.record_at(slot + 1, epoch + Duration::from_secs(slot * 10));
+        }
+        assert_eq!(ring.merged(epoch + Duration::from_secs(59)).count(), 6);
+        // Each subsequent slot expires exactly one old sample.
+        for (i, slot) in (6..10u64).enumerate() {
+            let now = epoch + Duration::from_secs(slot * 10);
+            assert_eq!(ring.merged(now).count(), 5 - i as u64, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn attainment_and_burn_rate() {
+        let now = Instant::now();
+        let t = SloTracker::new();
+        t.set_objective("request", Duration::from_millis(1), 0.99);
+        for _ in 0..10 {
+            t.record_at("request", Duration::from_micros(500), now);
+            t.record_at("request", Duration::from_millis(100), now);
+        }
+        let report = t.report_at(now);
+        assert_eq!(report.short_secs, SHORT_WINDOW_SECS);
+        assert_eq!(report.long_secs, LONG_WINDOW_SECS);
+        let s = &report.series[0];
+        assert_eq!(s.name, "request");
+        assert_eq!(s.short.count, 20);
+        assert!((s.short.attainment - 0.5).abs() < 1e-9, "{}", s.short.attainment);
+        // (1 - 0.5) / (1 - 0.99) = 50× budget burn.
+        assert!((s.short.burn_rate - 50.0).abs() < 1e-6, "{}", s.short.burn_rate);
+        assert_eq!(s.long.count, 20);
+    }
+
+    #[test]
+    fn empty_series_attains_fully() {
+        let t = SloTracker::new();
+        t.set_objective("idle", Duration::from_millis(5), 0.999);
+        let r = t.report();
+        let s = &r.series[0];
+        assert_eq!(s.short.count, 0);
+        assert_eq!(s.short.attainment, 1.0);
+        assert_eq!(s.short.burn_rate, 0.0);
+    }
+
+    #[test]
+    fn default_objectives_and_prometheus_shape() {
+        let t = SloTracker::new();
+        t.record("stage:similarity", Duration::from_millis(1));
+        t.record("request", Duration::from_millis(1));
+        let text = t.prometheus();
+        for needle in [
+            "# TYPE tmfg_slo_objective_seconds gauge",
+            "# TYPE tmfg_slo_attainment_ratio gauge",
+            "# TYPE tmfg_slo_burn_rate gauge",
+            "tmfg_slo_objective_seconds{series=\"request\"} 0.5",
+            "tmfg_slo_attainment_ratio{series=\"stage:similarity\",window=\"short\"} 1",
+            "tmfg_slo_burn_rate{series=\"request\",window=\"long\"} 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        assert!(SloTracker::new().prometheus().is_empty(), "no series, no families");
+    }
+}

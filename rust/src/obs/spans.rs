@@ -24,6 +24,7 @@
 //! in-flight requests, which is exactly what the per-worker tracks are
 //! for.
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::Instant;
@@ -155,6 +156,41 @@ pub fn next_trace_id() -> String {
     format!("t{:012x}-{seq:04x}", wall & 0xffff_ffff_ffff)
 }
 
+thread_local! {
+    /// The trace id of the request this thread is currently serving,
+    /// if any — set by the service via [`TraceCtx::enter`] and read by
+    /// `log_emit` to prefix log lines.
+    static CURRENT_TRACE: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// The active request trace id on this thread, if inside a
+/// [`TraceCtx`] scope.
+pub fn current_trace_id() -> Option<String> {
+    CURRENT_TRACE.with(|c| c.borrow().clone())
+}
+
+/// RAII request-trace context: while alive, `log!` lines emitted from
+/// this thread carry `[<trace_id>]` so server logs join against trace
+/// and flight-log artifacts. Nests safely — dropping restores the
+/// previous id.
+pub struct TraceCtx {
+    prev: Option<String>,
+}
+
+impl TraceCtx {
+    pub fn enter(trace_id: &str) -> TraceCtx {
+        let prev = CURRENT_TRACE.with(|c| c.replace(Some(trace_id.to_string())));
+        TraceCtx { prev }
+    }
+}
+
+impl Drop for TraceCtx {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT_TRACE.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
 static SESSION_GATE: Mutex<()> = Mutex::new(());
 
 /// An exclusive span-collection window. Construction clears all thread
@@ -276,5 +312,28 @@ mod tests {
         let a = next_trace_id();
         let b = next_trace_id();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn trace_ctx_nests_and_restores() {
+        assert_eq!(current_trace_id(), None);
+        {
+            let _outer = TraceCtx::enter("t-outer");
+            assert_eq!(current_trace_id().as_deref(), Some("t-outer"));
+            {
+                let _inner = TraceCtx::enter("t-inner");
+                assert_eq!(current_trace_id().as_deref(), Some("t-inner"));
+            }
+            assert_eq!(current_trace_id().as_deref(), Some("t-outer"));
+        }
+        assert_eq!(current_trace_id(), None);
+    }
+
+    #[test]
+    fn trace_ctx_is_thread_local() {
+        let _ctx = TraceCtx::enter("t-main");
+        let other = std::thread::spawn(current_trace_id).join().unwrap();
+        assert_eq!(other, None);
+        assert_eq!(current_trace_id().as_deref(), Some("t-main"));
     }
 }

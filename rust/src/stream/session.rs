@@ -99,6 +99,10 @@ impl TickDecision {
 #[derive(Debug, Clone)]
 pub struct TickOutput {
     pub tick: u64,
+    /// Per-tick trace id, echoed on the wire `tick` response (like
+    /// batch responses) so flight-recorder wide events, trace exports,
+    /// and client-side logs correlate.
+    pub trace_id: String,
     pub generation: u64,
     pub decision: TickDecision,
     pub labels: Option<Vec<usize>>,
@@ -224,12 +228,14 @@ impl StreamSession {
             )));
         }
         let t = Timer::start();
+        let trace_id = crate::obs::next_trace_id();
         self.window.push(sample);
         self.stats.ticks += 1;
         let tick = self.stats.ticks;
         if self.window.len() < self.warmup() {
             return Ok(TickOutput {
                 tick,
+                trace_id,
                 generation: self.generation,
                 decision: TickDecision::Warming,
                 labels: None,
@@ -271,6 +277,7 @@ impl StreamSession {
         }
         Ok(TickOutput {
             tick,
+            trace_id,
             generation: self.generation,
             decision,
             labels: Some(labels),
@@ -349,9 +356,14 @@ mod tests {
         let mut s = StreamSession::new(cfg(8, 16, 2)).unwrap();
         let mut rng = Rng::new(1);
         let mut last_gen = 0u64;
+        let mut last_trace = String::new();
         for t in 1..=20u64 {
             let out = s.tick(&gaussian_sample(&mut rng, 8)).unwrap();
             assert_eq!(out.tick, t);
+            // Every tick — warming included — carries a fresh trace id.
+            assert!(out.trace_id.starts_with('t'), "{}", out.trace_id);
+            assert_ne!(out.trace_id, last_trace);
+            last_trace = out.trace_id.clone();
             if t < 4 {
                 assert_eq!(out.decision, TickDecision::Warming);
                 assert!(out.labels.is_none());

@@ -632,6 +632,180 @@ fn overload_sheds_with_typed_errors_while_admitted_work_completes() {
     h.stop();
 }
 
+/// Adaptive admission: with `target_queue_delay` set and the depth bound
+/// pushed out of the way, a saturation storm is shed by the CoDel-style
+/// delay gate (typed `overloaded`, cause `delay`) while admitted
+/// requests' queue delay stays bounded near the target — and the flight
+/// recorder's `debug_dump` replays well-formed wide events covering both
+/// outcomes.
+#[cfg(unix)]
+#[test]
+fn adaptive_admission_sheds_on_queue_delay_and_bounds_admitted_waits() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    // Calibrate one heavy request on an idle, identically-shaped server
+    // so the delay target scales with this machine's actual speed.
+    let cal = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: 2,
+        cache_entries: 0,
+        ..Default::default()
+    })
+    .expect("bind");
+    let mut cc = Client::connect(&cal.addr).unwrap();
+    let t0 = std::time::Instant::now();
+    for r in 0..3 {
+        let resp = cc.call(&heavy_req(r, (r + 1) as u64, None)).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    }
+    let service_time = t0.elapsed() / 3;
+    drop(cc);
+    cal.stop();
+
+    let target = (service_time * 8).max(Duration::from_millis(50));
+    let h = serve(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        dispatch_workers: 2,
+        // Depth ceiling pushed far away: the delay gate must shed first.
+        max_queue_depth: 1024,
+        cache_entries: 0,
+        target_queue_delay: target,
+        ..Default::default()
+    })
+    .expect("bind");
+    let addr = h.addr.clone();
+
+    const CLIENTS: usize = 32;
+    const PER: usize = 4;
+    let ok_count = Arc::new(AtomicUsize::new(0));
+    let shed_count = Arc::new(AtomicUsize::new(0));
+    let (park_tx, park_rx) = channel::<Client>();
+    let joins: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            let ok_count = ok_count.clone();
+            let shed_count = shed_count.clone();
+            let park_tx = park_tx.clone();
+            std::thread::spawn(move || {
+                // Staggered ramp (arrival ≈ 2× service rate): the queue
+                // delay grows *through* the target instead of arriving
+                // as one cold burst the gate couldn't preempt.
+                std::thread::sleep((service_time * c as u32) / 4);
+                let mut client = Client::connect(&addr).unwrap();
+                for r in 0..PER {
+                    let id = c * 100 + r;
+                    let resp = client.call(&heavy_req(id, (id + 1) as u64, None)).unwrap();
+                    assert_eq!(resp.get("id").as_usize(), Some(id), "{resp:?}");
+                    match resp.get("ok").as_bool() {
+                        Some(true) => {
+                            ok_count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Some(false) => {
+                            assert_eq!(
+                                resp.get("code").as_str(),
+                                Some("overloaded"),
+                                "delay sheds use the typed code: {resp:?}"
+                            );
+                            assert!(
+                                resp.get("error").as_str().unwrap().contains("queue delay"),
+                                "delay sheds name the mechanism: {resp:?}"
+                            );
+                            shed_count.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => panic!("malformed response: {resp:?}"),
+                    }
+                }
+                park_tx.send(client).unwrap();
+            })
+        })
+        .collect();
+    drop(park_tx);
+
+    let mut parked = Vec::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(240);
+    while parked.len() < CLIENTS {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "delay storm did not finish within 240s ({}/{CLIENTS} clients done)",
+            parked.len()
+        );
+        match park_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(c) => parked.push(c),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    for j in joins {
+        j.join().expect("storm client must not panic");
+    }
+
+    let ok = ok_count.load(Ordering::Relaxed);
+    let shed = shed_count.load(Ordering::Relaxed);
+    assert_eq!(ok + shed, CLIENTS * PER, "every request got exactly one response");
+    assert!(ok > 0, "admitted work must complete under the delay gate");
+    assert!(shed > 0, "sustained over-target queue delay must shed");
+
+    // The service attributes every shed to the gate, not the ceiling.
+    let mut sc = Client::connect(&addr).unwrap();
+    let stats = sc.call(&stats_req()).unwrap();
+    let shed_stats = stats.get("shed");
+    assert!(shed_stats.get("delay").as_usize().unwrap() >= shed, "{stats:?}");
+    assert_eq!(
+        shed_stats.get("depth").as_usize(),
+        Some(0),
+        "depth ceiling must never be hit: {stats:?}"
+    );
+    let reported_ms = stats.get("target_queue_delay_ms").as_f64().unwrap();
+    assert!((reported_ms - target.as_secs_f64() * 1e3).abs() < 0.5, "{stats:?}");
+
+    // The flight recorder replays one well-formed wide event per
+    // completed request, covering both outcomes; admitted requests'
+    // recorded queue delay stays within ~2× the target.
+    let dump = sc
+        .call(&Json::obj(vec![("id", Json::Num(1.0)), ("cmd", Json::str("debug_dump"))]))
+        .unwrap();
+    assert_eq!(dump.get("ok").as_bool(), Some(true), "{dump:?}");
+    let events = dump.get("events").as_arr().unwrap();
+    let mut ok_delays_ms = Vec::new();
+    let mut shed_events = 0usize;
+    for ev in events {
+        assert!(ev.get("trace_id").as_str().is_some(), "{ev:?}");
+        assert!(ev.get("kind").as_str().is_some(), "{ev:?}");
+        assert!(ev.get("ts_ms").as_f64().is_some(), "{ev:?}");
+        let outcome = ev.get("outcome").as_str().expect("outcome present").to_string();
+        let wall = ev.get("wall_ms").as_f64().unwrap();
+        let qd = ev.get("queue_delay_ms").as_f64().unwrap();
+        let stages = ev.get("stages").as_obj().unwrap();
+        let stage_sum: f64 = stages.values().filter_map(|v| v.as_f64()).sum();
+        assert!(
+            stage_sum <= wall * 1.05 + 1.0,
+            "per-stage timings must sum within the wall time: {ev:?}"
+        );
+        match outcome.as_str() {
+            "ok" if ev.get("kind").as_str() == Some("batch") => ok_delays_ms.push(qd),
+            "shed" => {
+                shed_events += 1;
+                assert_eq!(ev.get("shed_cause").as_str(), Some("delay"), "{ev:?}");
+            }
+            _ => {}
+        }
+    }
+    assert!(shed_events >= 1, "shed wide events must be recorded");
+    assert!(!ok_delays_ms.is_empty(), "admitted wide events must be recorded");
+    ok_delays_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((ok_delays_ms.len() as f64 * 0.99).ceil() as usize)
+        .saturating_sub(1)
+        .min(ok_delays_ms.len() - 1);
+    let p99 = ok_delays_ms[idx];
+    let bound = target.as_secs_f64() * 1e3 * 2.0;
+    assert!(
+        p99 <= bound,
+        "admitted queue-delay p99 {p99:.1}ms must stay within 2x target ({bound:.1}ms)"
+    );
+    drop(parked);
+    h.stop();
+}
+
 /// Per-tenant admission: with `tenant_quota: 2`, a tenant firing 8
 /// concurrent requests keeps at most 2 in flight; the rest are shed with
 /// a typed `overloaded` error naming the tenant, while other tenants and

@@ -25,7 +25,14 @@ matches the trace's, that the metrics text contains the per-stage
 latency histogram, and that the async serving tier is live: `stats`
 reports a readiness backend with non-zero accepted connections and
 event-loop wakeups, and the metrics exposition carries the connection
-counters. Exits non-zero with a message on the first failure.
+counters. It then validates the closed-loop observability surface: the
+`stats` `slo` block (60s/600s windows, attainment in [0,1], non-negative
+burn rates, `request` + `queue_wait` series present), the `tmfg_slo_*`
+gauge families in the metrics text, and a `{"cmd": "debug_dump"}`
+flight-recorder replay whose wide events carry the canonical envelope
+(trace_id/kind/outcome/ts_ms/wall_ms/queue_delay_ms/stages) with
+per-stage sums bounded by the wall time. Exits non-zero with a message
+on the first failure.
 
 Stdlib only — no pip dependencies.
 """
@@ -188,6 +195,80 @@ def serve_mode(addr, min_kinds):
     print(
         f"check_trace: OK: metrics exposition has stage histograms and "
         f"{backend} serving-tier counters ({len(text)} bytes)"
+    )
+
+    # SLO engine: after one completed request the stats block must carry
+    # the multi-window attainment report and the metrics exposition the
+    # tmfg_slo_* gauge families.
+    slo = stats.get("slo")
+    if not isinstance(slo, dict):
+        fail(f"stats carries no slo block: {stats}")
+    windows = slo.get("windows", {})
+    if windows.get("short_secs") != 60 or windows.get("long_secs") != 600:
+        fail(f"unexpected slo windows: {windows}")
+    series = slo.get("series")
+    if not isinstance(series, dict) or not series:
+        fail(f"slo series empty after a completed request: {slo}")
+    for want in ("request", "queue_wait"):
+        if want not in series:
+            fail(f"slo series missing {want!r} (have {sorted(series)})")
+    for name, s in series.items():
+        if not s.get("objective_ms", 0) > 0:
+            fail(f"slo series {name!r} has no objective: {s}")
+        if not 0.0 < s.get("target", 0) <= 1.0:
+            fail(f"slo series {name!r} target out of range: {s}")
+        for window in ("short", "long"):
+            w = s.get(window)
+            if not isinstance(w, dict):
+                fail(f"slo series {name!r} missing {window} window: {s}")
+            if not 0.0 <= w.get("attainment", -1) <= 1.0:
+                fail(f"slo series {name!r} {window} attainment out of range: {w}")
+            if not w.get("burn_rate", -1) >= 0.0:
+                fail(f"slo series {name!r} {window} burn rate negative: {w}")
+    slo_needles = [
+        "# TYPE tmfg_slo_objective_seconds gauge",
+        'tmfg_slo_objective_seconds{series="request"}',
+        "# TYPE tmfg_slo_attainment_ratio gauge",
+        'tmfg_slo_attainment_ratio{series="request",window="short"}',
+        "# TYPE tmfg_slo_burn_rate gauge",
+        "# TYPE tmfg_flight_recorder_events gauge",
+    ]
+    for needle in slo_needles:
+        if needle not in text:
+            fail(f"metrics exposition missing {needle!r}")
+    print(f"check_trace: OK: slo block has {len(series)} series and tmfg_slo_* gauges")
+
+    # Flight recorder: debug_dump must replay well-formed wide events
+    # (valid JSONL re-serialized as objects), covering this request.
+    dump = client.call({"cmd": "debug_dump"})
+    if dump.get("ok") is not True:
+        fail(f"debug_dump request failed: {dump}")
+    events = dump.get("events")
+    if not isinstance(events, list) or not events:
+        fail(f"debug_dump returned no events: {dump}")
+    required = ["trace_id", "kind", "outcome", "ts_ms", "wall_ms", "queue_delay_ms", "stages"]
+    outcomes = set()
+    for ev in events:
+        if not isinstance(ev, dict):
+            fail(f"debug_dump event is not an object: {ev}")
+        missing = [k for k in required if k not in ev]
+        if missing:
+            fail(f"wide event missing {missing}: {ev}")
+        stages = ev["stages"]
+        if not isinstance(stages, dict):
+            fail(f"wide event stages not an object: {ev}")
+        stage_sum = sum(v for v in stages.values() if isinstance(v, (int, float)))
+        if stage_sum > ev["wall_ms"] * 1.05 + 1.0:
+            fail(f"stage sum {stage_sum} exceeds wall_ms: {ev}")
+        outcomes.add(ev["outcome"])
+    if "ok" not in outcomes:
+        fail(f"debug_dump has no successful wide event: outcomes {outcomes}")
+    recorder = dump.get("recorder", {})
+    if not recorder.get("recorded", 0) >= len(events):
+        fail(f"recorder counters inconsistent with dump: {recorder}")
+    print(
+        f"check_trace: OK: debug_dump replayed {len(events)} wide events "
+        f"(outcomes {sorted(outcomes)})"
     )
 
 
