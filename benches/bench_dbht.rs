@@ -1,0 +1,45 @@
+//! DBHT hierarchy benchmarks past the dense ceiling: the full
+//! bubble-tree → direction → converging-assignment → three-layer
+//! agglomeration stage over a sparse k-NN TMFG with the resident hub
+//! oracle — the regime where representative sampling (`REP_CAP`) and
+//! chunked coarsening (`GROUP_CHUNK`) keep the stage near-linear.
+//! `BENCH_DBHT_NS` (comma-separated sizes) shrinks the CI smoke; the
+//! committed baseline covers n ∈ {16384, 65536}.
+
+use tmfg::apsp::{CsrGraph, HubConfig, HubOracle};
+use tmfg::data::synth::SynthSpec;
+use tmfg::dbht::{dbht_dendrogram, Linkage};
+use tmfg::parlay;
+use tmfg::sparse::{knn_candidates, sparse_tmfg, KnnConfig};
+use tmfg::util::bench::BenchSuite;
+
+fn main() {
+    let sizes: Vec<usize> = std::env::var("BENCH_DBHT_NS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![16384, 65536]);
+    let k = 16usize;
+    let mut suite = BenchSuite::new("dbht");
+    let threads = parlay::num_threads().to_string();
+
+    for n in sizes {
+        // Setup (not timed): panel → candidate graph → TMFG → hub oracle.
+        let ds = SynthSpec::new("bench", n, 48, 16).generate(1);
+        let cand = knn_candidates(&ds.data, &KnnConfig::new(k, 1)).unwrap();
+        let (r, _) = sparse_tmfg(&cand).unwrap();
+        let g = CsrGraph::from_tmfg(&r, &cand);
+        let oracle = HubOracle::build(&g, &HubConfig::default());
+        suite
+            .meta("n", &n.to_string())
+            .meta("k", &k.to_string())
+            .meta("linkage", "complete")
+            .meta("threads", &threads)
+            .run(&format!("dbht_hub/n{n}"), |_| {
+                let out = dbht_dendrogram(&cand, &r, &oracle, Linkage::Complete).unwrap();
+                assert!(out.dendrogram.is_complete(), "n={n}: incomplete dendrogram");
+            });
+    }
+
+    suite.write_csv().unwrap();
+    suite.write_json().unwrap();
+}

@@ -33,9 +33,41 @@ pub enum SimilaritySpec {
     Dense,
     /// A sparse k-NN candidate graph over the standardized panel —
     /// O(n·k) memory, deterministic for a fixed `seed` (which drives the
-    /// random-projection prefilter on very large inputs). TMFG
-    /// construction runs the sparse-gain path; APSP/DBHT run unchanged.
-    SparseKnn { k: usize, seed: u64 },
+    /// random-projection prefilter + NN-descent refinement on very
+    /// large inputs). TMFG construction runs the sparse-gain path;
+    /// APSP/DBHT run unchanged. The optional knobs override the
+    /// [`KnnConfig`] defaults: `dims` = projection dimensionality,
+    /// `pool` = shortlist multiplier, `iters` = refinement rounds
+    /// (`Some(0)` disables refinement); `None` keeps the engine default.
+    SparseKnn {
+        k: usize,
+        seed: u64,
+        dims: Option<usize>,
+        pool: Option<usize>,
+        iters: Option<usize>,
+    },
+}
+
+impl SimilaritySpec {
+    /// Resolve a `SparseKnn` spec to the engine configuration it runs
+    /// with (the one knob→config mapping, shared by the similarity
+    /// stage and the report in [`Plan::finish`]).
+    pub fn knn_config(&self) -> Option<KnnConfig> {
+        let SimilaritySpec::SparseKnn { k, seed, dims, pool, iters } = *self else {
+            return None;
+        };
+        let mut cfg = KnnConfig::new(k, seed);
+        if let Some(d) = dims {
+            cfg.projection_dims = d;
+        }
+        if let Some(p) = pool {
+            cfg.pool_factor = p;
+        }
+        if let Some(i) = iters {
+            cfg.ann_iters = i;
+        }
+        Some(cfg)
+    }
 }
 
 /// What the sparse similarity stage produced (reported on
@@ -46,6 +78,12 @@ pub struct SparseReport {
     pub k: usize,
     /// Prefilter seed.
     pub seed: u64,
+    /// Effective projection dimensionality of the prefilter.
+    pub dims: usize,
+    /// Effective shortlist multiplier (`pool_factor`).
+    pub pool: usize,
+    /// Effective NN-descent refinement rounds.
+    pub iters: usize,
     /// Stored (directed) candidate entries after symmetrization.
     pub nnz: usize,
     /// Mean candidate degree.
@@ -501,7 +539,7 @@ impl Plan {
     /// the panel with the plan's `SparseKnn` spec. Deterministic for a
     /// fixed seed, O(n·k) memory.
     pub fn run_sparse_similarity(&mut self) -> Result<&SparseSimilarity, TmfgError> {
-        let SimilaritySpec::SparseKnn { k, seed } = self.spec else {
+        let Some(cfg) = self.spec.knn_config() else {
             return Err(TmfgError::invalid(
                 "dense plan has no sparse similarity; use run_similarity",
             ));
@@ -510,9 +548,10 @@ impl Plan {
             let panel = self.panel.as_ref().ok_or_else(|| {
                 TmfgError::invariant("sparse plan has no panel to build candidates from")
             })?;
-            let _span = crate::span!("stage", "similarity sparse-knn n={} k={k}", self.n);
+            let _span =
+                crate::span!("stage", "similarity sparse-knn n={} k={}", self.n, cfg.k);
             let t = Timer::start();
-            let sp = knn_candidates(panel, &KnnConfig::new(k, seed))?;
+            let sp = knn_candidates(panel, &cfg)?;
             let secs = t.elapsed();
             self.timings.add("similarity", secs);
             observe_stage("similarity", secs);
@@ -724,16 +763,19 @@ impl Plan {
             .take()
             .ok_or_else(|| TmfgError::invariant("dbht artifact missing"))?;
         let edge_sum = tmfg.edge_sum(self.sim_store()?);
-        let sparse = match self.spec {
-            SimilaritySpec::Dense => None,
-            SimilaritySpec::SparseKnn { k, seed } => {
+        let sparse = match self.spec.knn_config() {
+            None => None,
+            Some(cfg) => {
                 let sp = self
                     .sparse
                     .as_deref()
                     .ok_or_else(|| TmfgError::invariant("sparse artifact missing"))?;
                 Some(SparseReport {
-                    k,
-                    seed,
+                    k: cfg.k,
+                    seed: cfg.seed,
+                    dims: cfg.projection_dims,
+                    pool: cfg.pool_factor,
+                    iters: cfg.ann_iters,
                     nnz: sp.nnz(),
                     mean_degree: sp.mean_degree(),
                     fallbacks: self.sparse_fallbacks.unwrap_or(0),

@@ -113,9 +113,30 @@ impl ClusterRequest {
 
     /// Shorthand for [`SimilaritySpec::SparseKnn`]: build a k-NN
     /// candidate graph (k neighbors per series, `seed` driving the
-    /// large-n projection prefilter) instead of the dense O(n²) matrix.
+    /// large-n projection prefilter + NN-descent refinement) instead of
+    /// the dense O(n²) matrix, at the engine-default knob settings.
     pub fn sparse_knn(self, k: usize, seed: u64) -> Self {
-        self.similarity_spec(SimilaritySpec::SparseKnn { k, seed })
+        self.similarity_spec(SimilaritySpec::SparseKnn {
+            k,
+            seed,
+            dims: None,
+            pool: None,
+            iters: None,
+        })
+    }
+
+    /// [`Self::sparse_knn`] with explicit ANN knob overrides (`None`
+    /// keeps the engine default for that knob; `iters == Some(0)`
+    /// disables the NN-descent refinement).
+    pub fn sparse_knn_tuned(
+        self,
+        k: usize,
+        seed: u64,
+        dims: Option<usize>,
+        pool: Option<usize>,
+        iters: Option<usize>,
+    ) -> Self {
+        self.similarity_spec(SimilaritySpec::SparseKnn { k, seed, dims, pool, iters })
     }
 
     /// Override the APSP mode (default: the algorithm's own default).

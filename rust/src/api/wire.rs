@@ -8,6 +8,29 @@
 //! human-readable `error` plus the stable machine-readable `code` from
 //! [`TmfgError::code`].
 //!
+//! ## Binary frames (protocol v2)
+//!
+//! Protocol v2 adds a length-prefixed binary frame for batch clustering
+//! requests whose panel would be prohibitively large as a JSON array:
+//!
+//! ```text
+//! [ FRAME_MAGIC (4 bytes) ]
+//! [ header_len: u32 LE    ]
+//! [ payload_len: u64 LE   ]  // bytes, must be a multiple of 4
+//! [ header: JSON object   ]  // the usual request fields, minus "data"
+//! [ payload: f32 LE array ]  // row-major n×l panel
+//! ```
+//!
+//! The header is the same JSON object a line request would carry, with
+//! `"v": 2` required and the `data` array replaced by the payload
+//! (named-dataset frames carry an empty payload). Responses are always
+//! JSON lines, byte-identical to the JSON path for the same request.
+//! Sparse (`sparse_k`) requests arriving in a binary frame get the
+//! raised [`MAX_BINARY_SPARSE_SERIES`] cap; everything else keeps the
+//! line-protocol caps. The connection layer decodes the payload
+//! incrementally ([`crate::net::conn`]), so a multi-hundred-MB panel
+//! never exists as a JSON text buffer.
+//!
 //! ## Observability fields
 //!
 //! * Every batch-clustering response carries a `trace_id` string —
@@ -32,8 +55,43 @@ use crate::apsp::HubConfig;
 use crate::util::json::Json;
 
 /// Highest protocol version this build speaks. Requests may pin a
-/// version with `{"v": 1, ...}`; omitting it means "current".
-pub const PROTOCOL_VERSION: u64 = 1;
+/// version with `{"v": 1, ...}`; omitting it means "current". v1 is the
+/// JSON line protocol; v2 adds the binary request frame (see the module
+/// docs) — JSON-line requests are unchanged under either version.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// First bytes of a binary-framed request. Deliberately distinct from
+/// `{` (every JSON line's first byte) so the connection layer can tell
+/// frames from lines by peeking at the stream.
+pub const FRAME_MAGIC: [u8; 4] = *b"TMFB";
+
+/// Upper bound on a binary frame's JSON header (the non-payload request
+/// fields; a well-formed header is a few hundred bytes).
+pub const MAX_FRAME_HEADER_BYTES: usize = 1 << 20;
+
+/// Upper bound on a binary frame's f32 payload in bytes. 512 MiB —
+/// comfortably above the 192 MiB a 2^20 × 48 panel needs, while still
+/// bounding what one connection can make the server buffer.
+pub const MAX_FRAME_PAYLOAD_BYTES: u64 = 512 << 20;
+
+/// Upper bound on batch series count for **sparse** requests arriving in
+/// a binary frame: the full `synth-large` registry ceiling. Only the
+/// binary frame raises the cap this far — the JSON line protocol keeps
+/// [`MAX_SPARSE_BATCH_SERIES`] (a 2^20-series panel as a JSON array
+/// would be gigabytes of text).
+pub const MAX_BINARY_SPARSE_SERIES: usize = 1 << 20;
+
+/// Upper bound on the `sparse_dims` random-projection dimension knob
+/// (projection storage is O(n·d)).
+pub const MAX_PROJECTION_DIMS: usize = 256;
+
+/// Upper bound on the `sparse_pool` shortlist multiplier (the prefilter
+/// re-scores pool·k candidates per vertex).
+pub const MAX_POOL_FACTOR: usize = 64;
+
+/// Upper bound on the `sparse_iters` ANN refinement-iteration knob
+/// (each iteration is an O(n·pool·L) re-score sweep).
+pub const MAX_ANN_ITERS: usize = 16;
 
 /// Upper bound on `open_stream` series count. A stream session keeps an
 /// n×n f64 cross-product matrix, so an unbounded `n` in one short
@@ -134,10 +192,20 @@ pub struct ClusterSpec {
     /// 0 = the dataset's own class count (named sources only).
     pub k: usize,
     /// Sparse k-NN mode: neighbors per vertex (None = dense pipeline).
-    /// Raises the batch cap to [`MAX_SPARSE_BATCH_SERIES`].
+    /// Raises the batch cap to [`MAX_SPARSE_BATCH_SERIES`]
+    /// ([`MAX_BINARY_SPARSE_SERIES`] in a binary frame).
     pub sparse_k: Option<usize>,
     /// Seed of the sparse prefilter (requires `sparse_k`).
     pub sparse_seed: Option<u64>,
+    /// Random-projection dimensions for the k-NN prefilter (requires
+    /// `sparse_k`; None = the engine default).
+    pub sparse_dims: Option<usize>,
+    /// Shortlist multiplier for the k-NN prefilter (requires `sparse_k`;
+    /// None = the engine default).
+    pub sparse_pool: Option<usize>,
+    /// ANN neighbor-of-neighbor refinement iterations (requires
+    /// `sparse_k`; 0 disables refinement, None = the engine default).
+    pub sparse_iters: Option<usize>,
     /// APSP mode override ("exact" | "approx" | "auto"; None = the
     /// algorithm's default).
     pub apsp: Option<ApspMode>,
@@ -246,16 +314,46 @@ impl Request {
     /// The single validated parse path from a JSON line to a typed
     /// request.
     pub fn decode(j: &Json) -> Result<Request, TmfgError> {
+        Self::decode_inner(j, None)
+    }
+
+    /// Decode a binary-framed request: the frame's JSON header plus its
+    /// decoded f32 payload. Frames require `"v": 2`, carry only batch
+    /// clustering requests (no `cmd`), and supply the panel through the
+    /// payload instead of a `data` array (named-dataset frames carry an
+    /// empty payload). Sparse framed requests get the raised
+    /// [`MAX_BINARY_SPARSE_SERIES`] cap.
+    pub fn decode_frame(j: &Json, payload: Vec<f32>) -> Result<Request, TmfgError> {
+        if let Some(pos) = payload.iter().position(|v| !v.is_finite()) {
+            return Err(TmfgError::protocol(format!(
+                "non-finite value in frame payload at index {pos}"
+            )));
+        }
+        Self::decode_inner(j, Some(payload))
+    }
+
+    fn decode_inner(j: &Json, payload: Option<Vec<f32>>) -> Result<Request, TmfgError> {
         let id = j.get("id").clone();
+        let framed = payload.is_some();
         let v = opt_usize(j, "v")?.map(|x| x as u64).unwrap_or(PROTOCOL_VERSION);
         if v < 1 || v > PROTOCOL_VERSION {
             return Err(TmfgError::protocol(format!(
                 "unsupported protocol version {v} (supported: 1..={PROTOCOL_VERSION})"
             )));
         }
+        if framed && v < 2 {
+            return Err(TmfgError::protocol(format!(
+                "binary frames require protocol v >= 2, got {v}"
+            )));
+        }
         let tenant = decode_tenant(j)?;
         let body = match j.get("cmd") {
-            Json::Null => Command::Cluster(decode_cluster(j)?),
+            Json::Null => Command::Cluster(decode_cluster(j, payload)?),
+            _ if framed => {
+                return Err(TmfgError::protocol(
+                    "binary frames carry batch clustering requests only (no 'cmd')",
+                ))
+            }
             cmd => {
                 let name = cmd
                     .as_str()
@@ -309,7 +407,8 @@ fn decode_tenant(j: &Json) -> Result<Option<String>, TmfgError> {
     }
 }
 
-fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
+fn decode_cluster(j: &Json, payload: Option<Vec<f32>>) -> Result<ClusterSpec, TmfgError> {
+    let framed = payload.is_some();
     let algo = opt_algo(j)?;
     let k = opt_usize(j, "k")?.unwrap_or(0);
     let trace = match j.get("trace") {
@@ -331,6 +430,43 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
     let sparse_seed = opt_usize(j, "sparse_seed")?.map(|s| s as u64);
     if sparse_seed.is_some() && sparse_k.is_none() {
         return Err(TmfgError::protocol("sparse_seed requires sparse_k"));
+    }
+    // The remaining k-NN knobs: projection dims, shortlist multiplier,
+    // ANN refinement iterations. Each is resource-capped and only
+    // meaningful in sparse mode.
+    let sparse_dims = match opt_usize(j, "sparse_dims")? {
+        Some(0) => return Err(TmfgError::protocol("sparse_dims must be >= 1")),
+        Some(d) if d > MAX_PROJECTION_DIMS => {
+            return Err(TmfgError::protocol(format!(
+                "sparse_dims must be <= {MAX_PROJECTION_DIMS}, got {d}"
+            )))
+        }
+        d => d,
+    };
+    let sparse_pool = match opt_usize(j, "sparse_pool")? {
+        Some(0) => return Err(TmfgError::protocol("sparse_pool must be >= 1")),
+        Some(p) if p > MAX_POOL_FACTOR => {
+            return Err(TmfgError::protocol(format!(
+                "sparse_pool must be <= {MAX_POOL_FACTOR}, got {p}"
+            )))
+        }
+        p => p,
+    };
+    // 0 is meaningful (refinement off), so only the upper bound binds.
+    let sparse_iters = match opt_usize(j, "sparse_iters")? {
+        Some(it) if it > MAX_ANN_ITERS => {
+            return Err(TmfgError::protocol(format!(
+                "sparse_iters must be <= {MAX_ANN_ITERS}, got {it}"
+            )))
+        }
+        it => it,
+    };
+    if sparse_k.is_none()
+        && (sparse_dims.is_some() || sparse_pool.is_some() || sparse_iters.is_some())
+    {
+        return Err(TmfgError::protocol(
+            "sparse_dims/sparse_pool/sparse_iters require sparse_k",
+        ));
     }
     let apsp = match j.get("apsp") {
         Json::Null => None,
@@ -387,7 +523,13 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
     } else {
         None
     };
-    let max_series = if sparse_k.is_some() { MAX_SPARSE_BATCH_SERIES } else { MAX_BATCH_SERIES };
+    // The binary frame raises the sparse cap to the registry ceiling;
+    // the JSON line protocol keeps the text-sized caps.
+    let max_series = match (sparse_k.is_some(), framed) {
+        (true, true) => MAX_BINARY_SPARSE_SERIES,
+        (true, false) => MAX_SPARSE_BATCH_SERIES,
+        (false, _) => MAX_BATCH_SERIES,
+    };
     let source = match j.get("dataset") {
         Json::Null => {
             let n = opt_usize(j, "n")?
@@ -395,11 +537,24 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
             if n > max_series {
                 return Err(TmfgError::protocol(format!(
                     "n must be <= {max_series} for inline data \
-                     ({MAX_SPARSE_BATCH_SERIES} with sparse_k), got {n}"
+                     ({MAX_SPARSE_BATCH_SERIES} with sparse_k, \
+                     {MAX_BINARY_SPARSE_SERIES} with sparse_k in a binary \
+                     frame), got {n}"
                 )));
             }
             let l = opt_usize(j, "l")?.ok_or_else(|| TmfgError::protocol("missing l"))?;
-            let data = finite_data(j, "data")?;
+            let data = match payload {
+                Some(p) => {
+                    if !matches!(j.get("data"), Json::Null) {
+                        return Err(TmfgError::protocol(
+                            "binary-framed requests carry the panel in the \
+                             frame payload, not a 'data' field",
+                        ));
+                    }
+                    p
+                }
+                None => finite_data(j, "data")?,
+            };
             // checked: a huge n must not wrap n*l past the length check
             // (in release the wrapped product could match data.len() and
             // reach allocation with absurd dimensions).
@@ -418,6 +573,11 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
             ClusterSource::Inline { n, l, data }
         }
         v => {
+            if payload.as_ref().is_some_and(|p| !p.is_empty()) {
+                return Err(TmfgError::protocol(
+                    "named-dataset frames must carry an empty payload",
+                ));
+            }
             let name = v
                 .as_str()
                 .ok_or_else(|| TmfgError::protocol("field 'dataset' must be a string"))?;
@@ -446,7 +606,8 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
                     return Err(TmfgError::protocol(format!(
                         "dataset '{name}' resolves to n={n} > {max_series}; \
                          reduce scale, request sparse mode (sparse_k, cap \
-                         {MAX_SPARSE_BATCH_SERIES}), or use the CLI/library"
+                         {MAX_SPARSE_BATCH_SERIES}; {MAX_BINARY_SPARSE_SERIES} \
+                         via a binary frame), or use the CLI/library"
                     )));
                 }
             }
@@ -457,7 +618,19 @@ fn decode_cluster(j: &Json) -> Result<ClusterSpec, TmfgError> {
             }
         }
     };
-    Ok(ClusterSpec { source, algo, k, sparse_k, sparse_seed, apsp, hub, trace })
+    Ok(ClusterSpec {
+        source,
+        algo,
+        k,
+        sparse_k,
+        sparse_seed,
+        sparse_dims,
+        sparse_pool,
+        sparse_iters,
+        apsp,
+        hub,
+        trace,
+    })
 }
 
 fn decode_open_stream(j: &Json) -> Result<StreamOpen, TmfgError> {
@@ -498,6 +671,23 @@ fn decode_open_stream(j: &Json) -> Result<StreamOpen, TmfgError> {
 }
 
 // ---- encode ---------------------------------------------------------------
+
+/// Encode a binary request frame: magic, u32 LE header length, u64 LE
+/// payload byte length, the JSON header, then the f32 LE payload. The
+/// caller is responsible for putting `"v": 2` in the header (decode
+/// rejects framed requests pinned below v2).
+pub fn encode_frame(header: &Json, payload: &[f32]) -> Vec<u8> {
+    let h = header.to_string();
+    let mut out = Vec::with_capacity(16 + h.len() + payload.len() * 4);
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.extend_from_slice(&(h.len() as u32).to_le_bytes());
+    out.extend_from_slice(&((payload.len() as u64 * 4).to_le_bytes()));
+    out.extend_from_slice(h.as_bytes());
+    for v in payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
 
 /// An `{"ok": true}` response echoing the request id, plus extra fields.
 pub fn ok_response(id: &Json, fields: Vec<(&str, Json)>) -> Json {
@@ -846,6 +1036,124 @@ mod tests {
         let e = Request::decode(&parse(&format!(r#"{{"cmd": "ping", "tenant": "{long}"}}"#)))
             .unwrap_err();
         assert_eq!(e.code(), "protocol");
+    }
+
+    #[test]
+    fn knob_fields_decode_and_validate() {
+        let r = Request::decode(&parse(
+            r#"{"dataset": "CBF", "sparse_k": 16, "sparse_dims": 24,
+                "sparse_pool": 8, "sparse_iters": 3}"#,
+        ))
+        .unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert_eq!(spec.sparse_dims, Some(24));
+        assert_eq!(spec.sparse_pool, Some(8));
+        assert_eq!(spec.sparse_iters, Some(3));
+        // iters = 0 is a valid "refinement off" setting
+        let r = Request::decode(&parse(
+            r#"{"dataset": "CBF", "sparse_k": 16, "sparse_iters": 0}"#,
+        ))
+        .unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert_eq!(spec.sparse_iters, Some(0));
+        for line in [
+            r#"{"dataset": "CBF", "sparse_k": 16, "sparse_dims": 0}"#,
+            r#"{"dataset": "CBF", "sparse_k": 16, "sparse_dims": 100000}"#,
+            r#"{"dataset": "CBF", "sparse_k": 16, "sparse_pool": 0}"#,
+            r#"{"dataset": "CBF", "sparse_k": 16, "sparse_pool": 100000}"#,
+            r#"{"dataset": "CBF", "sparse_k": 16, "sparse_iters": 100000}"#,
+            r#"{"dataset": "CBF", "sparse_dims": 16}"#,
+            r#"{"dataset": "CBF", "sparse_pool": 4}"#,
+            r#"{"dataset": "CBF", "sparse_iters": 2}"#,
+        ] {
+            let e = Request::decode(&parse(line)).unwrap_err();
+            assert_eq!(e.code(), "protocol", "{line}");
+            assert!(e.to_string().contains("sparse"), "{line}: {e}");
+        }
+    }
+
+    #[test]
+    fn frame_decode_inline_payload() {
+        let hdr = parse(r#"{"id": 4, "v": 2, "n": 2, "l": 2, "k": 1}"#);
+        let r = Request::decode_frame(&hdr, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(r.v, 2);
+        let Command::Cluster(spec) = r.body else { panic!() };
+        let ClusterSource::Inline { n, l, data } = spec.source else { panic!() };
+        assert_eq!((n, l), (2, 2));
+        assert_eq!(data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn frame_decode_named_empty_payload() {
+        let hdr = parse(r#"{"v": 2, "dataset": "CBF", "sparse_k": 8}"#);
+        let r = Request::decode_frame(&hdr, vec![]).unwrap();
+        let Command::Cluster(spec) = r.body else { panic!() };
+        assert!(matches!(spec.source, ClusterSource::Named { .. }));
+        // a named frame with a non-empty payload is malformed
+        let e = Request::decode_frame(&hdr, vec![1.0]).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("empty payload"), "{e}");
+    }
+
+    #[test]
+    fn frame_requires_v2_and_cluster_body() {
+        let hdr = parse(r#"{"v": 1, "n": 2, "l": 2, "k": 1}"#);
+        let e = Request::decode_frame(&hdr, vec![0.0; 4]).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("v >= 2"), "{e}");
+        // omitting v is fine: it defaults to the current version (2)
+        let hdr = parse(r#"{"n": 2, "l": 2, "k": 1}"#);
+        assert!(Request::decode_frame(&hdr, vec![0.0; 4]).is_ok());
+        let e = Request::decode_frame(&parse(r#"{"v": 2, "cmd": "ping"}"#), vec![])
+            .unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("clustering"), "{e}");
+    }
+
+    #[test]
+    fn frame_rejects_data_field_and_non_finite_payload() {
+        let hdr = parse(r#"{"v": 2, "n": 2, "l": 2, "data": [1,2,3,4], "k": 1}"#);
+        let e = Request::decode_frame(&hdr, vec![0.0; 4]).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("payload"), "{e}");
+        let hdr = parse(r#"{"v": 2, "n": 2, "l": 2, "k": 1}"#);
+        let e = Request::decode_frame(&hdr, vec![1.0, f32::NAN, 0.0, 0.0]).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        assert!(e.to_string().contains("non-finite"), "{e}");
+    }
+
+    #[test]
+    fn frame_raises_sparse_cap_only() {
+        // past the line-protocol sparse cap, inside the binary one
+        let hdr = parse(r#"{"v": 2, "dataset": "synth-large-1048576", "sparse_k": 32}"#);
+        assert!(Request::decode_frame(&hdr, vec![]).is_ok());
+        // the same request over the line protocol stays rejected
+        let e = Request::decode(&parse(
+            r#"{"dataset": "synth-large-1048576", "sparse_k": 32}"#,
+        ))
+        .unwrap_err();
+        assert_eq!(e.code(), "protocol");
+        // dense framed requests keep the dense cap
+        let hdr = parse(r#"{"v": 2, "dataset": "demo-16384"}"#);
+        let e = Request::decode_frame(&hdr, vec![]).unwrap_err();
+        assert_eq!(e.code(), "protocol");
+    }
+
+    #[test]
+    fn frame_encode_layout() {
+        let hdr = parse(r#"{"v": 2, "n": 1, "l": 2, "k": 1}"#);
+        let bytes = encode_frame(&hdr, &[1.5, -2.0]);
+        assert_eq!(&bytes[..4], &FRAME_MAGIC);
+        let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let plen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        assert_eq!(plen, 8);
+        assert_eq!(bytes.len(), 16 + hlen + plen);
+        let hdr_str = std::str::from_utf8(&bytes[16..16 + hlen]).unwrap();
+        assert_eq!(Json::parse(hdr_str).unwrap(), hdr);
+        assert_eq!(
+            f32::from_le_bytes(bytes[16 + hlen..16 + hlen + 4].try_into().unwrap()),
+            1.5
+        );
     }
 
     #[test]

@@ -12,9 +12,24 @@
 //! or inline data:
 //!   {"id": 7, "n": 16, "l": 8, "data": [ ... n*l floats ... ], "k": 2}
 //! Sparse k-NN mode (raises the batch cap from 4096 to 65536 series;
-//! responses gain "sparse_k"/"sparse_nnz"/"sparse_fallbacks"):
+//! responses gain "sparse_k"/"sparse_nnz"/"sparse_fallbacks" plus the
+//! effective ANN knobs "sparse_dims"/"sparse_pool"/"sparse_iters"):
 //!   {"id": 7, "dataset": "synth-large-16384", "sparse_k": 32,
 //!    "sparse_seed": 1, "k": 16}
+//! ANN knob overrides (require "sparse_k"): {"sparse_dims": 16,
+//! "sparse_pool": 4, "sparse_iters": 2} tune the projection
+//! dimensionality, shortlist multiplier, and NN-descent refinement
+//! rounds of the large-n k-NN front end.
+//!
+//! **Binary frames (protocol v2, unix event-loop front end):** a
+//! request may arrive as `TMFB` + u32 LE header length + u64 LE payload
+//! bytes + JSON header (same fields as a line request, minus "data") +
+//! little-endian f32 payload, decoded incrementally by
+//! [`crate::net::conn`] so the panel never exists as JSON text. Framed
+//! sparse requests raise the batch cap to 2^20 series
+//! ([`wire::MAX_BINARY_SPARSE_SERIES`]); responses are always JSON
+//! lines, byte-identical to the line protocol's. See
+//! [`crate::api::wire`] for the exact layout.
 //! APSP control: {"apsp": "exact"|"approx"|"auto"} overrides the
 //! algorithm's default mode; {"hub_n": 32, "hub_radius": 2.0,
 //! "hub_q": 4} tune the streaming hub oracle (approx/auto modes run it
@@ -652,8 +667,15 @@ fn run_cluster(
     };
     let mut req = req.algo(algo).engine(engine.clone());
     if let Some(sk) = spec.sparse_k {
-        // decode() validated 1 <= sparse_k <= MAX_SPARSE_K.
-        req = req.sparse_knn(sk, spec.sparse_seed.unwrap_or(crate::sparse::DEFAULT_KNN_SEED));
+        // decode() validated 1 <= sparse_k <= MAX_SPARSE_K and capped
+        // the ANN knobs (dims/pool/iters; None = engine default).
+        req = req.sparse_knn_tuned(
+            sk,
+            spec.sparse_seed.unwrap_or(crate::sparse::DEFAULT_KNN_SEED),
+            spec.sparse_dims,
+            spec.sparse_pool,
+            spec.sparse_iters,
+        );
     }
     if let Some(mode) = spec.apsp {
         req = req.apsp(mode);
@@ -755,6 +777,11 @@ fn process(
                 fields.push(("sparse_k", Json::Num(sp.k as f64)));
                 fields.push(("sparse_nnz", Json::Num(sp.nnz as f64)));
                 fields.push(("sparse_fallbacks", Json::Num(sp.fallbacks as f64)));
+                // Echo the effective ANN configuration so clients can
+                // see what the engine actually ran with.
+                fields.push(("sparse_dims", Json::Num(sp.dims as f64)));
+                fields.push(("sparse_pool", Json::Num(sp.pool as f64)));
+                fields.push(("sparse_iters", Json::Num(sp.iters as f64)));
             }
             match out.cache {
                 CacheStatus::Hit => fields.push(("cache", Json::str("hit"))),
@@ -785,6 +812,9 @@ fn process(
                             ("k", Json::Num(sp.k as f64)),
                             ("nnz", Json::Num(sp.nnz as f64)),
                             ("fallbacks", Json::Num(sp.fallbacks as f64)),
+                            ("dims", Json::Num(sp.dims as f64)),
+                            ("pool", Json::Num(sp.pool as f64)),
+                            ("iters", Json::Num(sp.iters as f64)),
                         ])
                     })
                     .unwrap_or(Json::Null);
@@ -1382,40 +1412,12 @@ mod net_front {
             }
             self.inflight_tenant.insert(conn, tenant);
         }
-    }
 
-    impl Handler for NetHandler {
-        fn on_start(&mut self, backend: &'static str) {
-            *self.state.net_backend.lock().unwrap() = backend;
-        }
-
-        fn on_accept(&mut self, _conn: ConnId) {
-            self.state.conns_accepted.fetch_add(1, Ordering::Relaxed);
-            self.state.conns_active.fetch_add(1, Ordering::Relaxed);
-            self.m_accepted.fetch_add(1, Ordering::Relaxed);
-            self.m_active.fetch_add(1, Ordering::Relaxed);
-        }
-
-        fn on_line(&mut self, conn: ConnId, line: &str) -> Disposition {
-            let raw = match Json::parse(line) {
-                Ok(j) => j,
-                Err(e) => {
-                    let err = TmfgError::protocol(format!("bad json: {e}"));
-                    return Disposition::Respond(
-                        wire::error_response(&Json::Null, &err).to_string(),
-                    );
-                }
-            };
-            // The single validated parse path: typed command or typed
-            // error.
-            let req = match wire::Request::decode(&raw) {
-                Ok(r) => r,
-                Err(e) => {
-                    return Disposition::Respond(
-                        wire::error_response(raw.get("id"), &e).to_string(),
-                    )
-                }
-            };
+        /// The shared admission pipeline for decoded requests, line- or
+        /// frame-borne: fast-path commands answer inline; everything
+        /// else passes the tenant quota, the queue-depth bound, and the
+        /// delay gate before being submitted to the dispatch tier.
+        fn admit(&mut self, conn: ConnId, req: wire::Request) -> Disposition {
             match &req.body {
                 Command::Ping => {
                     return Disposition::Respond(wire::ok_response(&req.id, vec![]).to_string())
@@ -1526,6 +1528,80 @@ mod net_front {
             }
             self.note_admitted(conn, tenant);
             Disposition::Submitted
+        }
+    }
+
+    impl Handler for NetHandler {
+        fn on_start(&mut self, backend: &'static str) {
+            *self.state.net_backend.lock().unwrap() = backend;
+        }
+
+        fn on_accept(&mut self, _conn: ConnId) {
+            self.state.conns_accepted.fetch_add(1, Ordering::Relaxed);
+            self.state.conns_active.fetch_add(1, Ordering::Relaxed);
+            self.m_accepted.fetch_add(1, Ordering::Relaxed);
+            self.m_active.fetch_add(1, Ordering::Relaxed);
+        }
+
+        fn on_line(&mut self, conn: ConnId, line: &str) -> Disposition {
+            let raw = match Json::parse(line) {
+                Ok(j) => j,
+                Err(e) => {
+                    let err = TmfgError::protocol(format!("bad json: {e}"));
+                    return Disposition::Respond(
+                        wire::error_response(&Json::Null, &err).to_string(),
+                    );
+                }
+            };
+            // The single validated parse path: typed command or typed
+            // error.
+            let req = match wire::Request::decode(&raw) {
+                Ok(r) => r,
+                Err(e) => {
+                    return Disposition::Respond(
+                        wire::error_response(raw.get("id"), &e).to_string(),
+                    )
+                }
+            };
+            self.admit(conn, req)
+        }
+
+        /// Binary frames share the JSON path's admission pipeline: the
+        /// header decodes through [`wire::Request::decode_frame`] (which
+        /// also absorbs the payload as the request panel), then the same
+        /// quota/depth/delay gates apply. Responses are always JSON
+        /// lines — byte-identical to the line protocol's.
+        fn on_frame(
+            &mut self,
+            conn: ConnId,
+            frame: crate::net::conn::FrameRequest,
+        ) -> Disposition {
+            let raw = match Json::parse(&frame.header) {
+                Ok(j) => j,
+                Err(e) => {
+                    let err = TmfgError::protocol(format!("bad frame header json: {e}"));
+                    return Disposition::Respond(
+                        wire::error_response(&Json::Null, &err).to_string(),
+                    );
+                }
+            };
+            let req = match wire::Request::decode_frame(&raw, frame.payload) {
+                Ok(r) => r,
+                Err(e) => {
+                    return Disposition::Respond(
+                        wire::error_response(raw.get("id"), &e).to_string(),
+                    )
+                }
+            };
+            self.admit(conn, req)
+        }
+
+        /// The frame decoder rejected the byte stream itself (bad
+        /// lengths, over-cap payload): typed `protocol` error, then the
+        /// loop closes the connection.
+        fn on_bad_frame(&mut self, _conn: ConnId, reason: &str) -> String {
+            let err = TmfgError::protocol(format!("malformed frame: {reason}"));
+            wire::error_response(&Json::Null, &err).to_string()
         }
 
         fn on_complete(&mut self, conn: ConnId) {
@@ -1871,6 +1947,20 @@ impl Client {
 
     pub fn call(&mut self, req: &Json) -> std::io::Result<Json> {
         writeln!(self.stream, "{}", req.to_string())?;
+        self.read_response()
+    }
+
+    /// Send one request as a binary frame (protocol v2): `header` is the
+    /// request object minus "data", `payload` the row-major panel. The
+    /// response comes back as a JSON line, exactly like [`Self::call`].
+    pub fn call_frame(&mut self, header: &Json, payload: &[f32]) -> std::io::Result<Json> {
+        let bytes = wire::encode_frame(header, payload);
+        self.stream.write_all(&bytes)?;
+        self.stream.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> std::io::Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(&line)

@@ -365,6 +365,36 @@ pub fn standardize_rows(x: &Matrix) -> Matrix {
     Matrix { rows: x.rows, cols: x.cols, data: standardize_rows_generic::<f32>(x) }
 }
 
+/// [`standardize_rows`] in place — the large-panel companion: callers
+/// that own the panel and no longer need the raw values pay zero extra
+/// allocation instead of a second n·L copy. Bit-identical to the
+/// out-of-place f32 path (same f64 statistics, same per-row fold).
+pub fn standardize_rows_inplace(x: &mut Matrix) {
+    let (n, l) = (x.rows, x.cols);
+    let p = SendPtr(x.data.as_mut_ptr());
+    parlay::parallel_for(n, 1, |i| {
+        // SAFETY: row i is read and written only by iteration i; the
+        // read-only stats slice is dropped before the writes begin.
+        let (mean, ss) = {
+            let row = unsafe { std::slice::from_raw_parts(p.0.add(i * l), l) };
+            let mean = row.iter().map(|&v| v as f64).sum::<f64>() / l.max(1) as f64;
+            let mut ss = 0.0f64;
+            for &v in row {
+                let d = v as f64 - mean;
+                ss += d * d;
+            }
+            (mean, ss)
+        };
+        let inv = if <f32 as CorrScalar>::degenerate_row(ss) { 0.0 } else { 1.0 / ss.sqrt() };
+        for j in 0..l {
+            unsafe {
+                let v = *p.0.add(i * l + j) as f64;
+                p.write(i * l + j, ((v - mean) * inv) as f32);
+            }
+        }
+    });
+}
+
 /// Pearson correlation matrix: S = Ẑ Ẑᵀ with Ẑ = standardized rows, f32
 /// storage and accumulation throughout (the production path). The Gram
 /// accumulation dispatches per-host ([`gram_kernel`]): the cache-blocked
@@ -451,6 +481,16 @@ mod tests {
             assert!(mean.abs() < 1e-6, "mean={mean}");
             assert!((norm - 1.0).abs() < 1e-5, "norm={norm}");
         }
+    }
+
+    #[test]
+    fn standardize_inplace_bit_identical_to_out_of_place() {
+        let mut r = Rng::new(3);
+        let x = Matrix::from_vec(7, 33, (0..7 * 33).map(|_| r.next_f32() * 4.0 - 2.0).collect());
+        let z = standardize_rows(&x);
+        let mut y = x.clone();
+        standardize_rows_inplace(&mut y);
+        assert!(z.data.iter().zip(&y.data).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! Dataset IO: UCR-style CSV (label, v1, v2, …, vL per line) and a fast
 //! little-endian binary matrix format for caching similarity matrices.
+//!
+//! Both readers are written for the n=2^20 regime: ingestion is
+//! chunked/streaming, so peak memory is the destination buffer plus one
+//! IO chunk — never a second full-panel copy (the CSV path used to hold
+//! `Vec<Vec<f32>>` rows *and* the flat matrix; the binary path used to
+//! hold the full byte image *and* the f32 vec).
 
 use super::matrix::Matrix;
 use super::synth::Dataset;
@@ -7,14 +13,23 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
+/// IO chunk for the binary matrix format (multiple of 4 bytes). Bounds
+/// the transient byte buffer while reading/writing matrices of any size.
+const BIN_CHUNK_BYTES: usize = 1 << 20;
+
 /// Load a UCR-style CSV/TSV: each line `label,v1,...,vL` (comma or tab
 /// separated). Labels may be arbitrary integers; they are re-indexed to
 /// 0..k densely.
+///
+/// Values stream straight into the flat row-major panel buffer — no
+/// per-row vectors, no second copy: peak memory is the panel itself
+/// plus one line of text.
 pub fn load_ucr_csv(path: &Path) -> Result<Dataset> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let reader = BufReader::new(f);
     let mut raw_labels: Vec<i64> = Vec::new();
-    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut data: Vec<f32> = Vec::new();
+    let mut row_len: Option<usize> = None;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         let t = line.trim();
@@ -30,26 +45,27 @@ pub fn load_ucr_csv(path: &Path) -> Result<Dataset> {
             .parse::<f64>()
             .map(|v| v as i64)
             .with_context(|| format!("line {}: bad label", lineno + 1))?;
-        let vals: Vec<f32> = it
-            .map(|s| s.trim().parse::<f32>())
-            .collect::<std::result::Result<_, _>>()
-            .with_context(|| format!("line {}: bad value", lineno + 1))?;
-        if let Some(first) = rows.first() {
-            if vals.len() != first.len() {
-                bail!(
-                    "line {}: length {} != {}",
-                    lineno + 1,
-                    vals.len(),
-                    first.len()
-                );
+        let start = data.len();
+        for s in it {
+            let v = s
+                .trim()
+                .parse::<f32>()
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            data.push(v);
+        }
+        let got = data.len() - start;
+        match row_len {
+            None => row_len = Some(got),
+            Some(l) if got != l => {
+                bail!("line {}: length {got} != {l}", lineno + 1)
             }
+            Some(_) => {}
         }
         raw_labels.push(label);
-        rows.push(vals);
     }
-    if rows.is_empty() {
+    let Some(l) = row_len else {
         bail!("no data rows in {}", path.display());
-    }
+    };
     // dense re-indexing of labels
     let mut uniq: Vec<i64> = raw_labels.clone();
     uniq.sort_unstable();
@@ -58,11 +74,7 @@ pub fn load_ucr_csv(path: &Path) -> Result<Dataset> {
         .iter()
         .map(|l| uniq.binary_search(l).unwrap())
         .collect();
-    let (n, l) = (rows.len(), rows[0].len());
-    let mut data = Vec::with_capacity(n * l);
-    for r in rows {
-        data.extend(r);
-    }
+    let n = raw_labels.len();
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
@@ -91,20 +103,28 @@ pub fn save_ucr_csv(ds: &Dataset, path: &Path) -> Result<()> {
 
 const MAGIC: &[u8; 8] = b"TMFGMAT1";
 
-/// Save a matrix in a simple binary format (magic, rows, cols, f32 LE data).
+/// Save a matrix in a simple binary format (magic, rows, cols, f32 LE
+/// data), serialized through one reusable [`BIN_CHUNK_BYTES`] buffer.
 pub fn save_matrix_bin(m: &Matrix, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
     w.write_all(MAGIC)?;
     w.write_all(&(m.rows as u64).to_le_bytes())?;
     w.write_all(&(m.cols as u64).to_le_bytes())?;
-    for &v in &m.data {
-        w.write_all(&v.to_le_bytes())?;
+    let mut buf: Vec<u8> = Vec::with_capacity(BIN_CHUNK_BYTES);
+    for chunk in m.data.chunks(BIN_CHUNK_BYTES / 4) {
+        buf.clear();
+        for &v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
     }
     Ok(())
 }
 
-/// Load a matrix written by [`save_matrix_bin`].
+/// Load a matrix written by [`save_matrix_bin`], decoding through a
+/// fixed [`BIN_CHUNK_BYTES`] buffer straight into the f32 vec — peak
+/// memory is the matrix itself plus one chunk, never a full byte image.
 pub fn load_matrix_bin(path: &Path) -> Result<Matrix> {
     let mut f = std::fs::File::open(path)?;
     let mut header = [0u8; 24];
@@ -114,12 +134,24 @@ pub fn load_matrix_bin(path: &Path) -> Result<Matrix> {
     }
     let rows = u64::from_le_bytes(header[8..16].try_into().unwrap()) as usize;
     let cols = u64::from_le_bytes(header[16..24].try_into().unwrap()) as usize;
-    let mut buf = vec![0u8; rows * cols * 4];
-    f.read_exact(&mut buf)?;
-    let data: Vec<f32> = buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect();
+    let total = rows
+        .checked_mul(cols)
+        .and_then(|t| t.checked_mul(4))
+        .with_context(|| format!("matrix dims overflow in {}", path.display()))?;
+    let mut data: Vec<f32> = Vec::with_capacity(total / 4);
+    let mut buf = vec![0u8; BIN_CHUNK_BYTES.min(total.max(4))];
+    let mut left = total;
+    while left > 0 {
+        // Both `left` and the buffer are multiples of 4, so every chunk
+        // decodes to whole f32s.
+        let take = left.min(buf.len());
+        f.read_exact(&mut buf[..take])
+            .with_context(|| format!("truncated matrix data in {}", path.display()))?;
+        for c in buf[..take].chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        left -= take;
+    }
     Ok(Matrix::from_vec(rows, cols, data))
 }
 
@@ -170,6 +202,29 @@ mod tests {
         save_matrix_bin(&m, &p).unwrap();
         let back = load_matrix_bin(&p).unwrap();
         assert_eq!(m, back);
+    }
+
+    #[test]
+    fn matrix_bin_roundtrip_across_chunk_boundary() {
+        // > BIN_CHUNK_BYTES of payload so the chunked reader/writer
+        // cross at least one buffer boundary (and a ragged final chunk).
+        let total = BIN_CHUNK_BYTES / 4 + 1234;
+        let m = Matrix::from_vec(1, total, (0..total).map(|i| i as f32 * 0.5 - 7.0).collect());
+        let p = tmpdir().join("big.bin");
+        save_matrix_bin(&m, &p).unwrap();
+        let back = load_matrix_bin(&p).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn matrix_bin_truncated_data_errors() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let p = tmpdir().join("trunc.bin");
+        save_matrix_bin(&m, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        let err = load_matrix_bin(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
     }
 
     #[test]

@@ -9,6 +9,25 @@
 //! every basin's group-distance matrix is built in one parallel pass
 //! over (basin, row) tasks — the per-basin loop is only the cheap,
 //! deterministic NN-chain + merge application.
+//!
+//! Two mechanisms bound the agglomeration past the dense-era sizes
+//! (n ≫ 16384), both deterministic and both identity below their
+//! thresholds:
+//!
+//! * **Representative sampling** ([`REP_CAP`]): a group with more than
+//!   `REP_CAP` members contributes an evenly-spaced sample of its
+//!   (sorted) member list to every group-to-group distance, capping the
+//!   member-pair work per pair at `REP_CAP²` instead of |g|·|h| — at
+//!   n=2^20 the basin layer would otherwise fold O(n²) APSP entries.
+//! * **Chunked coarsening** ([`GROUP_CHUNK`]): a layer with more than
+//!   `GROUP_CHUNK` groups never materializes its m×m distance matrix.
+//!   Contiguous blocks of `GROUP_CHUNK` groups are fully agglomerated,
+//!   each block's union becomes one coarse group, and the coarse level
+//!   recurses — matrix memory stays ≤ `GROUP_CHUNK²` f32s while the
+//!   merge count per layer is unchanged (every block of c groups emits
+//!   c−1 merges). Block-local heights are exact under the sampled
+//!   metric; cross-block heights are computed between block unions, the
+//!   documented approximation that makes this regime runnable at all.
 
 use super::bubble::BubbleTree;
 use super::converging::{assign, Assignment};
@@ -20,12 +39,40 @@ use crate::data::matrix::{Matrix, SimilarityLookup};
 use crate::error::TmfgError;
 use crate::parlay;
 use crate::tmfg::TmfgResult;
-use std::collections::HashMap;
+
+/// Groups larger than this contribute an evenly-spaced member sample to
+/// group-distance aggregation (identity for smaller groups, so every
+/// sub-threshold result is byte-identical to the unsampled code).
+pub const REP_CAP: usize = 128;
+
+/// Layers with more than this many groups agglomerate through chunked
+/// coarsening instead of one m×m distance matrix (4096² f32 = 64 MiB,
+/// the same ceiling the dense-APSP auto mode uses).
+pub const GROUP_CHUNK: usize = 4096;
+
+/// Number of representatives a group of `len` members contributes to
+/// group-distance aggregation.
+#[inline]
+fn rep_take(len: usize) -> usize {
+    len.min(REP_CAP)
+}
+
+/// The `t`-th evenly-spaced representative of `g` (`t < rep_take(len)`).
+/// Identity (`g[t]`) whenever the group is at or under [`REP_CAP`]; the
+/// spacing `t·len/take` is strictly increasing, so representatives are
+/// distinct and the sample order follows the member order.
+#[inline]
+fn rep_pick(g: &[u32], t: usize) -> u32 {
+    g[t * g.len() / rep_take(g.len())]
+}
 
 /// Group-level distances from group `i` to every later group of one
 /// basin, under the pointwise APSP metric: returns d(i, j) for j > i.
 ///
-/// Each member vertex's APSP row is visited once, x-major / y-minor —
+/// Groups larger than [`REP_CAP`] are represented by an evenly-spaced
+/// member sample on both sides (identity below the cap), so a pair of
+/// groups costs at most `REP_CAP²` APSP reads regardless of group size.
+/// Each representative's APSP row is visited once, x-major / y-minor —
 /// the same fold order (and therefore the same f64 accumulation bits)
 /// as a pairwise `at` loop. Dense oracles expose rows zero-copy; a
 /// streaming oracle materializes the row into `scratch` when the later
@@ -46,9 +93,11 @@ fn group_row_distances(
     };
     let mut agg = vec![init; m - i - 1];
     let dense = apsp.as_dense();
-    // Row entries the later groups will read (per member vertex).
-    let reads: usize = groups[i + 1..].iter().map(Vec::len).sum();
-    for &x in &groups[i] {
+    // Row entries the later groups will read (per representative).
+    let reads: usize = groups[i + 1..].iter().map(|g| rep_take(g.len())).sum();
+    let xi = &groups[i];
+    for t in 0..rep_take(xi.len()) {
+        let x = rep_pick(xi, t);
         let row: Option<&[f32]> = if let Some(mat) = dense {
             Some(mat.row(x as usize))
         } else if reads * 2 >= n {
@@ -62,7 +111,8 @@ fn group_row_distances(
         };
         for (jj, g) in groups[i + 1..].iter().enumerate() {
             let a = &mut agg[jj];
-            for &y in g {
+            for u in 0..rep_take(g.len()) {
+                let y = rep_pick(g, u);
                 let d = match row {
                     Some(r) => r[y as usize] as f64,
                     None => apsp.at(x as usize, y as usize) as f64,
@@ -77,10 +127,71 @@ fn group_row_distances(
     }
     if linkage == Linkage::Average {
         for (jj, g) in groups[i + 1..].iter().enumerate() {
-            agg[jj] /= (groups[i].len() * g.len()) as f64;
+            agg[jj] /= (rep_take(xi.len()) * rep_take(g.len())) as f64;
         }
     }
     agg.into_iter().map(|v| v as f32).collect()
+}
+
+/// One basin's m×m group-distance matrix, rows filled in parallel.
+fn layer_matrix(apsp: &dyn ApspOracle, groups: &[Vec<u32>], linkage: Linkage) -> Matrix {
+    use crate::parlay::SendPtr;
+    let m = groups.len();
+    let mut d = Matrix::zeros(m, m);
+    let ptr = SendPtr(d.data.as_mut_ptr());
+    let ptr = &ptr;
+    parlay::parallel_for_chunks(m - 1, 1, |lo, hi| {
+        let mut scratch: Vec<f32> = Vec::new();
+        for i in lo..hi {
+            let row = group_row_distances(apsp, groups, i, linkage, &mut scratch);
+            for (jj, v) in row.into_iter().enumerate() {
+                let j = i + 1 + jj;
+                // SAFETY: cells (i,j)/(j,i) are written only by row task i.
+                unsafe {
+                    ptr.write(i * m + j, v);
+                    ptr.write(j * m + i, v);
+                }
+            }
+        }
+    });
+    d
+}
+
+/// Fully agglomerate one basin's groups into `builder` (each group's
+/// first vertex is its representative), never holding more than a
+/// `chunk`×`chunk` distance matrix.
+///
+/// At or under `chunk` groups this is exact NN-chain HAC on the full
+/// group-distance matrix. Above it, contiguous blocks of `chunk` groups
+/// are agglomerated recursively and each block's member union becomes
+/// one coarse group for the next level — every block of c groups still
+/// emits exactly c−1 merges, so the layer's merge count is unchanged
+/// and the dendrogram stays complete.
+fn agglomerate_groups(
+    builder: &mut DendroBuilder,
+    apsp: &dyn ApspOracle,
+    groups: &[Vec<u32>],
+    linkage: Linkage,
+    chunk: usize,
+) {
+    let m = groups.len();
+    if m <= 1 {
+        return;
+    }
+    if m <= chunk {
+        let d = layer_matrix(apsp, groups, linkage);
+        let sizes: Vec<f64> = groups.iter().map(|g| g.len() as f64).collect();
+        for mg in nn_chain_hac(&d, &sizes, linkage) {
+            builder.merge(groups[mg.a as usize][0], groups[mg.b as usize][0], mg.height);
+        }
+        return;
+    }
+    let mut coarse: Vec<Vec<u32>> = Vec::with_capacity(m.div_ceil(chunk));
+    for block in groups.chunks(chunk) {
+        agglomerate_groups(builder, apsp, block, linkage, chunk);
+        coarse.push(block.iter().flatten().copied().collect());
+    }
+    agglomerate_groups(builder, apsp, &coarse, linkage, chunk);
 }
 
 /// HAC over pre-formed groups for a whole layer at once: every basin's
@@ -88,12 +199,23 @@ fn group_row_distances(
 /// (basin, row) tasks, then NN-chain merges are applied to `builder`
 /// sequentially in basin order (each group's first vertex is its
 /// representative) — deterministic regardless of thread count.
+///
+/// When any basin holds more than [`GROUP_CHUNK`] groups the layer
+/// switches to per-basin [`agglomerate_groups`] (chunked coarsening, one
+/// basin at a time) so matrix memory stays bounded; below that threshold
+/// the one-pass path is used unchanged.
 fn agglomerate_layer(
     builder: &mut DendroBuilder,
     apsp: &dyn ApspOracle,
     basins: &[Vec<Vec<u32>>],
     linkage: Linkage,
 ) {
+    if basins.iter().any(|groups| groups.len() > GROUP_CHUNK) {
+        for groups in basins {
+            agglomerate_groups(builder, apsp, groups, linkage, GROUP_CHUNK);
+        }
+        return;
+    }
     let mut mats: Vec<Matrix> = basins
         .iter()
         .map(|groups| {
@@ -176,59 +298,70 @@ pub fn dbht_dendrogram<S: SimilarityLookup + ?Sized>(
     let dir = direct_edges(&bt, &tmfg.adjacency(), s);
     let assignment = assign(&bt, &dir, s, apsp)?;
 
-    // groups[(basin, bubble)] = vertices
-    let mut groups: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
-    for v in 0..n {
-        groups
-            .entry((assignment.vertex_basin[v], assignment.vertex_bubble[v]))
-            .or_default()
-            .push(v as u32);
+    // Sort-based grouping: one (basin, bubble, vertex) triple per
+    // vertex, sorted once. Deterministic, no hash maps, and every
+    // group's member vector is built exactly once — layer 1 borrows the
+    // nested structure that layer 2 then consumes, so n=2^20 does not
+    // pay a second copy of the grouping.
+    let mut items: Vec<(u32, u32, u32)> = (0..n)
+        .map(|v| (assignment.vertex_basin[v], assignment.vertex_bubble[v], v as u32))
+        .collect();
+    items.sort_unstable();
+    // layer2[b] = basin b's bubble groups, in (basin, bubble) order with
+    // members ascending — the same order the map-based grouping produced.
+    let mut layer2: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut last_basin = None;
+    let mut i = 0;
+    while i < items.len() {
+        let (basin, bubble, _) = items[i];
+        let mut g: Vec<u32> = Vec::new();
+        while i < items.len() && items[i].0 == basin && items[i].1 == bubble {
+            g.push(items[i].2);
+            i += 1;
+        }
+        if last_basin == Some(basin) {
+            layer2.last_mut().expect("basin started").push(g);
+        } else {
+            layer2.push(vec![g]);
+            last_basin = Some(basin);
+        }
     }
+    drop(items);
 
     let mut builder = DendroBuilder::new(n);
 
     // Layer 1: within-bubble-group complete linkage.
-    // Collect groups per basin while we're at it.
-    let mut basin_groups: HashMap<u32, Vec<Vec<u32>>> = HashMap::new();
-    let mut keys: Vec<(u32, u32)> = groups.keys().copied().collect();
-    keys.sort_unstable();
     // Precompute each group's intra merges in parallel, then apply in a
     // deterministic order. Groups are small relative to n, so pointwise
     // `at` beats materializing whole APSP rows here.
-    let group_list: Vec<&Vec<u32>> = keys.iter().map(|k| &groups[k]).collect();
-    let intra: Vec<Vec<super::linkage::Merge>> = parlay::par_map(group_list.len(), 1, |gi| {
-        let g = group_list[gi];
-        let m = g.len();
-        if m <= 1 {
-            return Vec::new();
-        }
-        let mut d = Matrix::zeros(m, m);
-        for i in 0..m {
-            for j in (i + 1)..m {
-                let v = apsp.at(g[i] as usize, g[j] as usize);
-                d.set(i, j, v);
-                d.set(j, i, v);
+    {
+        let group_list: Vec<&Vec<u32>> = layer2.iter().flatten().collect();
+        let intra: Vec<Vec<super::linkage::Merge>> =
+            parlay::par_map(group_list.len(), 1, |gi| {
+                let g = group_list[gi];
+                let m = g.len();
+                if m <= 1 {
+                    return Vec::new();
+                }
+                let mut d = Matrix::zeros(m, m);
+                for i in 0..m {
+                    for j in (i + 1)..m {
+                        let v = apsp.at(g[i] as usize, g[j] as usize);
+                        d.set(i, j, v);
+                        d.set(j, i, v);
+                    }
+                }
+                nn_chain_hac(&d, &vec![1.0; m], linkage)
+            });
+        for (gi, g) in group_list.iter().enumerate() {
+            for mg in &intra[gi] {
+                builder.merge(g[mg.a as usize], g[mg.b as usize], mg.height);
             }
         }
-        nn_chain_hac(&d, &vec![1.0; m], linkage)
-    });
-    for (gi, key) in keys.iter().enumerate() {
-        let g = &groups[key];
-        for mg in &intra[gi] {
-            builder.merge(g[mg.a as usize], g[mg.b as usize], mg.height);
-        }
-        basin_groups.entry(key.0).or_default().push(g.clone());
     }
 
     // Layer 2: between bubble groups within each basin — one parallel
-    // pass over every basin's group-distance rows. The group lists move
-    // out of the map (it is not read again).
-    let mut basins: Vec<u32> = basin_groups.keys().copied().collect();
-    basins.sort_unstable();
-    let layer2: Vec<Vec<Vec<u32>>> = basins
-        .iter()
-        .map(|b| basin_groups.remove(b).unwrap_or_default())
-        .collect();
+    // pass over every basin's group-distance rows.
     agglomerate_layer(&mut builder, apsp, &layer2, linkage);
 
     // Layer 3: between basins.
@@ -333,6 +466,51 @@ mod tests {
             let apsp = exact_oracle(&CsrGraph::from_tmfg(&r, &s));
             let out = dbht_dendrogram(&s, &r, &apsp, linkage).unwrap();
             assert!(out.dendrogram.is_complete(), "{linkage:?}");
+        }
+    }
+
+    #[test]
+    fn rep_sampling_identity_below_cap_and_even_above() {
+        let small: Vec<u32> = (0..REP_CAP as u32).collect();
+        for t in 0..small.len() {
+            assert_eq!(rep_pick(&small, t), small[t]);
+        }
+        let big: Vec<u32> = (0..(4 * REP_CAP) as u32).collect();
+        assert_eq!(rep_take(big.len()), REP_CAP);
+        let picks: Vec<u32> = (0..REP_CAP).map(|t| rep_pick(&big, t)).collect();
+        // Distinct, ascending, spanning the member list.
+        for w in picks.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(picks[0], 0);
+        assert!(picks[REP_CAP - 1] >= big[big.len() - REP_CAP]);
+    }
+
+    #[test]
+    fn sampled_groups_still_yield_complete_deterministic_dendrogram() {
+        // n=300 with 2 classes typically leaves basins (layer-3 groups)
+        // well past REP_CAP, exercising the sampled aggregation path.
+        let (a, _, _) = run(300, 2, 21, 0.4);
+        let (b, _, _) = run(300, 2, 21, 0.4);
+        assert!(a.dendrogram.is_complete());
+        assert_eq!(a.dendrogram.nodes, b.dendrogram.nodes);
+    }
+
+    #[test]
+    fn chunked_coarsening_emits_full_merge_count() {
+        let ds = SynthSpec::new("t", 60, 48, 3).generate(19);
+        let s = crate::data::corr::pearson_correlation(&ds.data);
+        let r = heap_tmfg(&s, &Default::default()).unwrap();
+        let apsp = exact_oracle(&CsrGraph::from_tmfg(&r, &s));
+        let groups: Vec<Vec<u32>> = (0..12).map(|g| (5 * g..5 * (g + 1)).collect()).collect();
+        for linkage in [Linkage::Single, Linkage::Average, Linkage::Complete] {
+            // Flat (chunk ≥ m) and chunked (chunk of 4 → 3 coarse blocks)
+            // agglomeration must both merge 12 groups with 11 merges.
+            for chunk in [12usize, 4] {
+                let mut builder = DendroBuilder::new(60);
+                agglomerate_groups(&mut builder, &apsp, &groups, linkage, chunk);
+                assert_eq!(builder.n_merges(), groups.len() - 1, "{linkage:?} chunk={chunk}");
+            }
         }
     }
 

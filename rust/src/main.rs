@@ -32,13 +32,18 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
            [--hub-n H] [--hub-radius X] [--hub-q Q]
            [--linkage complete|average|single] [--no-xla] [--check]
            [--sparse-k K] [--sparse-seed N]
+           [--sparse-dims D] [--sparse-pool P] [--sparse-iters I]
            [--newick out.nwk] [--json-out out.json] [--trace out.json]
            (--sparse-k runs the sparse k-NN pipeline: O(n*K) candidate
             memory instead of the dense O(n^2) similarity matrix.
+            --sparse-dims/--sparse-pool/--sparse-iters tune the ANN
+            k-NN stage above the exact cutoff: random-projection
+            dimensions, candidate pool factor, and NN-descent
+            refinement rounds (defaults 16/4/2).
             --apsp approx|auto serves DBHT through the streaming hub
             oracle -- O(n*H) memory, no n^2 distance matrix; --hub-n 0
             means auto (~sqrt(n) hubs). Try
-            --dataset synth-large-16384 --sparse-k 32 --apsp approx.
+            --dataset synth-large-131072 --sparse-k 32 --apsp approx.
             --trace writes a Chrome trace-event JSON of the run --
             load it in Perfetto or chrome://tracing)
   tmfg experiment <table1|fig2|fig3|fig4|fig5|fig6|fig7|apsp|speedup-table|
@@ -56,6 +61,9 @@ const USAGE: &str = "usage: tmfg <run|experiment|gen|serve|stream|info> [flags]
            [--target-queue-delay-ms M] [--recorder-budget BYTES]
            [--flight-log out.jsonl] [--poll-backend]
            (event-loop front end: one OS thread serves every connection;
+            accepts JSON lines and length-prefixed binary frames
+            (protocol v2) on the same connection -- framed sparse
+            requests may carry up to 2^20 series, past the JSON cap;
             requests over --max-queue or a tenant's --tenant-quota get a
             typed \"overloaded\" error; idle connections are reaped after
             --idle-timeout seconds, 0 disables.
@@ -119,7 +127,7 @@ fn cmd_run(args: &Args) {
     if let Some(t) = args.opt_str("threads") {
         parlay::set_num_threads(t.parse().unwrap_or(1));
     }
-    let ds = registry::get_dataset(&name, scale, seed).unwrap_or_else(|| {
+    let mut ds = registry::get_dataset(&name, scale, seed).unwrap_or_else(|| {
         log!(error, "unknown dataset {name}");
         std::process::exit(2);
     });
@@ -165,17 +173,25 @@ fn cmd_run(args: &Args) {
     let trace_session = trace_path.as_ref().map(|_| tmfg::obs::TraceSession::begin());
     let out = if args.has("sparse-k") {
         // Sparse mode goes through the typed API directly: the legacy
-        // Pipeline facade is dense-only.
-        let mut req = tmfg::api::ClusterRequest::panel(ds.data.clone())
-            .labels(ds.labels.clone())
+        // Pipeline facade is dense-only. The panel and labels move into
+        // the request — at n=2^20 a clone here would be a second full
+        // panel resident for the whole run.
+        let panel = std::mem::replace(&mut ds.data, tmfg::data::matrix::Matrix::zeros(0, 0));
+        let labels = std::mem::take(&mut ds.labels);
+        let opt_usize = |key: &str| args.opt_str(key).and_then(|s| s.parse::<usize>().ok());
+        let mut req = tmfg::api::ClusterRequest::panel(panel)
+            .labels(labels)
             .k(ds.n_classes)
             .algo(cfg.algo)
             .linkage(cfg.linkage)
             .hub(hub.clone())
             .check_invariants(cfg.check_invariants)
-            .sparse_knn(
+            .sparse_knn_tuned(
                 args.get_usize("sparse-k", 32),
                 args.get_u64("sparse-seed", tmfg::sparse::DEFAULT_KNN_SEED),
+                opt_usize("sparse-dims"),
+                opt_usize("sparse-pool"),
+                opt_usize("sparse-iters"),
             );
         if let Some(mode) = apsp {
             req = req.apsp(mode);
@@ -194,8 +210,11 @@ fn cmd_run(args: &Args) {
     if let Some(sp) = &out.sparse {
         log!(
             info,
-            "sparse candidates: k={} nnz={} mean degree {:.1}, {} dense-fallback rounds",
+            "sparse candidates: k={} (dims={} pool={} iters={}) nnz={} mean degree {:.1}, {} dense-fallback rounds",
             sp.k,
+            sp.dims,
+            sp.pool,
+            sp.iters,
             sp.nnz,
             sp.mean_degree,
             sp.fallbacks
@@ -333,7 +352,11 @@ fn cmd_serve(args: &Args) {
             format!("{}ms", target_delay.as_millis())
         }
     );
-    log!(info, "protocol: one JSON request per line; see api::wire + coordinator/service.rs");
+    log!(
+        info,
+        "protocol: one JSON request per line, or length-prefixed binary frames (v2); \
+         see api::wire + coordinator/service.rs"
+    );
     // Block on the service itself: when a client sends {"cmd":"shutdown"}
     // the acceptor and dispatcher wind down and wait() returns.
     h.wait();

@@ -1,6 +1,7 @@
 //! Per-connection state machine: buffered newline framing on the read
-//! side, a pending-write buffer on the write side, and the interest
-//! computation that ties the two to the poller.
+//! side, incremental binary-frame decoding, a pending-write buffer on
+//! the write side, and the interest computation that ties the three to
+//! the poller.
 //!
 //! Invariants the server loop relies on:
 //!
@@ -12,6 +13,10 @@
 //! - The read buffer never exceeds `max_line_bytes` without containing
 //!   a newline — [`Conn::line_overflow`] catches the excess and the
 //!   loop answers with a typed `protocol` error, then closes.
+//! - A binary frame's payload never accumulates as raw bytes: each read
+//!   chunk is folded straight into the decoder's `Vec<f32>`
+//!   ([`Conn::pump_frame`]), so the transient text/byte buffering stays
+//!   O(read chunk) however large the panel is.
 //! - Responses go through `queue_line` + `flush`; whatever the socket
 //!   won't take stays buffered and the poller watches for writability,
 //!   so a slow reader never blocks the loop (or a dispatch worker).
@@ -19,6 +24,8 @@
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
+
+use crate::api::wire::{FRAME_MAGIC, MAX_FRAME_HEADER_BYTES, MAX_FRAME_PAYLOAD_BYTES};
 
 use super::poller::{INTEREST_READ, INTEREST_WRITE};
 
@@ -37,6 +44,54 @@ pub enum Fill {
     Eof,
     /// Hard socket error (connection reset, ...).
     Err(std::io::Error),
+}
+
+/// A fully decoded binary request frame: the JSON header text plus the
+/// payload already converted to little-endian f32s.
+#[derive(Debug, PartialEq)]
+pub struct FrameRequest {
+    pub header: String,
+    pub payload: Vec<f32>,
+}
+
+/// One parsed input unit from a connection: a JSON line or a complete
+/// binary frame.
+#[derive(Debug, PartialEq)]
+pub enum Event {
+    Line(String),
+    Frame(FrameRequest),
+}
+
+/// Incremental binary-frame decoder. Raw bytes are consumed as they
+/// arrive: the 12-byte length prefix (the magic was consumed at
+/// detection), then the JSON header, then the payload folded four bytes
+/// at a time into `Vec<f32>` — at most 3 payload bytes are ever held
+/// un-decoded, so a multi-hundred-MB panel costs O(read chunk) beyond
+/// its own final storage.
+struct FrameDecoder {
+    /// `(header_len, payload_len_bytes)` once the length prefix arrived.
+    lens: Option<(usize, u64)>,
+    /// Header bytes collected so far (≤ header_len).
+    header: Vec<u8>,
+    payload: Vec<f32>,
+    /// Payload bytes still expected.
+    payload_left: u64,
+    /// A little-endian f32 straddling two reads.
+    partial: [u8; 4],
+    partial_len: usize,
+}
+
+impl FrameDecoder {
+    fn new() -> FrameDecoder {
+        FrameDecoder {
+            lens: None,
+            header: Vec::new(),
+            payload: Vec::new(),
+            payload_left: 0,
+            partial: [0; 4],
+            partial_len: 0,
+        }
+    }
 }
 
 /// Extract the next `\n`-terminated line from `buf`, resuming the
@@ -67,10 +122,14 @@ pub(crate) fn split_line(buf: &mut Vec<u8>, scan_from: &mut usize) -> Option<Str
 
 pub struct Conn {
     pub stream: TcpStream,
-    /// Incoming bytes not yet split into lines.
+    /// Incoming bytes not yet split into lines (or folded into a frame).
     read_buf: Vec<u8>,
     /// Newline-scan resume offset into `read_buf`.
     scan_from: usize,
+    /// In-progress binary frame, if the stream is mid-frame.
+    frame: Option<FrameDecoder>,
+    /// A completed frame waiting for the loop to pick it up.
+    ready_frame: Option<FrameRequest>,
     /// Outgoing bytes not yet accepted by the socket.
     write_buf: Vec<u8>,
     write_pos: usize,
@@ -94,6 +153,8 @@ impl Conn {
             stream,
             read_buf: Vec::new(),
             scan_from: 0,
+            frame: None,
+            ready_frame: None,
             write_buf: Vec::new(),
             write_pos: 0,
             in_flight: false,
@@ -125,6 +186,125 @@ impl Conn {
     /// Next complete line, if any (see [`split_line`]).
     pub fn next_line(&mut self) -> Option<String> {
         split_line(&mut self.read_buf, &mut self.scan_from)
+    }
+
+    /// Advance any in-progress binary frame with the buffered bytes,
+    /// detecting a new frame by its magic. Call after every fill so a
+    /// frame payload is folded into f32s chunk by chunk instead of
+    /// accumulating as raw bytes. `Err` carries a human-readable reason
+    /// for a malformed frame (the caller answers with a typed `protocol`
+    /// error and closes).
+    pub fn pump_frame(&mut self) -> Result<(), String> {
+        loop {
+            if self.frame.is_none() {
+                // A completed frame must be picked up before the next
+                // message starts decoding (one request in flight per
+                // connection keeps this from buffering unboundedly).
+                if self.ready_frame.is_some() || self.read_buf.is_empty() {
+                    return Ok(());
+                }
+                let probe = self.read_buf.len().min(FRAME_MAGIC.len());
+                if self.read_buf[..probe] != FRAME_MAGIC[..probe] {
+                    return Ok(()); // line traffic
+                }
+                if probe < FRAME_MAGIC.len() {
+                    return Ok(()); // could be a frame; wait for more bytes
+                }
+                self.read_buf.drain(..FRAME_MAGIC.len());
+                self.scan_from = 0;
+                self.frame = Some(FrameDecoder::new());
+            }
+            // Length prefix: u32 LE header bytes + u64 LE payload bytes.
+            if self.frame.as_ref().is_some_and(|fd| fd.lens.is_none()) {
+                if self.read_buf.len() < 12 {
+                    return Ok(());
+                }
+                let hlen =
+                    u32::from_le_bytes(self.read_buf[..4].try_into().unwrap()) as usize;
+                let plen = u64::from_le_bytes(self.read_buf[4..12].try_into().unwrap());
+                if hlen == 0 || hlen > MAX_FRAME_HEADER_BYTES {
+                    return Err(format!(
+                        "frame header length {hlen} out of range 1..={MAX_FRAME_HEADER_BYTES}"
+                    ));
+                }
+                if plen > MAX_FRAME_PAYLOAD_BYTES {
+                    return Err(format!(
+                        "frame payload {plen} bytes exceeds cap {MAX_FRAME_PAYLOAD_BYTES}"
+                    ));
+                }
+                if plen % 4 != 0 {
+                    return Err(format!(
+                        "frame payload {plen} bytes is not a whole number of f32s"
+                    ));
+                }
+                let fd = self.frame.as_mut().unwrap();
+                fd.lens = Some((hlen, plen));
+                fd.payload_left = plen;
+                self.read_buf.drain(..12);
+                self.scan_from = 0;
+            }
+            let fd = self.frame.as_mut().unwrap();
+            let (hlen, _) = fd.lens.unwrap();
+            // JSON header bytes.
+            if fd.header.len() < hlen {
+                let take = (hlen - fd.header.len()).min(self.read_buf.len());
+                fd.header.extend_from_slice(&self.read_buf[..take]);
+                self.read_buf.drain(..take);
+                self.scan_from = 0;
+                if fd.header.len() < hlen {
+                    return Ok(());
+                }
+                // Header complete: reserve the payload exactly once (the
+                // sender has already produced a full header, so this is
+                // not a free memory claim from a bare length prefix).
+                fd.payload.reserve_exact((fd.payload_left / 4) as usize);
+            }
+            // Payload bytes → f32s, four at a time; at most 3 bytes of a
+            // straddling value are carried between reads.
+            if fd.payload_left > 0 {
+                let take = fd.payload_left.min(self.read_buf.len() as u64) as usize;
+                for i in 0..take {
+                    fd.partial[fd.partial_len] = self.read_buf[i];
+                    fd.partial_len += 1;
+                    if fd.partial_len == 4 {
+                        fd.payload.push(f32::from_le_bytes(fd.partial));
+                        fd.partial_len = 0;
+                    }
+                }
+                fd.payload_left -= take as u64;
+                self.read_buf.drain(..take);
+                self.scan_from = 0;
+                if self.frame.as_ref().unwrap().payload_left > 0 {
+                    return Ok(());
+                }
+            }
+            let fd = self.frame.take().unwrap();
+            debug_assert_eq!(fd.partial_len, 0);
+            let header = String::from_utf8_lossy(&fd.header).into_owned();
+            self.ready_frame = Some(FrameRequest { header, payload: fd.payload });
+            // Loop: trailing buffered bytes may already belong to the
+            // next message (the ready-frame guard returns at the top).
+        }
+    }
+
+    /// Next complete input event — a JSON line or a binary frame — if
+    /// any. `Err` means the stream is unrecoverably mis-framed.
+    pub fn next_event(&mut self) -> Result<Option<Event>, String> {
+        self.pump_frame()?;
+        if let Some(f) = self.ready_frame.take() {
+            return Ok(Some(Event::Frame(f)));
+        }
+        if self.frame.is_some() {
+            return Ok(None); // mid-frame: no line can be extracted
+        }
+        Ok(split_line(&mut self.read_buf, &mut self.scan_from).map(Event::Line))
+    }
+
+    /// Is the stream mid-frame (or holding a decoded frame)? Used by the
+    /// loop to skip line-overflow accounting that only applies to line
+    /// traffic.
+    pub fn in_frame(&self) -> bool {
+        self.frame.is_some() || self.ready_frame.is_some()
     }
 
     /// True when the frame buffer holds a newline-free prefix past the
@@ -247,15 +427,95 @@ mod tests {
     fn overflow_detection_via_conn_state() {
         // line_overflow is pure state — exercise it through a real
         // (loopback) Conn so the struct invariants hold.
+        let mut c = loopback_conn();
+        c.read_buf = vec![b'x'; 100];
+        assert_eq!(c.next_line(), None);
+        assert!(c.line_overflow(64));
+        assert!(!c.line_overflow(100));
+    }
+
+    fn loopback_conn() -> Conn {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let client = TcpStream::connect(addr).unwrap();
         let (server_side, _) = listener.accept().unwrap();
         drop(client);
-        let mut c = Conn::new(server_side, Instant::now());
-        c.read_buf = vec![b'x'; 100];
-        assert_eq!(c.next_line(), None);
-        assert!(c.line_overflow(64));
-        assert!(!c.line_overflow(100));
+        Conn::new(server_side, Instant::now())
+    }
+
+    #[test]
+    fn frame_decodes_incrementally_byte_by_byte() {
+        let hdr = crate::util::json::Json::parse(r#"{"v": 2, "n": 1, "l": 3, "k": 1}"#).unwrap();
+        let payload = [0.5f32, -1.25, 3.0];
+        let bytes = crate::api::wire::encode_frame(&hdr, &payload);
+        let mut c = loopback_conn();
+        for (i, b) in bytes.iter().enumerate() {
+            c.read_buf.push(*b);
+            match c.next_event().unwrap() {
+                None => assert!(i + 1 < bytes.len(), "frame completed early at byte {i}"),
+                Some(Event::Frame(f)) => {
+                    assert_eq!(i + 1, bytes.len(), "frame completed early at byte {i}");
+                    assert_eq!(f.payload, payload);
+                    assert_eq!(
+                        crate::util::json::Json::parse(&f.header).unwrap(),
+                        hdr
+                    );
+                }
+                Some(Event::Line(l)) => panic!("unexpected line {l:?} at byte {i}"),
+            }
+        }
+        assert_eq!(c.read_buffered(), 0);
+        assert!(!c.in_frame());
+    }
+
+    #[test]
+    fn lines_and_frames_interleave() {
+        let hdr = crate::util::json::Json::parse(r#"{"v": 2, "n": 1, "l": 1, "k": 1}"#).unwrap();
+        let frame = crate::api::wire::encode_frame(&hdr, &[7.0]);
+        let mut c = loopback_conn();
+        c.read_buf.extend_from_slice(b"{\"cmd\":\"ping\"}\n");
+        c.read_buf.extend_from_slice(&frame);
+        c.read_buf.extend_from_slice(b"{\"cmd\":\"stats\"}\n");
+        let Some(Event::Line(l1)) = c.next_event().unwrap() else { panic!() };
+        assert_eq!(l1, "{\"cmd\":\"ping\"}");
+        let Some(Event::Frame(f)) = c.next_event().unwrap() else { panic!() };
+        assert_eq!(f.payload, vec![7.0]);
+        let Some(Event::Line(l2)) = c.next_event().unwrap() else { panic!() };
+        assert_eq!(l2, "{\"cmd\":\"stats\"}");
+        assert_eq!(c.next_event().unwrap(), None);
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_errors() {
+        // zero-length header
+        let mut c = loopback_conn();
+        c.read_buf.extend_from_slice(b"TMFB");
+        c.read_buf.extend_from_slice(&0u32.to_le_bytes());
+        c.read_buf.extend_from_slice(&0u64.to_le_bytes());
+        assert!(c.next_event().unwrap_err().contains("header length"));
+        // payload over the byte cap
+        let mut c = loopback_conn();
+        c.read_buf.extend_from_slice(b"TMFB");
+        c.read_buf.extend_from_slice(&8u32.to_le_bytes());
+        c.read_buf.extend_from_slice(&(MAX_FRAME_PAYLOAD_BYTES + 4).to_le_bytes());
+        assert!(c.next_event().unwrap_err().contains("exceeds cap"));
+        // payload not a multiple of 4
+        let mut c = loopback_conn();
+        c.read_buf.extend_from_slice(b"TMFB");
+        c.read_buf.extend_from_slice(&8u32.to_le_bytes());
+        c.read_buf.extend_from_slice(&7u64.to_le_bytes());
+        assert!(c.next_event().unwrap_err().contains("whole number"));
+    }
+
+    #[test]
+    fn partial_magic_waits_but_non_magic_prefix_stays_line_traffic() {
+        let mut c = loopback_conn();
+        c.read_buf.extend_from_slice(b"TMF");
+        assert_eq!(c.next_event().unwrap(), None);
+        assert!(!c.in_frame());
+        // the fourth byte disambiguates: not a frame after all
+        c.read_buf.extend_from_slice(b"oo\n");
+        let Some(Event::Line(l)) = c.next_event().unwrap() else { panic!() };
+        assert_eq!(l, "TMFoo");
     }
 }

@@ -8,8 +8,11 @@
 //!
 //! - **Accept** with a hard connection limit (over-limit sockets get a
 //!   best-effort rejection line and are dropped).
-//! - **Framing** via [`super::conn::Conn`]: at most one in-flight
-//!   request per connection, read interest parked while it runs.
+//! - **Framing** via [`super::conn::Conn`]: JSON lines and binary
+//!   frames share one ordered input stream; at most one in-flight
+//!   request per connection, read interest parked while it runs. A
+//!   mis-framed binary stream gets a typed `protocol` error and a
+//!   close (the byte stream can no longer be trusted).
 //! - **Completions**: worker threads finish a job and call
 //!   [`LoopCtl::complete`], which mails the response line and pokes a
 //!   self-pipe waker; the loop queues the line and re-registers write
@@ -30,6 +33,8 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use super::conn::FrameRequest;
 
 /// Identifies one live connection within a server instance. Tokens are
 /// monotone and never reused, so a stale token (in the deadline wheel,
@@ -60,6 +65,25 @@ pub trait Handler {
     fn on_accept(&mut self, _conn: ConnId) {}
     /// One complete request line arrived.
     fn on_line(&mut self, conn: ConnId, line: &str) -> Disposition;
+    /// One complete binary frame arrived (JSON header + f32 payload).
+    /// The default rejects frames with a typed `protocol` error and
+    /// closes — a handler that serves binary traffic overrides this.
+    fn on_frame(&mut self, _conn: ConnId, _frame: FrameRequest) -> Disposition {
+        Disposition::RespondAndClose(
+            "{\"ok\": false, \"error\": {\"code\": \"protocol\", \
+             \"message\": \"binary frames not supported\"}}"
+                .into(),
+        )
+    }
+    /// The frame decoder rejected the byte stream (bad magic lengths,
+    /// over-cap payload, ...). The returned line is sent and the
+    /// connection closed; `reason` is human-readable.
+    fn on_bad_frame(&mut self, _conn: ConnId, reason: &str) -> String {
+        format!(
+            "{{\"ok\": false, \"error\": {{\"code\": \"protocol\", \
+             \"message\": \"malformed frame: {reason}\"}}}}"
+        )
+    }
     /// A completion was delivered for `conn`. Fires exactly once per
     /// [`Disposition::Submitted`] — even if the connection died first
     /// (accounting must balance regardless).
@@ -177,7 +201,7 @@ pub use unix_loop::run;
 #[cfg(unix)]
 mod unix_loop {
     use super::*;
-    use crate::net::conn::{Conn, Fill, WRITE_HIGH_WATERMARK};
+    use crate::net::conn::{Conn, Event as ConnEvent, Fill, WRITE_HIGH_WATERMARK};
     use crate::net::poller::{Event, Poller, INTEREST_READ};
     use crate::net::wheel::DeadlineWheel;
     use std::collections::HashMap;
@@ -385,7 +409,10 @@ mod unix_loop {
                 match conn.fill(&mut self.scratch) {
                     Fill::Data => {
                         conn.touch(Instant::now());
-                        if self.process_lines(token) {
+                        // Dispatch per chunk: a frame payload is folded
+                        // into f32s here, so `read_buf` stays O(chunk)
+                        // however large the panel being received is.
+                        if self.process_events(token) {
                             return; // connection gone
                         }
                     }
@@ -403,9 +430,10 @@ mod unix_loop {
             self.advance(token);
         }
 
-        /// Split and dispatch complete lines. Returns true if the
+        /// Split and dispatch complete input events — request lines and
+        /// binary frames, in arrival order. Returns true if the
         /// connection no longer exists.
-        fn process_lines(&mut self, token: ConnId) -> bool {
+        fn process_events(&mut self, token: ConnId) -> bool {
             loop {
                 let Some(conn) = self.conns.get_mut(&token) else { return true };
                 if conn.in_flight
@@ -415,19 +443,38 @@ mod unix_loop {
                 {
                     return false;
                 }
-                let Some(line) = conn.next_line() else {
-                    if conn.line_overflow(self.cfg.max_line_bytes) {
-                        let msg = self.handler.on_overflow(token);
+                let event = match conn.next_event() {
+                    Ok(Some(ev)) => ev,
+                    Ok(None) => {
+                        // Line-overflow accounting only applies to line
+                        // traffic: a frame drains its bytes as they
+                        // arrive, so mid-frame the buffer is tiny.
+                        if !conn.in_frame() && conn.line_overflow(self.cfg.max_line_bytes) {
+                            let msg = self.handler.on_overflow(token);
+                            let conn = self.conns.get_mut(&token).expect("conn alive");
+                            conn.queue_line(&msg);
+                            conn.closing = true;
+                        }
+                        return false;
+                    }
+                    Err(reason) => {
+                        let msg = self.handler.on_bad_frame(token, &reason);
                         let conn = self.conns.get_mut(&token).expect("conn alive");
                         conn.queue_line(&msg);
                         conn.closing = true;
+                        return false;
                     }
-                    return false;
                 };
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match self.handler.on_line(token, &line) {
+                let disposition = match event {
+                    ConnEvent::Line(line) => {
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        self.handler.on_line(token, &line)
+                    }
+                    ConnEvent::Frame(frame) => self.handler.on_frame(token, frame),
+                };
+                match disposition {
                     Disposition::Respond(resp) => {
                         let conn = self.conns.get_mut(&token).expect("conn alive");
                         conn.queue_line(&resp);
@@ -467,7 +514,7 @@ mod unix_loop {
                     return;
                 }
             }
-            if self.process_lines(token) {
+            if self.process_events(token) {
                 return;
             }
             let Some(conn) = self.conns.get_mut(&token) else { return };
@@ -621,6 +668,10 @@ mod tests {
                 other => Disposition::Respond(format!("echo {other}")),
             }
         }
+        fn on_frame(&mut self, _conn: ConnId, frame: crate::net::conn::FrameRequest) -> Disposition {
+            let sum: f32 = frame.payload.iter().sum();
+            Disposition::Respond(format!("frame {} {}", frame.payload.len(), sum))
+        }
         fn on_complete(&mut self, _conn: ConnId) {
             self.stats.completed.fetch_add(1, Ordering::Relaxed);
         }
@@ -754,6 +805,35 @@ mod tests {
             srv.stats.closed.load(Ordering::Relaxed),
             srv.stats.accepted.load(Ordering::Relaxed)
         );
+    }
+
+    #[test]
+    fn binary_frames_dispatch_and_malformed_frames_close() {
+        let srv = start(cfg());
+        let stream = TcpStream::connect(&srv.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let hdr = crate::util::json::Json::parse(r#"{"v": 2}"#).unwrap();
+        let bytes = crate::api::wire::encode_frame(&hdr, &[1.0, 2.5]);
+        (&stream).write_all(&bytes).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(resp.trim_end(), "frame 2 3.5");
+        // lines still work on the same connection after a frame
+        assert_eq!(roundtrip(&stream, &mut reader, "ping"), "pong");
+        // mis-framed stream: payload not a multiple of 4 -> the default
+        // typed protocol error, then close
+        let bad = TcpStream::connect(&srv.addr).unwrap();
+        (&bad).write_all(b"TMFB").unwrap();
+        (&bad).write_all(&8u32.to_le_bytes()).unwrap();
+        (&bad).write_all(&7u64.to_le_bytes()).unwrap();
+        let mut bad_reader = BufReader::new(&bad);
+        let mut line = String::new();
+        bad_reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"protocol\""), "unexpected: {line}");
+        line.clear();
+        assert_eq!(bad_reader.read_line(&mut line).unwrap(), 0); // closed
+        srv.ctl.request_shutdown();
+        srv.join.join().unwrap().unwrap();
     }
 
     #[test]

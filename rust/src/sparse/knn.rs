@@ -9,18 +9,28 @@
 //!   correlations against all others are computed with the shared f32
 //!   dot kernel and the top k kept — O(n²·L) work but only O(n·k)
 //!   memory, parallelized over vertices with `parlay` chunking.
-//! * **Random-projection prefilter** (n > `prefilter_above`): rows are
-//!   projected through a seeded Gaussian matrix to `projection_dims`
-//!   dimensions; each vertex shortlists `pool_factor · k` candidates by
-//!   projected dot product and only the shortlist is re-scored exactly.
-//!   Work drops to O(n²·d + n·pool·L) — the a-TMFG observation that
-//!   TMFG quality survives ANN candidate restriction.
+//! * **Random-projection prefilter + graph refinement**
+//!   (n > `prefilter_above`): rows are projected through a seeded
+//!   Gaussian matrix to `projection_dims` dimensions; each vertex
+//!   shortlists `pool_factor · k` candidates by projected dot product
+//!   and only the shortlist is re-scored exactly — O(n²·d + n·pool·L).
+//!   The shortlist graph is then improved by `ann_iters` rounds of
+//!   NN-descent-style refinement ([`refine_picks`]): each vertex
+//!   re-scores its neighbors-of-neighbors and reverse neighbors (the
+//!   "a neighbor of my neighbor is probably my neighbor" closure) and
+//!   keeps the best k, O(n·pool·L) per round. A couple of rounds
+//!   recover most of the recall the one-shot projection loses — the
+//!   a-TMFG observation that TMFG quality survives ANN candidate
+//!   restriction, with the graph-based search sharpening the
+//!   candidates it survives on.
 //!
 //! **Determinism**: every per-vertex computation is a pure function of
 //! the panel, `k`, and `seed` (the projection matrix is drawn from a
-//! sequential seeded RNG before any parallel work), and per-vertex
-//! results are written to disjoint slots — so the output is
-//! byte-identical for every thread count and across reruns.
+//! sequential seeded RNG before any parallel work; the refinement's
+//! reverse adjacency is a sequential CSR transpose of the previous
+//! round's picks), and per-vertex results are written to disjoint
+//! slots — so the output is byte-identical for every thread count and
+//! across reruns.
 
 use super::csr::{top_k, SparseSimilarity};
 use crate::data::corr::{standardize_rows_generic, CorrScalar};
@@ -48,13 +58,25 @@ pub struct KnnConfig {
     /// inputs are scored exactly.
     pub prefilter_above: usize,
     /// Shortlist size multiplier: the prefilter keeps `pool_factor · k`
-    /// candidates per vertex for exact re-scoring.
+    /// candidates per vertex for exact re-scoring, and each refinement
+    /// round examines at most `pool_factor · k` fresh candidates per
+    /// vertex.
     pub pool_factor: usize,
+    /// NN-descent refinement rounds over the prefilter shortlist
+    /// (0 = one-shot prefilter only; no effect on the exact path).
+    pub ann_iters: usize,
 }
 
 impl KnnConfig {
     pub fn new(k: usize, seed: u64) -> KnnConfig {
-        KnnConfig { k, seed, projection_dims: 16, prefilter_above: 8192, pool_factor: 4 }
+        KnnConfig {
+            k,
+            seed,
+            projection_dims: 16,
+            prefilter_above: 8192,
+            pool_factor: 4,
+            ann_iters: 2,
+        }
     }
 }
 
@@ -85,8 +107,15 @@ pub fn knn_candidates(panel: &Matrix, cfg: &KnnConfig) -> Result<SparseSimilarit
         let _span = crate::span!("knn_phase", "exact picks n={n} k={k}");
         exact_picks(&z, n, l, k)
     } else {
-        let _span = crate::span!("knn_phase", "prefiltered picks n={n} k={k}");
-        prefiltered_picks(&z, n, l, k, cfg)
+        let mut picks = {
+            let _span = crate::span!("knn_phase", "prefiltered picks n={n} k={k}");
+            prefiltered_picks(&z, n, l, k, cfg)
+        };
+        for round in 0..cfg.ann_iters {
+            let _span = crate::span!("knn_phase", "nn-descent round={round} n={n} k={k}");
+            picks = refine_picks(&z, n, l, k, cfg, &picks);
+        }
+        picks
     };
     let _span = crate::span!("knn_phase", "assemble csr n={n}");
     SparseSimilarity::from_directed_picks(n, &picks)
@@ -176,6 +205,92 @@ fn prefiltered_picks(
     })
 }
 
+/// One NN-descent round: for every vertex, exactly re-score a bounded,
+/// deterministically ordered set of fresh candidates — its
+/// neighbors-of-neighbors, then its reverse neighbors from the previous
+/// round — and keep the best k of (current ∪ fresh).
+///
+/// Current picks keep their already-exact scores (no re-scoring), fresh
+/// candidates are capped at `pool_factor · k` per vertex, so one round
+/// is O(n·pool·L) work. The reverse adjacency is a sequential CSR
+/// transpose of the previous picks and each vertex's output is a pure
+/// function of (`z`, previous picks), so the round is byte-identical
+/// across thread counts.
+fn refine_picks(
+    z: &[f32],
+    n: usize,
+    l: usize,
+    k: usize,
+    cfg: &KnnConfig,
+    picks: &[Vec<(u32, f32)>],
+) -> Vec<Vec<(u32, f32)>> {
+    let fresh_cap = (cfg.pool_factor.max(1) * k).clamp(k, n - 1);
+    // Reverse adjacency (who picked v?) as a CSR transpose, built
+    // sequentially in pick order — deterministic by construction.
+    let mut rev_ptr = vec![0u32; n + 1];
+    for row in picks {
+        for &(u, _) in row {
+            rev_ptr[u as usize + 1] += 1;
+        }
+    }
+    for i in 0..n {
+        rev_ptr[i + 1] += rev_ptr[i];
+    }
+    let mut rev = vec![0u32; rev_ptr[n] as usize];
+    let mut cursor: Vec<u32> = rev_ptr[..n].to_vec();
+    for (v, row) in picks.iter().enumerate() {
+        for &(u, _) in row {
+            rev[cursor[u as usize] as usize] = v as u32;
+            cursor[u as usize] += 1;
+        }
+    }
+    // Per-vertex scratch: the candidate list plus a stamp array marking
+    // vertices already considered for the current v (stamps are vertex
+    // ids, unique per v, so the array never needs clearing).
+    type Scratch = (Vec<(f32, u32)>, Vec<u32>);
+    parlay::par_map_scratch(n, 1, |v, scratch: &mut Scratch| {
+        let (cand, mark) = scratch;
+        if mark.len() < n {
+            mark.resize(n, u32::MAX);
+        }
+        let stamp = v as u32;
+        let zv = &z[v * l..(v + 1) * l];
+        cand.clear();
+        mark[v] = stamp;
+        for &(u, w) in &picks[v] {
+            mark[u as usize] = stamp;
+            cand.push((w, u));
+        }
+        let mut budget = fresh_cap;
+        let mut consider = |u: u32, cand: &mut Vec<(f32, u32)>, budget: &mut usize| {
+            if *budget == 0 || mark[u as usize] == stamp {
+                return;
+            }
+            mark[u as usize] = stamp;
+            let sim =
+                f32::dot(zv, &z[u as usize * l..(u as usize + 1) * l]).clamp(-1.0, 1.0);
+            cand.push((sim, u));
+            *budget -= 1;
+        };
+        'outer: for &(u, _) in &picks[v] {
+            for &(w, _) in &picks[u as usize] {
+                if budget == 0 {
+                    break 'outer;
+                }
+                consider(w, cand, &mut budget);
+            }
+        }
+        for &r in &rev[rev_ptr[v] as usize..rev_ptr[v + 1] as usize] {
+            if budget == 0 {
+                break;
+            }
+            consider(r, cand, &mut budget);
+        }
+        top_k(cand, k);
+        cand.iter().map(|&(w, u)| (u, w)).collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +364,59 @@ mod tests {
         }
         let recall = hit as f64 / total as f64;
         assert!(recall > 0.5, "prefilter recall too low: {recall}");
+    }
+
+    #[test]
+    fn iters_zero_reproduces_the_one_shot_prefilter() {
+        // `ann_iters: 0` must be exactly the one-shot projection
+        // shortlist — refinement is strictly additive machinery.
+        let x = panel(200, 8);
+        let mut cfg = KnnConfig::new(6, 11);
+        cfg.prefilter_above = 32;
+        cfg.ann_iters = 0;
+        let via_api = knn_candidates(&x, &cfg).unwrap();
+        let z = standardize_rows_generic::<f32>(&x);
+        let picks = prefiltered_picks(&z, 200, 48, 6, &cfg);
+        let manual = SparseSimilarity::from_directed_picks(200, &picks).unwrap();
+        assert_eq!(via_api, manual);
+    }
+
+    #[test]
+    fn nn_descent_refinement_recovers_starved_prefilter_recall() {
+        // A deliberately starved prefilter (4 projection dims, minimal
+        // pool) loses recall; NN-descent rounds must claw it back —
+        // and must never make the candidate graph meaningfully worse,
+        // since each round keeps the best-k of (current ∪ fresh) by
+        // exact similarity.
+        let x = panel(300, 4);
+        let exact = knn_candidates(&x, &KnnConfig::new(8, 9)).unwrap();
+        let recall = |approx: &SparseSimilarity| {
+            let mut hit = 0usize;
+            let mut total = 0usize;
+            for v in 0..300 {
+                let (a, _) = exact.row(v);
+                for &u in a {
+                    total += 1;
+                    if approx.lookup(v, u as usize).is_some() {
+                        hit += 1;
+                    }
+                }
+            }
+            hit as f64 / total as f64
+        };
+        let mut cfg = KnnConfig::new(8, 9);
+        cfg.prefilter_above = 64;
+        cfg.projection_dims = 4;
+        cfg.pool_factor = 2;
+        cfg.ann_iters = 0;
+        let r0 = recall(&knn_candidates(&x, &cfg).unwrap());
+        cfg.ann_iters = 2;
+        let r2 = recall(&knn_candidates(&x, &cfg).unwrap());
+        assert!(
+            r2 + 0.02 >= r0,
+            "refinement must not lose recall: {r0:.3} -> {r2:.3}"
+        );
+        assert!(r2 >= 0.5, "refined recall too low: {r2:.3} (one-shot {r0:.3})");
     }
 
     #[test]

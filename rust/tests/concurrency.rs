@@ -979,6 +979,134 @@ fn poll_backend_forced_by_config() {
     h.stop();
 }
 
+// ---------------------------------------------------------------------------
+// Binary wire frames (protocol v2)
+// ---------------------------------------------------------------------------
+
+/// Strip the per-request volatile fields (timings, trace ids, batch
+/// coalescing, cache status) so two responses to the same logical
+/// request can be compared structurally.
+fn stable(mut resp: Json) -> Json {
+    if let Json::Obj(map) = &mut resp {
+        for k in ["secs", "trace_id", "batch", "cache"] {
+            map.remove(k);
+        }
+    }
+    resp
+}
+
+/// The same logical request sent as a JSON line and as a binary frame
+/// must produce structurally identical responses — the frame is an
+/// alternate encoding, not a different protocol.
+#[test]
+fn binary_frame_response_matches_json_line() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+
+    // Named dataset: the frame carries an empty payload.
+    let req = named_req(7, "CBF", 5, "heap");
+    let via_json = c.call(&req).unwrap();
+    assert_eq!(via_json.get("ok").as_bool(), Some(true), "{via_json:?}");
+    let mut header = req.clone();
+    if let Json::Obj(map) = &mut header {
+        map.insert("v".into(), Json::Num(2.0));
+    }
+    let via_frame = c.call_frame(&header, &[]).unwrap();
+    assert_eq!(via_frame.get("ok").as_bool(), Some(true), "{via_frame:?}");
+    assert_eq!(stable(via_frame), stable(via_json), "named: frame and line must agree");
+
+    // Inline panel: dyadic values are exact both as JSON f64 text and as
+    // the frame's f32 payload, so the decoded panels are bit-identical.
+    let (n, l) = (12usize, 16usize);
+    let data: Vec<f64> =
+        (0..n * l).map(|i| ((i * 7 + 3) % 16) as f64 * 0.25 - 2.0).collect();
+    let base = vec![
+        ("id", Json::Num(8.0)),
+        ("n", Json::Num(n as f64)),
+        ("l", Json::Num(l as f64)),
+        ("k", Json::Num(2.0)),
+    ];
+    let mut jreq = Json::obj(base.clone());
+    if let Json::Obj(map) = &mut jreq {
+        map.insert("data".into(), Json::arr_f64(&data));
+    }
+    let via_json = c.call(&jreq).unwrap();
+    assert_eq!(via_json.get("ok").as_bool(), Some(true), "{via_json:?}");
+    let mut header = Json::obj(base);
+    if let Json::Obj(map) = &mut header {
+        map.insert("v".into(), Json::Num(2.0));
+    }
+    let payload: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    let via_frame = c.call_frame(&header, &payload).unwrap();
+    assert_eq!(via_frame.get("ok").as_bool(), Some(true), "{via_frame:?}");
+    assert_eq!(stable(via_frame), stable(via_json), "inline: frame and line must agree");
+    h.stop();
+}
+
+/// JSON lines and binary frames interleave freely on one connection —
+/// the decoder re-dispatches on the first byte of every request.
+#[test]
+fn mixed_json_and_binary_frames_on_one_connection() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    for round in 0..3 {
+        let resp = c.call(&inline_req(round * 2, 8)).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "round {round}: {resp:?}");
+        assert_eq!(resp.get("id").as_usize(), Some(round * 2));
+        let mut header = named_req(round * 2 + 1, "CBF", 5, "heap");
+        if let Json::Obj(map) = &mut header {
+            map.insert("v".into(), Json::Num(2.0));
+        }
+        let resp = c.call_frame(&header, &[]).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "round {round}: {resp:?}");
+        assert_eq!(resp.get("id").as_usize(), Some(round * 2 + 1));
+    }
+    h.stop();
+}
+
+/// A frame prefix with out-of-range lengths earns one typed `protocol`
+/// error line and a close — the stream past a malformed prefix cannot be
+/// resynchronized, so the server must not keep reading it.
+#[test]
+fn malformed_frame_prefix_gets_protocol_error_then_close() {
+    use tmfg::api::wire::{FRAME_MAGIC, MAX_FRAME_HEADER_BYTES, MAX_FRAME_PAYLOAD_BYTES};
+    let h = start();
+    let prefix = |hlen: u32, plen: u64| {
+        let mut b = Vec::with_capacity(16);
+        b.extend_from_slice(&FRAME_MAGIC);
+        b.extend_from_slice(&hlen.to_le_bytes());
+        b.extend_from_slice(&plen.to_le_bytes());
+        b
+    };
+    let cases: Vec<(Vec<u8>, &str)> = vec![
+        (prefix(0, 0), "zero header length"),
+        (prefix(MAX_FRAME_HEADER_BYTES as u32 + 1, 0), "oversized header"),
+        (prefix(8, 7), "payload not a multiple of 4"),
+        (prefix(8, MAX_FRAME_PAYLOAD_BYTES + 4), "payload over byte cap"),
+    ];
+    for (bytes, what) in cases {
+        let mut raw = RawConn::connect(&h.addr);
+        raw.stream.write_all(&bytes).unwrap();
+        let mut line = String::new();
+        raw.reader.read_line(&mut line).unwrap();
+        let resp =
+            Json::parse(&line).unwrap_or_else(|e| panic!("{what}: bad response {line:?}: {e}"));
+        assert_eq!(resp.get("ok").as_bool(), Some(false), "{what}: {resp:?}");
+        assert_eq!(resp.get("code").as_str(), Some("protocol"), "{what}: {resp:?}");
+        assert!(
+            resp.get("error").as_str().unwrap_or("").contains("malformed frame"),
+            "{what}: {resp:?}"
+        );
+        line.clear();
+        assert_eq!(raw.reader.read_line(&mut line).unwrap(), 0, "{what}: server must close");
+    }
+    // The listener is unaffected: fresh connections still work.
+    let mut fresh = Client::connect(&h.addr).unwrap();
+    let resp = fresh.call(&inline_req(1, 8)).unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    h.stop();
+}
+
 #[test]
 fn shutdown_is_idempotent_with_concurrent_clients() {
     // Several clients racing requests against a shutdown must each get

@@ -241,7 +241,10 @@ fn sparse_plan_stages_inspectable() {
         .sparse_knn(8, 2)
         .build()
         .expect("build");
-    assert_eq!(plan.similarity_spec(), SimilaritySpec::SparseKnn { k: 8, seed: 2 });
+    assert_eq!(
+        plan.similarity_spec(),
+        SimilaritySpec::SparseKnn { k: 8, seed: 2, dims: None, pool: None, iters: None }
+    );
     // the dense accessor refuses on a sparse plan rather than silently
     // densifying O(n²) floats
     assert!(plan.run_similarity().is_err());
@@ -290,6 +293,91 @@ fn service_sparse_request_reports_sparse_fields() {
     let hub_oracles = stats.get("oracle_hub").as_usize().unwrap();
     assert_eq!(dense_oracles + hub_oracles, 2, "{stats:?}");
     assert!(hub_oracles >= 1, "{stats:?}");
+    h.stop();
+}
+
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "n=8192 exact top-k is release-speed work; the release-mode CI step runs it"
+)]
+fn ann_knn_recall_vs_exact_topk_at_8192() {
+    // The ANN acceptance bar: with NN-descent refinement forced (the
+    // default exact cutoff sits exactly at n=8192, so it is lowered to
+    // exercise the approximate path), the candidate graph must cover at
+    // least 0.9 of every vertex's exact top-k, averaged over vertices.
+    let n = 8192usize;
+    let k = 16usize;
+    let ds = SynthSpec::new("sp", n, 48, 16).with_noise(0.4).generate(41);
+    let mut cfg = tmfg::sparse::KnnConfig::new(k, 1);
+    cfg.prefilter_above = 1024;
+    let cand = tmfg::sparse::knn_candidates(&ds.data, &cfg).unwrap();
+    let z = tmfg::data::corr::standardize_rows(&ds.data);
+    let mut hits = 0usize;
+    for i in 0..n {
+        let zi = z.row(i);
+        let mut sims: Vec<(f32, u32)> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let s = <f32 as tmfg::data::corr::CorrScalar>::dot(zi, z.row(j))
+                    .clamp(-1.0, 1.0);
+                (s, j as u32)
+            })
+            .collect();
+        sims.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        // Ties at the k-th similarity are interchangeable: an exact
+        // top-k member within 1e-5 of the cutoff counts as covered even
+        // when the ANN picked an equally-similar substitute.
+        let thresh = sims[k - 1].0 - 1e-5;
+        let (nbrs, _) = cand.row(i);
+        let set: std::collections::HashSet<u32> = nbrs.iter().copied().collect();
+        hits += sims[..k].iter().filter(|&&(s, j)| set.contains(&j) || s <= thresh).count();
+    }
+    let recall = hits as f64 / (n * k) as f64;
+    assert!(recall >= 0.9, "ANN recall {recall:.4} < 0.9 vs exact top-{k} at n={n}");
+}
+
+#[test]
+fn service_sparse_knob_echo_and_caps() {
+    let h = start();
+    let mut c = Client::connect(&h.addr).unwrap();
+    // explicit knobs echo back as the effective values
+    let resp = c
+        .call(&Json::obj(vec![
+            ("id", Json::Num(1.0)),
+            ("dataset", Json::str("synth-large-256")),
+            ("sparse_k", Json::Num(16.0)),
+            ("sparse_dims", Json::Num(24.0)),
+            ("sparse_pool", Json::Num(6.0)),
+            ("sparse_iters", Json::Num(1.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("sparse_dims").as_usize(), Some(24));
+    assert_eq!(resp.get("sparse_pool").as_usize(), Some(6));
+    assert_eq!(resp.get("sparse_iters").as_usize(), Some(1));
+    // omitted knobs echo the engine defaults
+    let resp = c
+        .call(&Json::obj(vec![
+            ("id", Json::Num(2.0)),
+            ("dataset", Json::str("synth-large-256")),
+            ("sparse_k", Json::Num(16.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("sparse_dims").as_usize(), Some(16));
+    assert_eq!(resp.get("sparse_pool").as_usize(), Some(4));
+    assert_eq!(resp.get("sparse_iters").as_usize(), Some(2));
+    // over-cap knob rejected at decode
+    let resp = c
+        .call(&Json::obj(vec![
+            ("dataset", Json::str("synth-large-256")),
+            ("sparse_k", Json::Num(16.0)),
+            ("sparse_dims", Json::Num(10000.0)),
+        ]))
+        .unwrap();
+    assert_eq!(resp.get("ok").as_bool(), Some(false), "{resp:?}");
+    assert_eq!(resp.get("code").as_str(), Some("protocol"));
     h.stop();
 }
 

@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""True-scale smoke over the binary wire protocol (v2).
+
+Sends one named `synth-large-N` clustering request to a live `tmfg
+serve` instance as a length-prefixed binary frame — the framing that
+raises the sparse series cap past the JSON line protocol's — and
+asserts the response proves the large-n path end to end:
+
+  * ok: true with a label per series,
+  * "oracle": "hub" — APSP was served by the O(n·h) hub oracle, never
+    a dense n^2 matrix,
+  * the sparse report echoes the requested k with nnz >= n*k,
+  * (with --pid) the server's peak RSS (VmHWM) stayed under
+    --max-rss-mb: at n=2^17 a dense f32 distance matrix alone would
+    need ~68 GiB, so a few-GiB bound is a structural proof.
+
+Stdlib only — no pip dependencies.
+
+    python3 scripts/smoke_synth_large.py --addr 127.0.0.1:7402 \
+        --dataset synth-large-131072 --sparse-k 32 --pid $SERVE_PID
+"""
+
+import argparse
+import json
+import socket
+import struct
+import sys
+import time
+
+FRAME_MAGIC = b"TMFB"
+
+
+def connect(host, port, wait_secs):
+    """Retry until the server is accepting (it may still be binding)."""
+    deadline = time.monotonic() + wait_secs
+    while True:
+        try:
+            return socket.create_connection((host, port), timeout=10)
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.25)
+
+
+def encode_frame(header, payload=b""):
+    hb = json.dumps(header).encode("utf-8")
+    return FRAME_MAGIC + struct.pack("<I", len(hb)) + struct.pack("<Q", len(payload)) + hb + payload
+
+
+def peak_rss_kb(pid):
+    with open(f"/proc/{pid}/status", encoding="utf-8") as f:
+        for line in f:
+            if line.startswith("VmHWM:"):
+                return int(line.split()[1])
+    raise RuntimeError(f"no VmHWM line in /proc/{pid}/status")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--addr", default="127.0.0.1:7402", help="host:port of a live tmfg serve")
+    ap.add_argument("--dataset", default="synth-large-131072", help="named synth-large dataset")
+    ap.add_argument("--sparse-k", type=int, default=32, help="k-NN candidate degree")
+    ap.add_argument("--timeout", type=float, default=900.0, help="response timeout (seconds)")
+    ap.add_argument("--pid", type=int, default=0, help="server pid for the peak-RSS check")
+    ap.add_argument(
+        "--max-rss-mb",
+        type=float,
+        default=8192.0,
+        help="peak-RSS bound for the server process (MiB), checked when --pid is given",
+    )
+    args = ap.parse_args()
+
+    n = int(args.dataset.rsplit("-", 1)[1])
+    host, port = args.addr.rsplit(":", 1)
+    header = {
+        "id": 1,
+        "v": 2,
+        "dataset": args.dataset,
+        "seed": 1,
+        "algo": "heap",
+        "apsp": "approx",
+        "sparse_k": args.sparse_k,
+    }
+
+    sock = connect(host, int(port), wait_secs=60)
+    sock.settimeout(args.timeout)
+    t0 = time.monotonic()
+    with sock:
+        sock.sendall(encode_frame(header))
+        line = sock.makefile("rb").readline()
+    secs = time.monotonic() - t0
+    if not line:
+        print("error: server closed the connection without a response", file=sys.stderr)
+        return 1
+    resp = json.loads(line)
+
+    failures = []
+    if resp.get("ok") is not True:
+        failures.append(f"ok != true: {json.dumps(resp)[:400]}")
+    else:
+        if resp.get("oracle") != "hub":
+            failures.append(f"oracle {resp.get('oracle')!r} != 'hub'")
+        labels = resp.get("labels")
+        if not isinstance(labels, list) or len(labels) != n:
+            got = len(labels) if isinstance(labels, list) else type(labels).__name__
+            failures.append(f"labels: expected {n} entries, got {got}")
+        if resp.get("sparse_k") != args.sparse_k:
+            failures.append(f"sparse_k {resp.get('sparse_k')!r} != {args.sparse_k}")
+        nnz = resp.get("sparse_nnz", 0)
+        if not isinstance(nnz, (int, float)) or nnz < n * args.sparse_k:
+            failures.append(f"sparse_nnz {nnz!r} < n*k = {n * args.sparse_k}")
+
+    rss_note = ""
+    if args.pid:
+        kb = peak_rss_kb(args.pid)
+        rss_note = f", server peak RSS {kb / 1024:.0f} MiB"
+        if kb > args.max_rss_mb * 1024:
+            failures.append(
+                f"server peak RSS {kb / 1024:.0f} MiB exceeds the {args.max_rss_mb:.0f} MiB bound"
+            )
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print(
+        f"smoke_synth_large: ok — {args.dataset} clustered via binary frame in "
+        f"{secs:.1f}s, oracle=hub, k={args.sparse_k}{rss_note}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
